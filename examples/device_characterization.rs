@@ -1,0 +1,51 @@
+//! Device characterization (Fig. 2 / Tables 1-2): run the stochastic
+//! macro-spin LLG solver across the ±100 µA write-current range, extract
+//! the switching-probability sigmoid, fit Eq. 1's tanh abstraction, and
+//! derive the converter's energy/latency/area row of Table 2.
+//!
+//!   cargo run --release --example device_characterization
+
+use stox_net::device::converter::{
+    MtjConverter, PAPER_ENERGY_PER_CONVERSION_J, PAPER_LATENCY_S,
+};
+use stox_net::device::llg::LlgParams;
+use stox_net::device::mtj::{SotMtj, SwitchingCurve};
+
+fn main() -> anyhow::Result<()> {
+    let mtj = SotMtj::default();
+    let llg = LlgParams::default();
+    let conv = MtjConverter::default();
+
+    println!("== Table 1 parameters ==");
+    println!("SOT-MTJ 90×70×2.5 nm | HM 144×112×3.5 nm (ρ = 160 µΩ·cm)");
+    println!("R_LRS {:.0} kΩ | TMR {} | R_ref {:.0} kΩ | VDD {} V",
+        mtj.r_lrs / 1e3, mtj.tmr, mtj.r_ref / 1e3, mtj.v_dd);
+    println!("derived: R_HRS {:.0} kΩ, R_HM {:.0} Ω, read margin {:.3} V",
+        mtj.r_hrs() / 1e3, mtj.r_hm(), mtj.read_margin());
+    println!("thermal stability Δ = {:.1}, H_SOT(100µA)/H_k = {:.2}",
+        llg.thermal_stability(), llg.h_sot(100e-6) / llg.h_k);
+
+    println!("\n== Fig. 2: P(switch) vs write current (LLG Monte-Carlo) ==");
+    let t0 = std::time::Instant::now();
+    let curve = SwitchingCurve::extract(llg, &mtj, 21, 300, 42);
+    println!("extracted in {:?} ({} trials/point)", t0.elapsed(), curve.trials);
+    for (i, p) in curve.currents.iter().zip(&curve.prob) {
+        let bar = "#".repeat((p * 50.0).round() as usize);
+        println!("{:>7.1} µA | {bar:<50} {p:.3}", i * 1e6);
+    }
+    let (alpha, sse) = curve.fit_tanh_alpha(mtj.i_write_max);
+    println!(
+        "\nEq. 1 fit: P(+1) = (tanh(α·I/I_max)+1)/2 with α = {alpha:.2} (sse {sse:.4})"
+    );
+    println!("monotonicity violations (>5% tol): {}", curve.monotonicity_violations(0.05));
+
+    println!("\n== converter electrical model (Table 2 row) ==");
+    println!("write energy (E[I²]·R_HM·t)  : {:.2} fJ", conv.write_energy() * 1e15);
+    println!("read  energy (divider+inv)   : {:.2} fJ", conv.read_energy() * 1e15);
+    println!("total derived / paper        : {:.2} / {:.2} fJ",
+        conv.energy_per_conversion() * 1e15, PAPER_ENERGY_PER_CONVERSION_J * 1e15);
+    println!("latency                      : {:.1} ns (paper {:.1} ns)",
+        conv.latency() * 1e9, PAPER_LATENCY_S * 1e9);
+    println!("area (28 nm scaled)          : {:.2} µm²", conv.area_um2());
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end serving driver (DESIGN.md §5 "E2E validation"): load the
+//! trained + AOT-compiled StoX ResNet, serve the whole exported test set
+//! through the dynamic batcher on the PJRT request path, and report
+//!
+//!   * classification accuracy (vs the python-side checkpoint accuracy),
+//!   * wall-clock latency percentiles + throughput,
+//!   * *simulated IMC hardware* energy/latency from the tile scheduler —
+//!     the same accounting that regenerates Fig. 9.
+//!
+//!   make artifacts && cargo run --release --example e2e_serving
+//!
+//! Results of this run are recorded in EXPERIMENTS.md.
+
+use std::sync::mpsc;
+use stox_net::arch::components::ComponentCosts;
+use stox_net::arch::energy::DesignConfig;
+use stox_net::coordinator::server::{submit_all, PjrtExecutor, Server};
+use stox_net::coordinator::{BatcherConfig, ServeConfig, TileScheduler};
+use stox_net::imc::StoxConfig;
+use stox_net::model::weights::TestSet;
+use stox_net::model::Manifest;
+use stox_net::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&dir)?;
+    let test = TestSet::load(&manifest)?;
+    let spec = &manifest.spec;
+    let elems = spec.image_size * spec.image_size * spec.in_channels;
+
+    println!("== StoX-Net end-to-end serving ==");
+    let engine = Engine::load(&manifest)?;
+    println!(
+        "PJRT {} | batch variants {:?} | {} test images",
+        engine.platform,
+        engine.batch_sizes(),
+        test.n
+    );
+
+    let stox_cfg = StoxConfig {
+        a_bits: spec.stox.a_bits,
+        w_bits: spec.stox.w_bits,
+        a_stream_bits: spec.stox.a_stream_bits,
+        w_slice_bits: spec.stox.w_slice_bits,
+        r_arr: spec.stox.r_arr,
+        n_samples: spec.stox.n_samples,
+        alpha: spec.stox.alpha,
+    };
+    let design =
+        DesignConfig::stox(stox_cfg, spec.stox.n_samples, spec.first_layer == "qf");
+    let sched =
+        TileScheduler::new(&ComponentCosts::default(), design, &manifest.layers);
+    println!(
+        "simulated IMC design: {:.2} nJ/inf, {:.1} µs/inf, pipeline bound {:.0} inf/s",
+        sched.energy_per_inference_pj() / 1e3,
+        sched.single_latency_ns() / 1e3,
+        sched.throughput_bound_per_s()
+    );
+
+    let server = Server::new(
+        Box::new(PjrtExecutor {
+            engine,
+            classes: spec.num_classes,
+            image_elems: elems,
+        }),
+        ServeConfig {
+            batcher: BatcherConfig {
+                target_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            seed: 7,
+        },
+    )
+    .with_scheduler(sched);
+
+    // closed-loop load generator on a side thread; server loop here.
+    let n = test.n;
+    let images: Vec<Vec<f32>> = (0..n).map(|i| test.image(i).to_vec()).collect();
+    let (tx, rx) = mpsc::channel();
+    let client = std::thread::spawn(move || {
+        let replies = submit_all(&tx, images.into_iter());
+        drop(tx);
+        replies
+    });
+    let t0 = std::time::Instant::now();
+    server.run(rx);
+    let wall = t0.elapsed();
+    let replies = client.join().unwrap();
+
+    let mut correct = 0usize;
+    for (i, r) in replies.into_iter().enumerate() {
+        let rep = r.recv()?;
+        let pred = rep
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == test.labels[i] {
+            correct += 1;
+        }
+    }
+
+    println!("\n== results ==");
+    println!(
+        "accuracy       : {}/{} = {:.2}%",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64
+    );
+    println!("wall clock     : {wall:?} ({:.1} req/s)", n as f64 / wall.as_secs_f64());
+    print!("{}", server.metrics.lock().unwrap().report());
+    Ok(())
+}

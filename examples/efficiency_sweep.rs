@@ -1,0 +1,74 @@
+//! Hardware-efficiency sweep (Fig. 9a + 9b): evaluate the full design
+//! matrix — HPFA / SFA baselines vs StoX configurations — across the
+//! paper's three workloads, and print normalized energy / latency / area
+//! / EDP exactly like the paper's bar charts.
+//!
+//!   cargo run --release --example efficiency_sweep
+
+use stox_net::arch::components::ComponentCosts;
+use stox_net::arch::energy::{evaluate_network, DesignConfig};
+use stox_net::imc::StoxConfig;
+use stox_net::model::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let costs = ComponentCosts::default();
+    let base = StoxConfig::default(); // 4w4a4bs, r_arr=256
+
+    for (wname, layers) in [
+        ("ResNet-20 / CIFAR-10", zoo::resnet20_cifar()),
+        ("ResNet-18 / Tiny-ImageNet", zoo::resnet18_tiny()),
+        ("ResNet-50 / Tiny-ImageNet", zoo::resnet50_tiny()),
+    ] {
+        println!(
+            "\n===== {wname} ({:.1}M MACs) =====",
+            zoo::total_macs(&layers) as f64 / 1e6
+        );
+        let designs = vec![
+            DesignConfig::hpfa(),
+            DesignConfig::sfa(),
+            DesignConfig::stox(base, 1, false), // 1-HPF
+            DesignConfig::stox(base, 1, true),  // 1-QF
+            DesignConfig::stox(base, 4, true),  // 4-QF
+            DesignConfig::stox(base, 8, true),  // 8-QF
+            DesignConfig::stox_mix(
+                base,
+                true,
+                &[
+                    ("s0b0c1", 4),
+                    ("s0b0c2", 4),
+                    ("s0b1c1", 2),
+                    ("s0b1c2", 2),
+                    ("s0b2c1", 2),
+                ],
+            ), // Mix-QF
+            DesignConfig::stox(StoxConfig { w_slice_bits: 1, ..base }, 1, true),
+        ];
+        let results = evaluate_network(&costs, &designs, &layers);
+        let hpfa = results[0].0.clone();
+        println!(
+            "{:<26} {:>9} {:>9} {:>9} {:>10} {:>8}",
+            "design", "energy×", "latency×", "area×", "EDP gain", "xbars"
+        );
+        for (r, _) in &results {
+            println!(
+                "{:<26} {:>8.2}x {:>8.2}x {:>8.2}x {:>9.1}x {:>8}",
+                r.name,
+                hpfa.energy_pj / r.energy_pj,
+                hpfa.latency_ns / r.latency_ns,
+                hpfa.area_um2 / r.area_um2,
+                hpfa.edp_pj_ns / r.edp_pj_ns,
+                r.xbars
+            );
+        }
+        // per-layer view of the best design (conv1 dominance story, §4.3)
+        let stox1 = &results[3].0;
+        let first_frac = stox1.per_layer[0].energy_pj / stox1.energy_pj;
+        println!(
+            "1-QF: conv1 energy share {:.1}%; total {:.2} nJ/inf, {:.1} µs/inf",
+            100.0 * first_frac,
+            stox1.energy_pj / 1e3,
+            stox1.latency_ns / 1e3
+        );
+    }
+    Ok(())
+}

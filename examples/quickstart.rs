@@ -1,0 +1,67 @@
+//! Quickstart: load the AOT artifacts, run one batch through the PJRT
+//! engine, and cross-check against the native crossbar functional model.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end slice of the stack: python trained the
+//! StoX ResNet and lowered it (with its Pallas stochastic-MVM kernels) to
+//! HLO text; Rust loads the text, compiles on the PJRT CPU client, and
+//! serves inferences without ever touching python again.
+
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "model: {} ({} classes, {}×{}×{} input, {} config)",
+        manifest.spec.name,
+        manifest.spec.num_classes,
+        manifest.spec.image_size,
+        manifest.spec.image_size,
+        manifest.spec.in_channels,
+        manifest.spec.stox.mode,
+    );
+
+    // 1. PJRT path: the production request path.
+    let engine = Engine::load(&manifest)?;
+    println!("PJRT platform: {}", engine.platform);
+    let test = TestSet::load(&manifest)?;
+    let handle = engine.model(8).expect("batch-8 artifact");
+    let imgs: Vec<f32> = (0..8).flat_map(|i| test.image(i).to_vec()).collect();
+    let logits = handle.infer(&imgs, 42)?;
+
+    // 2. Native path: the hardware-exact functional simulator.
+    let store = WeightStore::load(&manifest)?;
+    let native = NativeModel::load(&manifest, &store)?;
+    let nlogits = native.forward(&imgs, 8, 42);
+
+    println!("\n image | label | PJRT pred | native pred");
+    let classes = manifest.spec.num_classes;
+    let mut agree = 0;
+    for i in 0..8 {
+        let p1 = argmax(&logits[i * classes..(i + 1) * classes]);
+        let p2 = argmax(&nlogits[i * classes..(i + 1) * classes]);
+        if p1 == p2 {
+            agree += 1;
+        }
+        println!(
+            "  {i:4} | {:5} | {p1:9} | {p2:11}",
+            test.labels[i]
+        );
+    }
+    println!("\nPJRT vs native agreement: {agree}/8");
+    anyhow::ensure!(agree >= 6, "paths diverged — check parity tests");
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,61 @@
+//! Monte-Carlo layer-sensitivity analysis (Fig. 5): perturb each conv
+//! layer's weights with uniform noise at inference on the *native
+//! hardware-exact* model and measure the accuracy drop — the signal the
+//! paper uses to assign inhomogeneous ("Mix") sampling rates.
+//!
+//!   make artifacts && cargo run --release --example sensitivity
+
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::util::pool;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&dir)?;
+    let store = WeightStore::load(&manifest)?;
+    let test = TestSet::load(&manifest)?;
+    let model = NativeModel::load(&manifest, &store)?;
+
+    let n = 192.min(test.n);
+    let sigma = 0.15f32;
+    let trials = 4u32;
+    let base = model.accuracy(&test.images, &test.labels, n, 8, 777);
+    println!("== Fig. 5: layer-wise error sensitivity (σ={sigma}, {trials} trials, {n} images) ==");
+    println!("baseline accuracy: {base:.4}\n");
+
+    let n_layers = model.n_conv_layers();
+    let drops = pool::par_map(n_layers, pool::default_threads(), |layer| {
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let p = model.perturb_layer(layer, sigma, 1000 + layer as u32 * 97 + t);
+            acc += p.accuracy(&test.images, &test.labels, n, 8, 777);
+        }
+        base - acc / trials as f64
+    });
+
+    for (layer, drop) in drops.iter().enumerate() {
+        let bar = "#".repeat((drop.max(0.0) * 200.0).round() as usize);
+        let tag = if layer == 0 { " <- conv-1" } else { "" };
+        println!("layer {layer:2} | {bar:<40} drop {drop:+.4}{tag}");
+    }
+
+    // Derive a Mix assignment like train.mix_from_sensitivity
+    let mut order: Vec<usize> = (0..n_layers).collect();
+    order.sort_by(|&a, &b| drops[b].partial_cmp(&drops[a]).unwrap());
+    let q = (n_layers / 4).max(1);
+    let mut mix: Vec<(usize, u32)> = Vec::new();
+    for (rank, &li) in order.iter().enumerate() {
+        if li == 0 {
+            continue; // conv-1 handled by first_layer_samples
+        }
+        if rank < q {
+            mix.push((li, 4));
+        } else if rank < 2 * q {
+            mix.push((li, 2));
+        }
+    }
+    mix.sort();
+    println!("\nderived Mix sampling assignment (layer, samples): {mix:?}");
+    println!("(all remaining stochastic layers stay at 1 sample)");
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT compile path: lower the trained StoX model to HLO-text artifacts.
+
+This is the only bridge between python (author/compile time) and the Rust
+coordinator (request time).  Python never runs on the request path: the
+Rust runtime loads ``artifacts/*.hlo.txt`` with
+``HloModuleProto::from_text_file``, compiles once on the PJRT CPU client
+and executes from then on.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to ``--outdir`` (default ``../artifacts``):
+
+  * ``model_b{B}.hlo.txt``   — full model forward (weights baked in) for
+                               each serving batch size; inputs
+                               ``(x[B,H,W,C], seed u32)`` → logits[B,10]
+  * ``mvm_{tag}.hlo.txt``    — standalone Pallas stochastic-MVM hot path
+                               (the L1 kernel lowered inside jax.jit)
+  * ``weights.bin``          — flat little-endian f32 dump of all params +
+                               BN states for the Rust functional simulator
+  * ``testset.bin``          — synth test images + labels for the Rust
+                               end-to-end accuracy check
+  * ``manifest.json``        — spec, tensor offsets, layer inventory, file
+                               list (consumed by rust/src/runtime/registry)
+
+Idempotent: ``make artifacts`` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import hashlib
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+from .kernels import stox as stox_kernels
+from .kernels.ref import StoxConfig
+
+DEFAULT_BATCHES = (1, 8)
+E2E_CKPT = "e2e-cifar"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big literals as ``constant({...})``, which the text parser on the Rust
+    side silently reloads as zeros — dropping every baked weight tensor.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _ensure_checkpoint(steps: int) -> Path:
+    """Load (or quick-train) the model that the artifacts will serve."""
+    ckpt = train.CHECKPOINTS / f"{E2E_CKPT}.pkl"
+    if ckpt.exists():
+        return ckpt
+    print(f"[aot] no checkpoint at {ckpt}; quick-training {steps} steps")
+    spec = train._spec(
+        "cifar",
+        name=E2E_CKPT,
+        stox=StoxConfig(a_bits=4, w_bits=4, w_slice_bits=4, r_arr=256),
+        first_layer="qf",
+    )
+    hp = dataclasses.replace(train.TrainHP(), steps=steps)
+    record, params, states = train.train_model(spec, hp, "cifar")
+    train.save_checkpoint(ckpt, spec, params, states, record)
+    return ckpt
+
+
+def export_model_hlo(spec, params, states, batch: int, outdir: Path) -> dict:
+    """Lower the inference forward (Pallas kernels inside) to HLO text."""
+
+    def serve_fn(x, seed):
+        logits, _ = model.forward(
+            params, states, x, spec, train=False, step_seed=seed,
+            use_pallas=True,
+        )
+        return (logits,)
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, spec.image_size, spec.image_size, spec.in_channels), jnp.float32
+    )
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    lowered = jax.jit(serve_fn).lower(x_spec, seed_spec)
+    text = to_hlo_text(lowered)
+    name = f"model_b{batch}.hlo.txt"
+    (outdir / name).write_text(text)
+    print(f"[aot] wrote {name} ({len(text)//1024} KiB)")
+    return {
+        "file": name,
+        "kind": "model",
+        "batch": batch,
+        "inputs": [
+            {"shape": list(x_spec.shape), "dtype": "f32"},
+            {"shape": [], "dtype": "u32"},
+        ],
+        "outputs": [{"shape": [batch, spec.num_classes], "dtype": "f32"}],
+    }
+
+
+def export_mvm_hlo(cfg: StoxConfig, b: int, m: int, n: int, outdir: Path) -> dict:
+    """Lower one standalone stochastic MVM (the L1 Pallas kernel)."""
+
+    def mvm_fn(a, w, seed):
+        return (stox_kernels.stox_mvm_pallas(a, w, cfg, seed),)
+
+    a_spec = jax.ShapeDtypeStruct((b, m), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    lowered = jax.jit(mvm_fn).lower(a_spec, w_spec, seed_spec)
+    text = to_hlo_text(lowered)
+    name = f"mvm_{cfg.tag}_r{cfg.r_arr}_s{cfg.n_samples}_b{b}x{m}x{n}.hlo.txt"
+    (outdir / name).write_text(text)
+    print(f"[aot] wrote {name} ({len(text)//1024} KiB)")
+    return {
+        "file": name,
+        "kind": "mvm",
+        "cfg": dataclasses.asdict(cfg),
+        "b": b, "m": m, "n": n,
+    }
+
+
+def export_weights(spec, params, states, outdir: Path) -> dict:
+    """Flat f32 dump + per-tensor offsets for the Rust functional model."""
+    tensors = []
+    blobs = []
+    offset = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        {"params": params, "states": states}
+    )
+    for kp, leaf in flat:
+        arr = np.asarray(leaf, np.float32)
+        tensors.append(
+            {
+                "name": jax.tree_util.keystr(kp),
+                "shape": list(arr.shape),
+                "offset": offset,
+                "numel": int(arr.size),
+            }
+        )
+        blobs.append(arr.tobytes())
+        offset += arr.size
+    (outdir / "weights.bin").write_bytes(b"".join(blobs))
+    print(f"[aot] wrote weights.bin ({offset*4//1024} KiB, {len(tensors)} tensors)")
+    return {"file": "weights.bin", "tensors": tensors, "total_f32": offset}
+
+
+def export_testset(spec, outdir: Path, n: int = 512) -> dict:
+    """Held-out synthetic test set for the Rust E2E accuracy check."""
+    dataset = "digits" if spec.in_channels == 1 else "cifar"
+    _, (xte, yte) = datasets.get_dataset(dataset, 8, n, spec.image_size, seed=0)
+    payload = xte.astype(np.float32).tobytes() + yte.astype(np.int32).tobytes()
+    (outdir / "testset.bin").write_bytes(payload)
+    print(f"[aot] wrote testset.bin ({len(payload)//1024} KiB)")
+    return {
+        "file": "testset.bin",
+        "dataset": dataset,
+        "n": n,
+        "image_shape": [spec.image_size, spec.image_size, spec.in_channels],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", type=Path, default=Path("../artifacts"))
+    ap.add_argument("--train-steps", type=int, default=200,
+                    help="quick-train budget when no checkpoint exists")
+    ap.add_argument("--batches", type=int, nargs="*", default=list(DEFAULT_BATCHES))
+    args = ap.parse_args()
+    outdir = args.outdir
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    ckpt = _ensure_checkpoint(args.train_steps)
+    spec, params, states, record = train.load_checkpoint(ckpt)
+    print(f"[aot] serving model {spec.name}: test acc {record.get('test_acc')}")
+
+    manifest = {
+        "spec": dataclasses.asdict(spec) | {"stox": dataclasses.asdict(spec.stox)},
+        "checkpoint_record": {
+            k: v for k, v in record.items() if not isinstance(v, list)
+        },
+        "layers": model.conv_layer_shapes(spec),
+        "models": [],
+        "mvms": [],
+    }
+    for b in args.batches:
+        manifest["models"].append(export_model_hlo(spec, params, states, b, outdir))
+
+    # Hot-path MVM artifacts: the baseline config + a multi-sample variant,
+    # sized like a mid-network ResNet-20 layer (K=3·3·64=576 rows, 64 cols).
+    base = spec.stox
+    manifest["mvms"].append(export_mvm_hlo(base, 8, 576, 64, outdir))
+    manifest["mvms"].append(
+        export_mvm_hlo(dataclasses.replace(base, n_samples=4), 8, 576, 64, outdir)
+    )
+
+    manifest["weights"] = export_weights(spec, params, states, outdir)
+    manifest["testset"] = export_testset(spec, outdir)
+
+    text = json.dumps(manifest, indent=1)
+    (outdir / "manifest.json").write_text(text)
+    print(f"[aot] wrote manifest.json (sha256 {hashlib.sha256(text.encode()).hexdigest()[:12]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Fig. 4: distribution of normalized array-level MVM outputs (PS), for a
+StoX-trained model vs a deterministic-1b-SA-trained model.
+
+Usage (after `make train-tables`, which produces both checkpoints):
+
+    python -m compile.collect_ps [--stox t4-hpf-1] [--sa t4-hpf-1bsa]
+
+Prints ASCII histograms and writes `results/fig4.json` with the binned
+densities. The Rust side exposes the same probe on the native crossbar
+model (`stox-cli fig4`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, train
+from .kernels import ref
+from .stox_layers import _im2col, normalize_weights
+
+
+def collect_ps(spec, params, states, xs, n_images: int = 32) -> np.ndarray:
+    """Run the first stochastic conv layer over a batch and return all
+    normalized PS values (the paper samples a trained layer's PS stream)."""
+    x = jnp.asarray(xs[:n_images])
+    w = params["conv1"] if spec.first_layer == "qf" else params["stages"][0][0]["conv1"]
+    # When conv1 is HPF, probe the first stochastic layer instead (after
+    # running conv1+bn to get its input); for simplicity we probe on the
+    # clipped raw input for QF and on conv1 output for HPF.
+    if spec.first_layer == "qf":
+        inp = jnp.clip(x, -1.0, 1.0)
+    else:
+        from . import model as model_mod
+        import jax
+
+        # run only conv1 + bn1 to produce the first block's input
+        h = jax.lax.conv_general_dilated(
+            x, params["conv1"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        from . import stox_layers as sl
+
+        h, _ = sl.batch_norm(h, params["bn1"], states["bn1"], train=False)
+        inp = jnp.clip(h, -1.0, 1.0)
+
+    kh, kw, cin, cout = w.shape
+    patches = _im2col(inp, kh, kw, 1, (kh - 1) // 2)
+    b, ho, wo, m = patches.shape
+    wn = normalize_weights(w).reshape(kh * kw * cin, cout)
+    cfg = spec.layer_cfg(1 if spec.first_layer == "hpf" else 0)
+    ps = ref.partial_sums(patches.reshape(b * ho * wo, m), wn, cfg)
+    return np.asarray(ps).flatten()
+
+
+def histogram(vals: np.ndarray, bins: int = 41):
+    h, edges = np.histogram(vals, bins=bins, range=(-1, 1), density=False)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    return centers, h / max(1, h.sum())
+
+
+def render(centers, dens, width: int = 60) -> str:
+    mx = max(dens.max(), 1e-12)
+    out = []
+    for c, d in zip(centers, dens):
+        bar = "#" * int(round(d / mx * width))
+        out.append(f"{c:+.3f} | {bar}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--stox", default="t4-hpf-1")
+    ap.add_argument("--sa", default="t4-hpf-1bsa")
+    ap.add_argument("--images", type=int, default=32)
+    args = ap.parse_args()
+
+    result = {}
+    for label, name in [("StoX", args.stox), ("SA", args.sa)]:
+        ckpt = train.CHECKPOINTS / f"{name}.pkl"
+        if not ckpt.exists():
+            print(f"[fig4] checkpoint {ckpt} missing — run `make train-tables`")
+            continue
+        spec, params, states, _ = train.load_checkpoint(ckpt)
+        dataset = "digits" if spec.in_channels == 1 else "cifar"
+        _, (xte, _) = datasets.get_dataset(dataset, 8, 256, spec.image_size, seed=0)
+        ps = collect_ps(spec, params, states, xte, args.images)
+        centers, dens = histogram(ps)
+        std = float(ps.std())
+        central = float(dens[np.abs(centers) < 0.25].sum())
+        print(f"\n== Fig. 4 ({label}-trained, {name}): PS distribution ==")
+        print(render(centers, dens))
+        print(f"std {std:.4f}; mass in |ps|<0.25: {100*central:.1f}%")
+        result[label] = {
+            "name": name,
+            "centers": centers.tolist(),
+            "density": dens.tolist(),
+            "std": std,
+            "central_mass": central,
+        }
+
+    if {"StoX", "SA"} <= set(result):
+        print(
+            "\nStoX-trained spread (std {:.4f}) vs SA-trained ({:.4f}) — "
+            "stochastic training {} the distribution (paper: broader, less polarized)".format(
+                result["StoX"]["std"],
+                result["SA"]["std"],
+                "broadens"
+                if result["StoX"]["std"] > result["SA"]["std"]
+                else "does not broaden",
+            )
+        )
+    out = train.RESULTS / "fig4.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Procedural stand-ins for MNIST / CIFAR-10 (no network access here).
+
+DESIGN.md §3: the paper's accuracy claims are about *relative* behaviour of
+the stochastic-PS pipeline across hardware configs, which depends on the
+crossbar arithmetic and gradient flow, not on natural-image statistics.
+These generators produce learnable-but-nontrivial 10-class problems:
+
+  * ``synth_digits`` — MNIST-like: 5×7 bitmap glyphs of the digits 0–9,
+    randomly shifted/scaled, with pixel noise and intensity jitter.
+    Grayscale, default 16×16 (28×28 available).
+  * ``synth_cifar``  — CIFAR-like: each class is a (foreground shape,
+    texture frequency, color pair) signature rendered in RGB with random
+    phase, position and additive noise.  Default 16×16 (32×32 available).
+
+Images are float32 in [-1, 1], NHWC; labels are int32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 (columns LSB at top), classic hex font.
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+_GLYPHS = np.stack(
+    [
+        np.array([[int(c) for c in row] for row in _FONT[d]], dtype=np.float32)
+        for d in range(10)
+    ]
+)  # [10, 7, 5]
+
+
+def synth_digits(
+    n: int, size: int = 16, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """MNIST-like synthetic digit dataset: ([n,size,size,1] in [-1,1], [n])."""
+    rs = np.random.RandomState(seed)
+    labels = rs.randint(0, 10, size=n).astype(np.int32)
+    imgs = np.zeros((n, size, size, 1), np.float32)
+    # upscale factor so the glyph fills most of the canvas (MNIST digits are
+    # roughly centered; jitter is a couple of pixels, not full-canvas)
+    up = max(1, (size - 2) // 7)
+    gh, gw = 7 * up, 5 * up
+    cy, cx = (size - gh) // 2, (size - gw) // 2
+    max_jy, max_jx = min(2, cy), min(2, cx)
+    for idx in range(n):
+        g = _GLYPHS[labels[idx]]
+        g = np.kron(g, np.ones((up, up), np.float32))
+        # random thinning/thickening via threshold jitter then noise
+        intensity = rs.uniform(0.7, 1.0)
+        canvas = np.zeros((size, size), np.float32)
+        dy = cy + rs.randint(-max_jy, max_jy + 1)
+        dx = cx + rs.randint(-max_jx, max_jx + 1)
+        canvas[dy : dy + gh, dx : dx + gw] = g * intensity
+        canvas += rs.normal(0.0, 0.08, canvas.shape).astype(np.float32)
+        imgs[idx, :, :, 0] = canvas
+    return np.clip(imgs * 2.0 - 1.0, -1.0, 1.0), labels
+
+
+# Class signatures for synth-cifar: (shape, fx, fy, fg RGB, bg RGB)
+_SHAPES = ("disk", "square", "cross", "stripeh", "stripev")
+_CIFAR_SIG = [
+    (_SHAPES[k % 5], 1 + k % 3, 1 + (k // 2) % 3) for k in range(10)
+]
+_FG = np.array(
+    [
+        [0.9, 0.2, 0.2], [0.2, 0.9, 0.2], [0.2, 0.2, 0.9], [0.9, 0.9, 0.2],
+        [0.9, 0.2, 0.9], [0.2, 0.9, 0.9], [0.9, 0.6, 0.2], [0.6, 0.2, 0.9],
+        [0.5, 0.9, 0.5], [0.9, 0.5, 0.5],
+    ],
+    np.float32,
+)
+_BG = np.roll(_FG, 3, axis=0) * 0.5
+
+
+def _shape_mask(shape: str, size: int, cy: float, cx: float, r: float):
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    if shape == "disk":
+        return ((yy - cy) ** 2 + (xx - cx) ** 2 <= r * r).astype(np.float32)
+    if shape == "square":
+        return (
+            (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        ).astype(np.float32)
+    if shape == "cross":
+        return (
+            (np.abs(yy - cy) <= r / 2.5) | (np.abs(xx - cx) <= r / 2.5)
+        ).astype(np.float32) * (
+            (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        )
+    if shape == "stripeh":
+        return (np.floor((yy - cy) / max(r / 2, 1)) % 2 == 0).astype(np.float32)
+    return (np.floor((xx - cx) / max(r / 2, 1)) % 2 == 0).astype(np.float32)
+
+
+def synth_cifar(
+    n: int, size: int = 16, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """CIFAR-like synthetic RGB dataset: ([n,size,size,3] in [-1,1], [n])."""
+    rs = np.random.RandomState(seed)
+    labels = rs.randint(0, 10, size=n).astype(np.int32)
+    imgs = np.zeros((n, size, size, 3), np.float32)
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    for idx in range(n):
+        k = labels[idx]
+        shape, fx, fy = _CIFAR_SIG[k]
+        cy = size / 2 + rs.uniform(-size / 6, size / 6)
+        cx = size / 2 + rs.uniform(-size / 6, size / 6)
+        r = size * rs.uniform(0.22, 0.34)
+        mask = _shape_mask(shape, size, cy, cx, r)
+        phase = rs.uniform(0, 2 * np.pi, 2)
+        tex = 0.5 + 0.5 * np.sin(
+            2 * np.pi * fx * xx / size + phase[0]
+        ) * np.sin(2 * np.pi * fy * yy / size + phase[1])
+        fg = _FG[k] * rs.uniform(0.8, 1.2)
+        bg = _BG[k] * rs.uniform(0.8, 1.2)
+        img = (
+            mask[..., None] * fg[None, None, :] * (0.55 + 0.45 * tex[..., None])
+            + (1 - mask[..., None]) * bg[None, None, :] * (0.7 + 0.3 * tex[..., None])
+        )
+        img += rs.normal(0.0, 0.06, img.shape)
+        imgs[idx] = img
+    return np.clip(imgs * 2.0 - 1.0, -1.0, 1.0).astype(np.float32), labels
+
+
+def get_dataset(name: str, n_train: int, n_test: int, size: int, seed: int = 0):
+    """Returns ((x_train, y_train), (x_test, y_test)) for 'digits'|'cifar'."""
+    gen = {"digits": synth_digits, "cifar": synth_cifar}[name]
+    xtr, ytr = gen(n_train, size=size, seed=seed)
+    xte, yte = gen(n_test, size=size, seed=seed + 10_000)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,274 @@
+"""Pure-jnp oracle for the StoX-Net stochastic crossbar MVM (Algorithm 1).
+
+This file is the *semantic definition* of the crossbar arithmetic.  The
+Pallas kernel (``stox.py``), the L2 layers (``stox_layers.py``) and the Rust
+functional crossbar (``rust/src/imc/mvm.rs``) are all tested against it.
+
+Arithmetic (documented in DESIGN.md §2):
+
+  * activations ``a`` in [-1, 1] are quantized to ``a_bits`` levels:
+    ``u = round((a+1)/2 * (2^Ab - 1))`` and decomposed into base-``2^As``
+    signed digits ``x_i = 2 d_i - (2^As - 1)`` so that
+    ``a_q = sum_i 2^{i As} x_i / (2^Ab - 1)``  (bit streaming, DAC side);
+  * weights ``w`` in [-1, 1] likewise into ``w_bits`` / ``2^Ws`` signed
+    slice digits ``t_j`` (bit slicing; two memory cells per weight give the
+    signed differential column current);
+  * the row dimension is partitioned into ``n_arrs = ceil(M / r_arr)``
+    subarrays; each (subarray k, stream i, slice j) produces an analog
+    partial sum ``PS[k,i,j] = sum_rows x_i t_j`` — the column current;
+  * the stochastic SOT-MTJ converts ``PS`` to ±1 with
+    ``P(+1) = (tanh(alpha * PS / r_arr) + 1)/2`` (Eq. 1), read
+    ``n_samples`` times and counted;
+  * counts are shift-and-added with scale ``2^{i As + j Ws}`` and
+    normalized by ``(2^Ab-1)(2^Wb-1) * n_arrs * n_samples`` so the MVM
+    output lands in [-1, 1] (Algorithm 1's final normalization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from . import rng
+
+MODES = ("stox", "sa", "expected", "ideal")
+
+
+@dataclasses.dataclass(frozen=True)
+class StoxConfig:
+    """Hardware configuration of one StoX crossbar-mapped MVM.
+
+    Mirrors the paper's ``XwYaZbs`` naming: ``w_bits`` = X, ``a_bits`` = Y,
+    ``w_slice_bits`` = Z.  ``a_stream_bits`` is the DAC resolution (1 in the
+    paper).  ``mode``:
+
+      * ``"stox"``     — stochastic MTJ sampling (Eq. 1), ``n_samples`` reads
+      * ``"sa"``       — deterministic 1-bit sense amplifier (alpha → inf)
+      * ``"expected"`` — infinite-sample limit, PS → tanh(alpha·ps)
+      * ``"ideal"``    — no PS quantization at all (full-precision ADC)
+    """
+
+    a_bits: int = 4
+    w_bits: int = 4
+    a_stream_bits: int = 1
+    w_slice_bits: int = 4
+    r_arr: int = 256
+    n_samples: int = 1
+    alpha: float = 4.0
+    mode: str = "stox"
+
+    def __post_init__(self):
+        if self.a_bits % self.a_stream_bits != 0:
+            raise ValueError("a_bits must be divisible by a_stream_bits")
+        if self.w_bits % self.w_slice_bits != 0:
+            raise ValueError("w_bits must be divisible by w_slice_bits")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}")
+        if self.n_samples < 1:
+            raise ValueError("n_samples >= 1")
+        if self.r_arr < 1:
+            raise ValueError("r_arr >= 1")
+
+    @property
+    def n_streams(self) -> int:
+        return self.a_bits // self.a_stream_bits
+
+    @property
+    def n_slices(self) -> int:
+        return self.w_bits // self.w_slice_bits
+
+    def n_arrs(self, m: int) -> int:
+        return max(1, math.ceil(m / self.r_arr))
+
+    @property
+    def tag(self) -> str:
+        return f"{self.w_bits}w{self.a_bits}a{self.w_slice_bits}bs"
+
+
+# ---------------------------------------------------------------------------
+# Quantization / digit decomposition
+# ---------------------------------------------------------------------------
+
+
+def quantize_unit(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric uniform quantizer of [-1,1] onto 2^bits levels.
+
+    Returns the *integer code* ``u`` in [0, 2^bits - 1]; the represented
+    value is ``2 u / (2^bits - 1) - 1``.
+    """
+    levels = (1 << bits) - 1
+    x = jnp.clip(x, -1.0, 1.0)
+    return jnp.round((x + 1.0) * 0.5 * levels).astype(jnp.int32)
+
+
+def dequantize_unit(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    return 2.0 * u.astype(jnp.float32) / levels - 1.0
+
+
+def signed_digits(u: jnp.ndarray, bits: int, digit_bits: int) -> jnp.ndarray:
+    """Decompose integer codes into signed base-2^digit_bits digits.
+
+    Output has a trailing axis of length ``bits // digit_bits`` with
+    digit ``x_i = 2 d_i - (2^digit_bits - 1)`` (±1 for 1-bit digits),
+    ordered least-significant first, as float32 (these are the physical
+    DAC levels / differential cell currents).
+    """
+    n_digits = bits // digit_bits
+    base = 1 << digit_bits
+    shifts = jnp.arange(n_digits, dtype=jnp.int32) * digit_bits
+    d = (u[..., None] >> shifts) & (base - 1)
+    return (2 * d - (base - 1)).astype(jnp.float32)
+
+
+def digit_scales(bits: int, digit_bits: int) -> jnp.ndarray:
+    """Shift-and-add scales 2^{i*digit_bits}, LSB first."""
+    n_digits = bits // digit_bits
+    return jnp.asarray(
+        [float(1 << (i * digit_bits)) for i in range(n_digits)], jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stochastic MTJ conversion
+# ---------------------------------------------------------------------------
+
+
+def mtj_probability(ps_norm: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """P(read +1) of the SOT-MTJ for a normalized column current (Eq. 1)."""
+    return 0.5 * (jnp.tanh(alpha * ps_norm) + 1.0)
+
+
+def mtj_sample_counts(
+    ps_norm: jnp.ndarray,
+    alpha: float,
+    n_samples: int,
+    seed,
+    counter_base: jnp.ndarray,
+) -> jnp.ndarray:
+    """Sum of ``n_samples`` stochastic ±1 MTJ reads for each PS element.
+
+    ``counter_base`` assigns each PS element a unique event-counter base;
+    sample ``s`` of element ``e`` uses counter ``base[e] * n_samples + s``,
+    identically to the Rust functional simulator.
+    """
+    p = mtj_probability(ps_norm, alpha)
+    total = jnp.zeros_like(ps_norm)
+    for s in range(n_samples):
+        c = counter_base * jnp.uint32(n_samples) + jnp.uint32(s)
+        u = rng.uniform01(seed, c)
+        total = total + jnp.where(u < p, 1.0, -1.0)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Full Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(x: jnp.ndarray, axis_len: int, r_arr: int) -> jnp.ndarray:
+    """Zero-pad axis 0 (crossbar rows) to a multiple of r_arr.
+
+    Padding happens in the *digit/current* domain where an absent cell
+    contributes exactly zero column current, so padded rows are inert.
+    """
+    n_arrs = max(1, math.ceil(axis_len / r_arr))
+    pad = n_arrs * r_arr - axis_len
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
+
+
+def partial_sums(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig) -> jnp.ndarray:
+    """Analog array-level partial sums, normalized by r_arr.
+
+    a: [B, M] activations in [-1,1];  w: [M, N] weights in [-1,1].
+    Returns float32 [B, n_arrs, N, n_streams, n_slices] in [-1, 1].
+    """
+    b_sz, m = a.shape
+    m2, n = w.shape
+    assert m == m2, (m, m2)
+    n_arrs = cfg.n_arrs(m)
+
+    ua = quantize_unit(a, cfg.a_bits)
+    uw = quantize_unit(w, cfg.w_bits)
+    xd = signed_digits(ua, cfg.a_bits, cfg.a_stream_bits)  # [B, M, I]
+    td = signed_digits(uw, cfg.w_bits, cfg.w_slice_bits)  # [M, N, J]
+
+    xd = _pad_rows(jnp.swapaxes(xd, 0, 1), m, cfg.r_arr)  # [Mp, B, I]
+    td = _pad_rows(td, m, cfg.r_arr)  # [Mp, N, J]
+    xd = xd.reshape(n_arrs, cfg.r_arr, b_sz, cfg.n_streams)
+    td = td.reshape(n_arrs, cfg.r_arr, n, cfg.n_slices)
+
+    # PS[b, k, n, i, j] = sum_r xd[k, r, b, i] * td[k, r, n, j]
+    ps = jnp.einsum("krbi,krnj->bknij", xd, td)
+    return ps / float(cfg.r_arr)
+
+
+def ps_counter_base(
+    b_sz: int, n_arrs: int, n_cols: int, cfg: StoxConfig
+) -> jnp.ndarray:
+    """Canonical event-counter base for each PS element.
+
+    Layout (row-major over [B, K, N, I, J]) — shared with the Rust side:
+      base = (((b * K + k) * N + n) * I + i) * J + j
+    """
+    total = b_sz * n_arrs * n_cols * cfg.n_streams * cfg.n_slices
+    return jnp.arange(total, dtype=jnp.uint32).reshape(
+        b_sz, n_arrs, n_cols, cfg.n_streams, cfg.n_slices
+    )
+
+
+def convert_ps(
+    ps: jnp.ndarray, cfg: StoxConfig, seed, counter_base: jnp.ndarray | None
+) -> tuple[jnp.ndarray, int]:
+    """Apply the configured PS converter; returns (converted, samples)."""
+    if cfg.mode == "ideal":
+        return ps, 1
+    if cfg.mode == "expected":
+        return jnp.tanh(cfg.alpha * ps), 1
+    if cfg.mode == "sa":
+        return jnp.where(ps >= 0.0, 1.0, -1.0), 1
+    assert counter_base is not None
+    conv = mtj_sample_counts(ps, cfg.alpha, cfg.n_samples, seed, counter_base)
+    return conv, cfg.n_samples
+
+
+def shift_and_add(conv: jnp.ndarray, cfg: StoxConfig, samples: int) -> jnp.ndarray:
+    """S&A recombination + Algorithm 1 output normalization to [-1, 1].
+
+    conv: [B, K, N, I, J] converted PS (counts or analog); returns [B, N].
+    """
+    n_arrs = conv.shape[1]
+    sa = digit_scales(cfg.a_bits, cfg.a_stream_bits)  # [I]
+    sw = digit_scales(cfg.w_bits, cfg.w_slice_bits)  # [J]
+    lev = float(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    out = jnp.einsum("bknij,i,j->bn", conv, sa, sw)
+    return out / (lev * n_arrs * samples)
+
+
+def stox_mvm(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig, seed=0) -> jnp.ndarray:
+    """Hardware-aware MVM output O_l in [-1, 1] per Algorithm 1.
+
+    a: [B, M] in [-1,1];  w: [M, N] in [-1,1].  Returns [B, N] float32.
+    """
+    b_sz, m = a.shape
+    n = w.shape[1]
+    ps = partial_sums(a, w, cfg)
+    base = (
+        ps_counter_base(b_sz, cfg.n_arrs(m), n, cfg) if cfg.mode == "stox" else None
+    )
+    conv, samples = convert_ps(ps, cfg, seed, base)
+    return shift_and_add(conv, cfg, samples)
+
+
+def ideal_mvm(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig) -> jnp.ndarray:
+    """Quantized-but-unconverted MVM (infinite-precision ADC readout).
+
+    The convergence target of the stochastic path in the linear tanh
+    region; also the error-free reference for the sensitivity analysis.
+    """
+    return stox_mvm(a, w, dataclasses.replace(cfg, mode="ideal"))

@@ -1,0 +1,51 @@
+"""Counter-based RNG shared (bit-identically) between L1/L2 python and the
+Rust L3 functional simulator (``rust/src/imc/rng.rs``).
+
+StoX-Net's stochastic MTJ conversion needs a random uniform per
+(subarray, stream, slice, sample, batch, column) event.  Using a
+counter-based hash makes the whole stochastic MVM a *pure function* of
+``(inputs, weights, seed)`` so that
+
+  * the Pallas kernel, the pure-jnp oracle and the Rust crossbar simulator
+    produce identical bits (tested in ``python/tests`` and
+    ``rust/src/imc/rng.rs`` against shared known-answer vectors), and
+  * AOT-lowered artifacts stay deterministic and replayable.
+
+The hash is the 32-bit xxhash/murmur-style avalanche finalizer applied
+twice; it passes the SmallCrush-equivalent sanity checks we care about
+(uniformity of the top bits, no counter-stride correlation) and costs a
+handful of VPU ops per event.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit avalanche mix (lowbias32 by E. Wellons)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def hash_counter(seed, counter: jnp.ndarray) -> jnp.ndarray:
+    """Hash a (scalar) seed with an array of event counters -> uint32."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    return mix32(counter.astype(jnp.uint32) ^ mix32(seed ^ jnp.uint32(_GOLDEN)))
+
+
+def uniform01(seed, counter: jnp.ndarray) -> jnp.ndarray:
+    """U[0,1) float32 from (seed, counter); bit-identical to the Rust side."""
+    h = hash_counter(seed, counter)
+    # f32 has a 24-bit mantissa; use the top 24 bits so that the float is
+    # exactly representable and the Rust side (h >> 8) as f32 * 2^-24 matches.
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))

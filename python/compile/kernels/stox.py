@@ -1,0 +1,242 @@
+"""L1 Pallas kernels for the StoX-Net stochastic crossbar MVM.
+
+The hot-spot of the paper is Algorithm 1: a bit-sliced / bit-streamed
+matrix-vector product whose array-level partial sums are converted to
+digital by stochastic SOT-MTJ sampling, then shift-and-added.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one crossbar subarray
+(``r_arr`` rows) is one grid step; its digit matrices are staged
+HBM→VMEM by the BlockSpecs exactly as the paper stages operands into the
+analog array.  The digit contraction is expressed as a single
+``[B·I, R] @ [R, N·J]`` matmul so it lands on the MXU; the stochastic
+conversion is elementwise VPU work on the PS tile; the subarray axis is
+the innermost grid dimension so the output tile is revisited
+consecutively (legal accumulation on real TPU, no spills).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU utilization is *estimated* in DESIGN.md §7 from
+the VMEM footprint / MXU shapes chosen here.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import StoxConfig
+
+# Column tile: one MXU-native lane group. Subarrays are whole (the paper's
+# conversion granularity); batch rides along in the sublane dimension.
+DEFAULT_COL_TILE = 128
+
+
+def _counter_base_block(
+    b_sz: int, n_tile: int, n_total: int, k: int, n_k: int, nb, cfg: StoxConfig
+):
+    """Event-counter bases for a [B, Nt, I, J] PS tile.
+
+    Must match ``ref.ps_counter_base``:  base = (((b·K + k)·N + n)·I + i)·J + j.
+    """
+    shape = (b_sz, n_tile, cfg.n_streams, cfg.n_slices)
+    bb = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    nn = jax.lax.broadcasted_iota(jnp.uint32, shape, 1) + jnp.uint32(nb) * jnp.uint32(
+        n_tile
+    )
+    ii = jax.lax.broadcasted_iota(jnp.uint32, shape, 2)
+    jj = jax.lax.broadcasted_iota(jnp.uint32, shape, 3)
+    base = (
+        ((bb * jnp.uint32(n_k) + jnp.uint32(k)) * jnp.uint32(n_total) + nn)
+        * jnp.uint32(cfg.n_streams)
+        + ii
+    ) * jnp.uint32(cfg.n_slices) + jj
+    return base
+
+
+def _stox_mvm_kernel(
+    seed_ref,
+    x_ref,
+    t_ref,
+    o_ref,
+    *,
+    cfg: StoxConfig,
+    n_total: int,
+    n_k: int,
+):
+    """One grid step: subarray ``k``, output-column tile ``nb``.
+
+    x_ref: [1, R, B, I] activation digits of subarray k
+    t_ref: [1, R, Nt, J] weight-slice digits of subarray k, column tile nb
+    o_ref: [B, Nt] accumulated MVM output tile
+    """
+    nb = pl.program_id(0)
+    k = pl.program_id(1)
+
+    x = x_ref[0]  # [R, B, I]
+    t = t_ref[0]  # [R, Nt, J]
+    r, b_sz, i_n = x.shape
+    n_tile, j_n = t.shape[1], t.shape[2]
+
+    # MXU-friendly contraction over the crossbar rows:
+    #   [B*I, R] @ [R, Nt*J]  ->  PS for every (stream, slice) pair at once.
+    xm = x.transpose(1, 2, 0).reshape(b_sz * i_n, r)
+    tm = t.reshape(r, n_tile * j_n)
+    ps = jax.lax.dot(xm, tm, preferred_element_type=jnp.float32)
+    ps = ps.reshape(b_sz, i_n, n_tile, j_n).transpose(0, 2, 1, 3)  # [B,Nt,I,J]
+    ps = ps * (1.0 / float(cfg.r_arr))
+
+    if cfg.mode == "ideal":
+        conv, samples = ps, 1
+    elif cfg.mode == "expected":
+        conv, samples = jnp.tanh(cfg.alpha * ps), 1
+    elif cfg.mode == "sa":
+        conv, samples = jnp.where(ps >= 0.0, 1.0, -1.0), 1
+    else:  # stochastic MTJ sampling, unrolled (n_samples <= 8 in the paper)
+        seed = seed_ref[0]
+        base = _counter_base_block(b_sz, n_tile, n_total, k, n_k, nb, cfg)
+        p = 0.5 * (jnp.tanh(cfg.alpha * ps) + 1.0)
+        conv = jnp.zeros_like(ps)
+        for s in range(cfg.n_samples):
+            c = base * jnp.uint32(cfg.n_samples) + jnp.uint32(s)
+            h = c ^ _mix32_scalar(seed ^ jnp.uint32(0x9E3779B9))
+            u = (_mix32(h) >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+                1.0 / (1 << 24)
+            )
+            conv = conv + jnp.where(u < p, 1.0, -1.0)
+        samples = cfg.n_samples
+
+    # Shift-and-add + Algorithm 1 normalization, folded to a single scale.
+    # The 2^{i·As + j·Ws} scale grid is built with iotas so the kernel stays
+    # closure-free (pallas_call rejects captured array constants).
+    ii = jax.lax.broadcasted_iota(jnp.float32, conv.shape, 2)
+    jj = jax.lax.broadcasted_iota(jnp.float32, conv.shape, 3)
+    scale = jnp.exp2(ii * float(cfg.a_stream_bits) + jj * float(cfg.w_slice_bits))
+    lev = float(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    norm = 1.0 / (lev * n_k * samples)
+    po = (conv * scale).sum(axis=(2, 3)) * norm
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = po
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += po
+
+
+def _mix32(x):
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _mix32_scalar(x):
+    return _mix32(jnp.asarray(x, jnp.uint32))
+
+
+def prepare_digits(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig):
+    """Quantize + decompose + partition operands for the kernel.
+
+    Returns (xd [K, R, B, I], td [K, R, N, J]); the compile-time analogue
+    of programming the crossbar (weights) and the DAC stream buffers.
+    """
+    b_sz, m = a.shape
+    n = w.shape[1]
+    n_arrs = cfg.n_arrs(m)
+
+    ua = ref.quantize_unit(a, cfg.a_bits)
+    uw = ref.quantize_unit(w, cfg.w_bits)
+    xd = ref.signed_digits(ua, cfg.a_bits, cfg.a_stream_bits)  # [B, M, I]
+    td = ref.signed_digits(uw, cfg.w_bits, cfg.w_slice_bits)  # [M, N, J]
+
+    xd = ref._pad_rows(jnp.swapaxes(xd, 0, 1), m, cfg.r_arr)  # [Mp, B, I]
+    td = ref._pad_rows(td, m, cfg.r_arr)  # [Mp, N, J]
+    xd = xd.reshape(n_arrs, cfg.r_arr, b_sz, cfg.n_streams)
+    td = td.reshape(n_arrs, cfg.r_arr, n, cfg.n_slices)
+    return xd, td
+
+
+def stox_mvm_pallas(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    cfg: StoxConfig,
+    seed=0,
+    col_tile: int | None = None,
+) -> jnp.ndarray:
+    """Pallas implementation of Algorithm 1; drop-in for ``ref.stox_mvm``."""
+    b_sz, m = a.shape
+    n = w.shape[1]
+    n_arrs = cfg.n_arrs(m)
+    xd, td = prepare_digits(a, w, cfg)
+
+    nt = col_tile or min(DEFAULT_COL_TILE, n)
+    n_pad = math.ceil(n / nt) * nt
+    if n_pad != n:
+        td = jnp.pad(td, ((0, 0), (0, 0), (0, n_pad - n), (0, 0)))
+    n_blocks = n_pad // nt
+
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+    kernel = functools.partial(
+        _stox_mvm_kernel, cfg=cfg, n_total=n, n_k=n_arrs
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks, n_arrs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda nb, k: (0,)),
+            pl.BlockSpec(
+                (1, cfg.r_arr, b_sz, cfg.n_streams), lambda nb, k: (k, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, cfg.r_arr, nt, cfg.n_slices), lambda nb, k: (k, 0, nb, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((b_sz, nt), lambda nb, k: (0, nb)),
+        out_shape=jax.ShapeDtypeStruct((b_sz, n_pad), jnp.float32),
+        interpret=True,
+    )(seed_arr, xd, td)
+    return out[:, :n]
+
+
+def mtj_convert_pallas(
+    ps_norm: jnp.ndarray, alpha: float, n_samples: int, seed=0
+) -> jnp.ndarray:
+    """Standalone stochastic MTJ converter kernel over a flat PS vector.
+
+    Counter base is the flat element index — matches the Rust
+    ``device::converter`` known-answer tests.
+    """
+    (n,) = ps_norm.shape
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+
+    def kernel(seed_ref, ps_ref, o_ref):
+        ps = ps_ref[...]
+        p = 0.5 * (jnp.tanh(alpha * ps) + 1.0)
+        base = jax.lax.broadcasted_iota(jnp.uint32, ps.shape, 0)
+        mixed_seed = _mix32_scalar(seed_ref[0] ^ jnp.uint32(0x9E3779B9))
+        total = jnp.zeros_like(ps)
+        for s in range(n_samples):
+            c = base * jnp.uint32(n_samples) + jnp.uint32(s)
+            u = (_mix32(c ^ mixed_seed) >> jnp.uint32(8)).astype(
+                jnp.float32
+            ) * jnp.float32(1.0 / (1 << 24))
+            total = total + jnp.where(u < p, 1.0, -1.0)
+        o_ref[...] = total
+
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(seed_arr, ps_norm)

@@ -1,0 +1,257 @@
+"""L2 model zoo: ResNet-20 (and a small CNN) built from StoX layers.
+
+The network structure follows the paper's evaluation: ResNet-20 (3 stages ×
+3 basic blocks × 2 convs + first conv + FC) where every convolution is a
+crossbar-mapped ``stox_conv2d``.  Variants (§4.1 naming):
+
+  * ``first_layer='hpf'`` — full-precision conv-1 (the state-of-the-art QAT
+    convention the paper challenges);
+  * ``first_layer='qf'``  — conv-1 is also stochastic, with
+    ``first_layer_samples`` MTJ reads (8 in the paper);
+  * ``layer_samples``     — per-layer sampling override implementing the
+    Monte-Carlo-guided inhomogeneous "Mix" scheme;
+  * ``mode='sa'``         — deterministic 1-bit sense-amp PS (baseline).
+
+Widths are scalable (``width_mult``) so the same definition serves the
+paper-sized network (16/32/64) and the CPU-budget reduced network.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import stox_layers as sl
+from .kernels.ref import StoxConfig
+from .kernels import rng as stox_rng
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Full specification of a StoX-Net model variant."""
+
+    name: str = "stox-resnet20"
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 16
+    base_width: int = 16
+    width_mult: float = 1.0
+    blocks_per_stage: int = 3
+    stox: StoxConfig = StoxConfig()
+    first_layer: str = "hpf"  # 'hpf' | 'qf'
+    first_layer_samples: int = 8
+    first_layer_mode: Optional[str] = None  # None -> stox.mode; 'sa' for 1b-SA QF
+    layer_samples: Optional[tuple[tuple[int, int], ...]] = None  # (layer, n)
+
+    def widths(self) -> tuple[int, int, int]:
+        w = max(4, int(round(self.base_width * self.width_mult)))
+        return (w, 2 * w, 4 * w)
+
+    def n_stox_layers(self) -> int:
+        """Stochastic conv layers: conv1 (if qf) + 2 per block."""
+        n = 2 * 3 * self.blocks_per_stage
+        return n + (1 if self.first_layer == "qf" else 0)
+
+    def layer_cfg(self, layer_idx: int) -> StoxConfig:
+        """StoxConfig for stochastic layer ``layer_idx`` (0 = conv-1 slot).
+
+        Layer 0 is conv-1: in QF models it gets ``first_layer_samples`` and
+        (optionally) its own mode; HPF models never ask for layer 0.
+        """
+        cfg = self.stox
+        if layer_idx == 0 and self.first_layer == "qf":
+            mode = self.first_layer_mode or cfg.mode
+            return dataclasses.replace(
+                cfg, n_samples=self.first_layer_samples, mode=mode
+            )
+        if self.layer_samples is not None:
+            for li, n in self.layer_samples:
+                if li == layer_idx:
+                    return dataclasses.replace(cfg, n_samples=n)
+        return cfg
+
+
+def _layer_seed(step_seed, layer_idx: int):
+    """Independent stochastic-sampling stream per (step, layer)."""
+    return stox_rng.mix32(
+        jnp.asarray(step_seed, jnp.uint32) ^ jnp.uint32(0xA511E9B3 + layer_idx)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return std * jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+
+
+def init_params(spec: ModelSpec, key) -> tuple[dict, dict]:
+    """Returns (params, bn_states) pytrees for the spec."""
+    w1, w2, w3 = spec.widths()
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {}
+    states: dict = {}
+
+    params["conv1"] = _conv_init(next(keys), 3, 3, spec.in_channels, w1)
+    params["bn1"], states["bn1"] = sl.bn_init(w1)
+
+    stage_widths = [w1, w2, w3]
+    params["stages"] = []
+    states["stages"] = []
+    cin = w1
+    for s, cout in enumerate(stage_widths):
+        blocks_p, blocks_s = [], []
+        for b in range(spec.blocks_per_stage):
+            bp: dict = {
+                "conv1": _conv_init(next(keys), 3, 3, cin, cout),
+                "conv2": _conv_init(next(keys), 3, 3, cout, cout),
+            }
+            bs: dict = {}
+            bp["bn1"], bs["bn1"] = sl.bn_init(cout)
+            bp["bn2"], bs["bn2"] = sl.bn_init(cout)
+            blocks_p.append(bp)
+            blocks_s.append(bs)
+            cin = cout
+        params["stages"].append(blocks_p)
+        states["stages"].append(blocks_s)
+
+    params["fc_w"] = 0.01 * jax.random.normal(
+        next(keys), (w3, spec.num_classes), jnp.float32
+    )
+    params["fc_b"] = jnp.zeros((spec.num_classes,), jnp.float32)
+    return params, states
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _shortcut(x, cout: int, stride: int):
+    """Parameter-free ResNet-20 shortcut: strided subsample + zero-pad."""
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    cin = x.shape[-1]
+    if cin < cout:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cout - cin)))
+    return x
+
+
+def forward(
+    params: dict,
+    states: dict,
+    x: jnp.ndarray,
+    spec: ModelSpec,
+    train: bool = False,
+    step_seed=0,
+    use_pallas: bool = False,
+):
+    """Run the model; returns (logits, new_bn_states).
+
+    ``step_seed`` decorrelates the stochastic MTJ sampling across training
+    steps; at inference it selects the sampling noise realization.
+    """
+    new_states: dict = {"stages": []}
+    layer_idx = 0
+
+    if spec.first_layer == "qf":
+        cfg = spec.layer_cfg(0)
+        h = sl.stox_conv2d(
+            sl.act_clip(x), params["conv1"], _layer_seed(step_seed, 0), cfg,
+            use_pallas=use_pallas,
+        )
+    else:
+        h = sl.fp_conv2d(x, params["conv1"])
+    layer_idx += 1
+    h, new_states["bn1"] = sl.batch_norm(h, params["bn1"], states["bn1"], train)
+
+    for s, blocks in enumerate(params["stages"]):
+        stage_states = []
+        for b, bp in enumerate(blocks):
+            bs = states["stages"][s][b]
+            nbs: dict = {}
+            stride = 2 if (s > 0 and b == 0) else 1
+            cout = bp["conv1"].shape[-1]
+
+            out = sl.stox_conv2d(
+                sl.act_clip(h), bp["conv1"],
+                _layer_seed(step_seed, layer_idx), spec.layer_cfg(layer_idx),
+                stride=stride, use_pallas=use_pallas,
+            )
+            layer_idx += 1
+            out, nbs["bn1"] = sl.batch_norm(out, bp["bn1"], bs["bn1"], train)
+
+            out = sl.stox_conv2d(
+                sl.act_clip(out), bp["conv2"],
+                _layer_seed(step_seed, layer_idx), spec.layer_cfg(layer_idx),
+                use_pallas=use_pallas,
+            )
+            layer_idx += 1
+            out, nbs["bn2"] = sl.batch_norm(out, bp["bn2"], bs["bn2"], train)
+
+            h = out + _shortcut(h, cout, stride)
+            stage_states.append(nbs)
+        new_states["stages"].append(stage_states)
+
+    h = h.mean(axis=(1, 2))  # global average pool
+    logits = h @ params["fc_w"] + params["fc_b"]
+    return logits, new_states
+
+
+def num_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Layer shape inventory (consumed by the Rust arch model via manifest.json)
+# ---------------------------------------------------------------------------
+
+
+def conv_layer_shapes(spec: ModelSpec) -> list[dict]:
+    """Enumerate every conv/fc layer with its MVM dimensions.
+
+    Each entry: {name, kh, kw, cin, cout, h_out, w_out, stride, stochastic}
+    — exactly what ``rust/src/arch/mapper.rs`` needs to count crossbar
+    instances and conversions for this workload.
+    """
+    w1, w2, w3 = spec.widths()
+    size = spec.image_size
+    layers = [
+        dict(
+            name="conv1", kh=3, kw=3, cin=spec.in_channels, cout=w1,
+            h_out=size, w_out=size, stride=1,
+            stochastic=spec.first_layer == "qf",
+        )
+    ]
+    cin, cur = w1, size
+    for s, cout in enumerate((w1, w2, w3)):
+        for b in range(spec.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            cur = cur // stride
+            layers.append(
+                dict(
+                    name=f"s{s}b{b}c1", kh=3, kw=3, cin=cin, cout=cout,
+                    h_out=cur, w_out=cur, stride=stride, stochastic=True,
+                )
+            )
+            layers.append(
+                dict(
+                    name=f"s{s}b{b}c2", kh=3, kw=3, cin=cout, cout=cout,
+                    h_out=cur, w_out=cur, stride=1, stochastic=True,
+                )
+            )
+            cin = cout
+    layers.append(
+        dict(
+            name="fc", kh=1, kw=1, cin=w3, cout=spec.num_classes,
+            h_out=1, w_out=1, stride=1, stochastic=False,
+        )
+    )
+    return layers

@@ -1,0 +1,42 @@
+"""Rebuild a preset's results JSON from saved checkpoints.
+
+Every training run checkpoints `(spec, params, states, record)`; if a long
+sweep is interrupted before `run_preset` writes its aggregate JSON, this
+tool reconstructs it from whatever checkpoints exist:
+
+    python -m compile.salvage_results --preset fig7
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from . import train
+
+
+PREFIX = {"table3": "t3-", "table4": "t4-", "fig7": "f7"}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", required=True)
+    args = ap.parse_args()
+    prefix = PREFIX[args.preset]
+    records = []
+    for ckpt in sorted(train.CHECKPOINTS.glob(f"{prefix}*.pkl")):
+        try:
+            _, _, _, record = train.load_checkpoint(ckpt)
+            records.append(record)
+        except Exception as e:  # pragma: no cover
+            print(f"skip {ckpt}: {e}")
+    out = train.RESULTS / f"{args.preset}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(
+        json.dumps({"preset": args.preset, "partial": True, "runs": records}, indent=1)
+    )
+    print(f"wrote {out} with {len(records)} runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""L2 StoX-Net layers: PS-quantization-aware matmul/conv with STE backward.
+
+Forward is the *exact* hardware model of Algorithm 1 (``kernels.ref`` /
+``kernels.stox``): quantize → bit-slice/stream → per-subarray partial sums →
+stochastic MTJ conversion → shift-and-add → normalize.
+
+Backward implements the paper's Eq. 2–5: the stochastic MTJ is a
+straight-through estimator and the digit decomposition / S&A collapse to a
+well-defined linear chain, so the gradient is the VJP of the *collapsed
+surrogate*
+
+    O_surr(a, w) = (1/K) Σ_k  T( α · (a_q[k] @ w_q[k]) / r_arr )
+
+with ``T = tanh`` for the stochastic MTJ (its derivative supplies the
+paper's "clamp outside the saturation region") and ``T = hardtanh`` for the
+deterministic 1-bit sense amp, and with STE quantizers on ``a`` and ``w``.
+This is exactly the reduction the paper derives in Eq. 5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.ref import StoxConfig
+from .kernels import stox as stox_kernels
+
+
+# ---------------------------------------------------------------------------
+# STE quantizers
+# ---------------------------------------------------------------------------
+
+
+def ste_quantize_unit(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize [-1,1] to 2^bits levels with a straight-through gradient.
+
+    Gradient is identity inside [-1,1] and zero outside (the hard clip).
+    """
+    xc = jnp.clip(x, -1.0, 1.0)
+    xq = ref.dequantize_unit(ref.quantize_unit(xc, bits), bits)
+    return xc + jax.lax.stop_gradient(xq - xc)
+
+
+def normalize_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """Map raw weights into [-1,1] for crossbar programming.
+
+    Per-tensor max-abs scaling; the scale is a stop-gradient constant per
+    step (it is absorbed by the following BatchNorm at inference).
+    """
+    scale = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) + 1e-8)
+    return w / scale
+
+
+# ---------------------------------------------------------------------------
+# Collapsed surrogate (backward path, Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def _surrogate_mvm(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig) -> jnp.ndarray:
+    """Differentiable collapsed forward used only for its VJP."""
+    b_sz, m = a.shape
+    n = w.shape[1]
+    n_arrs = cfg.n_arrs(m)
+    m_pad = n_arrs * cfg.r_arr
+
+    aq = ste_quantize_unit(a, cfg.a_bits)
+    wq = ste_quantize_unit(w, cfg.w_bits)
+    if m_pad != m:
+        aq = jnp.pad(aq, ((0, 0), (0, m_pad - m)))
+        wq = jnp.pad(wq, ((0, m_pad - m), (0, 0)))
+    aq = aq.reshape(b_sz, n_arrs, cfg.r_arr)
+    wq = wq.reshape(n_arrs, cfg.r_arr, n)
+
+    ps = jnp.einsum("bkr,krn->bkn", aq, wq) / float(cfg.r_arr)
+    if cfg.mode == "sa":
+        conv = jnp.clip(cfg.alpha * ps, -1.0, 1.0)  # hardtanh STE of sign()
+    elif cfg.mode == "ideal":
+        conv = ps
+    else:  # "stox" / "expected": device tanh; derivative = saturation clamp
+        conv = jnp.tanh(cfg.alpha * ps)
+    return conv.mean(axis=1)  # 1/K Σ_k
+
+
+# ---------------------------------------------------------------------------
+# Hardware-aware matmul with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def stox_matmul(a, w, seed, cfg: StoxConfig, use_pallas: bool = False):
+    """Hardware-exact StoX MVM with the Eq. 5 surrogate gradient.
+
+    a: [B, M] pre-activation in [-1,1]; w: [M, N] normalized weights;
+    seed: uint32 scalar (fresh per step/layer for stochastic sampling).
+    """
+    if use_pallas:
+        return stox_kernels.stox_mvm_pallas(a, w, cfg, seed)
+    return ref.stox_mvm(a, w, cfg, seed)
+
+
+def _stox_matmul_fwd(a, w, seed, cfg: StoxConfig, use_pallas: bool):
+    out = stox_matmul(a, w, seed, cfg, use_pallas)
+    return out, (a, w)
+
+
+def _stox_matmul_bwd(cfg: StoxConfig, use_pallas: bool, res, g):
+    a, w = res
+    _, vjp = jax.vjp(lambda a_, w_: _surrogate_mvm(a_, w_, cfg), a, w)
+    ga, gw = vjp(g)
+    return ga, gw, None
+
+
+stox_matmul.defvjp(_stox_matmul_fwd, _stox_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convolution on top of the crossbar matmul (im2col lowering, Algorithm 1's
+# K_h·K_w·C_in row mapping)
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int):
+    """x: [B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches yields channel-major (C, kh, kw) feature
+    # order; reorder to (kh, kw, C) to match the row mapping used by the
+    # Rust mapper and DESIGN.md (rows = K_h·K_w·C_in).
+    b, ho, wo, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    patches = jnp.swapaxes(patches, 3, 4)
+    return patches.reshape(b, ho, wo, kh * kw * c)
+
+
+def stox_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    seed,
+    cfg: StoxConfig,
+    stride: int = 1,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Crossbar-mapped 3×3/1×1 convolution (SAME padding).
+
+    x: [B, H, W, Cin] in [-1,1]; w: [kh, kw, Cin, Cout] raw weights.
+    Returns [B, Ho, Wo, Cout] in [-1,1] (Algorithm 1 normalization).
+    """
+    kh, kw, cin, cout = w.shape
+    pad = (kh - 1) // 2
+    patches = _im2col(x, kh, kw, stride, pad)
+    b, ho, wo, m = patches.shape
+    wn = normalize_weights(w).reshape(kh * kw * cin, cout)
+    out = stox_matmul(patches.reshape(b * ho * wo, m), wn, seed, cfg, use_pallas)
+    return out.reshape(b, ho, wo, cout)
+
+
+def fp_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Full-precision convolution (the HPF first layer)."""
+    kh = w.shape[0]
+    pad = (kh - 1) // 2
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (functional) + activation clipping
+# ---------------------------------------------------------------------------
+
+
+def bn_init(c: int):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }, {
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def batch_norm(x, params, state: dict, train: bool, momentum: float = 0.9):
+    """BatchNorm over all but the channel axis; returns (y, new_state)."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = x.mean(axes)
+        var = x.var(axes)
+        new_state = {
+            "mean": momentum * state["mean"]
+            + (1 - momentum) * jax.lax.stop_gradient(mean),
+            "var": momentum * state["var"]
+            + (1 - momentum) * jax.lax.stop_gradient(var),
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return y * params["gamma"] + params["beta"], new_state
+
+
+def act_clip(x: jnp.ndarray) -> jnp.ndarray:
+    """Hardtanh: maps pre-activations into the DAC input range [-1,1]."""
+    return jnp.clip(x, -1.0, 1.0)

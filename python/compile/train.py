@@ -1,0 +1,449 @@
+"""PS-quantization-aware training (build-time only; never on request path).
+
+Implements the paper's training methodology (§3.2): the exact stochastic
+hardware forward (Algorithm 1) with the Eq. 5 collapsed-STE backward, SGD
+with momentum and cosine LR, fresh MTJ sampling seeds every step.
+
+Presets regenerate the accuracy experiments:
+
+  * ``table3``      — MNIST-like grid: {1w1a1bs,2w2a2bs,2w2a1bs,4w4a4bs,
+                      4w4a1bs} × {1-QF, 4-QF, Mix-QF}, r_arr=128
+  * ``table4``      — CIFAR-like: samples {1,4,8,Mix} × {QF, HPF}, 4w4a4bs,
+                      r_arr=256 (+ the '1b-SA, HPF' reference row)
+  * ``fig7a/b/c/d`` — ablations: first-layer handling, array size,
+                      sampling count, slicing, alpha
+  * ``sensitivity`` — Fig. 5 Monte-Carlo layer-wise perturbation analysis
+  * ``fig4``        — PS distribution collection (StoX vs SA training)
+  * ``smoke``       — 1 tiny run (CI)
+
+Every run writes a JSON record (paper row ↔ measured) consumed by
+EXPERIMENTS.md and the Rust bench harness; checkpoints feed ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+from .kernels.ref import StoxConfig
+
+ROOT = Path(__file__).resolve().parent.parent  # python/
+RESULTS = ROOT / "results"
+CHECKPOINTS = ROOT / "checkpoints"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHP:
+    steps: int = 300
+    batch: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    n_train: int = 4096
+    n_test: int = 512
+    eval_batch: int = 128
+    log_every: int = 50
+    seed: int = 0
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def make_train_step(spec: model.ModelSpec, hp: TrainHP):
+    def loss_fn(params, states, x, y, seed):
+        logits, new_states = model.forward(
+            params, states, x, spec, train=True, step_seed=seed
+        )
+        loss = cross_entropy(logits, y)
+        return loss, (new_states, logits)
+
+    @jax.jit
+    def step(params, states, vel, x, y, seed, lr):
+        (loss, (new_states, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, states, x, y, seed)
+        acc = (logits.argmax(-1) == y).mean()
+
+        def upd(p, g, v):
+            v_new = hp.momentum * v + g + hp.weight_decay * p
+            return p - lr * v_new, v_new
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_v = jax.tree_util.tree_leaves(vel)
+        new_p, new_v = zip(*[upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)])
+        return (
+            jax.tree_util.tree_unflatten(tdef, new_p),
+            new_states,
+            jax.tree_util.tree_unflatten(tdef, new_v),
+            loss,
+            acc,
+        )
+
+    return step
+
+
+def make_eval(spec: model.ModelSpec):
+    @jax.jit
+    def eval_batch(params, states, x, y, seed):
+        logits, _ = model.forward(
+            params, states, x, spec, train=False, step_seed=seed
+        )
+        return (logits.argmax(-1) == y).sum()
+
+    return eval_batch
+
+
+def evaluate(params, states, xs, ys, spec, hp: TrainHP, seed: int = 12345) -> float:
+    eval_fn = make_eval(spec)
+    correct, total = 0, 0
+    for i in range(0, len(xs), hp.eval_batch):
+        xb = jnp.asarray(xs[i : i + hp.eval_batch])
+        yb = jnp.asarray(ys[i : i + hp.eval_batch])
+        correct += int(eval_fn(params, states, xb, yb, np.uint32(seed + i)))
+        total += len(xb)
+    return correct / total
+
+
+def train_model(spec: model.ModelSpec, hp: TrainHP, dataset: str, verbose=True):
+    """Train one variant; returns (record dict, params, states)."""
+    (xtr, ytr), (xte, yte) = datasets.get_dataset(
+        dataset, hp.n_train, hp.n_test, spec.image_size, seed=hp.seed
+    )
+    key = jax.random.PRNGKey(hp.seed)
+    params, states = model.init_params(spec, key)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    step_fn = make_train_step(spec, hp)
+
+    rs = np.random.RandomState(hp.seed + 1)
+    t0 = time.time()
+    losses = []
+    for it in range(hp.steps):
+        idx = rs.randint(0, len(xtr), hp.batch)
+        xb, yb = jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+        lr = hp.lr * 0.5 * (1 + np.cos(np.pi * it / hp.steps))
+        params, states, vel, loss, acc = step_fn(
+            params, states, vel, xb, yb, np.uint32(it), lr
+        )
+        losses.append(float(loss))
+        if verbose and (it % hp.log_every == 0 or it == hp.steps - 1):
+            print(
+                f"  [{spec.name}] step {it:4d} lr {lr:.4f} "
+                f"loss {float(loss):.4f} acc {float(acc):.3f}",
+                flush=True,
+            )
+    train_time = time.time() - t0
+    test_acc = evaluate(params, states, xte, yte, spec, hp)
+    record = {
+        "name": spec.name,
+        "dataset": dataset,
+        "tag": spec.stox.tag,
+        "mode": spec.stox.mode,
+        "first_layer": spec.first_layer,
+        "n_samples": spec.stox.n_samples,
+        "layer_samples": spec.layer_samples,
+        "r_arr": spec.stox.r_arr,
+        "alpha": spec.stox.alpha,
+        "steps": hp.steps,
+        "test_acc": test_acc,
+        "final_loss": float(np.mean(losses[-20:])),
+        "loss_curve": losses[:: max(1, hp.steps // 100)],
+        "train_time_s": train_time,
+        "n_params": model.num_params(params),
+    }
+    if verbose:
+        print(f"  => {spec.name}: test acc {test_acc:.4f} ({train_time:.0f}s)")
+    return record, params, states
+
+
+def save_checkpoint(path: Path, spec, params, states, record):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump(
+            {
+                "spec": dataclasses.asdict(spec)
+                | {"stox": dataclasses.asdict(spec.stox)},
+                "params": jax.tree_util.tree_map(np.asarray, params),
+                "states": jax.tree_util.tree_map(np.asarray, states),
+                "record": record,
+            },
+            f,
+        )
+
+
+def load_checkpoint(path: Path):
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    sd = dict(blob["spec"])
+    sd["stox"] = StoxConfig(**sd["stox"])
+    if sd.get("layer_samples"):
+        sd["layer_samples"] = tuple(tuple(x) for x in sd["layer_samples"])
+    spec = model.ModelSpec(**sd)
+    params = jax.tree_util.tree_map(jnp.asarray, blob["params"])
+    states = jax.tree_util.tree_map(jnp.asarray, blob["states"])
+    return spec, params, states, blob["record"]
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sensitivity (Fig. 5) and Mix derivation
+# ---------------------------------------------------------------------------
+
+
+def sensitivity_analysis(
+    spec: model.ModelSpec, params, states, xs, ys, hp: TrainHP,
+    sigma: float = 0.15, trials: int = 8,
+) -> list[dict]:
+    """Per-layer accuracy drop under uniform weight perturbation (Fig. 5).
+
+    For each trainable conv layer, add U(-sigma, sigma)·max|w| noise to that
+    layer only and measure the accuracy drop at inference — the paper's
+    layer-importance signal used to assign Mix sampling rates.
+    """
+    base_acc = evaluate(params, states, xs, ys, spec, hp)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    conv_leaves = [
+        (i, jax.tree_util.keystr(kp))
+        for i, (kp, leaf) in enumerate(flat)
+        if getattr(leaf, "ndim", 0) == 4
+    ]
+    rs = np.random.RandomState(hp.seed + 99)
+    results = []
+    for li, (leaf_idx, name) in enumerate(conv_leaves):
+        accs = []
+        for t in range(trials):
+            leaves = [l for _, l in flat]
+            w = leaves[leaf_idx]
+            scale = float(jnp.max(jnp.abs(w)))
+            noise = jnp.asarray(
+                rs.uniform(-sigma, sigma, w.shape), jnp.float32
+            ) * scale
+            leaves[leaf_idx] = w + noise
+            p2 = jax.tree_util.tree_unflatten(tdef, leaves)
+            accs.append(evaluate(p2, states, xs, ys, spec, hp, seed=7000 + t))
+        drop = base_acc - float(np.mean(accs))
+        results.append(
+            {"layer": li, "leaf": name, "acc_drop": drop, "base_acc": base_acc}
+        )
+        print(f"  layer {li:2d} {name:28s} drop {drop:+.4f}", flush=True)
+    return results
+
+
+def mix_from_sensitivity(sens: list[dict], n_layers: int) -> tuple:
+    """Assign per-layer samples from the sensitivity ranking.
+
+    Top-sensitivity quartile → 4 samples, next quartile → 2, rest → 1
+    (the paper: 'only implement 2 or 4 samplings to a few layers').
+    Layer indices here are *stochastic-layer* indices (0 = conv-1 slot).
+    """
+    order = sorted(range(len(sens)), key=lambda i: -sens[i]["acc_drop"])
+    q = max(1, len(sens) // 4)
+    out = []
+    for rank, li in enumerate(order):
+        if li == 0:
+            continue  # conv-1 handled by first_layer_samples
+        if rank < q:
+            out.append((li, 4))
+        elif rank < 2 * q:
+            out.append((li, 2))
+    return tuple(out)
+
+
+# Default Mix assignment (mirrors Fig. 5: early layers most sensitive) used
+# when a preset needs Mix without having run the sensitivity pass first.
+DEFAULT_MIX = ((1, 4), (2, 4), (3, 2), (4, 2), (5, 2))
+
+
+# ---------------------------------------------------------------------------
+# Presets (one per paper table / figure panel)
+# ---------------------------------------------------------------------------
+
+
+def _spec(dataset: str, **kw) -> model.ModelSpec:
+    base = dict(
+        num_classes=10,
+        in_channels=1 if dataset == "digits" else 3,
+        image_size=16,
+        base_width=16,
+        width_mult=0.5,
+        blocks_per_stage=3,
+    )
+    base.update(kw)
+    return model.ModelSpec(**base)
+
+
+def preset_runs(preset: str, hp: TrainHP) -> list[tuple[str, model.ModelSpec]]:
+    """Returns [(dataset, spec)] for a preset."""
+    runs = []
+    if preset == "smoke":
+        spec = _spec(
+            "digits", name="smoke",
+            stox=StoxConfig(a_bits=2, w_bits=2, w_slice_bits=2, r_arr=128),
+            first_layer="qf", blocks_per_stage=1,
+        )
+        return [("digits", spec)]
+
+    if preset == "table3":
+        grids = [
+            (1, 1, 1), (2, 2, 2), (2, 2, 1), (4, 4, 4), (4, 4, 1),
+        ]
+        for (w, a, s) in grids:
+            for samp_name, n_samp, mix in (
+                ("1-QF", 1, None), ("4-QF", 4, None), ("Mix-QF", 1, DEFAULT_MIX)
+            ):
+                cfg = StoxConfig(
+                    a_bits=a, w_bits=w, w_slice_bits=s, r_arr=128, n_samples=n_samp,
+                )
+                runs.append(
+                    (
+                        "digits",
+                        _spec(
+                            "digits",
+                            name=f"t3-{cfg.tag}-{samp_name}",
+                            stox=cfg, first_layer="qf", layer_samples=mix,
+                        ),
+                    )
+                )
+        return runs
+
+    if preset == "table4":
+        base = dict(a_bits=4, w_bits=4, w_slice_bits=4, r_arr=256)
+        for fl in ("qf", "hpf"):
+            for samp_name, n_samp, mix in (
+                ("1", 1, None), ("4", 4, None), ("8", 8, None),
+                ("Mix", 1, DEFAULT_MIX),
+            ):
+                cfg = StoxConfig(**base, n_samples=n_samp)
+                runs.append(
+                    (
+                        "cifar",
+                        _spec(
+                            "cifar",
+                            name=f"t4-{fl}-{samp_name}",
+                            stox=cfg, first_layer=fl, layer_samples=mix,
+                        ),
+                    )
+                )
+        # deterministic 1b-SA HPF reference ("HPF+1b-SA" row)
+        runs.append(
+            (
+                "cifar",
+                _spec(
+                    "cifar", name="t4-hpf-1bsa",
+                    stox=StoxConfig(**base, mode="sa"), first_layer="hpf",
+                ),
+            )
+        )
+        return runs
+
+    if preset == "fig7":
+        base = dict(a_bits=4, w_bits=4, w_slice_bits=4)
+        mk = lambda name, **kw: runs.append(("cifar", _spec("cifar", name=name, **kw)))
+        # (A)+(E): first-layer handling
+        mk("f7-1bsa-1bsaqf",
+           stox=StoxConfig(**base, r_arr=256, mode="sa"),
+           first_layer="qf", first_layer_mode="sa")
+        # "1b-SA, QF": 1b-SA everywhere EXCEPT an 8-sample stochastic conv-1
+        mk("f7-1bsa-qf",
+           stox=StoxConfig(**base, r_arr=256, mode="sa"), first_layer="qf",
+           first_layer_mode="stox")
+        mk("f7-1bsa-hpf",
+           stox=StoxConfig(**base, r_arr=256, mode="sa"), first_layer="hpf")
+        mk("f7-stox-qf",
+           stox=StoxConfig(**base, r_arr=256), first_layer="qf")
+        mk("f7-stox-hpf",
+           stox=StoxConfig(**base, r_arr=256), first_layer="hpf")
+        # (A): array size sweep
+        for r in (64, 128, 256, 512):
+            mk(f"f7a-rarr{r}", stox=StoxConfig(**base, r_arr=r), first_layer="hpf")
+        # (B): multi-sampling sweep
+        for n in (1, 2, 4, 8):
+            mk(f"f7b-s{n}",
+               stox=StoxConfig(**base, r_arr=256, n_samples=n), first_layer="hpf")
+        # (C): sliced vs unsliced
+        mk("f7c-sliced",
+           stox=StoxConfig(a_bits=4, w_bits=4, w_slice_bits=1, r_arr=256),
+           first_layer="hpf")
+        mk("f7c-unsliced",
+           stox=StoxConfig(a_bits=4, w_bits=4, w_slice_bits=4, r_arr=256),
+           first_layer="hpf")
+        # (D): alpha sweep
+        for alpha in (1.0, 2.0, 4.0, 8.0, 16.0):
+            mk(f"f7d-a{alpha:g}",
+               stox=StoxConfig(**base, r_arr=256, alpha=alpha), first_layer="hpf")
+        return runs
+
+    raise ValueError(f"unknown preset {preset}")
+
+
+def run_preset(preset: str, hp: TrainHP, out: Path | None):
+    runs = preset_runs(preset, hp)
+    records = []
+    for dataset, spec in runs:
+        print(f"== training {spec.name} on {dataset} ==", flush=True)
+        record, params, states = train_model(spec, hp, dataset)
+        records.append(record)
+        ckpt = CHECKPOINTS / f"{spec.name}.pkl"
+        save_checkpoint(ckpt, spec, params, states, record)
+    out = out or RESULTS / f"{preset}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"preset": preset, "runs": records}, indent=1))
+    print(f"wrote {out}")
+    return records
+
+
+def run_sensitivity(hp: TrainHP, out: Path | None, ckpt_name: str = "t4-hpf-1"):
+    ckpt = CHECKPOINTS / f"{ckpt_name}.pkl"
+    if not ckpt.exists():
+        print(f"checkpoint {ckpt} missing; training baseline first")
+        spec = _spec(
+            "cifar", name=ckpt_name,
+            stox=StoxConfig(a_bits=4, w_bits=4, w_slice_bits=4, r_arr=256),
+            first_layer="hpf",
+        )
+        record, params, states = train_model(spec, hp, "cifar")
+        save_checkpoint(ckpt, spec, params, states, record)
+    spec, params, states, _ = load_checkpoint(ckpt)
+    (_, _), (xte, yte) = datasets.get_dataset(
+        "cifar", 8, hp.n_test, spec.image_size, seed=hp.seed
+    )
+    sens = sensitivity_analysis(spec, params, states, xte, yte, hp)
+    mix = mix_from_sensitivity(sens, spec.n_stox_layers())
+    out = out or RESULTS / "sensitivity.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"sensitivity": sens, "mix": mix}, indent=1))
+    print(f"wrote {out}; derived mix = {mix}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+
+    hp = TrainHP()
+    if args.steps is not None:
+        hp = dataclasses.replace(hp, steps=args.steps)
+    if args.batch is not None:
+        hp = dataclasses.replace(hp, batch=args.batch)
+
+    if args.preset == "sensitivity":
+        run_sensitivity(hp, args.out)
+    else:
+        run_preset(args.preset, hp, args.out)
+
+
+if __name__ == "__main__":
+    main()

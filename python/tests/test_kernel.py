@@ -1,0 +1,228 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes / bit-widths / modes; every case asserts
+allclose between ``stox.stox_mvm_pallas`` and ``ref.stox_mvm`` (and for the
+stochastic mode the match must be *exact* because both sides draw the same
+counter-based bits).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stox
+from compile.kernels.ref import StoxConfig
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_aw(b, m, n, seed=0):
+    rs = np.random.RandomState(seed)
+    a = jnp.asarray(rs.uniform(-1, 1, (b, m)), jnp.float32)
+    w = jnp.asarray(rs.uniform(-1, 1, (m, n)), jnp.float32)
+    return a, w
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+
+class TestQuantizer:
+    def test_roundtrip_exact_levels(self):
+        for bits in (1, 2, 4, 8):
+            lev = (1 << bits) - 1
+            vals = jnp.asarray([2 * k / lev - 1 for k in range(lev + 1)])
+            u = ref.quantize_unit(vals, bits)
+            assert jnp.allclose(ref.dequantize_unit(u, bits), vals, atol=1e-6)
+
+    def test_clipping(self):
+        u = ref.quantize_unit(jnp.asarray([-5.0, 5.0]), 4)
+        assert int(u[0]) == 0 and int(u[1]) == 15
+
+    @given(
+        bits=st.sampled_from([1, 2, 4, 8]),
+        x=st.floats(-1, 1, width=32),
+    )
+    def test_quantization_error_bound(self, bits, x):
+        lev = (1 << bits) - 1
+        xq = ref.dequantize_unit(ref.quantize_unit(jnp.float32(x), bits), bits)
+        assert abs(float(xq) - x) <= 1.0 / lev + 1e-6
+
+    @given(
+        bits=st.sampled_from([2, 4, 8]),
+        digit_bits=st.sampled_from([1, 2]),
+        u=st.integers(0, 255),
+    )
+    def test_digit_recomposition(self, bits, digit_bits, u):
+        """sum_i 2^{i·d} x_i == 2u - (2^bits - 1) (signed digit identity)."""
+        if bits % digit_bits:
+            return
+        u = u % (1 << bits)
+        d = ref.signed_digits(jnp.asarray([u]), bits, digit_bits)
+        s = ref.digit_scales(bits, digit_bits)
+        recomposed = float((d[0] * s).sum())
+        assert recomposed == 2 * u - ((1 << bits) - 1)
+
+
+class TestOracle:
+    def test_ideal_equals_plain_matmul(self):
+        """Full-precision-ADC mode must equal a_q @ w_q / padded-rows."""
+        a, w = rand_aw(4, 100, 17)
+        cfg = StoxConfig(a_bits=8, w_bits=8, w_slice_bits=1, r_arr=64, mode="ideal")
+        got = ref.stox_mvm(a, w, cfg)
+        want = (a @ w) / (cfg.n_arrs(100) * cfg.r_arr)
+        assert float(jnp.abs(got - want).max()) < 2e-2  # 8-bit quantization
+
+    def test_output_bounded(self):
+        a, w = rand_aw(3, 300, 9)
+        for mode in ref.MODES:
+            cfg = StoxConfig(r_arr=128, mode=mode, n_samples=3, w_slice_bits=1)
+            out = ref.stox_mvm(a, w, cfg, seed=5)
+            assert float(jnp.abs(out).max()) <= 1.0 + 1e-5, mode
+
+    def test_stochastic_mean_converges_to_expected(self):
+        a, w = rand_aw(2, 64, 8)
+        cfg = StoxConfig(r_arr=64, alpha=2.0, n_samples=4, w_slice_bits=1)
+        exp = ref.stox_mvm(a, w, dataclasses.replace(cfg, mode="expected"))
+        acc = sum(ref.stox_mvm(a, w, cfg, seed=s) for s in range(64)) / 64
+        # 64 seeds × 4 samples: sampling std of the recombined output ≈ 0.02
+        assert float(jnp.abs(acc - exp).max()) < 0.07
+
+    def test_sa_is_alpha_limit(self):
+        """1b-SA == stochastic converter with a step-like tanh (alpha→inf).
+
+        Uses an odd number of active rows so every PS is a sum of an odd
+        number of odd digit products — never exactly 0, where sign() and
+        the tanh limit legitimately disagree.
+        """
+        a, w = rand_aw(2, 63, 8)
+        sa = ref.stox_mvm(a, w, StoxConfig(r_arr=63, mode="sa", w_slice_bits=1))
+        hard = ref.stox_mvm(
+            a, w,
+            StoxConfig(r_arr=63, mode="expected", alpha=1e4, w_slice_bits=1),
+        )
+        assert float(jnp.abs(sa - hard).max()) < 1e-3
+
+    def test_more_samples_lower_variance(self):
+        a, w = rand_aw(2, 128, 8)
+        errs = []
+        for n in (1, 4, 16):
+            cfg = StoxConfig(r_arr=128, n_samples=n, alpha=2.0, w_slice_bits=1)
+            exp = ref.stox_mvm(a, w, dataclasses.replace(cfg, mode="expected"))
+            out = ref.stox_mvm(a, w, cfg, seed=3)
+            errs.append(float(jnp.square(out - exp).mean()))
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_seed_determinism(self):
+        a, w = rand_aw(2, 100, 8)
+        cfg = StoxConfig(r_arr=64, w_slice_bits=1)
+        o1 = ref.stox_mvm(a, w, cfg, seed=9)
+        o2 = ref.stox_mvm(a, w, cfg, seed=9)
+        o3 = ref.stox_mvm(a, w, cfg, seed=10)
+        assert jnp.array_equal(o1, o2)
+        assert not jnp.array_equal(o1, o3)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            StoxConfig(a_bits=4, a_stream_bits=3)
+        with pytest.raises(ValueError):
+            StoxConfig(w_bits=4, w_slice_bits=3)
+        with pytest.raises(ValueError):
+            StoxConfig(mode="bogus")
+        with pytest.raises(ValueError):
+            StoxConfig(n_samples=0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity (the headline test)
+# ---------------------------------------------------------------------------
+
+
+class TestPallasParity:
+    @pytest.mark.parametrize("mode", ref.MODES)
+    def test_modes_match_ref(self, mode):
+        a, w = rand_aw(4, 100, 150)
+        cfg = StoxConfig(
+            a_bits=4, w_bits=4, w_slice_bits=1, r_arr=64,
+            n_samples=3, alpha=2.0, mode=mode,
+        )
+        r1 = ref.stox_mvm(a, w, cfg, seed=7)
+        r2 = stox.stox_mvm_pallas(a, w, cfg, seed=7)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 6),
+        m=st.integers(1, 200),
+        n=st.integers(1, 160),
+        a_bits=st.sampled_from([1, 2, 4]),
+        w_bits_slice=st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 1), (4, 4)]),
+        r_arr=st.sampled_from([32, 64, 256]),
+        n_samples=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep_stochastic(
+        self, b, m, n, a_bits, w_bits_slice, r_arr, n_samples, seed
+    ):
+        w_bits, w_slice = w_bits_slice
+        a, w = rand_aw(b, m, n, seed=seed % 1000)
+        cfg = StoxConfig(
+            a_bits=a_bits, w_bits=w_bits, w_slice_bits=w_slice,
+            r_arr=r_arr, n_samples=n_samples, alpha=4.0, mode="stox",
+        )
+        r1 = ref.stox_mvm(a, w, cfg, seed=seed)
+        r2 = stox.stox_mvm_pallas(a, w, cfg, seed=seed)
+        # same counter-based bits on both sides -> exact match
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+    def test_column_tiling_invariance(self):
+        """Result must not depend on the kernel's column tile size."""
+        a, w = rand_aw(2, 80, 200)
+        cfg = StoxConfig(r_arr=64, w_slice_bits=1, n_samples=2)
+        outs = [
+            stox.stox_mvm_pallas(a, w, cfg, seed=3, col_tile=t)
+            for t in (32, 64, 128, 200)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+    def test_single_subarray_and_many(self):
+        for m in (16, 64, 65, 300):
+            a, w = rand_aw(2, m, 24)
+            cfg = StoxConfig(r_arr=64, w_slice_bits=2, w_bits=4)
+            r1 = ref.stox_mvm(a, w, cfg, seed=1)
+            r2 = stox.stox_mvm_pallas(a, w, cfg, seed=1)
+            np.testing.assert_allclose(
+                np.asarray(r1), np.asarray(r2), atol=1e-5, err_msg=str(m)
+            )
+
+
+class TestConverterKernel:
+    def test_matches_ref_counts(self):
+        rs = np.random.RandomState(3)
+        ps = jnp.asarray(rs.uniform(-1, 1, 333), jnp.float32)
+        base = jnp.arange(333, dtype=jnp.uint32)
+        for n_samples in (1, 2, 8):
+            c1 = ref.mtj_sample_counts(ps, 3.0, n_samples, 9, base)
+            c2 = stox.mtj_convert_pallas(ps, 3.0, n_samples, seed=9)
+            assert jnp.array_equal(c1, c2), n_samples
+
+    def test_counts_parity_bound(self):
+        ps = jnp.zeros((64,), jnp.float32)
+        c = stox.mtj_convert_pallas(ps, 4.0, 5, seed=0)
+        # 5 samples of ±1: odd sum, |sum| <= 5
+        cn = np.asarray(c)
+        assert np.all(np.abs(cn) <= 5) and np.all(cn % 2 == 1)
+
+    def test_probability_calibration(self):
+        """Empirical switch rate must track tanh (Eq. 1)."""
+        for x in (-0.5, -0.1, 0.0, 0.2, 0.6):
+            ps = jnp.full((20000,), x, jnp.float32)
+            c = np.asarray(stox.mtj_convert_pallas(ps, 2.0, 1, seed=42))
+            emp = c.mean()  # E[±1] = tanh(αx)
+            assert abs(emp - np.tanh(2.0 * x)) < 0.03, x

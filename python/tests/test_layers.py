@@ -1,0 +1,146 @@
+"""L2 layer tests: STE gradients, conv lowering, batchnorm."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import stox_layers as sl
+from compile.kernels import ref
+from compile.kernels.ref import StoxConfig
+
+
+def rand(shape, seed=0, lo=-1, hi=1):
+    rs = np.random.RandomState(seed)
+    return jnp.asarray(rs.uniform(lo, hi, shape), jnp.float32)
+
+
+class TestSTEQuantize:
+    def test_forward_matches_ref(self):
+        x = rand((64,), 1)
+        for bits in (1, 2, 4):
+            want = ref.dequantize_unit(ref.quantize_unit(x, bits), bits)
+            got = sl.ste_quantize_unit(x, bits)
+            assert jnp.allclose(got, want)
+
+    def test_gradient_identity_inside(self):
+        g = jax.grad(lambda x: sl.ste_quantize_unit(x, 4).sum())(
+            jnp.asarray([-0.9, -0.3, 0.0, 0.5, 0.99])
+        )
+        assert jnp.allclose(g, 1.0)
+
+    def test_gradient_zero_outside(self):
+        g = jax.grad(lambda x: sl.ste_quantize_unit(x, 4).sum())(
+            jnp.asarray([-1.5, 2.0])
+        )
+        assert jnp.allclose(g, 0.0)
+
+
+class TestStoxMatmul:
+    def test_forward_is_hardware_exact(self):
+        a, w = rand((4, 96), 0), rand((96, 12), 1)
+        cfg = StoxConfig(r_arr=64, w_slice_bits=1, n_samples=2)
+        got = sl.stox_matmul(a, w, jnp.uint32(5), cfg)
+        want = ref.stox_mvm(a, w, cfg, seed=jnp.uint32(5))
+        assert jnp.array_equal(got, want)
+
+    def test_pallas_path_matches(self):
+        a, w = rand((4, 96), 0), rand((96, 12), 1)
+        cfg = StoxConfig(r_arr=64, w_slice_bits=1, n_samples=2)
+        got = sl.stox_matmul(a, w, jnp.uint32(5), cfg, True)
+        want = ref.stox_mvm(a, w, cfg, seed=jnp.uint32(5))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_gradients_nonzero_and_finite(self):
+        a, w = rand((4, 96), 0), rand((96, 12), 1)
+        cfg = StoxConfig(r_arr=64, w_slice_bits=1)
+
+        def loss(a_, w_):
+            return jnp.square(sl.stox_matmul(a_, w_, jnp.uint32(0), cfg)).sum()
+
+        ga, gw = jax.grad(loss, argnums=(0, 1))(a, w)
+        assert jnp.all(jnp.isfinite(ga)) and jnp.all(jnp.isfinite(gw))
+        assert float(jnp.abs(ga).max()) > 0 and float(jnp.abs(gw).max()) > 0
+
+    def test_surrogate_gradient_matches_linear_in_small_alpha(self):
+        """For alpha→0 the surrogate is linear, grad ≈ ideal matmul grad."""
+        a, w = rand((2, 64), 3), rand((64, 6), 4)
+        cfg = StoxConfig(r_arr=64, alpha=1e-3, mode="expected", a_bits=8, w_bits=8, w_slice_bits=1)
+        g = jnp.ones((2, 6))
+        _, vjp = jax.vjp(lambda a_, w_: sl._surrogate_mvm(a_, w_, cfg), a, w)
+        ga, gw = vjp(g)
+        # d/da of alpha * (a @ w)/r_arr = alpha * g @ w.T / r_arr
+        want = 1e-3 * (g @ w.T) / 64.0
+        # f32 einsum noise on ~1e-5-magnitude gradients needs a real atol
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(want), rtol=0.05, atol=5e-7)
+
+    def test_saturation_clamps_gradient(self):
+        """Gradient through saturated PS regions must vanish (paper's STE clamp)."""
+        a = jnp.ones((1, 64))
+        w = jnp.ones((64, 1))
+        cfg = StoxConfig(r_arr=64, alpha=50.0)  # deep saturation
+
+        def loss(w_):
+            return sl.stox_matmul(a, w_, jnp.uint32(0), cfg).sum()
+
+        gw = jax.grad(loss)(w)
+        assert float(jnp.abs(gw).max()) < 1e-6
+
+
+class TestConv:
+    def test_im2col_matches_conv(self):
+        """stox conv in ideal high-precision mode ≈ scaled fp conv."""
+        x = rand((2, 8, 8, 3), 0)
+        w = rand((3, 3, 3, 5), 1, -0.5, 0.5)
+        cfg = StoxConfig(a_bits=8, w_bits=8, w_slice_bits=1, r_arr=27, mode="ideal")
+        got = sl.stox_conv2d(x, w, jnp.uint32(0), cfg)
+        wn = sl.normalize_weights(w)
+        want = sl.fp_conv2d(x, wn) / 27.0
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-2)
+
+    def test_strided(self):
+        x = rand((2, 8, 8, 4), 0)
+        w = rand((3, 3, 4, 6), 1)
+        cfg = StoxConfig(r_arr=36, mode="ideal")
+        out = sl.stox_conv2d(x, w, jnp.uint32(0), cfg, stride=2)
+        assert out.shape == (2, 4, 4, 6)
+
+    def test_1x1(self):
+        x = rand((2, 5, 5, 4), 0)
+        w = rand((1, 1, 4, 8), 1)
+        cfg = StoxConfig(r_arr=4, mode="ideal")
+        out = sl.stox_conv2d(x, w, jnp.uint32(0), cfg)
+        assert out.shape == (2, 5, 5, 8)
+
+
+class TestBatchNorm:
+    def test_normalizes_in_train(self):
+        p, s = sl.bn_init(4)
+        x = rand((64, 3, 3, 4), 0, -5, 5) + 2.0
+        y, s2 = sl.batch_norm(x, p, s, train=True)
+        assert abs(float(y.mean())) < 1e-4
+        assert abs(float(y.var()) - 1.0) < 1e-2
+        # running stats moved toward batch stats
+        assert float(jnp.abs(s2["mean"]).max()) > 0
+
+    def test_eval_uses_running_stats(self):
+        p, s = sl.bn_init(4)
+        x = rand((8, 2, 2, 4), 1)
+        y, s2 = sl.batch_norm(x, p, s, train=False)
+        assert jnp.array_equal(s2["mean"], s["mean"])
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x) / np.sqrt(1 + 1e-5), atol=1e-5
+        )
+
+
+class TestActClip:
+    def test_range(self):
+        x = rand((100,), 0, -3, 3)
+        y = sl.act_clip(x)
+        assert float(y.min()) >= -1 and float(y.max()) <= 1
+
+    def test_grad_mask(self):
+        g = jax.grad(lambda x: sl.act_clip(x).sum())(jnp.asarray([-2.0, 0.5, 2.0]))
+        assert list(np.asarray(g)) == [0.0, 1.0, 0.0]

@@ -1,0 +1,153 @@
+"""Model-level tests: shapes, variants, determinism, train-step smoke."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model, train
+from compile.kernels.ref import StoxConfig
+
+TINY = model.ModelSpec(
+    name="tiny",
+    in_channels=3,
+    image_size=8,
+    base_width=8,
+    width_mult=0.5,
+    blocks_per_stage=1,
+    stox=StoxConfig(a_bits=2, w_bits=2, w_slice_bits=2, r_arr=32),
+    first_layer="qf",
+    first_layer_samples=2,
+)
+
+
+def fwd(spec, x, train_=False, seed=0):
+    params, states = model.init_params(spec, jax.random.PRNGKey(0))
+    return model.forward(params, states, x, spec, train=train_, step_seed=seed)
+
+
+class TestForward:
+    def test_output_shape(self):
+        x = jnp.zeros((4, 8, 8, 3))
+        logits, _ = fwd(TINY, x)
+        assert logits.shape == (4, 10)
+
+    def test_hpf_variant(self):
+        spec = dataclasses.replace(TINY, first_layer="hpf")
+        logits, _ = fwd(spec, jnp.zeros((2, 8, 8, 3)))
+        assert logits.shape == (2, 10)
+
+    def test_seed_determinism(self):
+        x = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, (2, 8, 8, 3)), jnp.float32)
+        l1, _ = fwd(TINY, x, seed=3)
+        l2, _ = fwd(TINY, x, seed=3)
+        l3, _ = fwd(TINY, x, seed=4)
+        assert jnp.array_equal(l1, l2)
+        assert not jnp.array_equal(l1, l3)
+
+    def test_pallas_forward_matches_ref_forward(self):
+        x = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, (2, 8, 8, 3)), jnp.float32)
+        params, states = model.init_params(TINY, jax.random.PRNGKey(0))
+        l1, _ = model.forward(params, states, x, TINY, step_seed=1, use_pallas=False)
+        l2, _ = model.forward(params, states, x, TINY, step_seed=1, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+    def test_bn_states_update_in_train(self):
+        x = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, (8, 8, 8, 3)), jnp.float32)
+        params, states = model.init_params(TINY, jax.random.PRNGKey(0))
+        _, ns = model.forward(params, states, x, TINY, train=True)
+        assert not jnp.array_equal(ns["bn1"]["mean"], states["bn1"]["mean"])
+
+
+class TestSpec:
+    def test_widths_scale(self):
+        assert TINY.widths() == (4, 8, 16)
+        assert dataclasses.replace(TINY, width_mult=1.0).widths() == (8, 16, 32)
+
+    def test_layer_cfg_first_layer(self):
+        cfg0 = TINY.layer_cfg(0)
+        assert cfg0.n_samples == TINY.first_layer_samples
+        assert TINY.layer_cfg(1).n_samples == TINY.stox.n_samples
+
+    def test_layer_cfg_mix(self):
+        spec = dataclasses.replace(TINY, layer_samples=((2, 4), (3, 2)))
+        assert spec.layer_cfg(2).n_samples == 4
+        assert spec.layer_cfg(3).n_samples == 2
+        assert spec.layer_cfg(4).n_samples == spec.stox.n_samples
+
+    def test_first_layer_mode_override(self):
+        spec = dataclasses.replace(TINY, first_layer_mode="sa")
+        assert spec.layer_cfg(0).mode == "sa"
+        assert spec.layer_cfg(1).mode == "stox"
+
+    def test_n_stox_layers(self):
+        assert TINY.n_stox_layers() == 2 * 3 * 1 + 1
+        hpf = dataclasses.replace(TINY, first_layer="hpf")
+        assert hpf.n_stox_layers() == 6
+
+    def test_conv_layer_shapes_inventory(self):
+        layers = model.conv_layer_shapes(TINY)
+        # conv1 + 2 per block * 3 stages * 1 block + fc
+        assert len(layers) == 1 + 6 + 1
+        assert layers[0]["name"] == "conv1" and layers[0]["stochastic"]
+        assert layers[-1]["name"] == "fc" and not layers[-1]["stochastic"]
+        # stride-2 stages halve resolution
+        assert layers[3]["h_out"] == TINY.image_size // 2
+        assert layers[5]["h_out"] == TINY.image_size // 4
+
+
+class TestTraining:
+    def test_loss_decreases_smoke(self):
+        hp = dataclasses.replace(
+            train.TrainHP(), steps=30, batch=16, n_train=256, n_test=64
+        )
+        rec, params, states = train.train_model(TINY, hp, "cifar", verbose=False)
+        assert rec["loss_curve"][0] > rec["final_loss"]
+        assert np.isfinite(rec["final_loss"])
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        hp = dataclasses.replace(
+            train.TrainHP(), steps=2, batch=8, n_train=64, n_test=32
+        )
+        rec, params, states = train.train_model(TINY, hp, "cifar", verbose=False)
+        path = tmp_path / "ckpt.pkl"
+        train.save_checkpoint(path, TINY, params, states, rec)
+        spec2, p2, s2, rec2 = train.load_checkpoint(path)
+        assert spec2 == TINY
+        for a, b in zip(
+            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)
+        ):
+            assert jnp.array_equal(a, b)
+
+    def test_mix_from_sensitivity(self):
+        sens = [
+            {"layer": i, "acc_drop": d}
+            for i, d in enumerate([0.5, 0.3, 0.1, 0.05, 0.02, 0.01, 0.0, 0.0])
+        ]
+        mix = train.mix_from_sensitivity(sens, 8)
+        mix_d = dict(mix)
+        # layer 0 (conv-1) excluded; most sensitive non-first layers get 4
+        assert 0 not in mix_d
+        assert mix_d[1] == 4
+        assert all(v in (2, 4) for v in mix_d.values())
+
+
+class TestDatasets:
+    @pytest.mark.parametrize("name", ["digits", "cifar"])
+    def test_shapes_and_range(self, name):
+        (xtr, ytr), (xte, yte) = datasets.get_dataset(name, 64, 32, 16, seed=1)
+        c = 1 if name == "digits" else 3
+        assert xtr.shape == (64, 16, 16, c) and xte.shape == (32, 16, 16, c)
+        assert xtr.min() >= -1 and xtr.max() <= 1
+        assert set(np.unique(ytr)) <= set(range(10))
+
+    def test_determinism(self):
+        x1, y1 = datasets.synth_cifar(16, 16, seed=5)
+        x2, y2 = datasets.synth_cifar(16, 16, seed=5)
+        assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+
+    def test_train_test_disjoint_seeds(self):
+        (xtr, _), (xte, _) = datasets.get_dataset("digits", 32, 32, 16, seed=0)
+        assert not np.array_equal(xtr, xte)

@@ -1,0 +1,65 @@
+"""Counter-based RNG: known-answer vectors (shared with Rust) + statistics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import rng
+
+# The exact same vectors are asserted in rust/src/imc/rng.rs — any change to
+# the hash breaks python<->rust stochastic parity and must update both.
+KAT = {
+    0: [0xAE6F80F1, 0xA07C7A97, 0x0E77CEB6, 0x7E1BD18E, 0xD6663A0C, 0x182BE288, 0x5F3DDEE1],
+    1: [0x8E374FE0, 0xA290702B, 0xE80E9316, 0x1D6D21D7, 0xB5BE8342, 0xF3BF5257, 0xCA4D4754],
+    0xDEADBEEF: [0x754AFAC9, 0x551C946E, 0x07CD45F7, 0x5A2886E3, 0x36964039, 0xA8862EEA, 0x94FB713E],
+}
+COUNTERS = [0, 1, 2, 3, 1000, 2**31, 2**32 - 1]
+
+
+@pytest.mark.parametrize("seed", list(KAT))
+def test_known_answer(seed):
+    c = jnp.asarray(COUNTERS, dtype=jnp.uint32)
+    h = rng.hash_counter(seed, c)
+    assert [int(x) for x in h] == KAT[seed]
+
+
+def test_uniform_range_and_precision():
+    c = jnp.arange(1 << 14, dtype=jnp.uint32)
+    u = np.asarray(rng.uniform01(7, c))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    # top-24-bit construction: every value is a multiple of 2^-24
+    assert np.all(u * (1 << 24) == np.round(u * (1 << 24)))
+
+
+def test_uniform_mean_variance():
+    c = jnp.arange(1 << 16, dtype=jnp.uint32)
+    u = np.asarray(rng.uniform01(3, c))
+    assert abs(u.mean() - 0.5) < 5e-3
+    assert abs(u.var() - 1.0 / 12.0) < 5e-3
+
+
+def test_seed_decorrelation():
+    c = jnp.arange(4096, dtype=jnp.uint32)
+    u1 = np.asarray(rng.uniform01(1, c))
+    u2 = np.asarray(rng.uniform01(2, c))
+    corr = np.corrcoef(u1, u2)[0, 1]
+    assert abs(corr) < 0.05
+
+
+def test_counter_stride_decorrelation():
+    """Strided counters (as used by multi-sampling) must stay uniform."""
+    for stride in (2, 4, 8):
+        c = jnp.arange(8192, dtype=jnp.uint32) * stride
+        u = np.asarray(rng.uniform01(11, c))
+        assert abs(u.mean() - 0.5) < 1.5e-2, stride
+
+
+def test_mix32_avalanche():
+    """Single-bit input flips should change ~half the output bits."""
+    x = jnp.asarray([123456789], dtype=jnp.uint32)
+    base = int(rng.mix32(x)[0])
+    flips = []
+    for bit in range(32):
+        y = int(rng.mix32(x ^ jnp.uint32(1 << bit))[0])
+        flips.append(bin(base ^ y).count("1"))
+    assert 10 < np.mean(flips) < 22

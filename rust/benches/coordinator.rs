@@ -1,0 +1,92 @@
+//! Coordinator bench: dynamic-batcher throughput, tile-scheduler
+//! throughput, and the end-to-end serving loop on a synthetic executor
+//! (isolates L3 from model-execution cost).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+use stox_net::arch::components::ComponentCosts;
+use stox_net::arch::energy::DesignConfig;
+use stox_net::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use stox_net::coordinator::server::{submit_all, Executor, ServeConfig, Server};
+use stox_net::coordinator::TileScheduler;
+use stox_net::imc::StoxConfig;
+use stox_net::model::zoo;
+use stox_net::util::bench;
+
+struct NoopExec;
+
+impl Executor for NoopExec {
+    fn execute(&self, _im: &[f32], batch: usize, _s: u32) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0; batch * 10])
+    }
+    fn classes(&self) -> usize {
+        10
+    }
+    fn image_elems(&self) -> usize {
+        16
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+fn main() {
+    println!("== dynamic batcher ==");
+    bench::quick("batcher/push+flush 1k reqs (batch 8)", || {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let now = Instant::now();
+        let mut flushed = 0;
+        for i in 0..1000 {
+            b.push(i, now);
+            while let Some(batch) = b.try_flush(now) {
+                flushed += batch.items.len();
+            }
+        }
+        bench::black_box(flushed);
+    });
+
+    println!("\n== tile scheduler ==");
+    let costs = ComponentCosts::default();
+    let layers = zoo::resnet20_cifar();
+    bench::quick("scheduler/schedule 100 batches", || {
+        let mut s = TileScheduler::new(
+            &costs,
+            DesignConfig::stox(StoxConfig::default(), 1, true),
+            &layers,
+        );
+        for i in 0..100 {
+            bench::black_box(s.schedule_batch(8, i as f64 * 100.0));
+        }
+    });
+
+    println!("\n== serving loop (noop executor) ==");
+    bench::bench(
+        "server/1k requests end-to-end",
+        Duration::from_millis(100),
+        Duration::from_secs(2),
+        || {
+            let server = Server::new(
+                Box::new(NoopExec),
+                ServeConfig {
+                    batcher: BatcherConfig {
+                        target_batch: 8,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    seed: 0,
+                },
+            );
+            let (tx, rx) = mpsc::channel();
+            let client = std::thread::spawn(move || {
+                let r = submit_all(&tx, (0..1000).map(|_| vec![0.0f32; 16]));
+                drop(tx);
+                r
+            });
+            server.run(rx);
+            let replies = client.join().unwrap();
+            bench::black_box(replies.len());
+        },
+    );
+}

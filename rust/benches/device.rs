@@ -1,0 +1,57 @@
+//! Device-layer bench: LLG integration cost and switching-curve
+//! extraction (the Fig. 2 experiment) plus single conversions.
+
+use stox_net::device::llg::{LlgParams, LlgSim};
+use stox_net::device::mtj::{SotMtj, SwitchingCurve};
+use stox_net::imc::PsConverter;
+use stox_net::stats::rng::CounterRng;
+use stox_net::util::bench;
+
+fn main() {
+    println!("== LLG macro-spin solver ==");
+    let p = LlgParams::default();
+    let mut seed = 0u32;
+    bench::quick("llg/2ns pulse (2000 steps)", || {
+        seed = seed.wrapping_add(1);
+        let mut sim = LlgSim::new(p, seed);
+        bench::black_box(sim.switch_trial(60e-6, 2e-9));
+    });
+
+    println!("\n== switching-curve extraction (Fig. 2, small) ==");
+    bench::bench(
+        "curve/9pts x 16 trials",
+        std::time::Duration::from_millis(200),
+        std::time::Duration::from_secs(2),
+        || {
+            bench::black_box(SwitchingCurve::extract(
+                p,
+                &SotMtj::default(),
+                9,
+                16,
+                7,
+            ));
+        },
+    );
+
+    println!("\n== stochastic conversion (Eq. 1 fast path) ==");
+    let rng = CounterRng::new(3);
+    let mtj1 = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 };
+    let mtj8 = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 8 };
+    let mut c = 0u32;
+    bench::quick("convert/MTJ x1 (1k PS)", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            c = c.wrapping_add(1);
+            acc += mtj1.convert(0.1, c.wrapping_add(i), &rng);
+        }
+        bench::black_box(acc);
+    });
+    bench::quick("convert/MTJ x8 (1k PS)", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            c = c.wrapping_add(1);
+            acc += mtj8.convert(0.1, c.wrapping_add(i), &rng);
+        }
+        bench::black_box(acc);
+    });
+}

@@ -1,0 +1,81 @@
+//! Fig. 9 regeneration bench: evaluates the full design matrix over all
+//! three workloads (the architecture-model rollup) and times it.
+//!
+//! Run with `cargo bench --bench efficiency` — the printed tables ARE the
+//! Fig. 9a/9b reproduction; timings confirm the model is cheap enough to
+//! sit inside the coordinator.
+
+use stox_net::arch::components::ComponentCosts;
+use stox_net::arch::energy::{evaluate_design, evaluate_network, DesignConfig};
+use stox_net::imc::StoxConfig;
+use stox_net::model::zoo;
+use stox_net::util::bench;
+
+fn main() {
+    let costs = ComponentCosts::default();
+    let base = StoxConfig::default();
+
+    // ----- Fig. 9a table -----
+    let layers = zoo::resnet20_cifar();
+    let designs = vec![
+        DesignConfig::hpfa(),
+        DesignConfig::sfa(),
+        DesignConfig::stox(base, 1, true),
+        DesignConfig::stox(base, 4, true),
+        DesignConfig::stox(base, 8, true),
+        DesignConfig::stox_mix(
+            base,
+            true,
+            &[("s0b0c1", 4), ("s0b0c2", 4), ("s0b1c1", 2), ("s0b1c2", 2), ("s0b2c1", 2)],
+        ),
+    ];
+    println!("== Fig. 9a (ResNet-20/CIFAR, normalized to HPFA) ==");
+    let results = evaluate_network(&costs, &designs, &layers);
+    let hpfa = results[0].0.clone();
+    for (r, _) in &results {
+        println!(
+            "{:<26} energy {:>7.2}x  latency {:>7.2}x  area {:>6.2}x  EDP {:>7.1}x",
+            r.name,
+            hpfa.energy_pj / r.energy_pj,
+            hpfa.latency_ns / r.latency_ns,
+            hpfa.area_um2 / r.area_um2,
+            hpfa.edp_pj_ns / r.edp_pj_ns
+        );
+    }
+
+    // ----- Fig. 9b table -----
+    println!("\n== Fig. 9b (EDP gain vs HPFA per workload) ==");
+    for (name, layers) in [
+        ("ResNet-20/CIFAR", zoo::resnet20_cifar()),
+        ("ResNet-18/Tiny", zoo::resnet18_tiny()),
+        ("ResNet-50/Tiny", zoo::resnet50_tiny()),
+    ] {
+        let h = evaluate_design(&costs, &DesignConfig::hpfa(), &layers);
+        let s1 = evaluate_design(&costs, &DesignConfig::stox(base, 1, true), &layers);
+        let s4 = evaluate_design(&costs, &DesignConfig::stox(base, 4, true), &layers);
+        println!(
+            "{:<18} 1-QF {:>7.1}x   4-QF {:>7.1}x",
+            name,
+            h.edp_pj_ns / s1.edp_pj_ns,
+            h.edp_pj_ns / s4.edp_pj_ns
+        );
+    }
+
+    // ----- timings -----
+    println!("\n== model evaluation cost ==");
+    bench::quick("evaluate_design/resnet20", || {
+        bench::black_box(evaluate_design(
+            &costs,
+            &DesignConfig::stox(base, 1, true),
+            &layers,
+        ));
+    });
+    let r50 = zoo::resnet50_tiny();
+    bench::quick("evaluate_design/resnet50", || {
+        bench::black_box(evaluate_design(
+            &costs,
+            &DesignConfig::stox(base, 1, true),
+            &r50,
+        ));
+    });
+}

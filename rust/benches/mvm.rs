@@ -1,0 +1,79 @@
+//! MVM hot-path bench: the Rust-native Algorithm 1 crossbar MVM across
+//! converter types and configurations (the L3 functional hot loop).
+//!
+//! Regenerates the per-conversion cost story behind Table 2 / Fig. 9 at
+//! the functional level: MTJ sampling cost scales with samples; the
+//! converter choice does not change the analog PS work.
+
+use stox_net::imc::{PsConverter, StoxConfig, StoxMvm};
+use stox_net::stats::rng::CounterRng;
+use stox_net::util::bench;
+
+fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
+    let rng = CounterRng::new(seed);
+    (0..n).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect()
+}
+
+fn main() {
+    // a mid-network ResNet-20 layer: M = 3·3·64 = 576 rows, 64 cols
+    let (b, m, n) = (8usize, 576usize, 64usize);
+    let a = rand_vec(b * m, 1);
+    let w = rand_vec(m * n, 2);
+
+    println!("== stox MVM (B={b}, M={m}, N={n}) ==");
+    for (name, cfg, conv) in [
+        (
+            "4w4a4bs ideal-ADC",
+            StoxConfig::default(),
+            PsConverter::IdealAdc,
+        ),
+        (
+            "4w4a4bs 1b-SA",
+            StoxConfig::default(),
+            PsConverter::SenseAmp,
+        ),
+        (
+            "4w4a4bs MTJ x1",
+            StoxConfig::default(),
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
+        ),
+        (
+            "4w4a4bs MTJ x8",
+            StoxConfig { n_samples: 8, ..Default::default() },
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 8 },
+        ),
+        (
+            "4w4a1bs MTJ x1 (sliced)",
+            StoxConfig { w_slice_bits: 1, ..Default::default() },
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
+        ),
+        (
+            "2w2a1bs MTJ x1",
+            StoxConfig {
+                a_bits: 2,
+                w_bits: 2,
+                w_slice_bits: 1,
+                ..Default::default()
+            },
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
+        ),
+    ] {
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        let mut seed = 0u32;
+        bench::quick(&format!("mvm/{name}"), || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(mvm.run(&a, b, &conv, seed));
+        });
+    }
+
+    println!("\n== crossbar programming (weight reload) ==");
+    bench::quick("program/4w4a4bs 576x64", || {
+        bench::black_box(StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap());
+    });
+
+    println!("\n== PS collection (Fig. 4 probe path) ==");
+    let mvm = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    bench::quick("collect_ps/4w4a4bs", || {
+        bench::black_box(mvm.collect_ps(&a, b));
+    });
+}

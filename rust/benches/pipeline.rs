@@ -1,0 +1,46 @@
+//! Fig. 8 regeneration bench: pipeline stage occupancy, ADC sharing
+//! sweep, multi-sampling sweep, and layer/network latency model timings.
+
+use stox_net::arch::components::PsProcessing;
+use stox_net::arch::mapper::map_network;
+use stox_net::arch::pipeline::PipelineModel;
+use stox_net::imc::StoxConfig;
+use stox_net::model::zoo;
+use stox_net::util::bench;
+
+fn main() {
+    let pipe = PipelineModel::default();
+
+    // ----- Fig. 8 panel -----
+    println!("{}", pipe.render_fig8(128, 8, 1));
+
+    // ----- beat-period sweeps -----
+    println!("== ADC column-sharing sweep (beat ns, 128 cols) ==");
+    for share in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let s = pipe.stages(PsProcessing::AdcFullPrecision { share }, 128);
+        println!("share {share:>4} -> beat {:>8.1} ns", s.beat_ns);
+    }
+    println!("\n== MTJ multi-sampling sweep (beat ns) ==");
+    for samples in [1u32, 2, 4, 8] {
+        let s = pipe.stages(PsProcessing::StochasticMtj { samples }, 128);
+        println!("samples {samples} -> beat {:>6.1} ns (ps stage {:.1} ns)", s.beat_ns, s.t_ps_ns);
+    }
+
+    // ----- network latency under both designs -----
+    let layers = map_network(&zoo::resnet20_cifar(), &StoxConfig::default(), 128);
+    let lat_adc = pipe.network_latency_ns(&layers, |_| PsProcessing::AdcFullPrecision { share: 8 });
+    let lat_mtj = pipe.network_latency_ns(&layers, |_| PsProcessing::StochasticMtj { samples: 1 });
+    println!(
+        "\nResNet-20 single-inference latency: ADC(8:1) {:.1} µs vs MTJ x1 {:.1} µs ({:.1}x)",
+        lat_adc / 1e3,
+        lat_mtj / 1e3,
+        lat_adc / lat_mtj
+    );
+
+    println!("\n== timing the model itself ==");
+    bench::quick("pipeline/network_latency resnet20", || {
+        bench::black_box(
+            pipe.network_latency_ns(&layers, |_| PsProcessing::StochasticMtj { samples: 1 }),
+        );
+    });
+}

@@ -1,0 +1,53 @@
+//! PJRT runtime bench: artifact compile time and request-path execute
+//! latency for each batch variant (the production hot path).
+//!
+//! Skips gracefully when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::runtime::Engine;
+use stox_net::util::bench;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime bench: no artifacts/ — run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let test = TestSet::load(&manifest).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&manifest).unwrap();
+    println!(
+        "engine load+compile ({} variants): {:?}",
+        engine.batch_sizes().len(),
+        t0.elapsed()
+    );
+
+    for b in engine.batch_sizes() {
+        let handle = engine.model(b).unwrap();
+        let imgs: Vec<f32> = (0..b).flat_map(|i| test.image(i).to_vec()).collect();
+        let mut seed = 0u32;
+        bench::quick(&format!("pjrt/infer batch={b}"), || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(handle.infer(&imgs, seed).unwrap());
+        });
+    }
+
+    // native functional model for comparison (the validation path)
+    let store = WeightStore::load(&manifest).unwrap();
+    let native = NativeModel::load(&manifest, &store).unwrap();
+    let imgs8: Vec<f32> = (0..8).flat_map(|i| test.image(i).to_vec()).collect();
+    let mut seed = 0u32;
+    bench::bench(
+        "native/forward batch=8",
+        std::time::Duration::from_millis(200),
+        std::time::Duration::from_secs(2),
+        || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(native.forward(&imgs8, 8, seed));
+        },
+    );
+}

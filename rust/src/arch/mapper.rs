@@ -1,0 +1,210 @@
+//! DNN layer → crossbar mapping (Algorithm 1's partitioning) and
+//! per-inference action counting.
+//!
+//! A conv layer of kernel K_h×K_w, C_in inputs and C_out outputs over
+//! H_out×W_out positions becomes an MVM with `M = K_h·K_w·C_in` rows and
+//! `N = C_out` columns executed `P = H_out·W_out` times.  The row axis is
+//! split into `N_arrs = ceil(M/R_arr)` subarrays; weight bits into
+//! `n_slices` physically separate slices (2 cells per weight, signed);
+//! input bits stream over `n_streams` cycles; columns tile over crossbars
+//! of `c_arr` physical columns.
+
+use crate::imc::StoxConfig;
+
+/// Shape of one DNN layer as seen by the mapper (also deserialized from
+/// `artifacts/manifest.json`'s layer inventory).
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub stride: usize,
+    /// false → kept at high precision (HPF first layer / FC)
+    pub stochastic: bool,
+}
+
+impl LayerShape {
+    pub fn conv(
+        name: &str,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        h_out: usize,
+        stochastic: bool,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kh: k,
+            kw: k,
+            cin,
+            cout,
+            h_out,
+            w_out: h_out,
+            stride: 1,
+            stochastic,
+        }
+    }
+
+    /// MVM row count M = K_h·K_w·C_in.
+    pub fn m(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Output positions per inference P = H_out·W_out.
+    pub fn positions(&self) -> usize {
+        self.h_out * self.w_out
+    }
+
+    /// Multiply-accumulates per inference (workload size metric).
+    pub fn macs(&self) -> u64 {
+        (self.m() * self.cout * self.positions()) as u64
+    }
+}
+
+/// A layer mapped onto crossbars under a given `StoxConfig` + column width.
+#[derive(Debug, Clone)]
+pub struct MappedLayer {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub positions: usize,
+    pub n_arrs: usize,
+    pub n_slices: usize,
+    pub n_streams: usize,
+    /// column tiles: ceil(2N / c_arr) (2 cells per signed weight)
+    pub col_tiles: usize,
+    /// physical crossbar instances = n_arrs · n_slices · col_tiles
+    pub xbars: usize,
+    /// logical converter sites = columns × n_arrs × n_slices
+    pub converter_sites: usize,
+    // ---- per-inference action counts ----
+    /// PS conversion events (before multi-sampling)
+    pub conversions: u64,
+    /// DAC row-drive actions
+    pub dac_actions: u64,
+    /// crossbar cell read actions
+    pub cell_actions: u64,
+    /// shift-and-add merge operations
+    pub sna_actions: u64,
+    /// tile I/O (eDRAM buffer / bus / router) activation accesses
+    pub io_actions: u64,
+}
+
+/// Map one layer (physical columns per crossbar = `c_arr`).
+pub fn map_layer(shape: &LayerShape, cfg: &StoxConfig, c_arr: usize) -> MappedLayer {
+    let m = shape.m();
+    let n = shape.cout;
+    let p = shape.positions() as u64;
+    let n_arrs = cfg.n_arrs(m);
+    let n_slices = cfg.n_slices();
+    let n_streams = cfg.n_streams();
+    let col_tiles = (2 * n).div_ceil(c_arr).max(1);
+    let xbars = n_arrs * n_slices * col_tiles;
+    let converter_sites = n * n_arrs * n_slices;
+
+    // Every (position, stream, slice, subarray, column) is one PS event.
+    let conversions = p
+        * n_streams as u64
+        * n_slices as u64
+        * n_arrs as u64
+        * n as u64;
+    // Every (position, stream) drives all M rows once.
+    let dac_actions = p * n_streams as u64 * m as u64;
+    // Every driven row reads 2·n_slices cells per column group; cell reads
+    // scale with rows × columns touched.
+    let cell_actions = p * n_streams as u64 * (m * 2 * n_slices) as u64;
+    // One S&A merge per conversion event.
+    let sna_actions = conversions;
+    // Tile I/O: every streamed input bit is fetched once, every converted
+    // output element written once per stream.
+    let io_actions = dac_actions + p * n_streams as u64 * n as u64;
+
+    MappedLayer {
+        name: shape.name.clone(),
+        m,
+        n,
+        positions: shape.positions(),
+        n_arrs,
+        n_slices,
+        n_streams,
+        col_tiles,
+        xbars,
+        converter_sites,
+        conversions,
+        dac_actions,
+        cell_actions,
+        sna_actions,
+        io_actions,
+    }
+}
+
+/// Map a whole network (only `stochastic` layers unless `include_all`).
+pub fn map_network(
+    layers: &[LayerShape],
+    cfg: &StoxConfig,
+    c_arr: usize,
+) -> Vec<MappedLayer> {
+    layers.iter().map(|l| map_layer(l, cfg, c_arr)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> LayerShape {
+        LayerShape::conv("s1b0c1", 3, 64, 64, 16, true)
+    }
+
+    #[test]
+    fn basic_mapping_counts() {
+        let cfg = StoxConfig { r_arr: 256, w_slice_bits: 1, ..Default::default() };
+        let m = map_layer(&shape(), &cfg, 128);
+        assert_eq!(m.m, 576);
+        assert_eq!(m.n_arrs, 3);
+        assert_eq!(m.n_slices, 4);
+        assert_eq!(m.n_streams, 4);
+        assert_eq!(m.col_tiles, 1);
+        assert_eq!(m.xbars, 12);
+        // conversions: P·I·J·K·N = 256·4·4·3·64
+        assert_eq!(m.conversions, 256 * 4 * 4 * 3 * 64);
+        assert_eq!(m.dac_actions, 256 * 4 * 576);
+    }
+
+    #[test]
+    fn paper_n_arrs_formula() {
+        // ceil(K_h·K_w·C_in / R_arr)
+        let cfg = StoxConfig { r_arr: 128, ..Default::default() };
+        let l = LayerShape::conv("x", 3, 16, 32, 32, true);
+        assert_eq!(map_layer(&l, &cfg, 128).n_arrs, (3 * 3 * 16usize).div_ceil(128));
+    }
+
+    #[test]
+    fn column_tiling() {
+        let cfg = StoxConfig::default();
+        let wide = LayerShape::conv("w", 1, 64, 512, 7, true);
+        let m = map_layer(&wide, &cfg, 128);
+        assert_eq!(m.col_tiles, (2 * 512usize).div_ceil(128));
+    }
+
+    #[test]
+    fn macs_metric() {
+        let l = shape();
+        assert_eq!(l.macs(), 576 * 64 * 256);
+    }
+
+    #[test]
+    fn slicing_tradeoff() {
+        // 1-bit slices: 4× the arrays but cheaper converters per paper's
+        // N = log2(rows)+I+W-2 precision relation.
+        let s1 = StoxConfig { w_slice_bits: 1, ..Default::default() };
+        let s4 = StoxConfig { w_slice_bits: 4, ..Default::default() };
+        let m1 = map_layer(&shape(), &s1, 128);
+        let m4 = map_layer(&shape(), &s4, 128);
+        assert_eq!(m1.xbars, 4 * m4.xbars);
+        assert_eq!(m1.conversions, 4 * m4.conversions);
+    }
+}

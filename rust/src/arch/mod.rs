@@ -1,0 +1,27 @@
+//! ISAAC-like IMC architecture accounting (paper §4.3, Figs. 6, 8, 9).
+//!
+//! The paper evaluates hardware efficiency with Accelergy/Timeloop-style
+//! component-level accounting: per-action energies and per-instance areas
+//! (Table 2) rolled up over the number of actions a workload induces, plus
+//! a pipeline model for latency (Fig. 8).  This module implements exactly
+//! that accounting:
+//!
+//! * [`components`] — the Table 2 cost database;
+//! * [`mapper`] — DNN layer → crossbar instances / action counts
+//!   (Algorithm 1's `N_arrs`, slices, streams, conversions);
+//! * [`pipeline`] — stage-time model: column-shared ADC readout vs
+//!   all-column-parallel MTJ conversion (Fig. 8);
+//! * [`energy`] — per-layer and per-network energy/latency/area/EDP for a
+//!   design configuration (HPFA / SFA / StoX / Mix), behind Fig. 9;
+//! * [`tile`] — chip→tile→IMA→crossbar hierarchy instance counting.
+
+pub mod components;
+pub mod energy;
+pub mod mapper;
+pub mod pipeline;
+pub mod tile;
+
+pub use components::{ComponentCosts, PsProcessing};
+pub use energy::{DesignConfig, DesignReport, evaluate_design, evaluate_network};
+pub use mapper::{LayerShape, MappedLayer};
+pub use pipeline::PipelineModel;

@@ -1,0 +1,120 @@
+//! ISAAC-like tile hierarchy (Fig. 6): chip → tile → IMA → crossbar.
+//!
+//! The energy rollup in [`super::energy`] is hierarchy-agnostic (it counts
+//! actions); this module assigns mapped crossbars to physical IMAs/tiles
+//! for floorplan-level reporting and for the coordinator's tile scheduler.
+
+use super::mapper::MappedLayer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TileGeometry {
+    /// crossbars per in-situ multiply-accumulate unit
+    pub xbars_per_ima: usize,
+    /// IMAs per tile
+    pub imas_per_tile: usize,
+    /// shared eDRAM buffer per tile (KiB) — capacity check only
+    pub edram_kib: usize,
+}
+
+impl Default for TileGeometry {
+    /// ISAAC: 8 crossbars/IMA, 12 IMAs/tile, 64 KiB eDRAM.
+    fn default() -> Self {
+        Self { xbars_per_ima: 8, imas_per_tile: 12, edram_kib: 64 }
+    }
+}
+
+/// Placement of one layer onto the hierarchy.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub layer: String,
+    pub xbars: usize,
+    pub imas: usize,
+    pub tiles: usize,
+    /// first tile index assigned to this layer
+    pub tile_offset: usize,
+}
+
+/// A full-network floorplan.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub geometry: TileGeometry,
+    pub placements: Vec<Placement>,
+    pub total_tiles: usize,
+    pub total_imas: usize,
+    pub total_xbars: usize,
+}
+
+/// Greedy contiguous placement: each layer gets whole IMAs (weight-
+/// stationary; a layer's crossbars never share an IMA with another layer,
+/// mirroring ISAAC's replication unit).
+pub fn place(layers: &[MappedLayer], geom: TileGeometry) -> Floorplan {
+    let mut placements = Vec::with_capacity(layers.len());
+    let mut tile_cursor = 0usize;
+    let mut total_imas = 0usize;
+    let mut total_xbars = 0usize;
+    for l in layers {
+        let imas = l.xbars.div_ceil(geom.xbars_per_ima).max(1);
+        let tiles = imas.div_ceil(geom.imas_per_tile).max(1);
+        placements.push(Placement {
+            layer: l.name.clone(),
+            xbars: l.xbars,
+            imas,
+            tiles,
+            tile_offset: tile_cursor,
+        });
+        tile_cursor += tiles;
+        total_imas += imas;
+        total_xbars += l.xbars;
+    }
+    Floorplan {
+        geometry: geom,
+        placements,
+        total_tiles: tile_cursor,
+        total_imas,
+        total_xbars,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::mapper::{map_network, LayerShape};
+    use crate::imc::StoxConfig;
+    use crate::model::zoo;
+
+    #[test]
+    fn placement_covers_all_xbars() {
+        let layers = map_network(&zoo::resnet20_cifar(), &StoxConfig::default(), 128);
+        let fp = place(&layers, TileGeometry::default());
+        assert_eq!(fp.placements.len(), layers.len());
+        let sum: usize = layers.iter().map(|l| l.xbars).sum();
+        assert_eq!(fp.total_xbars, sum);
+        // capacity: every layer fits in its assigned IMAs
+        for (p, l) in fp.placements.iter().zip(&layers) {
+            assert!(p.imas * fp.geometry.xbars_per_ima >= l.xbars);
+        }
+    }
+
+    #[test]
+    fn tile_offsets_monotone_disjoint() {
+        let layers = map_network(&zoo::resnet20_cifar(), &StoxConfig::default(), 128);
+        let fp = place(&layers, TileGeometry::default());
+        let mut cursor = 0;
+        for p in &fp.placements {
+            assert_eq!(p.tile_offset, cursor);
+            cursor += p.tiles;
+        }
+        assert_eq!(cursor, fp.total_tiles);
+    }
+
+    #[test]
+    fn bigger_slicing_needs_more_tiles() {
+        let shapes =
+            vec![LayerShape::conv("l", 3, 64, 64, 16, true)];
+        let cfg1 = StoxConfig { w_slice_bits: 1, ..Default::default() };
+        let cfg4 = StoxConfig { w_slice_bits: 4, ..Default::default() };
+        let f1 = place(&map_network(&shapes, &cfg1, 128), TileGeometry::default());
+        let f4 = place(&map_network(&shapes, &cfg4, 128), TileGeometry::default());
+        assert!(f1.total_xbars > f4.total_xbars);
+    }
+}

@@ -1,0 +1,201 @@
+//! Size-or-deadline dynamic batcher.
+//!
+//! Requests accumulate until either the target batch size is reached or
+//! the oldest request has waited `max_wait`; the flushed batch is then
+//! padded (by replication) up to the nearest AOT-compiled batch variant.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// preferred (largest) batch size
+    pub target_batch: usize,
+    /// flush deadline for the oldest queued request
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { target_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// One queued inference request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+    pub id: u64,
+}
+
+/// A flushed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<Pending<T>>,
+    /// why the batch was cut
+    pub reason: FlushReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FlushReason {
+    Size,
+    Deadline,
+    Drain,
+}
+
+/// Deterministic, testable batching core (no tokio dependency; the server
+/// wraps it in an async loop).
+pub struct DynamicBatcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+    next_id: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, queue: VecDeque::new(), next_id: 0 }
+    }
+
+    pub fn push(&mut self, payload: T, now: Instant) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending { payload, enqueued: now, id });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time until the oldest request's deadline (None if queue empty).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            let waited = now.duration_since(p.enqueued);
+            self.cfg.max_wait.saturating_sub(waited)
+        })
+    }
+
+    /// Flush policy: full batch → Size; oldest waited ≥ max_wait → Deadline.
+    pub fn try_flush(&mut self, now: Instant) -> Option<Batch<T>> {
+        if self.queue.len() >= self.cfg.target_batch {
+            let items = self.drain(self.cfg.target_batch);
+            return Some(Batch { items, reason: FlushReason::Size });
+        }
+        if let Some(front) = self.queue.front() {
+            if now.duration_since(front.enqueued) >= self.cfg.max_wait {
+                let n = self.queue.len().min(self.cfg.target_batch);
+                let items = self.drain(n);
+                return Some(Batch { items, reason: FlushReason::Deadline });
+            }
+        }
+        None
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn drain_all(&mut self) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.target_batch);
+        let items = self.drain(n);
+        Some(Batch { items, reason: FlushReason::Drain })
+    }
+
+    fn drain(&mut self, n: usize) -> Vec<Pending<T>> {
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        assert!(b.try_flush(now).is_none());
+        b.push(3, now);
+        let batch = b.try_flush(now).unwrap();
+        assert_eq!(batch.reason, FlushReason::Size);
+        assert_eq!(batch.items.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let now = t0();
+        b.push("x", now);
+        assert!(b.try_flush(now).is_none());
+        let later = now + Duration::from_millis(6);
+        let batch = b.try_flush(later).unwrap();
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn size_cut_leaves_remainder() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        let now = t0();
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        let batch = b.try_flush(now).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn ids_monotone() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = t0();
+        let a = b.push((), now);
+        let c = b.push((), now);
+        assert!(c > a);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 8,
+            max_wait: Duration::from_millis(10),
+        });
+        let now = t0();
+        assert!(b.next_deadline(now).is_none());
+        b.push((), now);
+        let d1 = b.next_deadline(now).unwrap();
+        let d2 = b.next_deadline(now + Duration::from_millis(4)).unwrap();
+        assert!(d2 < d1);
+    }
+
+    #[test]
+    fn drain_all() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        assert!(b.drain_all().is_none());
+        b.push(1, t0());
+        let batch = b.drain_all().unwrap();
+        assert_eq!(batch.reason, FlushReason::Drain);
+        assert_eq!(batch.items.len(), 1);
+    }
+}

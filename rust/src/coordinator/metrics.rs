@@ -1,0 +1,160 @@
+//! Serving metrics: wall-clock latency percentiles, throughput, batch
+//! occupancy, plus the *simulated hardware* counters charged by the tile
+//! scheduler (energy pJ / latency ns per inference on the modeled IMC).
+
+use crate::stats::Histogram;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    /// wall-clock end-to-end request latency (µs)
+    latency_us: Histogram,
+    /// batch sizes at execution
+    batch_occupancy: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    /// simulated IMC hardware charges
+    pub hw_energy_pj: f64,
+    pub hw_latency_ns: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            // up to 60 s at 5 ms resolution: interpret-mode pallas backends
+            // run hundreds of ms per batch, and queue waits accumulate
+            latency_us: Histogram::new(0.0, 60_000_000.0, 12_000),
+            batch_occupancy: Histogram::new(0.0, 64.0, 64),
+            requests: 0,
+            batches: 0,
+            hw_energy_pj: 0.0,
+            hw_latency_ns: 0.0,
+        }
+    }
+
+    pub fn record_batch(&mut self, batch: usize, latencies: &[Duration]) {
+        self.batches += 1;
+        self.requests += latencies.len() as u64;
+        self.batch_occupancy.add(batch as f32);
+        for l in latencies {
+            self.latency_us.add(l.as_secs_f32() * 1e6);
+        }
+    }
+
+    pub fn record_hw(&mut self, energy_pj: f64, latency_ns: f64) {
+        self.hw_energy_pj += energy_pj;
+        self.hw_latency_ns += latency_ns;
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> f32 {
+        self.latency_us.percentile(p)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_occupancy.mean()
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        MetricsReport {
+            requests: self.requests,
+            batches: self.batches,
+            throughput_rps: self.throughput_rps(),
+            p50_us: self.latency_percentile_us(50.0),
+            p95_us: self.latency_percentile_us(95.0),
+            p99_us: self.latency_percentile_us(99.0),
+            mean_batch: self.mean_batch(),
+            hw_energy_pj: self.hw_energy_pj,
+            hw_latency_ns: self.hw_latency_ns,
+            hw_energy_per_req_pj: if self.requests > 0 {
+                self.hw_energy_pj / self.requests as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub throughput_rps: f64,
+    pub p50_us: f32,
+    pub p95_us: f32,
+    pub p99_us: f32,
+    pub mean_batch: f64,
+    pub hw_energy_pj: f64,
+    pub hw_latency_ns: f64,
+    pub hw_energy_per_req_pj: f64,
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "requests        : {}", self.requests)?;
+        writeln!(f, "batches         : {} (mean occupancy {:.2})", self.batches, self.mean_batch)?;
+        writeln!(f, "throughput      : {:.1} req/s", self.throughput_rps)?;
+        writeln!(
+            f,
+            "latency p50/p95/p99 : {:.0} / {:.0} / {:.0} µs",
+            self.p50_us, self.p95_us, self.p99_us
+        )?;
+        writeln!(
+            f,
+            "simulated IMC   : {:.3} µJ total, {:.3} nJ/request, {:.3} ms busy",
+            self.hw_energy_pj / 1e6,
+            self.hw_energy_per_req_pj / 1e3,
+            self.hw_latency_ns / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let mut m = Metrics::new();
+        m.record_batch(
+            4,
+            &[
+                Duration::from_micros(100),
+                Duration::from_micros(200),
+                Duration::from_micros(300),
+                Duration::from_micros(400),
+            ],
+        );
+        m.record_hw(1000.0, 500.0);
+        let r = m.report();
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.batches, 1);
+        // bin width is 5 ms: sub-millisecond latencies resolve to bin 0
+        assert!(r.p50_us >= 0.0 && r.p50_us < 5_000.0);
+        assert_eq!(r.hw_energy_per_req_pj, 250.0);
+        assert!(format!("{r}").contains("requests"));
+    }
+
+    #[test]
+    fn empty_metrics_dont_panic() {
+        let r = Metrics::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.hw_energy_per_req_pj, 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 serving coordinator: request queue → dynamic batcher → tile
+//! scheduler → PJRT (or native) execution, with latency/throughput
+//! metrics.
+//!
+//! The paper's system contribution is the crossbar datapath, so the
+//! coordinator is shaped like an IMC inference server (ISAAC/PUMA mold):
+//!
+//! * [`batcher`] — size-or-deadline dynamic batching onto the AOT-compiled
+//!   batch variants;
+//! * [`scheduler`] — weight-stationary tile scheduler: tracks per-tile
+//!   busy time using the Fig. 8 pipeline model and charges energy per
+//!   layer execution, so every served request also produces *simulated
+//!   hardware* latency/energy (the bridge between serving and Fig. 9);
+//! * [`server`] — the tokio run loop tying queue, batcher, executor and
+//!   metrics together;
+//! * [`metrics`] — wall-clock latency percentiles, throughput, and the
+//!   simulated hardware counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use scheduler::TileScheduler;
+pub use server::{ServeConfig, Server};

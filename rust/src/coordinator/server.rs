@@ -1,0 +1,311 @@
+//! The serving run loop: queue → dynamic batcher → executor → replies.
+//!
+//! Implemented on std threads + channels (this environment is offline, no
+//! tokio): the server thread owns the batcher and executor; clients submit
+//! [`Request`]s over an mpsc channel and receive [`Reply`]s on per-request
+//! oneshot channels.  The executor is pluggable: the PJRT engine (AOT
+//! artifacts, the production path), the native crossbar model
+//! (hardware-exact, used for validation and sensitivity), or a mock.
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::scheduler::TileScheduler;
+use crate::model::NativeModel;
+use crate::runtime::Engine;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A single inference request: one image (flattened NHWC) + reply slot.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch: usize,
+}
+
+/// Batch executor abstraction.
+pub trait Executor {
+    /// Run `batch` images (concatenated) and return per-image logits.
+    fn execute(&self, images: &[f32], batch: usize, seed: u32) -> crate::Result<Vec<f32>>;
+    fn classes(&self) -> usize;
+    fn image_elems(&self) -> usize;
+    /// Preferred max batch.
+    fn max_batch(&self) -> usize;
+}
+
+/// PJRT-backed executor (the production path).
+pub struct PjrtExecutor {
+    pub engine: Engine,
+    pub classes: usize,
+    pub image_elems: usize,
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&self, images: &[f32], batch: usize, seed: u32) -> crate::Result<Vec<f32>> {
+        let handle = self
+            .engine
+            .best_model_for(batch)
+            .ok_or_else(|| anyhow::anyhow!("no compiled model"))?;
+        let hb = handle.batch;
+        if hb == batch {
+            return handle.infer(images, seed);
+        }
+        if hb > batch {
+            // pad with zero images, truncate the logits
+            let mut padded = images.to_vec();
+            padded.resize(hb * self.image_elems, 0.0);
+            let out = handle.infer(&padded, seed)?;
+            return Ok(out[..batch * self.classes].to_vec());
+        }
+        // hb < batch: run in chunks
+        let mut out = Vec::with_capacity(batch * self.classes);
+        let mut i = 0;
+        while i < batch {
+            let n = hb.min(batch - i);
+            let chunk = &images[i * self.image_elems..(i + n) * self.image_elems];
+            let sub = self.execute(chunk, n, seed.wrapping_add(i as u32))?;
+            out.extend(sub);
+            i += n;
+        }
+        Ok(out)
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn max_batch(&self) -> usize {
+        self.engine.batch_sizes().last().copied().unwrap_or(1)
+    }
+}
+
+/// Native crossbar-model executor (validation path).
+pub struct NativeExecutor {
+    pub model: NativeModel,
+}
+
+impl Executor for NativeExecutor {
+    fn execute(&self, images: &[f32], batch: usize, seed: u32) -> crate::Result<Vec<f32>> {
+        Ok(self.model.forward(images, batch, seed))
+    }
+
+    fn classes(&self) -> usize {
+        self.model.num_classes
+    }
+
+    fn image_elems(&self) -> usize {
+        self.model.image_size * self.model.image_size * self.model.in_channels
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub batcher: BatcherConfig,
+    pub seed: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), seed: 0 }
+    }
+}
+
+/// The server: owns the executor, optional tile scheduler (simulated
+/// hardware accounting) and metrics.
+pub struct Server {
+    executor: Box<dyn Executor>,
+    cfg: ServeConfig,
+    pub metrics: Arc<Mutex<Metrics>>,
+    scheduler: Option<Arc<Mutex<TileScheduler>>>,
+}
+
+impl Server {
+    pub fn new(executor: Box<dyn Executor>, cfg: ServeConfig) -> Self {
+        Self {
+            executor,
+            cfg,
+            metrics: Arc::new(Mutex::new(Metrics::new())),
+            scheduler: None,
+        }
+    }
+
+    /// Attach a tile scheduler so every executed batch also charges
+    /// simulated IMC time/energy.
+    pub fn with_scheduler(mut self, sched: TileScheduler) -> Self {
+        self.scheduler = Some(Arc::new(Mutex::new(sched)));
+        self
+    }
+
+    fn execute_batch(&self, batch: Batch<Request>, seed: u32) {
+        let n = batch.items.len();
+        let classes = self.executor.classes();
+        let mut images = Vec::with_capacity(n * self.executor.image_elems());
+        for p in &batch.items {
+            images.extend_from_slice(&p.payload.image);
+        }
+        let t0 = Instant::now();
+        let logits = match self.executor.execute(&images, n, seed) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("executor error: {e}");
+                return;
+            }
+        };
+        let now = Instant::now();
+
+        if let Some(sched) = &self.scheduler {
+            let mut s = sched.lock().unwrap();
+            let arrival = s.horizon_ns;
+            let r = s.schedule_batch(n, arrival);
+            self.metrics.lock().unwrap().record_hw(r.energy_pj, r.span_ns);
+        }
+
+        let mut latencies = Vec::with_capacity(n);
+        for (i, p) in batch.items.into_iter().enumerate() {
+            let lat = now.duration_since(p.enqueued);
+            latencies.push(lat);
+            let _ = p.payload.reply.send(Reply {
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                latency: now.duration_since(t0),
+                batch: n,
+            });
+        }
+        self.metrics.lock().unwrap().record_batch(n, &latencies);
+    }
+
+    /// Run loop: consume requests until the channel closes, then drain.
+    ///
+    /// PJRT handles are not `Send`, so the server runs on the thread that
+    /// created the executor (typically main); clients submit from other
+    /// threads via the channel.
+    pub fn run(&self, rx: mpsc::Receiver<Request>) {
+        let mut batcher = DynamicBatcher::new(BatcherConfig {
+            target_batch: self
+                .cfg
+                .batcher
+                .target_batch
+                .min(self.executor.max_batch()),
+            ..self.cfg.batcher
+        });
+        let mut seed = self.cfg.seed;
+        let mut closed = false;
+        while !closed {
+            let now = Instant::now();
+            if let Some(batch) = batcher.try_flush(now) {
+                seed = seed.wrapping_add(1);
+                self.execute_batch(batch, seed);
+                continue;
+            }
+            let wait = batcher
+                .next_deadline(now)
+                .unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(wait) {
+                Ok(req) => {
+                    batcher.push(req, Instant::now());
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+            }
+        }
+        while let Some(batch) = batcher.drain_all() {
+            seed = seed.wrapping_add(1);
+            self.execute_batch(batch, seed);
+        }
+    }
+}
+
+/// Convenience client: submit every image of a test set through a running
+/// server and wait for all replies; returns (predictions, replies).
+pub fn submit_all(
+    tx: &mpsc::Sender<Request>,
+    images: impl Iterator<Item = Vec<f32>>,
+) -> Vec<mpsc::Receiver<Reply>> {
+    let mut rxs = Vec::new();
+    for image in images {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { image, reply: rtx }).expect("server alive");
+        rxs.push(rrx);
+    }
+    rxs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct MockExec {
+        classes: usize,
+        elems: usize,
+    }
+
+    impl Executor for MockExec {
+        fn execute(&self, _images: &[f32], batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+            Ok((0..batch * self.classes).map(|i| i as f32).collect())
+        }
+        fn classes(&self) -> usize {
+            self.classes
+        }
+        fn image_elems(&self) -> usize {
+            self.elems
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let server = Server::new(
+            Box::new(MockExec { classes: 10, elems: 4 }),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                seed: 0,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // client on a side thread; server loop on this thread (the PJRT
+        // production shape)
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..10).map(|_| vec![0.0f32; 4]));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+
+        let mut got = 0;
+        for r in replies {
+            let rep = r.recv().unwrap();
+            assert_eq!(rep.logits.len(), 10);
+            got += 1;
+        }
+        assert_eq!(got, 10);
+        let m = server.metrics.lock().unwrap().report();
+        assert_eq!(m.requests, 10);
+        assert!(m.batches >= 3); // 10 requests at batch ≤ 4
+    }
+
+    #[test]
+    fn chunking_logic() {
+        let e = MockExec { classes: 2, elems: 3 };
+        let out = e.execute(&vec![0.0; 7 * 3], 7, 0).unwrap();
+        assert_eq!(out.len(), 14);
+    }
+}

@@ -1,0 +1,137 @@
+//! The analog-to-stochastic converter circuit (Fig. 2 right):
+//! SOT-MTJ + reference MTJ voltage divider + CMOS inverter.
+//!
+//! The paper reduces this circuit to three scalars that enter the
+//! architecture model (Table 2 row "MTJ-Converter"): energy/conversion
+//! ≈ 6.14 fJ, latency 2 ns, area 1.47 µm² (28 nm-scaled).  We derive the
+//! energy from the electrical model (write dissipation in the HM path +
+//! read dissipation in the divider) and carry the paper's calibrated
+//! constants alongside; `tests` assert the derivation lands within a
+//! small factor of the calibrated value.
+
+use super::mtj::SotMtj;
+
+/// Paper-calibrated Table 2 constants (28 nm node).
+pub const PAPER_ENERGY_PER_CONVERSION_J: f64 = 6.14e-15;
+pub const PAPER_SET_ENERGY_J: f64 = 6.35e-15;
+pub const PAPER_RESET_ENERGY_J: f64 = 5.94e-15;
+pub const PAPER_LATENCY_S: f64 = 2e-9;
+pub const PAPER_AREA_UM2: f64 = 1.47;
+/// As-drawn area in GF 22FDSOI before the 28 nm scaling (§3.1).
+pub const AREA_22FDSOI_UM2: f64 = 0.9108;
+
+/// Behavioral model of one stochastic MTJ converter instance.
+#[derive(Debug, Clone, Copy)]
+pub struct MtjConverter {
+    pub mtj: SotMtj,
+    /// read-phase duration as a fraction of the conversion window
+    pub read_duty: f64,
+    /// inverter + latch switched capacitance per read (F)
+    pub c_read: f64,
+}
+
+impl Default for MtjConverter {
+    fn default() -> Self {
+        Self {
+            mtj: SotMtj::default(),
+            read_duty: 0.25,
+            c_read: 0.9e-15,
+        }
+    }
+}
+
+impl MtjConverter {
+    /// Write (set/reset) energy: dissipation of the column current in the
+    /// HM write path over the pulse, at mean |I| = i_max/2 for a uniform
+    /// current distribution.
+    pub fn write_energy(&self) -> f64 {
+        let i_rms2 = self.mtj.i_write_max * self.mtj.i_write_max / 3.0; // E[I²], I~U(-max,max)
+        i_rms2 * self.mtj.r_hm() * self.mtj.t_pulse
+    }
+
+    /// Read energy: divider static draw during the read phase + inverter
+    /// switched capacitance.
+    pub fn read_energy(&self) -> f64 {
+        let t_read = self.read_duty * self.mtj.t_pulse;
+        let r_div_avg =
+            0.5 * (self.mtj.r_lrs + self.mtj.r_hrs()) + self.mtj.r_ref;
+        let static_e = self.mtj.v_dd * self.mtj.v_dd / r_div_avg * t_read;
+        let dyn_e = self.c_read * self.mtj.v_dd * self.mtj.v_dd;
+        static_e + dyn_e
+    }
+
+    /// Total derived energy per conversion (J).
+    pub fn energy_per_conversion(&self) -> f64 {
+        self.write_energy() + self.read_energy()
+    }
+
+    /// Conversion latency (s): one write pulse + read.
+    pub fn latency(&self) -> f64 {
+        self.mtj.t_pulse
+    }
+
+    /// Area per instance (µm², 28 nm-scaled) — the converter is MTJ +
+    /// divider + inverter; dominated by the two transistor stacks.
+    pub fn area_um2(&self) -> f64 {
+        // 22FDSOI drawn area scaled to 28 nm: (28/22)² ≈ 1.62
+        AREA_22FDSOI_UM2 * (28.0 / 22.0) * (28.0 / 22.0)
+    }
+
+    /// Inverter output for a divider voltage: '1' when the MTJ is in the
+    /// high-resistance state (digital readout of the stochastic bit).
+    pub fn read_bit(&self, mtj_high: bool) -> bool {
+        let v_mid =
+            0.5 * (self.mtj.divider_voltage(true) + self.mtj.divider_voltage(false));
+        self.mtj.divider_voltage(mtj_high) > v_mid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_energy_close_to_paper() {
+        let c = MtjConverter::default();
+        let e = c.energy_per_conversion();
+        // electrical derivation must land within ~2.5x of the calibrated
+        // 6.14 fJ (the PDK-level extraction we cannot rerun here)
+        assert!(
+            e > PAPER_ENERGY_PER_CONVERSION_J / 2.5
+                && e < PAPER_ENERGY_PER_CONVERSION_J * 2.5,
+            "derived {e:.3e} vs paper {PAPER_ENERGY_PER_CONVERSION_J:.3e}"
+        );
+    }
+
+    #[test]
+    fn write_energy_dominates() {
+        let c = MtjConverter::default();
+        assert!(c.write_energy() > c.read_energy());
+    }
+
+    #[test]
+    fn latency_is_2ns() {
+        assert_eq!(MtjConverter::default().latency(), 2e-9);
+    }
+
+    #[test]
+    fn area_scaling() {
+        let a = MtjConverter::default().area_um2();
+        assert!((a - PAPER_AREA_UM2).abs() / PAPER_AREA_UM2 < 0.01, "area {a}");
+    }
+
+    #[test]
+    fn readout_separates_states() {
+        let c = MtjConverter::default();
+        assert!(c.read_bit(true));
+        assert!(!c.read_bit(false));
+    }
+
+    #[test]
+    fn set_reset_asymmetry_small() {
+        // Paper: 6.35 vs 5.94 fJ — asymmetry under 10%
+        let asym = (PAPER_SET_ENERGY_J - PAPER_RESET_ENERGY_J)
+            / PAPER_ENERGY_PER_CONVERSION_J;
+        assert!(asym.abs() < 0.1);
+    }
+}

@@ -1,0 +1,252 @@
+//! Stochastic macro-spin Landau-Lifshitz-Gilbert solver with SOT.
+//!
+//! Single-domain free layer with in-plane easy axis ŷ (the standard
+//! stochastic SOT-neuron configuration [Sengupta'16]): the spin-Hall
+//! polarization σ ∥ ŷ acts as an (anti-)damping torque on the ±ŷ states,
+//! giving a sigmoidal switching probability versus charge current — the
+//! physics behind Eq. 1's tanh abstraction.
+//!
+//!   dm/dt = -γ' m×H_eff - γ'α m×(m×H_eff) - γ' β_DL m×(m×σ)
+//!
+//! with γ' = γ/(1+α²), H_eff = H_k(m·ŷ)ŷ - M_s(m·ẑ)ẑ (easy axis +
+//! thin-film demag) + H_th (thermal field, Box-Muller over the shared
+//! counter RNG).  Integration: stochastic Heun, dt ≈ 1 ps.
+
+use crate::stats::rng::CounterRng;
+
+pub const GAMMA: f64 = 1.760_859e11; // gyromagnetic ratio (rad/s/T)
+pub const MU0: f64 = 1.256_637e-6; // vacuum permeability
+pub const KB: f64 = 1.380_649e-23; // Boltzmann
+pub const HBAR: f64 = 1.054_572e-34;
+pub const E_CHARGE: f64 = 1.602_177e-19;
+
+/// Macro-spin parameters; defaults reproduce Table 1's device.
+#[derive(Debug, Clone, Copy)]
+pub struct LlgParams {
+    /// saturation magnetization (A/m)
+    pub ms: f64,
+    /// uniaxial anisotropy field along ŷ (A/m)
+    pub h_k: f64,
+    /// Gilbert damping
+    pub alpha: f64,
+    /// free-layer volume (m³) — 90nm × 70nm ellipse × 2.5nm (Table 1)
+    pub volume: f64,
+    /// spin-Hall angle of the heavy metal
+    pub theta_sh: f64,
+    /// HM cross-section the charge current flows through (m²)
+    pub hm_area: f64,
+    /// free-layer thickness (m)
+    pub t_free: f64,
+    /// temperature (K)
+    pub temperature: f64,
+    /// integration step (s)
+    pub dt: f64,
+}
+
+impl Default for LlgParams {
+    /// CoFeB-like free layer.  The anti-damping switching threshold for an
+    /// in-plane easy axis is `β_c ≈ α(H_k/2 + M_s/2)` (the thin-film demag
+    /// dominates); with α = 0.01, M_s = 8×10⁵ A/m this sits near a 40 µA
+    /// write current, placing the stochastic transition inside the paper's
+    /// 0–±100 µA range (Fig. 2).
+    fn default() -> Self {
+        Self {
+            ms: 8.0e5,
+            h_k: 1.5e4,
+            alpha: 0.010,
+            volume: std::f64::consts::FRAC_PI_4 * 90e-9 * 70e-9 * 2.5e-9,
+            theta_sh: 0.3,
+            hm_area: 112e-9 * 3.5e-9, // Table 1 HM width × thickness
+            t_free: 2.5e-9,
+            temperature: 300.0,
+            dt: 1e-12,
+        }
+    }
+}
+
+impl LlgParams {
+    /// Thermal stability factor Δ = μ0 Ms H_k V / (2 kT).
+    pub fn thermal_stability(&self) -> f64 {
+        MU0 * self.ms * self.h_k * self.volume / (2.0 * KB * self.temperature)
+    }
+
+    /// Damping-like SOT field amplitude (A/m) for charge current `i_a`.
+    pub fn h_sot(&self, i_a: f64) -> f64 {
+        let j = i_a / self.hm_area;
+        HBAR * self.theta_sh * j / (2.0 * E_CHARGE * MU0 * self.ms * self.t_free)
+    }
+
+    /// Std-dev of each thermal field component per step (A/m).
+    pub fn h_thermal_sigma(&self) -> f64 {
+        (2.0 * self.alpha * KB * self.temperature
+            / (MU0 * MU0 * self.ms * self.volume * GAMMA * self.dt)
+            * (1.0 + self.alpha * self.alpha))
+            .sqrt()
+    }
+}
+
+#[inline]
+fn cross(a: [f64; 3], b: [f64; 3]) -> [f64; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+#[inline]
+fn norm(v: [f64; 3]) -> [f64; 3] {
+    let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+    [v[0] / n, v[1] / n, v[2] / n]
+}
+
+/// One macro-spin trajectory integrator.
+pub struct LlgSim {
+    pub p: LlgParams,
+    rng: CounterRng,
+    counter: u32,
+}
+
+impl LlgSim {
+    pub fn new(p: LlgParams, seed: u32) -> Self {
+        Self { p, rng: CounterRng::new(seed), counter: 0 }
+    }
+
+    fn thermal_field(&mut self) -> [f64; 3] {
+        let s = self.p.h_thermal_sigma();
+        let mut h = [0.0; 3];
+        for hc in &mut h {
+            *hc = s * self.rng.normal(self.counter) as f64;
+            self.counter = self.counter.wrapping_add(1);
+        }
+        h
+    }
+
+    /// Deterministic torque dm/dt at magnetization `m` for current `i_a`,
+    /// with external field `h_ext` added to H_eff.
+    fn torque(&self, m: [f64; 3], i_a: f64, h_th: [f64; 3]) -> [f64; 3] {
+        let p = &self.p;
+        // H_eff: easy axis ŷ, thin-film demag -Ms m_z ẑ, thermal
+        let h_eff = [
+            h_th[0],
+            p.h_k * m[1] + h_th[1],
+            -p.ms * m[2] + h_th[2],
+        ];
+        let sigma = [0.0, 1.0, 0.0]; // spin polarization (HM current ∥ x̂)
+        let beta = p.h_sot(i_a);
+        let gamma_p = GAMMA * MU0 / (1.0 + p.alpha * p.alpha);
+
+        let m_x_h = cross(m, h_eff);
+        let m_x_mh = cross(m, m_x_h);
+        let m_x_s = cross(m, sigma);
+        let m_x_ms = cross(m, m_x_s);
+        let mut dm = [0.0; 3];
+        for k in 0..3 {
+            dm[k] = -gamma_p
+                * (m_x_h[k] + p.alpha * m_x_mh[k] + beta * m_x_ms[k]);
+        }
+        dm
+    }
+
+    /// Integrate one pulse of length `t_pulse` at current `i_a`, starting
+    /// from `m0`; returns the final magnetization (Heun / RK2 stochastic).
+    pub fn run_pulse(&mut self, m0: [f64; 3], i_a: f64, t_pulse: f64) -> [f64; 3] {
+        let steps = (t_pulse / self.p.dt).round() as usize;
+        let dt = self.p.dt;
+        let mut m = norm(m0);
+        for _ in 0..steps {
+            let h_th = self.thermal_field();
+            let k1 = self.torque(m, i_a, h_th);
+            let m_pred = norm([
+                m[0] + dt * k1[0],
+                m[1] + dt * k1[1],
+                m[2] + dt * k1[2],
+            ]);
+            let k2 = self.torque(m_pred, i_a, h_th);
+            m = norm([
+                m[0] + 0.5 * dt * (k1[0] + k2[0]),
+                m[1] + 0.5 * dt * (k1[1] + k2[1]),
+                m[2] + 0.5 * dt * (k1[2] + k2[2]),
+            ]);
+        }
+        m
+    }
+
+    /// Relax at zero current from near -ŷ, then apply the write pulse and
+    /// report whether the device switched to +ŷ.
+    pub fn switch_trial(&mut self, i_a: f64, t_pulse: f64) -> bool {
+        // slight initial tilt so torques are nonzero
+        let m0 = norm([0.05, -1.0, 0.02]);
+        let m = self.run_pulse(m0, i_a, t_pulse);
+        m[1] > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thermal_stability_in_plausible_range() {
+        let d = LlgParams::default().thermal_stability();
+        assert!((10.0..120.0).contains(&d), "Δ = {d}");
+    }
+
+    #[test]
+    fn magnetization_stays_unit_norm() {
+        let mut sim = LlgSim::new(LlgParams::default(), 1);
+        let m = sim.run_pulse([0.0, -1.0, 0.05], 50e-6, 0.2e-9);
+        let n = (m[0] * m[0] + m[1] * m[1] + m[2] * m[2]).sqrt();
+        assert!((n - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_current_no_switch() {
+        // At Δ≈30+ the state must survive a 2 ns idle period.
+        let mut switched = 0;
+        for t in 0..20 {
+            let mut sim = LlgSim::new(LlgParams::default(), 100 + t);
+            if sim.switch_trial(0.0, 2e-9) {
+                switched += 1;
+            }
+        }
+        assert!(switched <= 1, "{switched}/20 switched at I=0");
+    }
+
+    #[test]
+    fn large_positive_current_switches() {
+        // 100 µA sits above the anti-damping threshold but inside the
+        // stochastic band (P ≈ 0.9); 140 µA is deep in saturation.
+        let count = |i_a: f64, base: u32| -> u32 {
+            (0..20)
+                .filter(|t| {
+                    LlgSim::new(LlgParams::default(), base + t).switch_trial(i_a, 2e-9)
+                })
+                .count() as u32
+        };
+        let at_100 = count(100e-6, 200);
+        let at_140 = count(140e-6, 600);
+        assert!(at_100 >= 14, "{at_100}/20 switched at +100µA");
+        assert!(at_140 >= 18, "{at_140}/20 switched at +140µA");
+    }
+
+    #[test]
+    fn negative_current_holds_minus_state() {
+        let mut switched = 0;
+        for t in 0..20 {
+            let mut sim = LlgSim::new(LlgParams::default(), 300 + t);
+            if sim.switch_trial(-100e-6, 2e-9) {
+                switched += 1;
+            }
+        }
+        assert!(switched <= 2, "{switched}/20 switched at -100µA");
+    }
+
+    #[test]
+    fn sot_field_scale() {
+        let p = LlgParams::default();
+        let h = p.h_sot(100e-6);
+        // must be a sizeable fraction of H_k for ns switching
+        assert!(h > 0.1 * p.h_k && h < 10.0 * p.h_k, "H_sot = {h}");
+    }
+}

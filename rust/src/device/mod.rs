@@ -1,0 +1,21 @@
+//! SOT-MTJ device substrate (paper §3.1, Fig. 2, Table 1).
+//!
+//! The paper characterizes its analog-to-stochastic converter with a
+//! MATLAB macro-spin Landau-Lifshitz-Gilbert simulator + the Spinlib
+//! SOT-MTJ compact model and a GF 22FDX voltage-divider circuit.  We build
+//! the same chain in Rust (DESIGN.md §3 substitution table):
+//!
+//! * [`llg`] — stochastic macro-spin LLG solver with spin-orbit torque and
+//!   thermal fluctuation field (Heun scheme);
+//! * [`mtj`] — the SOT-MTJ device: Table 1 geometry/resistances, switching
+//!   probability extraction, and the tanh(α·x) fit that grounds Eq. 1;
+//! * [`converter`] — the voltage-divider + inverter converter circuit:
+//!   transfer curve, per-conversion energy/latency/area (Table 2 row).
+
+pub mod converter;
+pub mod llg;
+pub mod mtj;
+
+pub use converter::MtjConverter;
+pub use llg::{LlgParams, LlgSim};
+pub use mtj::{SotMtj, SwitchingCurve};

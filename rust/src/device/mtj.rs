@@ -1,0 +1,223 @@
+//! SOT-MTJ device model: Table 1 parameters, switching-probability
+//! extraction from the LLG solver, and the tanh fit that grounds Eq. 1.
+
+use super::llg::{LlgParams, LlgSim};
+use crate::util::pool;
+
+/// Table 1 device parameters (electrical side).
+#[derive(Debug, Clone, Copy)]
+pub struct SotMtj {
+    /// low-resistance (parallel) state (Ω) — Table 1: 57 kΩ
+    pub r_lrs: f64,
+    /// tunnel magnetoresistance ratio — Table 1: 4.4 (440%)
+    pub tmr: f64,
+    /// heavy-metal resistivity (Ω·m) — Table 1: 160 µΩ·cm
+    pub hm_resistivity: f64,
+    /// HM length / width / thickness (m) — Table 1: 144 × 112 × 3.5 nm
+    pub hm_dims: [f64; 3],
+    /// reference MTJ in the divider (Ω) — Table 1: 140 kΩ
+    pub r_ref: f64,
+    /// supply voltage (V)
+    pub v_dd: f64,
+    /// write-current range (A) — Table 1: 0–±100 µA
+    pub i_write_max: f64,
+    /// conversion (pulse) time (s) — paper: 2 ns
+    pub t_pulse: f64,
+    /// HM bias current placing the device at its 50% switching point
+    /// (standard stochastic-neuron biasing [Sengupta'16]); the bipolar
+    /// column current is superposed on this bias.
+    pub i_bias: f64,
+    /// column-current → HM-current gain of the divider front-end
+    pub signal_gain: f64,
+}
+
+impl Default for SotMtj {
+    fn default() -> Self {
+        Self {
+            r_lrs: 57e3,
+            tmr: 4.4,
+            hm_resistivity: 160e-8,
+            hm_dims: [144e-9, 112e-9, 3.5e-9],
+            r_ref: 140e3,
+            v_dd: 1.0,
+            i_write_max: 100e-6,
+            t_pulse: 2e-9,
+            i_bias: 82e-6,
+            signal_gain: 0.25,
+        }
+    }
+}
+
+impl SotMtj {
+    /// high-resistance (antiparallel) state: R_AP = R_P (1 + TMR)
+    pub fn r_hrs(&self) -> f64 {
+        self.r_lrs * (1.0 + self.tmr)
+    }
+
+    /// Heavy-metal write-path resistance ρL/(w·t).
+    pub fn r_hm(&self) -> f64 {
+        let [l, w, t] = self.hm_dims;
+        self.hm_resistivity * l / (w * t)
+    }
+
+    /// Divider output voltage in each state (read path).
+    pub fn divider_voltage(&self, high_state: bool) -> f64 {
+        let r = if high_state { self.r_hrs() } else { self.r_lrs };
+        self.v_dd * r / (r + self.r_ref)
+    }
+
+    /// Read margin seen by the inverter (V).
+    pub fn read_margin(&self) -> f64 {
+        self.divider_voltage(true) - self.divider_voltage(false)
+    }
+}
+
+/// Empirical switching-probability curve P(+1) vs write current.
+#[derive(Debug, Clone)]
+pub struct SwitchingCurve {
+    /// probed currents (A)
+    pub currents: Vec<f64>,
+    /// empirical switch probability at each current
+    pub prob: Vec<f64>,
+    /// trials per point
+    pub trials: u32,
+}
+
+impl SwitchingCurve {
+    /// Monte-Carlo extraction from the LLG solver (Fig. 2's experiment):
+    /// sweep `n_points` currents over ±i_max, `trials` pulses each.
+    pub fn extract(
+        llg: LlgParams,
+        mtj: &SotMtj,
+        n_points: usize,
+        trials: u32,
+        seed: u32,
+    ) -> Self {
+        let currents: Vec<f64> = (0..n_points)
+            .map(|i| {
+                mtj.i_write_max * (2.0 * i as f64 / (n_points - 1) as f64 - 1.0)
+            })
+            .collect();
+        let prob: Vec<f64> =
+            pool::par_map(currents.len(), pool::default_threads(), |pi| {
+                // signal current superposed on the 50%-point bias
+                let i_hm = mtj.i_bias + mtj.signal_gain * currents[pi];
+                let mut hits = 0u32;
+                for t in 0..trials {
+                    let s = seed
+                        .wrapping_add(pi as u32 * 7919)
+                        .wrapping_add(t.wrapping_mul(104_729));
+                    let mut sim = LlgSim::new(llg, s);
+                    if sim.switch_trial(i_hm, mtj.t_pulse) {
+                        hits += 1;
+                    }
+                }
+                hits as f64 / trials as f64
+            });
+        Self { currents, prob, trials }
+    }
+
+    /// Least-squares fit of P(i) = (tanh(α·i/i_max)+1)/2: coarse
+    /// multiplicative sweep + two rounds of local refinement — the bridge
+    /// from device physics to Eq. 1's abstraction.
+    pub fn fit_tanh_alpha(&self, i_max: f64) -> (f64, f64) {
+        let sse_at = |alpha: f64| -> f64 {
+            self.currents
+                .iter()
+                .zip(&self.prob)
+                .map(|(&i, &p)| {
+                    let model = 0.5 * ((alpha * i / i_max).tanh() + 1.0);
+                    (model - p) * (model - p)
+                })
+                .sum()
+        };
+        let mut best = (1.0, f64::INFINITY);
+        let mut alpha = 0.2;
+        while alpha < 60.0 {
+            let sse = sse_at(alpha);
+            if sse < best.1 {
+                best = (alpha, sse);
+            }
+            alpha *= 1.05;
+        }
+        // local refinement around the coarse winner
+        let mut step = best.0 * 0.05;
+        for _ in 0..2 {
+            let center = best.0;
+            let mut a = (center - 10.0 * step).max(1e-3);
+            while a <= center + 10.0 * step {
+                let sse = sse_at(a);
+                if sse < best.1 {
+                    best = (a, sse);
+                }
+                a += step;
+            }
+            step *= 0.1;
+        }
+        best
+    }
+
+    /// Monotonicity violations (noise metric for the extraction).
+    pub fn monotonicity_violations(&self, tol: f64) -> usize {
+        self.prob
+            .windows(2)
+            .filter(|w| w[1] + tol < w[0])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_derived_quantities() {
+        let m = SotMtj::default();
+        assert!((m.r_hrs() - 57e3 * 5.4).abs() < 1.0);
+        // ρL/(wt) = 160e-8 * 144e-9 / (112e-9*3.5e-9) ≈ 588 Ω
+        assert!((m.r_hm() - 587.75).abs() < 5.0, "r_hm = {}", m.r_hm());
+        assert!(m.read_margin() > 0.2, "margin {}", m.read_margin());
+    }
+
+    #[test]
+    fn divider_levels_ordered() {
+        let m = SotMtj::default();
+        assert!(m.divider_voltage(true) > m.divider_voltage(false));
+        assert!(m.divider_voltage(true) < m.v_dd);
+    }
+
+    #[test]
+    fn switching_curve_is_sigmoidal() {
+        // Small extraction (fast in release; ~seconds in debug): 9 points,
+        // 24 trials.
+        let curve = SwitchingCurve::extract(
+            LlgParams::default(),
+            &SotMtj::default(),
+            9,
+            24,
+            42,
+        );
+        let p = &curve.prob;
+        assert!(p[0] < 0.2, "P(-100µA) = {}", p[0]);
+        assert!(p[8] > 0.8, "P(+100µA) = {}", p[8]);
+        let mid = p[4];
+        assert!((0.15..=0.85).contains(&mid), "P(0) = {mid}");
+        assert!(curve.monotonicity_violations(0.25) == 0);
+    }
+
+    #[test]
+    fn tanh_fit_reasonable() {
+        // Fit on synthetic data with known alpha
+        let i_max = 100e-6;
+        let currents: Vec<f64> =
+            (0..21).map(|i| i_max * (i as f64 / 10.0 - 1.0)).collect();
+        let prob: Vec<f64> = currents
+            .iter()
+            .map(|&i| 0.5 * ((4.0 * i / i_max).tanh() + 1.0))
+            .collect();
+        let curve = SwitchingCurve { currents, prob, trials: 0 };
+        let (alpha, sse) = curve.fit_tanh_alpha(i_max);
+        assert!((alpha - 4.0).abs() < 0.25, "alpha {alpha}");
+        assert!(sse < 1e-4);
+    }
+}

@@ -1,0 +1,155 @@
+//! Array-level partial-sum converters: the component the paper replaces.
+//!
+//! * [`PsConverter::IdealAdc`] — infinite-precision readout (HPFA-style
+//!   functional reference; energy model separately charges FP ADC cost).
+//! * [`PsConverter::QuantAdc`] — N-bit SAR ADC (midtread uniform over the
+//!   normalized PS range); used for the sparse / low-bit ADC baselines.
+//! * [`PsConverter::SenseAmp`] — deterministic 1-bit sign readout
+//!   ("1b-SA", the HPF+1b-SA baseline of the paper).
+//! * [`PsConverter::StochasticMtj`] — the paper's contribution: ±1 reads
+//!   with `P(+1) = (tanh(α·ps)+1)/2`, `n_samples` reads counted
+//!   (Eq. 1 + §3.2.3 multi-sampling).
+//! * [`PsConverter::ExpectedMtj`] — infinite-sample limit `tanh(α·ps)`
+//!   (training-time surrogate; also the variance-free reference).
+
+use crate::stats::rng::CounterRng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PsConverter {
+    IdealAdc,
+    QuantAdc { bits: u32 },
+    SenseAmp,
+    StochasticMtj { alpha: f32, n_samples: u32 },
+    ExpectedMtj { alpha: f32 },
+}
+
+impl PsConverter {
+    /// Number of temporal samples this converter consumes per PS.
+    pub fn samples(&self) -> u32 {
+        match self {
+            PsConverter::StochasticMtj { n_samples, .. } => *n_samples,
+            _ => 1,
+        }
+    }
+
+    /// Convert one normalized partial sum (`ps ∈ [-1, 1]`).
+    ///
+    /// `counter_base` is the canonical event index of this PS element
+    /// (shared layout with python, see `ref.ps_counter_base`); the `rng`
+    /// carries the pre-mixed seed.
+    #[inline]
+    pub fn convert(&self, ps: f32, counter_base: u32, rng: &CounterRng) -> f32 {
+        match *self {
+            PsConverter::IdealAdc => ps,
+            PsConverter::QuantAdc { bits } => {
+                // midtread uniform quantizer over [-1, 1]
+                let levels = ((1u64 << bits) - 1) as f32;
+                let u = ((ps.clamp(-1.0, 1.0) + 1.0) * 0.5 * levels).round_ties_even();
+                2.0 * u / levels - 1.0
+            }
+            PsConverter::SenseAmp => {
+                if ps >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            PsConverter::ExpectedMtj { alpha } => (alpha * ps).tanh(),
+            PsConverter::StochasticMtj { alpha, n_samples } => {
+                let p = 0.5 * ((alpha * ps).tanh() + 1.0);
+                // u < p  ⟺  draw24 < ceil(p·2²⁴): u is k·2⁻²⁴ exactly and
+                // the f64 scaling of an f32 p by 2²⁴ is exact, so the
+                // integer comparison is bit-equivalent to the python side
+                // while skipping the per-sample int→float conversion.
+                let thr = ((p as f64) * 16_777_216.0).ceil() as u32;
+                let mut total = 0i32;
+                for s in 0..n_samples {
+                    let c = counter_base.wrapping_mul(n_samples).wrapping_add(s);
+                    total += if rng.draw24(c) < thr { 1 } else { -1 };
+                }
+                total as f32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> CounterRng {
+        CounterRng::new(9)
+    }
+
+    #[test]
+    fn ideal_is_identity() {
+        assert_eq!(PsConverter::IdealAdc.convert(0.37, 0, &rng()), 0.37);
+    }
+
+    #[test]
+    fn sense_amp_sign() {
+        let sa = PsConverter::SenseAmp;
+        assert_eq!(sa.convert(0.4, 0, &rng()), 1.0);
+        assert_eq!(sa.convert(-0.4, 0, &rng()), -1.0);
+        assert_eq!(sa.convert(0.0, 0, &rng()), 1.0); // matches ref.py ps>=0
+    }
+
+    #[test]
+    fn quant_adc_precision() {
+        let adc = PsConverter::QuantAdc { bits: 8 };
+        for i in 0..100 {
+            let ps = i as f32 / 50.0 - 1.0;
+            let q = adc.convert(ps, 0, &rng());
+            assert!((q - ps).abs() <= 1.0 / 255.0 + 1e-6);
+        }
+        // 1-bit ADC degenerates to {-1, +1}
+        let adc1 = PsConverter::QuantAdc { bits: 1 };
+        assert_eq!(adc1.convert(0.6, 0, &rng()), 1.0);
+        assert_eq!(adc1.convert(-0.6, 0, &rng()), -1.0);
+    }
+
+    #[test]
+    fn stochastic_counts_are_odd_and_bounded() {
+        let mtj = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 5 };
+        for c in 0..200 {
+            let v = mtj.convert(0.1, c, &rng());
+            assert!(v.abs() <= 5.0);
+            assert_eq!((v as i32).rem_euclid(2), 1, "odd sum of 5 ±1");
+        }
+    }
+
+    #[test]
+    fn stochastic_rate_tracks_tanh() {
+        let mtj = PsConverter::StochasticMtj { alpha: 2.0, n_samples: 1 };
+        for &x in &[-0.5f32, -0.1, 0.0, 0.2, 0.6] {
+            let n = 20_000;
+            let mean: f32 = (0..n).map(|c| mtj.convert(x, c, &rng())).sum::<f32>()
+                / n as f32;
+            assert!(
+                (mean - (2.0 * x).tanh()).abs() < 0.03,
+                "x={x} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn expected_is_sample_mean_limit() {
+        let alpha = 3.0;
+        let exp = PsConverter::ExpectedMtj { alpha };
+        let mtj = PsConverter::StochasticMtj { alpha, n_samples: 64 };
+        let ps = 0.23;
+        let mut acc = 0.0;
+        let trials = 500u32;
+        for t in 0..trials {
+            acc += mtj.convert(ps, t, &rng()) / 64.0;
+        }
+        let emp = acc / trials as f32;
+        assert!((emp - exp.convert(ps, 0, &rng())).abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_given_counter() {
+        let mtj = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 3 };
+        assert_eq!(mtj.convert(0.2, 77, &rng()), mtj.convert(0.2, 77, &rng()));
+    }
+}

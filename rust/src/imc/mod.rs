@@ -1,0 +1,17 @@
+//! Functional in-memory-computing crossbar model (Algorithm 1).
+//!
+//! Bit-identical with the python oracle `python/compile/kernels/ref.py`:
+//! same quantizer (round-half-even), same signed digit decomposition, same
+//! row partitioning, same counter-based stochastic sampling.  Exactness is
+//! enforced by golden-vector tests generated from the python side
+//! (`rust/tests/parity.rs`).
+
+pub mod converters;
+pub mod mvm;
+pub mod nonideal;
+pub mod quant;
+
+pub use converters::PsConverter;
+pub use mvm::{im2col, stox_conv2d, stox_mvm, StoxMvm};
+pub use nonideal::{Nonideality, NonidealCrossbar};
+pub use quant::StoxConfig;

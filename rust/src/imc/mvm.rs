@@ -1,0 +1,483 @@
+//! Algorithm 1 end-to-end: the StoX crossbar MVM, bit-identical with the
+//! python oracle (`ref.stox_mvm`) when driven by [`PsConverter::StochasticMtj`].
+//!
+//! [`StoxMvm`] is the production shape: weights are quantized, sliced and
+//! partitioned into subarrays **once** (crossbar programming), then many
+//! activations run through [`StoxMvm::run`].  `stox_mvm` is the one-shot
+//! convenience used by tests.
+
+use super::converters::PsConverter;
+use super::quant::{self, StoxConfig};
+use crate::stats::rng::CounterRng;
+
+/// A crossbar-programmed weight matrix ready for repeated MVMs.
+pub struct StoxMvm {
+    pub cfg: StoxConfig,
+    pub m: usize,
+    pub n: usize,
+    n_arrs: usize,
+    /// weight slice digits: `[k][j]` → row-major `[r_arr × n]` f32
+    /// (digits are small odd integers, exact in f32).
+    wd: Vec<Vec<Vec<f32>>>,
+}
+
+impl StoxMvm {
+    /// Program the crossbar: quantize + slice + partition `w` ([M×N],
+    /// values in [-1,1], row-major).
+    pub fn program(w: &[f32], m: usize, n: usize, cfg: StoxConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(w.len() == m * n, "weight shape mismatch");
+        let n_arrs = cfg.n_arrs(m);
+        let n_slices = cfg.n_slices();
+        let mut digits = vec![0i32; n_slices];
+
+        let mut wd =
+            vec![vec![vec![0.0f32; cfg.r_arr * n]; n_slices]; n_arrs];
+        for r in 0..m {
+            let k = r / cfg.r_arr;
+            let rr = r % cfg.r_arr;
+            for c in 0..n {
+                let u = quant::quantize_unit(w[r * n + c], cfg.w_bits);
+                quant::signed_digits(u, cfg.w_bits, cfg.w_slice_bits, &mut digits);
+                for (j, &d) in digits.iter().enumerate() {
+                    wd[k][j][rr * n + c] = d as f32;
+                }
+            }
+        }
+        // rows beyond m stay 0 (absent cells contribute no current)
+        Ok(Self { cfg, m, n, n_arrs, wd })
+    }
+
+    pub fn n_arrs(&self) -> usize {
+        self.n_arrs
+    }
+
+    /// Weight digits of subarray `k`, slice `j` (row-major [r_arr × n]) —
+    /// exposed for the non-ideality wrapper.
+    pub(crate) fn slice(&self, k: usize, j: usize) -> &[f32] {
+        &self.wd[k][j]
+    }
+
+    /// Run a batch of activations (`a`: [B×M] row-major, values in [-1,1])
+    /// through the crossbar with the given PS converter; returns [B×N].
+    ///
+    /// Hot-path structure (EXPERIMENTS.md §Perf): each weight slice is
+    /// streamed over its rows **once**, accumulating the partial sums of
+    /// all `I` input streams simultaneously — `I×` less weight traffic
+    /// than the naive per-(stream, slice) loop, and the inner kernel is a
+    /// branch-free `ps[i][c] += x_i · w[c]` that vectorizes.
+    pub fn run(
+        &self,
+        a: &[f32],
+        batch: usize,
+        conv: &PsConverter,
+        seed: u32,
+    ) -> Vec<f32> {
+        // Batch rows are independent (the RNG counter space is keyed by
+        // b), so large batches fan out across cores; per-element results
+        // are bit-identical to the sequential path.
+        let threads = crate::util::pool::default_threads();
+        if batch >= 2 * threads && threads > 1 {
+            let chunk = batch.div_ceil(threads);
+            let n_chunks = batch.div_ceil(chunk);
+            let parts = crate::util::pool::par_map(n_chunks, threads, |ci| {
+                let b0 = ci * chunk;
+                let b1 = ((ci + 1) * chunk).min(batch);
+                self.run_range(a, b0, b1, conv, seed)
+            });
+            let mut out = Vec::with_capacity(batch * self.n);
+            for p in parts {
+                out.extend(p);
+            }
+            return out;
+        }
+        self.run_range(a, 0, batch, conv, seed)
+    }
+
+    /// Sequential kernel over batch rows [b0, b1).
+    fn run_range(
+        &self,
+        a: &[f32],
+        b0: usize,
+        b1: usize,
+        conv: &PsConverter,
+        seed: u32,
+    ) -> Vec<f32> {
+        let batch = b1 - b0;
+        debug_assert!(a.len() >= b1 * self.m);
+        let cfg = &self.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let samples = conv.samples() as f32;
+        let rng = CounterRng::new(seed);
+        let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+        let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+        let lev = (((1u64 << cfg.a_bits) - 1) * ((1u64 << cfg.w_bits) - 1)) as f32;
+        let norm = 1.0 / (lev * self.n_arrs as f32 * samples);
+        let inv_r = 1.0 / cfg.r_arr as f32;
+
+        let mut out = vec![0.0f32; batch * self.n];
+        // activation digits of one (b, k) stripe, row-major [r][i] so the
+        // inner loop reads them contiguously
+        let mut xd = vec![0.0f32; cfg.r_arr * i_n];
+        let mut digits = vec![0i32; i_n];
+        // per-stream PS accumulators [i][n] (I·N f32 — L1-resident)
+        let mut ps = vec![0.0f32; i_n * self.n];
+
+        for b in b0..b1 {
+            for k in 0..self.n_arrs {
+                // decompose this subarray's activation stripe
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                for rr in 0..rows {
+                    let u = quant::quantize_unit(a[b * self.m + row0 + rr], cfg.a_bits);
+                    quant::signed_digits(u, cfg.a_bits, cfg.a_stream_bits, &mut digits);
+                    for (i, &d) in digits.iter().enumerate() {
+                        xd[rr * i_n + i] = d as f32;
+                    }
+                }
+                for j in 0..j_n {
+                    ps.iter_mut().for_each(|v| *v = 0.0);
+                    let w_sl = &self.wd[k][j];
+                    // one pass over the slice rows feeds every stream
+                    for rr in 0..rows {
+                        let wrow = &w_sl[rr * self.n..(rr + 1) * self.n];
+                        let xr = &xd[rr * i_n..rr * i_n + i_n];
+                        for (i, &x) in xr.iter().enumerate() {
+                            let acc = &mut ps[i * self.n..(i + 1) * self.n];
+                            for (p, &wv) in acc.iter_mut().zip(wrow) {
+                                *p += x * wv;
+                            }
+                        }
+                    }
+                    for i in 0..i_n {
+                        let scale = sa[i] * sw[j] * norm;
+                        let ps_i = &ps[i * self.n..(i + 1) * self.n];
+                        for c in 0..self.n {
+                            // canonical counter layout shared with python:
+                            // (((b·K + k)·N + n)·I + i)·J + j
+                            let base = ((((b * self.n_arrs + k) * self.n + c)
+                                * i_n
+                                + i) as u32)
+                                .wrapping_mul(j_n as u32)
+                                .wrapping_add(j as u32);
+                            let v = conv.convert(ps_i[c] * inv_r, base, &rng);
+                            out[(b - b0) * self.n + c] += v * scale;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl StoxMvm {
+    /// Enumerate all normalized array-level partial sums for a batch
+    /// (the Fig. 4 distribution probe).  Order: [b][k][i][j][col].
+    pub fn collect_ps(&self, a: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(a.len(), batch * self.m);
+        let cfg = &self.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let inv_r = 1.0 / cfg.r_arr as f32;
+        let mut out =
+            Vec::with_capacity(batch * self.n_arrs * i_n * j_n * self.n);
+        let mut xd = vec![vec![0.0f32; cfg.r_arr]; i_n];
+        let mut digits = vec![0i32; i_n];
+        let mut ps_row = vec![0.0f32; self.n];
+        for b in 0..batch {
+            for k in 0..self.n_arrs {
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                for i in 0..i_n {
+                    xd[i][rows..].iter_mut().for_each(|v| *v = 0.0);
+                }
+                for rr in 0..rows {
+                    let u = quant::quantize_unit(a[b * self.m + row0 + rr], cfg.a_bits);
+                    quant::signed_digits(u, cfg.a_bits, cfg.a_stream_bits, &mut digits);
+                    for (i, &d) in digits.iter().enumerate() {
+                        xd[i][rr] = d as f32;
+                    }
+                }
+                for i in 0..i_n {
+                    for j in 0..j_n {
+                        ps_row.iter_mut().for_each(|v| *v = 0.0);
+                        let w_sl = &self.wd[k][j];
+                        for rr in 0..rows {
+                            let x = xd[i][rr];
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w_sl[rr * self.n..(rr + 1) * self.n];
+                            for (p, &wv) in ps_row.iter_mut().zip(wrow) {
+                                *p += x * wv;
+                            }
+                        }
+                        out.extend(ps_row.iter().map(|p| p * inv_r));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One-shot Algorithm 1 (program + run); mirrors `ref.stox_mvm`.
+pub fn stox_mvm(
+    a: &[f32],
+    w: &[f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    cfg: StoxConfig,
+    conv: &PsConverter,
+    seed: u32,
+) -> crate::Result<Vec<f32>> {
+    Ok(StoxMvm::program(w, m, n, cfg)?.run(a, batch, conv, seed))
+}
+
+/// im2col patch extraction, NHWC, SAME-style padding, (kh, kw, cin) feature
+/// order — identical to `stox_layers._im2col` so rows map to crossbars the
+/// same way on both sides.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let pad = (kh - 1) / 2;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w_ + 2 * pad - kw) / stride + 1;
+    let m = kh * kw * c;
+    let mut out = vec![0.0f32; b * ho * wo * m];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst0 = ((bi * ho + oy) * wo + ox) * m;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w_ as isize {
+                            continue;
+                        }
+                        let src0 = ((bi * h + iy as usize) * w_ + ix as usize) * c;
+                        let dst = dst0 + (ky * kw + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src0..src0 + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Crossbar-mapped convolution: im2col + Algorithm 1 (`stox_conv2d` in
+/// python).  `w` is [kh,kw,cin,cout] row-major and must already be
+/// normalized into [-1,1].
+#[allow(clippy::too_many_arguments)]
+pub fn stox_conv2d(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    cin: usize,
+    weights: &[f32],
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    cfg: StoxConfig,
+    conv: &PsConverter,
+    seed: u32,
+) -> crate::Result<(Vec<f32>, usize, usize)> {
+    let (patches, ho, wo) = im2col(x, b, h, w_, cin, kh, kw, stride);
+    let m = kh * kw * cin;
+    let mvm = StoxMvm::program(weights, m, cout, cfg)?;
+    let out = mvm.run(&patches, b * ho * wo, conv, seed);
+    Ok((out, ho, wo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
+        let rng = CounterRng::new(seed);
+        (0..n).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect()
+    }
+
+    fn cfg_small() -> StoxConfig {
+        StoxConfig { r_arr: 64, w_slice_bits: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn ideal_matches_quantized_matmul() {
+        let (b, m, n) = (3, 100, 7);
+        let a = rand_vec(b * m, 1);
+        let w = rand_vec(m * n, 2);
+        let cfg = StoxConfig { a_bits: 8, w_bits: 8, r_arr: 64, w_slice_bits: 1, ..Default::default() };
+        let got = stox_mvm(&a, &w, b, m, n, cfg, &PsConverter::IdealAdc, 0).unwrap();
+        // reference: plain f64 matmul / (n_arrs * r_arr)
+        let k = cfg.n_arrs(m);
+        for bi in 0..b {
+            for c in 0..n {
+                let mut acc = 0.0f64;
+                for r in 0..m {
+                    acc += a[bi * m + r] as f64 * w[r * n + c] as f64;
+                }
+                let want = acc / (k * cfg.r_arr) as f64;
+                let g = got[bi * n + c] as f64;
+                assert!((g - want).abs() < 2e-2, "b{bi} c{c}: {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn output_bounded() {
+        let (b, m, n) = (2, 300, 5);
+        let a = rand_vec(b * m, 3);
+        let w = rand_vec(m * n, 4);
+        for conv in [
+            PsConverter::IdealAdc,
+            PsConverter::SenseAmp,
+            PsConverter::ExpectedMtj { alpha: 4.0 },
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 3 },
+            PsConverter::QuantAdc { bits: 4 },
+        ] {
+            let out =
+                stox_mvm(&a, &w, b, m, n, cfg_small(), &conv, 5).unwrap();
+            for &v in &out {
+                assert!(v.abs() <= 1.0 + 1e-5, "{conv:?} -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_deterministic_per_seed() {
+        let (b, m, n) = (2, 90, 4);
+        let a = rand_vec(b * m, 5);
+        let w = rand_vec(m * n, 6);
+        let c = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        let o1 = stox_mvm(&a, &w, b, m, n, cfg_small(), &c, 42).unwrap();
+        let o2 = stox_mvm(&a, &w, b, m, n, cfg_small(), &c, 42).unwrap();
+        let o3 = stox_mvm(&a, &w, b, m, n, cfg_small(), &c, 43).unwrap();
+        assert_eq!(o1, o2);
+        assert_ne!(o1, o3);
+    }
+
+    #[test]
+    fn stochastic_converges_to_expected() {
+        let (b, m, n) = (1, 64, 6);
+        let a = rand_vec(b * m, 7);
+        let w = rand_vec(m * n, 8);
+        let cfg = StoxConfig { alpha: 2.0, ..cfg_small() };
+        let exp = stox_mvm(&a, &w, b, m, n, cfg, &PsConverter::ExpectedMtj { alpha: 2.0 }, 0)
+            .unwrap();
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        let mut acc = vec![0.0f32; n];
+        let trials = 300;
+        for s in 0..trials {
+            let o = mvm.run(
+                &a,
+                b,
+                &PsConverter::StochasticMtj { alpha: 2.0, n_samples: 4 },
+                s,
+            );
+            for (ac, v) in acc.iter_mut().zip(o) {
+                *ac += v / trials as f32;
+            }
+        }
+        for (e, g) in exp.iter().zip(&acc) {
+            assert!((e - g).abs() < 0.02, "{e} vs {g}");
+        }
+    }
+
+    #[test]
+    fn more_samples_reduce_variance() {
+        let (b, m, n) = (1, 128, 8);
+        let a = rand_vec(b * m, 9);
+        let w = rand_vec(m * n, 10);
+        let cfg = StoxConfig { alpha: 2.0, r_arr: 128, w_slice_bits: 1, ..Default::default() };
+        let exp =
+            stox_mvm(&a, &w, b, m, n, cfg, &PsConverter::ExpectedMtj { alpha: 2.0 }, 0)
+                .unwrap();
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        let mse = |ns: u32| -> f32 {
+            let o = mvm.run(
+                &a,
+                b,
+                &PsConverter::StochasticMtj { alpha: 2.0, n_samples: ns },
+                3,
+            );
+            o.iter().zip(&exp).map(|(g, e)| (g - e) * (g - e)).sum::<f32>()
+                / n as f32
+        };
+        let (e1, e4, e16) = (mse(1), mse(4), mse(16));
+        assert!(e1 > e4 && e4 > e16, "{e1} {e4} {e16}");
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1: patches == input
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let (p, ho, wo) = im2col(&x, 2, 3, 3, 2, 1, 1, 1);
+        assert_eq!((ho, wo), (3, 3));
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn im2col_shapes_and_padding() {
+        let x = vec![1.0f32; 1 * 4 * 4 * 3];
+        let (p, ho, wo) = im2col(&x, 1, 4, 4, 3, 3, 3, 1);
+        assert_eq!((ho, wo), (4, 4));
+        assert_eq!(p.len(), 16 * 27);
+        // corner patch: 4 of 9 taps in-bounds
+        let corner = &p[0..27];
+        let nonzero = corner.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nonzero, 4 * 3);
+        // strided
+        let (_, ho2, wo2) = im2col(&x, 1, 4, 4, 3, 3, 3, 2);
+        assert_eq!((ho2, wo2), (2, 2));
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let x = rand_vec(1 * 8 * 8 * 4, 11);
+        let w = rand_vec(3 * 3 * 4 * 6, 12);
+        let cfg = StoxConfig { r_arr: 36, ..Default::default() };
+        let (out, ho, wo) = stox_conv2d(
+            &x, 1, 8, 8, 4, &w, 3, 3, 6, 2, cfg, &PsConverter::IdealAdc, 0,
+        )
+        .unwrap();
+        assert_eq!((ho, wo), (4, 4));
+        assert_eq!(out.len(), 1 * 4 * 4 * 6);
+    }
+
+    #[test]
+    fn programming_rejects_bad_shapes() {
+        assert!(StoxMvm::program(&[0.0; 10], 3, 4, StoxConfig::default()).is_err());
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        // the fan-out path must be bit-identical to run_range(0, batch)
+        let (m, n) = (96usize, 10usize);
+        let batch = 64usize; // large enough to trigger the parallel path
+        let a = rand_vec(batch * m, 21);
+        let w = rand_vec(m * n, 22);
+        let cfg = cfg_small();
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 3 };
+        let par = mvm.run(&a, batch, &conv, 5);
+        let seq = mvm.run_range(&a, 0, batch, &conv, 5);
+        assert_eq!(par, seq);
+    }
+}

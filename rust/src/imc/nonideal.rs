@@ -1,0 +1,269 @@
+//! Crossbar non-idealities — the analog error sources the paper's
+//! stochastic conversion must tolerate on real hardware (extension per
+//! DESIGN.md: the paper's future-work axis of robustness).
+//!
+//! Models (all applied to the *normalized* PS before conversion, matching
+//! how they perturb the column current):
+//!
+//! * **conductance variation** — per-cell programming error, lognormal-ish
+//!   multiplicative spread σ_g on each weight digit; static per crossbar
+//!   (drawn once at programming time from the counter RNG);
+//! * **IR drop** — wire resistance attenuates rows far from the driver:
+//!   row r sees its contribution scaled by `1 - ir_drop · r / R_arr`
+//!   (first-order PUMA-style model);
+//! * **read noise** — zero-mean Gaussian on each PS sample (thermal +
+//!   shot noise of the column), σ_read in normalized-PS units.
+//!
+//! [`NonidealCrossbar`] wraps a programmed [`StoxMvm`] and perturbs its
+//! PS stream; because the stochastic MTJ converter already tolerates PS
+//! noise by construction (Eq. 1's sloped tanh), the interesting output is
+//! the accuracy-vs-severity curve (`stox-cli nonideal`).
+
+use super::converters::PsConverter;
+use super::mvm::StoxMvm;
+use super::quant::{self, StoxConfig};
+use crate::stats::rng::CounterRng;
+
+/// Severity knobs; all default to 0 (ideal).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Nonideality {
+    /// per-cell conductance spread (relative σ, e.g. 0.1 = 10 %)
+    pub sigma_g: f32,
+    /// full-array IR-drop coefficient (fraction lost at the far row)
+    pub ir_drop: f32,
+    /// additive read noise per conversion (normalized-PS σ)
+    pub sigma_read: f32,
+}
+
+impl Nonideality {
+    pub fn is_ideal(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
+/// A programmed crossbar with analog error models applied.
+pub struct NonidealCrossbar {
+    mvm: StoxMvm,
+    nonideal: Nonideality,
+    /// static per-cell multiplicative error, same layout as the weight
+    /// digits; drawn once at programming (device-to-device variation)
+    cell_gain: Vec<Vec<Vec<f32>>>,
+}
+
+impl NonidealCrossbar {
+    /// Program the crossbar and freeze its per-cell variation (seeded —
+    /// a different `prog_seed` is a different physical die).
+    pub fn program(
+        w: &[f32],
+        m: usize,
+        n: usize,
+        cfg: StoxConfig,
+        nonideal: Nonideality,
+        prog_seed: u32,
+    ) -> crate::Result<Self> {
+        let mvm = StoxMvm::program(w, m, n, cfg)?;
+        let rng = CounterRng::new(prog_seed ^ 0x5EED_CE11);
+        let n_arrs = mvm.n_arrs();
+        let n_slices = cfg.n_slices();
+        let mut cell_gain = Vec::with_capacity(n_arrs);
+        let mut c = 0u32;
+        for _ in 0..n_arrs {
+            let mut per_slice = Vec::with_capacity(n_slices);
+            for _ in 0..n_slices {
+                let gains: Vec<f32> = (0..cfg.r_arr * n)
+                    .map(|_| {
+                        let g = 1.0 + nonideal.sigma_g * rng.normal(c);
+                        c = c.wrapping_add(1);
+                        g.max(0.0)
+                    })
+                    .collect();
+                per_slice.push(gains);
+            }
+            cell_gain.push(per_slice);
+        }
+        Ok(Self { mvm, nonideal, cell_gain })
+    }
+
+    pub fn cfg(&self) -> &StoxConfig {
+        &self.mvm.cfg
+    }
+
+    /// Run a batch through the non-ideal array (mirrors `StoxMvm::run`
+    /// with the three error models injected into the analog path).
+    pub fn run(
+        &self,
+        a: &[f32],
+        batch: usize,
+        conv: &PsConverter,
+        seed: u32,
+    ) -> Vec<f32> {
+        let cfg = &self.mvm.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let m = self.mvm.m;
+        let n = self.mvm.n;
+        let n_arrs = self.mvm.n_arrs();
+        let samples = conv.samples() as f32;
+        let rng = CounterRng::new(seed);
+        let noise_rng = CounterRng::new(seed ^ 0x0C0_FFEE);
+        let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+        let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+        let lev = (((1u64 << cfg.a_bits) - 1) * ((1u64 << cfg.w_bits) - 1)) as f32;
+        let norm = 1.0 / (lev * n_arrs as f32 * samples);
+        let inv_r = 1.0 / cfg.r_arr as f32;
+
+        let mut out = vec![0.0f32; batch * n];
+        let mut digits = vec![0i32; i_n];
+        let mut xd = vec![0.0f32; cfg.r_arr * i_n];
+        let mut ps = vec![0.0f32; i_n * n];
+        let mut noise_c = 0u32;
+
+        for b in 0..batch {
+            for k in 0..n_arrs {
+                let row0 = k * cfg.r_arr;
+                let rows = (m - row0).min(cfg.r_arr);
+                for rr in 0..rows {
+                    let u = quant::quantize_unit(a[b * m + row0 + rr], cfg.a_bits);
+                    quant::signed_digits(u, cfg.a_bits, cfg.a_stream_bits, &mut digits);
+                    // IR drop: rows electrically farther from the driver
+                    // contribute attenuated current
+                    let atten =
+                        1.0 - self.nonideal.ir_drop * rr as f32 * inv_r;
+                    for (i, &d) in digits.iter().enumerate() {
+                        xd[rr * i_n + i] = d as f32 * atten;
+                    }
+                }
+                for j in 0..j_n {
+                    ps.iter_mut().for_each(|v| *v = 0.0);
+                    let w_sl = self.mvm.slice(k, j);
+                    let gains = &self.cell_gain[k][j];
+                    for rr in 0..rows {
+                        let wrow = &w_sl[rr * n..(rr + 1) * n];
+                        let grow = &gains[rr * n..(rr + 1) * n];
+                        let xr = &xd[rr * i_n..rr * i_n + i_n];
+                        for (i, &x) in xr.iter().enumerate() {
+                            let acc = &mut ps[i * n..(i + 1) * n];
+                            for c in 0..n {
+                                acc[c] += x * wrow[c] * grow[c];
+                            }
+                        }
+                    }
+                    for i in 0..i_n {
+                        let scale = sa[i] * sw[j] * norm;
+                        for c in 0..n {
+                            let base = ((((b * n_arrs + k) * n + c) * i_n + i)
+                                as u32)
+                                .wrapping_mul(j_n as u32)
+                                .wrapping_add(j as u32);
+                            let mut v = ps[i * n + c] * inv_r;
+                            if self.nonideal.sigma_read > 0.0 {
+                                v += self.nonideal.sigma_read
+                                    * noise_rng.normal(noise_c);
+                                noise_c = noise_c.wrapping_add(1);
+                            }
+                            out[b * n + c] += conv.convert(v, base, &rng) * scale;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
+        let rng = CounterRng::new(seed);
+        (0..n).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect()
+    }
+
+    fn setup(nonideal: Nonideality) -> (Vec<f32>, NonidealCrossbar) {
+        let (m, n) = (96usize, 8usize);
+        let a = rand_vec(2 * m, 1);
+        let w = rand_vec(m * n, 2);
+        let cfg = StoxConfig { r_arr: 96, w_slice_bits: 1, ..Default::default() };
+        let xb = NonidealCrossbar::program(&w, m, n, cfg, nonideal, 7).unwrap();
+        (a, xb)
+    }
+
+    #[test]
+    fn zero_severity_matches_ideal_path() {
+        let (a, xb) = setup(Nonideality::default());
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        let got = xb.run(&a, 2, &conv, 9);
+        let want = xb.mvm.run(&a, 2, &conv, 9);
+        assert_eq!(got, want, "ideal nonideal == StoxMvm");
+    }
+
+    #[test]
+    fn error_grows_with_severity() {
+        let conv = PsConverter::ExpectedMtj { alpha: 4.0 };
+        let (a, ideal) = setup(Nonideality::default());
+        let base = ideal.run(&a, 2, &conv, 0);
+        let mut last_err = 0.0f32;
+        for sigma in [0.05f32, 0.15, 0.4] {
+            let (_, xb) = setup(Nonideality { sigma_g: sigma, ..Default::default() });
+            let got = xb.run(&a, 2, &conv, 0);
+            let err: f32 = got
+                .iter()
+                .zip(&base)
+                .map(|(g, b)| (g - b).abs())
+                .fold(0.0, f32::max);
+            assert!(err >= last_err * 0.5, "σ_g={sigma}: err {err} vs {last_err}");
+            last_err = err;
+        }
+        assert!(last_err > 1e-4, "large variation must visibly perturb");
+    }
+
+    #[test]
+    fn ir_drop_attenuates_output() {
+        // all-positive operands: IR drop strictly reduces the PS magnitude
+        let (m, n) = (64usize, 4usize);
+        let a = vec![0.8f32; m];
+        let w = vec![0.5f32; m * n];
+        let cfg = StoxConfig { r_arr: 64, w_slice_bits: 1, ..Default::default() };
+        let ideal = NonidealCrossbar::program(&w, m, n, cfg, Nonideality::default(), 1)
+            .unwrap();
+        let droopy = NonidealCrossbar::program(
+            &w, m, n, cfg,
+            Nonideality { ir_drop: 0.3, ..Default::default() }, 1,
+        )
+        .unwrap();
+        let conv = PsConverter::IdealAdc;
+        let o1 = ideal.run(&a, 1, &conv, 0);
+        let o2 = droopy.run(&a, 1, &conv, 0);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!(y < x, "{y} !< {x}");
+            assert!(*y > 0.0);
+        }
+    }
+
+    #[test]
+    fn read_noise_decorrelates_reads_but_multisampling_averages() {
+        let (a, xb) = setup(Nonideality { sigma_read: 0.2, ..Default::default() });
+        let exp = PsConverter::ExpectedMtj { alpha: 2.0 };
+        let (_, ideal) = setup(Nonideality::default());
+        let base = ideal.run(&a, 2, &exp, 0);
+        // stochastic 8-sample read under noise stays closer to the ideal
+        // expectation than a 1-sample read (multi-sampling as error tool)
+        let mse = |ns: u32, seed: u32| -> f32 {
+            let c = PsConverter::StochasticMtj { alpha: 2.0, n_samples: ns };
+            let o = xb.run(&a, 2, &c, seed);
+            o.iter().zip(&base).map(|(g, b)| (g - b) * (g - b)).sum::<f32>()
+                / o.len() as f32
+        };
+        let e1: f32 = (0..8).map(|s| mse(1, s)).sum::<f32>() / 8.0;
+        let e8: f32 = (0..8).map(|s| mse(8, s)).sum::<f32>() / 8.0;
+        assert!(e8 < e1, "8-sample {e8} !< 1-sample {e1}");
+    }
+
+    #[test]
+    fn programming_is_deterministic_per_seed() {
+        let (a, xb1) = setup(Nonideality { sigma_g: 0.2, ..Default::default() });
+        let (_, xb2) = setup(Nonideality { sigma_g: 0.2, ..Default::default() });
+        let conv = PsConverter::SenseAmp;
+        assert_eq!(xb1.run(&a, 2, &conv, 3), xb2.run(&a, 2, &conv, 3));
+    }
+}

@@ -1,0 +1,202 @@
+//! Fixed-point quantization + bit slicing/streaming codecs.
+//!
+//! Value model (DESIGN.md §2 / ref.py):
+//!   * a value v ∈ [-1,1] is coded as `u = round_ties_even((v+1)/2·(2^b-1))`
+//!     — `round_ties_even` matches `jnp.round`;
+//!   * u is decomposed into base-2^d *signed* digits `x_i = 2 d_i - (2^d-1)`
+//!     (±1 for 1-bit digits), LSB first, so `Σ 2^{i·d} x_i = 2u - (2^b-1)`;
+//!   * inputs stream digits over time (DAC side), weights map digits onto
+//!     separate crossbar slices (two cells per weight → signed current).
+
+
+/// Hardware configuration of one StoX crossbar-mapped MVM — mirrors
+/// `python/compile/kernels/ref.py::StoxConfig` and the paper's `XwYaZbs`
+/// naming (X=w_bits, Y=a_bits, Z=w_slice_bits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoxConfig {
+    pub a_bits: u32,
+    pub w_bits: u32,
+    pub a_stream_bits: u32,
+    pub w_slice_bits: u32,
+    pub r_arr: usize,
+    pub n_samples: u32,
+    pub alpha: f32,
+}
+
+impl Default for StoxConfig {
+    /// The paper's baseline: 4w4a4bs, α=4, R_arr=256, 1 sample.
+    fn default() -> Self {
+        Self {
+            a_bits: 4,
+            w_bits: 4,
+            a_stream_bits: 1,
+            w_slice_bits: 4,
+            r_arr: 256,
+            n_samples: 1,
+            alpha: 4.0,
+        }
+    }
+}
+
+impl StoxConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.a_bits >= 1 && self.w_bits >= 1, "bits >= 1");
+        anyhow::ensure!(
+            self.a_bits % self.a_stream_bits == 0,
+            "a_bits must be divisible by a_stream_bits"
+        );
+        anyhow::ensure!(
+            self.w_bits % self.w_slice_bits == 0,
+            "w_bits must be divisible by w_slice_bits"
+        );
+        anyhow::ensure!(self.n_samples >= 1, "n_samples >= 1");
+        anyhow::ensure!(self.r_arr >= 1, "r_arr >= 1");
+        Ok(())
+    }
+
+    pub fn n_streams(&self) -> usize {
+        (self.a_bits / self.a_stream_bits) as usize
+    }
+
+    pub fn n_slices(&self) -> usize {
+        (self.w_bits / self.w_slice_bits) as usize
+    }
+
+    /// Number of PS subarrays for an `m`-row operand (Algorithm 1's
+    /// `ceil(K_h·K_w·C_in / R_arr)`).
+    pub fn n_arrs(&self, m: usize) -> usize {
+        m.div_ceil(self.r_arr).max(1)
+    }
+
+    /// Paper §4.1 tag, e.g. "4w4a4bs".
+    pub fn tag(&self) -> String {
+        format!("{}w{}a{}bs", self.w_bits, self.a_bits, self.w_slice_bits)
+    }
+
+    /// Required baseline ADC resolution for this mapping (§2.1):
+    /// `N = log2(N_row) + I + W - 2`.
+    pub fn adc_bits(&self) -> u32 {
+        (self.r_arr as f64).log2().ceil() as u32 + self.a_stream_bits
+            + self.w_slice_bits
+            - 2
+    }
+}
+
+/// Quantize v ∈ [-1,1] to the integer code u ∈ [0, 2^bits - 1].
+/// Round-half-to-even to match `jnp.round` exactly.
+#[inline]
+pub fn quantize_unit(v: f32, bits: u32) -> i32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let v = v.clamp(-1.0, 1.0);
+    ((v + 1.0) * 0.5 * levels).round_ties_even() as i32
+}
+
+/// Represented value of code u: `2u/(2^bits - 1) - 1`.
+#[inline]
+pub fn dequantize_unit(u: i32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    2.0 * u as f32 / levels - 1.0
+}
+
+/// Signed base-2^digit_bits digits of code u, LSB first (physical DAC
+/// levels / differential cell currents): `x_i = 2 d_i - (2^digit_bits - 1)`.
+pub fn signed_digits(u: i32, bits: u32, digit_bits: u32, out: &mut [i32]) {
+    let n_digits = (bits / digit_bits) as usize;
+    debug_assert_eq!(out.len(), n_digits);
+    let base = 1i32 << digit_bits;
+    for (i, o) in out.iter_mut().enumerate() {
+        let d = (u >> (i as u32 * digit_bits)) & (base - 1);
+        *o = 2 * d - (base - 1);
+    }
+}
+
+/// Shift-and-add scales `2^{i·digit_bits}`, LSB first.
+pub fn digit_scales(bits: u32, digit_bits: u32) -> Vec<f32> {
+    (0..(bits / digit_bits))
+        .map(|i| (1u64 << (i * digit_bits)) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_levels() {
+        for bits in [1u32, 2, 4, 8] {
+            let lev = (1 << bits) - 1;
+            for k in 0..=lev {
+                let v = 2.0 * k as f32 / lev as f32 - 1.0;
+                assert_eq!(quantize_unit(v, bits), k as i32);
+                assert!((dequantize_unit(k as i32, bits) - v).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_clips() {
+        assert_eq!(quantize_unit(-7.0, 4), 0);
+        assert_eq!(quantize_unit(7.0, 4), 15);
+    }
+
+    #[test]
+    fn quantize_ties_to_even_matches_jnp() {
+        // (0+1)/2*15 = 7.5 -> 8 (even); for 2 bits (v=1/3+eps cases) etc.
+        assert_eq!(quantize_unit(0.0, 4), 8);
+        // 6.5 -> 6 under ties-even (0.8666..*7.5)
+        let v = 2.0 * 6.5 / 15.0 - 1.0;
+        assert_eq!(quantize_unit(v, 4), 6);
+    }
+
+    #[test]
+    fn digit_identity() {
+        // Σ 2^{i·d} x_i == 2u - (2^bits - 1)
+        for bits in [2u32, 4, 8] {
+            for digit_bits in [1u32, 2] {
+                if bits % digit_bits != 0 {
+                    continue;
+                }
+                let n = (bits / digit_bits) as usize;
+                let scales = digit_scales(bits, digit_bits);
+                let mut digits = vec![0i32; n];
+                for u in 0..(1i32 << bits) {
+                    signed_digits(u, bits, digit_bits, &mut digits);
+                    let s: f32 = digits
+                        .iter()
+                        .zip(&scales)
+                        .map(|(&d, &s)| d as f32 * s)
+                        .sum();
+                    assert_eq!(s as i32, 2 * u - ((1 << bits) - 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_bit_digits_are_pm1() {
+        let mut d = vec![0i32; 4];
+        signed_digits(0b1010, 4, 1, &mut d);
+        assert_eq!(d, vec![-1, 1, -1, 1]);
+    }
+
+    #[test]
+    fn config_helpers() {
+        let cfg = StoxConfig::default();
+        assert_eq!(cfg.n_streams(), 4);
+        assert_eq!(cfg.n_slices(), 1);
+        assert_eq!(cfg.n_arrs(576), 3);
+        assert_eq!(cfg.n_arrs(1), 1);
+        assert_eq!(cfg.tag(), "4w4a4bs");
+        // N = log2(256) + 1 + 4 - 2 = 11 for 4-bit slices; 8 for 1-bit
+        assert_eq!(cfg.adc_bits(), 11);
+        let cfg1 = StoxConfig { w_slice_bits: 1, ..cfg };
+        assert_eq!(cfg1.adc_bits(), 8);
+    }
+
+    #[test]
+    fn config_validation() {
+        let bad = StoxConfig { a_bits: 4, a_stream_bits: 3, ..Default::default() };
+        assert!(bad.validate().is_err());
+        assert!(StoxConfig::default().validate().is_ok());
+    }
+}

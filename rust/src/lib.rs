@@ -1,0 +1,32 @@
+//! StoX-Net: stochastic processing of partial sums for efficient in-memory
+//! computing DNN accelerators — full-system reproduction.
+//!
+//! Layer map (DESIGN.md):
+//! * [`device`] — SOT-MTJ physics: macro-spin LLG solver, switching
+//!   probability extraction, the analog-to-stochastic converter circuit.
+//! * [`imc`] — functional crossbar model: quantization, bit slicing and
+//!   streaming, array partitioning, PS converters (ADC / sense-amp /
+//!   stochastic MTJ), Algorithm 1 end to end.  Bit-identical with the
+//!   python oracle via the shared counter-based RNG.
+//! * [`model`] — DNN workload zoo (ResNet-20/18/50 shapes), exported-weight
+//!   loading, native hardware-exact inference.
+//! * [`arch`] — ISAAC-like architecture accounting: component cost DB
+//!   (Table 2), layer→crossbar mapping, Fig. 8 pipeline model, the
+//!   energy/latency/area/EDP rollups behind Fig. 9.
+//! * [`coordinator`] — the serving engine: request queue, dynamic batcher,
+//!   tile scheduler, metrics.
+//! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` produced by the
+//!   python AOT path and executes them on the request path.
+//! * [`stats`] — RNG, histograms, percentile sketches, Monte-Carlo driver.
+
+pub mod arch;
+pub mod coordinator;
+pub mod device;
+pub mod imc;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

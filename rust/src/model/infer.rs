@@ -1,0 +1,590 @@
+//! Native hardware-exact inference: the StoX ResNet forward pass running
+//! entirely on the Rust crossbar functional model ([`crate::imc`]).
+//!
+//! Mirrors `python/compile/model.py` layer-for-layer and seed-for-seed
+//! (same `_layer_seed` derivation, same weight normalization, same BN),
+//! so the same checkpoint produces matching predictions on both sides —
+//! the cross-layer validation behind `rust/tests/parity.rs`.  It is also
+//! what the sensitivity analysis (Fig. 5) and the Fig. 4 PS-distribution
+//! collection run on.
+
+use super::weights::{Manifest, WeightStore};
+use crate::imc::{im2col, PsConverter, StoxConfig, StoxMvm};
+use crate::stats::rng::mix32;
+
+/// One batch-norm affine (folded running stats).
+#[derive(Debug, Clone)]
+struct BnFold {
+    scale: Vec<f32>, // gamma / sqrt(var + eps)
+    shift: Vec<f32>, // beta - mean * scale
+}
+
+impl BnFold {
+    fn new(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) -> Self {
+        let scale: Vec<f32> = gamma
+            .iter()
+            .zip(var)
+            .map(|(g, v)| g / (v + 1e-5).sqrt())
+            .collect();
+        let shift = beta
+            .iter()
+            .zip(mean)
+            .zip(&scale)
+            .map(|((b, m), s)| b - m * s)
+            .collect();
+        Self { scale, shift }
+    }
+
+    fn apply(&self, x: &mut [f32], channels: usize) {
+        for (i, v) in x.iter_mut().enumerate() {
+            let c = i % channels;
+            *v = *v * self.scale[c] + self.shift[c];
+        }
+    }
+}
+
+struct ConvOp {
+    /// programmed crossbars (None → full-precision first layer)
+    mvm: Option<StoxMvm>,
+    raw_w: Vec<f32>, // [kh,kw,cin,cout] (normalized for stox; raw for fp)
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    converter: PsConverter,
+    layer_idx: usize,
+}
+
+/// Loaded spec + programmed layers.
+pub struct NativeModel {
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub in_channels: usize,
+    first_qf: bool,
+    conv1: ConvOp,
+    bn1: BnFold,
+    /// blocks\[stage\]\[block\] = (conv1, bn1, conv2, bn2, stride)
+    blocks: Vec<Vec<(ConvOp, BnFold, ConvOp, BnFold, usize)>>,
+    fc_w: Vec<f32>, // [w3, classes]
+    fc_b: Vec<f32>,
+    w3: usize,
+    /// PS-distribution probe: when set, every normalized PS of stochastic
+    /// layers is recorded into this histogram (Fig. 4 collection).
+    pub ps_probe: Option<std::sync::Mutex<crate::stats::Histogram>>,
+}
+
+/// Mirrors `model._layer_seed`: independent stream per (step, layer).
+pub fn layer_seed(step_seed: u32, layer_idx: u32) -> u32 {
+    mix32(step_seed ^ 0xA511_E9B3u32.wrapping_add(layer_idx))
+}
+
+fn normalize_weights(w: &[f32]) -> Vec<f32> {
+    let scale = w.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-8;
+    w.iter().map(|v| v / scale).collect()
+}
+
+fn converter_for(mode: &str, alpha: f32, n_samples: u32) -> PsConverter {
+    match mode {
+        "sa" => PsConverter::SenseAmp,
+        "expected" => PsConverter::ExpectedMtj { alpha },
+        "ideal" => PsConverter::IdealAdc,
+        _ => PsConverter::StochasticMtj { alpha, n_samples },
+    }
+}
+
+impl NativeModel {
+    pub fn load(manifest: &Manifest, store: &WeightStore) -> crate::Result<Self> {
+        let spec = &manifest.spec;
+        let _widths = spec.widths();
+        let cfg = StoxConfig {
+            a_bits: spec.stox.a_bits,
+            w_bits: spec.stox.w_bits,
+            a_stream_bits: spec.stox.a_stream_bits,
+            w_slice_bits: spec.stox.w_slice_bits,
+            r_arr: spec.stox.r_arr,
+            n_samples: spec.stox.n_samples,
+            alpha: spec.stox.alpha,
+        };
+        let first_qf = spec.first_layer == "qf";
+        let samples_for = |layer_idx: usize| -> u32 {
+            if layer_idx == 0 {
+                return spec.first_layer_samples;
+            }
+            if let Some(ls) = &spec.layer_samples {
+                for (li, n) in ls {
+                    if *li == layer_idx {
+                        return *n;
+                    }
+                }
+            }
+            spec.stox.n_samples
+        };
+
+        let mut layer_idx = 0usize;
+        let mk_stox_conv = |w_raw: &[f32],
+                            shape: &[usize],
+                            stride: usize,
+                            layer_idx: usize,
+                            mode: &str,
+                            n_samples: u32|
+         -> crate::Result<ConvOp> {
+            let (kh, kw, cin, cout) = (shape[0], shape[1], shape[2], shape[3]);
+            let wn = normalize_weights(w_raw);
+            let mvm = StoxMvm::program(&wn, kh * kw * cin, cout, cfg)?;
+            Ok(ConvOp {
+                mvm: Some(mvm),
+                raw_w: wn,
+                kh,
+                kw,
+                cin,
+                cout,
+                stride,
+                converter: converter_for(mode, cfg.alpha, n_samples),
+                layer_idx,
+            })
+        };
+
+        // conv1
+        let (c1_shape, c1_data) = store.param("['conv1']")?;
+        let conv1 = if first_qf {
+            let mode = spec
+                .first_layer_mode
+                .clone()
+                .unwrap_or_else(|| spec.stox.mode.clone());
+            mk_stox_conv(c1_data, c1_shape, 1, 0, &mode, samples_for(0))?
+        } else {
+            ConvOp {
+                mvm: None,
+                raw_w: c1_data.to_vec(),
+                kh: c1_shape[0],
+                kw: c1_shape[1],
+                cin: c1_shape[2],
+                cout: c1_shape[3],
+                stride: 1,
+                converter: PsConverter::IdealAdc,
+                layer_idx: 0,
+            }
+        };
+        layer_idx += 1;
+
+        let bn = |prefix: &str| -> crate::Result<BnFold> {
+            let (_, gamma) = store.param(&format!("{prefix}['gamma']"))?;
+            let (_, beta) = store.param(&format!("{prefix}['beta']"))?;
+            let (_, mean) = store.state(&format!(
+                "{}['mean']",
+                prefix.trim_start_matches("['params']")
+            ))?;
+            let (_, var) = store.state(&format!(
+                "{}['var']",
+                prefix.trim_start_matches("['params']")
+            ))?;
+            Ok(BnFold::new(gamma, beta, mean, var))
+        };
+        let bn1 = bn("['bn1']")?;
+
+        let mut blocks = Vec::new();
+        for s in 0..3 {
+            let mut stage = Vec::new();
+            for b in 0..spec.blocks_per_stage {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let p = format!("['stages'][{s}][{b}]");
+                let (sh1, w1) = store.param(&format!("{p}['conv1']"))?;
+                let c1 = mk_stox_conv(
+                    w1,
+                    sh1,
+                    stride,
+                    layer_idx,
+                    &spec.stox.mode,
+                    samples_for(layer_idx),
+                )?;
+                layer_idx += 1;
+                let b1 = bn(&format!("{p}['bn1']"))?;
+                let (sh2, w2) = store.param(&format!("{p}['conv2']"))?;
+                let c2 = mk_stox_conv(
+                    w2,
+                    sh2,
+                    1,
+                    layer_idx,
+                    &spec.stox.mode,
+                    samples_for(layer_idx),
+                )?;
+                layer_idx += 1;
+                let b2 = bn(&format!("{p}['bn2']"))?;
+                stage.push((c1, b1, c2, b2, stride));
+            }
+            blocks.push(stage);
+        }
+
+        let (fcw_shape, fcw) = store.param("['fc_w']")?;
+        let (_, fcb) = store.param("['fc_b']")?;
+        Ok(Self {
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+            in_channels: spec.in_channels,
+            first_qf,
+            conv1,
+            bn1,
+            blocks,
+            fc_w: fcw.to_vec(),
+            fc_b: fcb.to_vec(),
+            w3: fcw_shape[0],
+            ps_probe: None,
+        })
+    }
+
+    fn run_conv(
+        &self,
+        op: &ConvOp,
+        x: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        step_seed: u32,
+        clip_input: bool,
+    ) -> (Vec<f32>, usize, usize) {
+        let xin: Vec<f32> = if clip_input {
+            x.iter().map(|v| v.clamp(-1.0, 1.0)).collect()
+        } else {
+            x.to_vec()
+        };
+        match &op.mvm {
+            Some(mvm) => {
+                let (patches, ho, wo) =
+                    im2col(&xin, b, h, w, op.cin, op.kh, op.kw, op.stride);
+                let seed = layer_seed(step_seed, op.layer_idx as u32);
+                if let Some(probe) = &self.ps_probe {
+                    // probe path: record normalized PS of this layer
+                    self.record_ps(mvm, &patches, b * ho * wo, probe);
+                }
+                let out = mvm.run(&patches, b * ho * wo, &op.converter, seed);
+                (out, ho, wo)
+            }
+            None => {
+                let (out, ho, wo) = fp_conv2d(
+                    &xin, b, h, w, op.cin, &op.raw_w, op.kh, op.kw, op.cout,
+                    op.stride,
+                );
+                (out, ho, wo)
+            }
+        }
+    }
+
+    fn record_ps(
+        &self,
+        mvm: &StoxMvm,
+        patches: &[f32],
+        batch: usize,
+        probe: &std::sync::Mutex<crate::stats::Histogram>,
+    ) {
+        // run with the ideal converter, collecting raw PS via a histogram
+        // converter shim: reuse run() but with IdealAdc and record outputs
+        // of individual subarrays through the PS-level API.
+        let ps = mvm.collect_ps(patches, batch);
+        let mut h = probe.lock().unwrap();
+        h.extend(ps);
+    }
+
+    /// Forward a batch (NHWC in [-1,1]); returns logits [B × classes].
+    pub fn forward(&self, x: &[f32], batch: usize, step_seed: u32) -> Vec<f32> {
+        let (mut h, mut hh, mut ww) = self.run_conv(
+            &self.conv1,
+            x,
+            batch,
+            self.image_size,
+            self.image_size,
+            step_seed,
+            self.first_qf, // python clips input only on the stox path
+        );
+        self.bn1.apply(&mut h, self.conv1.cout);
+        let mut c = self.conv1.cout;
+
+        for stage in &self.blocks {
+            for (c1, b1, c2, b2, stride) in stage {
+                let shortcut = shortcut(&h, batch, hh, ww, c, c1.cout, *stride);
+                let (mut o1, h1, w1) =
+                    self.run_conv(c1, &h, batch, hh, ww, step_seed, true);
+                b1.apply(&mut o1, c1.cout);
+                let (mut o2, h2, w2) =
+                    self.run_conv(c2, &o1, batch, h1, w1, step_seed, true);
+                b2.apply(&mut o2, c2.cout);
+                for (o, s) in o2.iter_mut().zip(&shortcut) {
+                    *o += s;
+                }
+                h = o2;
+                hh = h2;
+                ww = w2;
+                c = c2.cout;
+            }
+        }
+
+        // global average pool + FC
+        let mut logits = vec![0.0f32; batch * self.num_classes];
+        let hw = (hh * ww) as f32;
+        for bi in 0..batch {
+            let mut pooled = vec![0.0f32; c];
+            for p in 0..hh * ww {
+                for ch in 0..c {
+                    pooled[ch] += h[(bi * hh * ww + p) * c + ch];
+                }
+            }
+            for v in pooled.iter_mut() {
+                *v /= hw;
+            }
+            for k in 0..self.num_classes {
+                let mut acc = self.fc_b[k];
+                for ch in 0..self.w3 {
+                    acc += pooled[ch] * self.fc_w[ch * self.num_classes + k];
+                }
+                logits[bi * self.num_classes + k] = acc;
+            }
+        }
+        logits
+    }
+
+    /// Classification accuracy over a labeled set.
+    pub fn accuracy(
+        &self,
+        images: &[f32],
+        labels: &[i32],
+        n: usize,
+        batch: usize,
+        seed: u32,
+    ) -> f64 {
+        let img_sz = self.image_size * self.image_size * self.in_channels;
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let b = batch.min(n - i);
+            let logits =
+                self.forward(&images[i * img_sz..(i + b) * img_sz], b, seed + i as u32);
+            for bi in 0..b {
+                let row = &logits[bi * self.num_classes..(bi + 1) * self.num_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == labels[i + bi] {
+                    correct += 1;
+                }
+            }
+            i += b;
+        }
+        correct as f64 / n as f64
+    }
+
+    /// Uniformly perturb the weights of stochastic conv layer `target`
+    /// (index over conv layers in order, conv1 = 0) by U(-sigma,sigma)·max|w|
+    /// — the Fig. 5 Monte-Carlo probe.  Returns a perturbed clone.
+    pub fn perturb_layer(&self, target: usize, sigma: f32, seed: u32) -> Self
+    where
+        Self: Sized,
+    {
+        let mut clone = self.clone_shallow();
+        let rng = crate::stats::rng::CounterRng::new(seed);
+        let mut idx = 0usize;
+        let mut maybe = |op: &ConvOp| -> Option<ConvOp> {
+            let hit = idx == target;
+            idx += 1;
+            if !hit {
+                return None;
+            }
+            let maxw = op.raw_w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let w2: Vec<f32> = op
+                .raw_w
+                .iter()
+                .enumerate()
+                .map(|(i, v)| v + rng.uniform_in(i as u32, -sigma, sigma) * maxw)
+                .collect();
+            let mvm = op.mvm.as_ref().map(|m| {
+                StoxMvm::program(&normalize_weights(&w2), m.m, m.n, m.cfg).unwrap()
+            });
+            Some(ConvOp { mvm, raw_w: w2, ..op.clone_shallow() })
+        };
+        if let Some(op) = maybe(&self.conv1) {
+            clone.conv1 = op;
+        }
+        for (si, stage) in self.blocks.iter().enumerate() {
+            for (bi, (c1, _, c2, _, _)) in stage.iter().enumerate() {
+                if let Some(op) = maybe(c1) {
+                    clone.blocks[si][bi].0 = op;
+                }
+                if let Some(op) = maybe(c2) {
+                    clone.blocks[si][bi].2 = op;
+                }
+            }
+        }
+        clone
+    }
+
+    /// Number of conv layers (perturbation targets).
+    pub fn n_conv_layers(&self) -> usize {
+        1 + self.blocks.iter().map(|s| s.len() * 2).sum::<usize>()
+    }
+
+    fn clone_shallow(&self) -> Self {
+        Self {
+            num_classes: self.num_classes,
+            image_size: self.image_size,
+            in_channels: self.in_channels,
+            first_qf: self.first_qf,
+            conv1: self.conv1.clone_shallow(),
+            bn1: self.bn1.clone(),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|s| {
+                    s.iter()
+                        .map(|(a, b, c, d, st)| {
+                            (a.clone_shallow(), b.clone(), c.clone_shallow(), d.clone(), *st)
+                        })
+                        .collect()
+                })
+                .collect(),
+            fc_w: self.fc_w.clone(),
+            fc_b: self.fc_b.clone(),
+            w3: self.w3,
+            ps_probe: None,
+        }
+    }
+}
+
+impl ConvOp {
+    fn clone_shallow(&self) -> Self {
+        Self {
+            mvm: self.mvm.as_ref().map(|m| {
+                StoxMvm::program(&self.raw_w, m.m, m.n, m.cfg).unwrap()
+            }),
+            raw_w: self.raw_w.clone(),
+            kh: self.kh,
+            kw: self.kw,
+            cin: self.cin,
+            cout: self.cout,
+            stride: self.stride,
+            converter: self.converter,
+            layer_idx: self.layer_idx,
+        }
+    }
+}
+
+/// Parameter-free ResNet-20 shortcut: strided subsample + zero channel pad.
+fn shortcut(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h / stride;
+    let wo = w / stride;
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let src = ((bi * h + y * stride) * w + xx * stride) * cin;
+                let dst = ((bi * ho + y) * wo + xx) * cout;
+                out[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+            }
+        }
+    }
+    out
+}
+
+/// Plain full-precision NHWC convolution (the HPF first layer).
+#[allow(clippy::too_many_arguments)]
+pub fn fp_conv2d(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    weights: &[f32], // [kh,kw,cin,cout]
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let pad = (kh - 1) / 2;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = ((bi * ho + oy) * wo + ox) * cout;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                        for ci in 0..cin {
+                            let xv = x[src + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wbase = ((ky * kw + kx) * cin + ci) * cout;
+                            for co in 0..cout {
+                                out[dst + co] += xv * weights[wbase + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_seed_matches_python_derivation() {
+        // python: mix32(step_seed ^ uint32(0xA511E9B3 + layer_idx))
+        assert_eq!(layer_seed(0, 0), mix32(0xA511_E9B3));
+        assert_eq!(layer_seed(7, 3), mix32(7 ^ 0xA511_E9B3u32.wrapping_add(3)));
+    }
+
+    #[test]
+    fn fp_conv_identity_kernel() {
+        // 1x1 kernel with identity weights = passthrough
+        let x: Vec<f32> = (0..1 * 2 * 2 * 2).map(|i| i as f32).collect();
+        let mut w = vec![0.0f32; 2 * 2]; // [1,1,2,2]
+        w[0] = 1.0; // (ci=0,co=0)
+        w[3] = 1.0; // (ci=1,co=1)
+        let (out, ho, wo) = fp_conv2d(&x, 1, 2, 2, 2, &w, 1, 1, 2, 1);
+        assert_eq!((ho, wo), (2, 2));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn shortcut_stride_and_pad() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect(); // [1,4,4,1]
+        let s = shortcut(&x, 1, 4, 4, 1, 2, 2);
+        assert_eq!(s.len(), 1 * 2 * 2 * 2);
+        assert_eq!(s[0], 0.0 * 1.0); // (0,0) ch0 = x[0]
+        assert_eq!(s[1], 0.0); // zero-padded channel
+        assert_eq!(s[2], 2.0); // (0,1) ch0 = x[2]
+    }
+
+    #[test]
+    fn bn_fold() {
+        let bn = BnFold::new(&[2.0], &[1.0], &[0.5], &[4.0]);
+        let mut x = vec![0.5f32, 2.5];
+        bn.apply(&mut x, 1);
+        // (0.5-0.5)/2*2+1 = 1 ; (2.5-0.5)/2*2+1 = 3
+        assert!((x[0] - 1.0).abs() < 1e-5);
+        assert!((x[1] - 3.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,18 @@
+//! DNN workload zoo + exported-weight loading + native hardware-exact
+//! inference.
+//!
+//! * [`zoo`] — layer-shape inventories for the paper's evaluation
+//!   networks: ResNet-20 (CIFAR), ResNet-18/50 (Tiny-ImageNet shapes) and
+//!   the reduced ResNet-20 actually trained in this reproduction;
+//! * [`weights`] — loads `artifacts/manifest.json` + `weights.bin`
+//!   exported by the python AOT path;
+//! * [`infer`] — native Rust forward pass of the StoX ResNet (crossbar
+//!   functional model all the way down), mirroring `compile/model.py`
+//!   layer-for-layer and seed-for-seed.
+
+pub mod infer;
+pub mod weights;
+pub mod zoo;
+
+pub use infer::NativeModel;
+pub use weights::{Manifest, WeightStore};

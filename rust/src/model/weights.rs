@@ -1,0 +1,360 @@
+//! Loaders for the python-AOT exports: `manifest.json`, `weights.bin`,
+//! `testset.bin`.
+//!
+//! Tensor names are jax `keystr` paths, e.g.
+//! `['params']['stages'][0][1]['conv1']` — stored verbatim; [`WeightStore`]
+//! offers path-based lookup so `infer.rs` can mirror `model.py`'s pytree.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct StoxSpecJson {
+    pub a_bits: u32,
+    pub w_bits: u32,
+    pub a_stream_bits: u32,
+    pub w_slice_bits: u32,
+    pub r_arr: usize,
+    pub n_samples: u32,
+    pub alpha: f32,
+    pub mode: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpecJson {
+    pub name: String,
+    pub num_classes: usize,
+    pub in_channels: usize,
+    pub image_size: usize,
+    pub base_width: usize,
+    pub width_mult: f64,
+    pub blocks_per_stage: usize,
+    pub stox: StoxSpecJson,
+    pub first_layer: String,
+    pub first_layer_samples: u32,
+    pub first_layer_mode: Option<String>,
+    pub layer_samples: Option<Vec<(usize, u32)>>,
+}
+
+impl ModelSpecJson {
+    /// Stage widths, mirroring `ModelSpec.widths()`.
+    pub fn widths(&self) -> [usize; 3] {
+        let w = ((self.base_width as f64 * self.width_mult).round() as usize).max(4);
+        [w, 2 * w, 4 * w]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsJson {
+    pub file: String,
+    pub tensors: Vec<TensorEntry>,
+    pub total_f32: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kind: String,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TestsetJson {
+    pub file: String,
+    pub dataset: String,
+    pub n: usize,
+    pub image_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub spec: ModelSpecJson,
+    pub layers: Vec<crate::arch::mapper::LayerShape>,
+    pub models: Vec<ArtifactEntry>,
+    pub weights: WeightsJson,
+    pub testset: TestsetJson,
+    pub dir: PathBuf,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> crate::Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing key '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> crate::Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' not a string"))?
+        .to_string())
+}
+
+fn req_usize(j: &Json, key: &str) -> crate::Result<usize> {
+    req(j, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+
+        let sj = req(&j, "spec")?;
+        let stj = req(sj, "stox")?;
+        let spec = ModelSpecJson {
+            name: req_str(sj, "name")?,
+            num_classes: req_usize(sj, "num_classes")?,
+            in_channels: req_usize(sj, "in_channels")?,
+            image_size: req_usize(sj, "image_size")?,
+            base_width: req_usize(sj, "base_width")?,
+            width_mult: req(sj, "width_mult")?.as_f64().unwrap_or(1.0),
+            blocks_per_stage: req_usize(sj, "blocks_per_stage")?,
+            stox: StoxSpecJson {
+                a_bits: req_usize(stj, "a_bits")? as u32,
+                w_bits: req_usize(stj, "w_bits")? as u32,
+                a_stream_bits: req_usize(stj, "a_stream_bits")? as u32,
+                w_slice_bits: req_usize(stj, "w_slice_bits")? as u32,
+                r_arr: req_usize(stj, "r_arr")?,
+                n_samples: req_usize(stj, "n_samples")? as u32,
+                alpha: req(stj, "alpha")?.as_f64().unwrap_or(4.0) as f32,
+                mode: req_str(stj, "mode")?,
+            },
+            first_layer: req_str(sj, "first_layer")?,
+            first_layer_samples: req_usize(sj, "first_layer_samples")? as u32,
+            first_layer_mode: sj
+                .get("first_layer_mode")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            layer_samples: sj.get("layer_samples").and_then(|v| {
+                v.as_arr().map(|arr| {
+                    arr.iter()
+                        .filter_map(|pair| {
+                            let p = pair.as_arr()?;
+                            Some((p[0].as_usize()?, p[1].as_u32()?))
+                        })
+                        .collect()
+                })
+            }),
+        };
+
+        let layers = req(&j, "layers")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| {
+                Ok(crate::arch::mapper::LayerShape {
+                    name: req_str(l, "name")?,
+                    kh: req_usize(l, "kh")?,
+                    kw: req_usize(l, "kw")?,
+                    cin: req_usize(l, "cin")?,
+                    cout: req_usize(l, "cout")?,
+                    h_out: req_usize(l, "h_out")?,
+                    w_out: req_usize(l, "w_out")?,
+                    stride: l.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+                    stochastic: req(l, "stochastic")?.as_bool().unwrap_or(true),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+
+        let models = req(&j, "models")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|m| {
+                Ok(ArtifactEntry {
+                    file: req_str(m, "file")?,
+                    kind: req_str(m, "kind")?,
+                    batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+
+        let wj = req(&j, "weights")?;
+        let weights = WeightsJson {
+            file: req_str(wj, "file")?,
+            total_f32: req_usize(wj, "total_f32")?,
+            tensors: req(wj, "tensors")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok(TensorEntry {
+                        name: req_str(t, "name")?,
+                        shape: t
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default(),
+                        offset: req_usize(t, "offset")?,
+                        numel: req_usize(t, "numel")?,
+                    })
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
+
+        let tj = req(&j, "testset")?;
+        let testset = TestsetJson {
+            file: req_str(tj, "file")?,
+            dataset: req_str(tj, "dataset")?,
+            n: req_usize(tj, "n")?,
+            image_shape: req(tj, "image_shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+        };
+
+        Ok(Manifest { spec, layers, models, weights, testset, dir })
+    }
+
+    pub fn model_hlo_path(&self, batch: usize) -> Option<PathBuf> {
+        self.models
+            .iter()
+            .find(|m| m.batch == batch)
+            .map(|m| self.dir.join(&m.file))
+    }
+}
+
+/// All exported tensors, resident in one flat buffer.
+pub struct WeightStore {
+    buf: Vec<f32>,
+    entries: Vec<TensorEntry>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> crate::Result<Self> {
+        let path = manifest.dir.join(&manifest.weights.file);
+        let bytes = std::fs::read(&path)?;
+        anyhow::ensure!(
+            bytes.len() == manifest.weights.total_f32 * 4,
+            "weights.bin size mismatch: {} vs {}",
+            bytes.len(),
+            manifest.weights.total_f32 * 4
+        );
+        let buf: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { buf, entries: manifest.weights.tensors.clone() })
+    }
+
+    /// Exact-name lookup (jax keystr), returns (shape, data).
+    pub fn get(&self, name: &str) -> crate::Result<(&[usize], &[f32])> {
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("tensor not found: {name}"))?;
+        Ok((&e.shape, &self.buf[e.offset..e.offset + e.numel]))
+    }
+
+    /// Build the keystr for a parameter path, e.g.
+    /// `param(&["stages"], ...)`; helper used by infer.rs.
+    pub fn param(&self, path: &str) -> crate::Result<(&[usize], &[f32])> {
+        self.get(&format!("['params']{path}"))
+    }
+
+    pub fn state(&self, path: &str) -> crate::Result<(&[usize], &[f32])> {
+        self.get(&format!("['states']{path}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+}
+
+/// The exported held-out test set ([N,H,W,C] f32 + [N] i32 labels).
+pub struct TestSet {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TestSet {
+    pub fn load(manifest: &Manifest) -> crate::Result<Self> {
+        let path = manifest.dir.join(&manifest.testset.file);
+        let bytes = std::fs::read(&path)?;
+        let n = manifest.testset.n;
+        let [h, w, c] = [
+            manifest.testset.image_shape[0],
+            manifest.testset.image_shape[1],
+            manifest.testset.image_shape[2],
+        ];
+        let img_f32 = n * h * w * c;
+        anyhow::ensure!(
+            bytes.len() == img_f32 * 4 + n * 4,
+            "testset.bin size mismatch"
+        );
+        let images: Vec<f32> = bytes[..img_f32 * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let labels: Vec<i32> = bytes[img_f32 * 4..]
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Self { images, labels, n, h, w, c })
+    }
+
+    /// Image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.spec.num_classes == 10);
+        assert!(!m.layers.is_empty());
+        assert!(m.model_hlo_path(8).is_some());
+        assert!(m.model_hlo_path(999).is_none());
+    }
+
+    #[test]
+    fn weights_load_and_lookup() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let (shape, data) = w.param("['conv1']").unwrap();
+        assert_eq!(shape.len(), 4);
+        assert!(!data.is_empty());
+        assert!(w.get("bogus").is_err());
+        // BN state exists
+        assert!(w.state("['bn1']['mean']").is_ok());
+    }
+
+    #[test]
+    fn testset_loads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let t = TestSet::load(&m).unwrap();
+        assert_eq!(t.labels.len(), t.n);
+        assert!(t.image(0).iter().all(|v| v.abs() <= 1.0));
+        assert!(t.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+}

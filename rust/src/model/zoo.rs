@@ -1,0 +1,146 @@
+//! Layer-shape inventories for the paper's evaluation workloads.
+//!
+//! The architecture model (Fig. 9) needs only layer shapes.  ResNet-20
+//! runs on CIFAR (32×32); ResNet-18/50 on Tiny ImageNet (64×64, 200
+//! classes) as in Fig. 9b.  The first layer of each inventory is index 0
+//! (the HPF/QF special case); FC layers are marked non-stochastic
+//! (kept digital, as in the paper's evaluation).
+
+use crate::arch::mapper::LayerShape;
+
+fn conv(
+    name: String,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    h: usize,
+    stochastic: bool,
+) -> LayerShape {
+    LayerShape {
+        name,
+        kh: k,
+        kw: k,
+        cin,
+        cout,
+        h_out: h,
+        w_out: h,
+        stride: 1,
+        stochastic,
+    }
+}
+
+/// ResNet-20 for CIFAR-10: conv1 + 3 stages × 3 blocks × 2 convs + FC.
+pub fn resnet20_cifar() -> Vec<LayerShape> {
+    let mut layers = vec![conv("conv1".into(), 3, 3, 16, 32, true)];
+    let widths = [16usize, 32, 64];
+    let sizes = [32usize, 16, 8];
+    let mut cin = 16;
+    for (s, (&w, &hw)) in widths.iter().zip(&sizes).enumerate() {
+        for b in 0..3 {
+            layers.push(conv(format!("s{s}b{b}c1"), 3, cin, w, hw, true));
+            layers.push(conv(format!("s{s}b{b}c2"), 3, w, w, hw, true));
+            cin = w;
+        }
+    }
+    layers.push(conv("fc".into(), 1, 64, 10, 1, false));
+    layers
+}
+
+/// ResNet-18 with Tiny-ImageNet geometry (64×64 input, 200 classes).
+pub fn resnet18_tiny() -> Vec<LayerShape> {
+    let mut layers = vec![conv("conv1".into(), 7, 3, 64, 32, true)];
+    // after maxpool: 16×16
+    let widths = [64usize, 128, 256, 512];
+    let sizes = [16usize, 8, 4, 2];
+    let mut cin = 64;
+    for (s, (&w, &hw)) in widths.iter().zip(&sizes).enumerate() {
+        for b in 0..2 {
+            layers.push(conv(format!("s{s}b{b}c1"), 3, cin, w, hw, true));
+            layers.push(conv(format!("s{s}b{b}c2"), 3, w, w, hw, true));
+            if b == 0 && s > 0 {
+                // 1×1 projection shortcut on the downsampling block
+                layers.push(conv(format!("s{s}proj"), 1, cin, w, hw, true));
+            }
+            cin = w;
+        }
+    }
+    layers.push(conv("fc".into(), 1, 512, 200, 1, false));
+    layers
+}
+
+/// ResNet-50 (bottleneck) with Tiny-ImageNet geometry.
+pub fn resnet50_tiny() -> Vec<LayerShape> {
+    let mut layers = vec![conv("conv1".into(), 7, 3, 64, 32, true)];
+    let widths = [64usize, 128, 256, 512];
+    let blocks = [3usize, 4, 6, 3];
+    let sizes = [16usize, 8, 4, 2];
+    let mut cin = 64;
+    for s in 0..4 {
+        let w = widths[s];
+        let hw = sizes[s];
+        for b in 0..blocks[s] {
+            layers.push(conv(format!("s{s}b{b}c1"), 1, cin, w, hw, true));
+            layers.push(conv(format!("s{s}b{b}c2"), 3, w, w, hw, true));
+            layers.push(conv(format!("s{s}b{b}c3"), 1, w, 4 * w, hw, true));
+            if b == 0 {
+                layers.push(conv(format!("s{s}proj"), 1, cin, 4 * w, hw, true));
+            }
+            cin = 4 * w;
+        }
+    }
+    layers.push(conv("fc".into(), 1, 2048, 200, 1, false));
+    layers
+}
+
+/// Workload lookup by name (CLI surface).
+pub fn by_name(name: &str) -> Option<Vec<LayerShape>> {
+    match name {
+        "resnet20-cifar" => Some(resnet20_cifar()),
+        "resnet18-tiny" => Some(resnet18_tiny()),
+        "resnet50-tiny" => Some(resnet50_tiny()),
+        _ => None,
+    }
+}
+
+/// Total MACs of a workload (sanity metric; ResNet-20 ≈ 41 M on CIFAR).
+pub fn total_macs(layers: &[LayerShape]) -> u64 {
+    layers.iter().map(|l| l.macs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet20_inventory() {
+        let l = resnet20_cifar();
+        assert_eq!(l.len(), 1 + 18 + 1);
+        assert_eq!(l[0].name, "conv1");
+        assert!(!l.last().unwrap().stochastic);
+        // canonical ResNet-20/CIFAR MAC count ≈ 41M
+        let m = total_macs(&l);
+        assert!((30e6..60e6).contains(&(m as f64)), "{m}");
+    }
+
+    #[test]
+    fn resnet18_inventory() {
+        let l = resnet18_tiny();
+        // conv1 + 16 block convs + 3 projections + fc
+        assert_eq!(l.len(), 1 + 16 + 3 + 1);
+        assert_eq!(l.last().unwrap().cout, 200);
+    }
+
+    #[test]
+    fn resnet50_inventory() {
+        let l = resnet50_tiny();
+        // conv1 + 3*(3+4+6+3) convs + 4 projections + fc
+        assert_eq!(l.len(), 1 + 48 + 4 + 1);
+        assert!(total_macs(&l) > total_macs(&resnet18_tiny()));
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("resnet20-cifar").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,184 @@
+//! The PJRT execution engine: one compiled executable per artifact.
+
+use crate::model::weights::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// A compiled model executable + its I/O geometry.
+pub struct ModelHandle {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub in_elems: usize,
+    pub out_elems: usize,
+    in_dims: Vec<i64>,
+    pub compile_ms: f64,
+}
+
+impl ModelHandle {
+    /// Execute on a batch of images (NHWC flattened) with a sampling seed.
+    /// Returns the logits.
+    pub fn infer(&self, images: &[f32], seed: u32) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(
+            images.len() == self.in_elems,
+            "expected {} input elements, got {}",
+            self.in_elems,
+            images.len()
+        );
+        let x = xla::Literal::vec1(images);
+        // the AOT fn signature is (x[B,H,W,C], seed u32) -> (logits,)
+        let x = self.reshape_input(x)?;
+        let seed_lit = xla::Literal::scalar(seed);
+        let result = self.exe.execute::<xla::Literal>(&[x, seed_lit])?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    fn reshape_input(&self, x: xla::Literal) -> crate::Result<xla::Literal> {
+        Ok(x.reshape(&self.in_dims)?)
+    }
+}
+
+/// The runtime engine: PJRT client + compiled executables by batch size.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    models: HashMap<usize, ModelHandle>,
+    pub platform: String,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client and compile every model artifact listed
+    /// in the manifest.
+    pub fn load(manifest: &Manifest) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut models = HashMap::new();
+        let spec = &manifest.spec;
+        let img_elems = spec.image_size * spec.image_size * spec.in_channels;
+        for entry in &manifest.models {
+            let path = manifest.dir.join(&entry.file);
+            let handle = Self::compile_model(
+                &client,
+                &path,
+                entry.batch,
+                [
+                    entry.batch as i64,
+                    spec.image_size as i64,
+                    spec.image_size as i64,
+                    spec.in_channels as i64,
+                ],
+                entry.batch * img_elems,
+                entry.batch * spec.num_classes,
+            )?;
+            models.insert(entry.batch, handle);
+        }
+        Ok(Self { client, models, platform })
+    }
+
+    fn compile_model(
+        client: &xla::PjRtClient,
+        path: &Path,
+        batch: usize,
+        in_dims: [i64; 4],
+        in_elems: usize,
+        out_elems: usize,
+    ) -> crate::Result<ModelHandle> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(ModelHandle {
+            exe,
+            batch,
+            in_elems,
+            out_elems,
+            in_dims: in_dims.to_vec(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Available serving batch sizes (sorted).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.models.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn model(&self, batch: usize) -> Option<&ModelHandle> {
+        self.models.get(&batch)
+    }
+
+    /// Largest compiled batch ≤ `n`, falling back to the smallest.
+    pub fn best_model_for(&self, n: usize) -> Option<&ModelHandle> {
+        let sizes = self.batch_sizes();
+        let pick = sizes
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .or_else(|| sizes.first())?;
+        self.models.get(pick)
+    }
+}
+
+impl ModelHandle {
+    pub fn output_classes(&self) -> usize {
+        self.out_elems / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<Manifest> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(p).unwrap())
+    }
+
+    #[test]
+    fn engine_loads_and_infers() {
+        let Some(m) = artifacts() else { return };
+        let engine = Engine::load(&m).unwrap();
+        assert!(!engine.batch_sizes().is_empty());
+        let h = engine.model(1).unwrap();
+        let img = vec![0.1f32; h.in_elems];
+        let logits = h.infer(&img, 7).unwrap();
+        assert_eq!(logits.len(), h.out_elems);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn inference_seed_determinism() {
+        let Some(m) = artifacts() else { return };
+        let engine = Engine::load(&m).unwrap();
+        let h = engine.model(1).unwrap();
+        let img = vec![0.3f32; h.in_elems];
+        let l1 = h.infer(&img, 5).unwrap();
+        let l2 = h.infer(&img, 5).unwrap();
+        let l3 = h.infer(&img, 6).unwrap();
+        assert_eq!(l1, l2, "same seed → same stochastic bits");
+        assert_ne!(l1, l3, "different seed → different sampling");
+    }
+
+    #[test]
+    fn best_model_selection() {
+        let Some(m) = artifacts() else { return };
+        let engine = Engine::load(&m).unwrap();
+        assert_eq!(engine.best_model_for(8).unwrap().batch, 8);
+        assert_eq!(engine.best_model_for(3).unwrap().batch, 1);
+        assert_eq!(engine.best_model_for(100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let Some(m) = artifacts() else { return };
+        let engine = Engine::load(&m).unwrap();
+        let h = engine.model(1).unwrap();
+        assert!(h.infer(&[0.0; 3], 0).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the python AOT
+//! path and executes them on the request path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — jax ≥0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs here: after `make artifacts`, the binary is
+//! self-contained.
+
+pub mod engine;
+
+pub use engine::{Engine, ModelHandle};

@@ -1,0 +1,183 @@
+//! Fixed-bin histogram + streaming percentile helpers.
+//!
+//! Used by: Fig. 4 (PS output distribution), coordinator latency metrics,
+//! and the Monte-Carlo sensitivity harness.
+
+/// Fixed-range, fixed-bin histogram over f32 samples.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f32,
+    hi: f32,
+    bins: Vec<u64>,
+    /// samples outside [lo, hi)
+    pub under: u64,
+    pub over: u64,
+    count: u64,
+    sum: f64,
+    sum2: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; n_bins],
+            under: 0,
+            over: 0,
+            count: 0,
+            sum: 0.0,
+            sum2: 0.0,
+        }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        self.count += 1;
+        self.sum += x as f64;
+        self.sum2 += (x as f64) * (x as f64);
+        if x < self.lo {
+            self.under += 1;
+        } else if x >= self.hi {
+            self.over += 1;
+        } else {
+            let t = (x - self.lo) / (self.hi - self.lo);
+            let idx = ((t * self.bins.len() as f32) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f32>) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum2 / self.count as f64 - m * m).max(0.0).sqrt()
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Bin centers, aligned with `bins()`.
+    pub fn centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.bins.len() as f32;
+        (0..self.bins.len())
+            .map(|i| self.lo + w * (i as f32 + 0.5))
+            .collect()
+    }
+
+    /// Percentile over binned data (linear within bins); p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f32 {
+        if self.count == 0 {
+            return f32::NAN;
+        }
+        let in_range: u64 = self.bins.iter().sum();
+        if in_range == 0 {
+            return f32::NAN;
+        }
+        let target = (p / 100.0 * in_range as f64).max(0.0);
+        let mut acc = 0.0;
+        let w = (self.hi - self.lo) / self.bins.len() as f32;
+        for (i, &b) in self.bins.iter().enumerate() {
+            let next = acc + b as f64;
+            if next >= target && b > 0 {
+                let frac = if b == 0 { 0.0 } else { (target - acc) / b as f64 };
+                return self.lo + w * (i as f32 + frac as f32);
+            }
+            acc = next;
+        }
+        self.hi
+    }
+
+    /// Normalized mass per bin (sums to 1 over in-range samples).
+    pub fn density(&self) -> Vec<f64> {
+        let total: u64 = self.bins.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.bins.len()];
+        }
+        self.bins.iter().map(|&b| b as f64 / total as f64).collect()
+    }
+
+    /// Compact ASCII rendering (for CLI table/figure output).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let centers = self.centers();
+        let mut out = String::new();
+        for (c, &b) in centers.iter().zip(&self.bins) {
+            let bar = (b as f64 / max as f64 * width as f64).round() as usize;
+            out.push_str(&format!("{c:+.3} | {:<width$} {b}\n", "#".repeat(bar)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_binning() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.extend([0.05, 0.15, 0.15, 0.95, -1.0, 2.0]);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[1], 2);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.under, 1);
+        assert_eq!(h.over, 1);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn moments() {
+        let mut h = Histogram::new(-10.0, 10.0, 100);
+        h.extend([1.0, 2.0, 3.0]);
+        assert!((h.mean() - 2.0).abs() < 1e-9);
+        assert!((h.std() - (2.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_uniform() {
+        let mut h = Histogram::new(0.0, 1.0, 100);
+        for i in 0..10_000 {
+            h.add(i as f32 / 10_000.0);
+        }
+        assert!((h.percentile(50.0) - 0.5).abs() < 0.02);
+        assert!((h.percentile(99.0) - 0.99).abs() < 0.02);
+    }
+
+    #[test]
+    fn density_sums_to_one() {
+        let mut h = Histogram::new(-1.0, 1.0, 7);
+        h.extend((0..100).map(|i| (i as f32 / 50.0) - 1.0 + 1e-4));
+        let d: f64 = h.density().iter().sum();
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_bin_inclusion() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add(0.5);
+        assert_eq!(h.bins()[1], 1);
+        h.add(0.49999);
+        assert_eq!(h.bins()[0], 1);
+    }
+}

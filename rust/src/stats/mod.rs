@@ -1,0 +1,8 @@
+//! Statistics substrate: counter-based RNG (bit-identical with python),
+//! histograms, percentile sketches, Monte-Carlo drivers.
+
+pub mod histogram;
+pub mod rng;
+
+pub use histogram::Histogram;
+pub use rng::{mix32, uniform01, CounterRng};

@@ -1,0 +1,91 @@
+//! Measurement harness for `rust/benches/*` (criterion-style: warmup,
+//! timed iterations, mean/p50/p95 report).  Each bench target is a plain
+//! `fn main()` (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then measure for `measure`
+/// (at least 10 iterations), and print the report line.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // warmup
+    let t0 = Instant::now();
+    while t0.elapsed() < warmup {
+        black_box_unit(&mut f);
+    }
+    // measure
+    let mut samples = Vec::new();
+    let t1 = Instant::now();
+    while t1.elapsed() < measure || samples.len() < 10 {
+        let s = Instant::now();
+        black_box_unit(&mut f);
+        samples.push(s.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[samples.len() * 95 / 100],
+        min: samples[0],
+    };
+    println!("{r}");
+    r
+}
+
+/// Convenience with default windows (0.3 s warmup / 1 s measure).
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(300), Duration::from_secs(1), f)
+}
+
+#[inline]
+fn black_box_unit<F: FnMut()>(f: &mut F) {
+    f();
+    std::hint::black_box(());
+}
+
+/// Re-export of `std::hint::black_box` for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let r = bench(
+            "noop",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            || {},
+        );
+        assert!(r.iters >= 10);
+        assert!(r.p50 <= r.p95);
+        assert!(r.min <= r.mean);
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny flag parser: `--key value`, `--flag`, positional subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]); first non-flag token
+    /// becomes the subcommand, later ones positional.
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --requests 512 --native --batch=8");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize("requests", 0), 512);
+        assert_eq!(a.usize("batch", 0), 8);
+        assert!(a.flag("native"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f32("alpha", 4.0), 4.0);
+        assert_eq!(a.string("s", "d"), "d");
+    }
+
+    #[test]
+    fn boolean_followed_by_flag() {
+        let a = parse("cmd --native --requests 5");
+        assert!(a.flag("native"));
+        assert_eq!(a.usize("requests", 0), 5);
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("cmd pos1 pos2 --k v");
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.get("k"), Some("v"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree infrastructure: this environment is fully offline, so the
+//! usual ecosystem crates are replaced by small, tested local versions.
+//!
+//! * [`json`]  — JSON parser/serializer (manifest.json, results output);
+//! * [`cli`]   — flag parsing for `stox-cli` and the examples;
+//! * [`pool`]  — scoped thread-pool fan-out (Monte-Carlo, batch serving);
+//! * [`bench`] — measurement harness used by `rust/benches/*`
+//!   (criterion-style warmup + timed iterations + percentile report);
+//! * [`prop`]  — tiny property-test driver on top of [`crate::stats::rng`].
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;

@@ -1,0 +1,104 @@
+//! Tiny property-test driver: deterministic random cases from the shared
+//! counter RNG, with failing-case reporting (offline stand-in for
+//! proptest).
+
+use crate::stats::rng::CounterRng;
+
+/// A source of random test values for one case.
+pub struct Gen {
+    rng: CounterRng,
+    counter: u32,
+}
+
+impl Gen {
+    pub fn new(case: u32, seed: u32) -> Self {
+        Self {
+            rng: CounterRng::new(seed ^ case.wrapping_mul(0x9e37_79b9)),
+            counter: 0,
+        }
+    }
+
+    fn next_u(&mut self) -> f32 {
+        let u = self.rng.uniform(self.counter);
+        self.counter = self.counter.wrapping_add(1);
+        u
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_u()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + (self.next_u() * ((hi_incl - lo + 1) as f32)) as usize % (hi_incl - lo + 1)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u() < 0.5
+    }
+}
+
+/// Run `cases` random cases of `prop`; panics with the failing case index
+/// on the first failure (re-run that case by seeding `Gen::new(i, seed)`).
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let mut g = Gen::new(case, 0xC0FF_EE00);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed on case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(0, 1);
+        for _ in 0..1000 {
+            let x = g.f32_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let n = g.usize_in(1, 5);
+            assert!((1..=5).contains(&n));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let a: Vec<f32> = {
+            let mut g = Gen::new(7, 1);
+            g.vec_f32(5, 0.0, 1.0)
+        };
+        let b: Vec<f32> = {
+            let mut g = Gen::new(7, 1);
+            g.vec_f32(5, 0.0, 1.0)
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn check_passes() {
+        check("trivial", 25, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_reports_failure() {
+        check("fails", 5, |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,150 @@
+//! End-to-end integration: artifacts → PJRT engine → coordinator →
+//! accuracy, plus PJRT ↔ native-crossbar cross-validation.
+//!
+//! These tests require `make artifacts`; they skip silently otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use stox_net::coordinator::server::{submit_all, NativeExecutor, PjrtExecutor, Server};
+use stox_net::coordinator::{BatcherConfig, ServeConfig};
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::runtime::Engine;
+
+fn manifest() -> Option<Manifest> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(p).unwrap())
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[test]
+fn pjrt_accuracy_matches_checkpoint() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    let handle = engine.model(8).unwrap();
+    let classes = m.spec.num_classes;
+
+    let n = 128.min(test.n);
+    let mut correct = 0;
+    for i in (0..n).step_by(8) {
+        let imgs: Vec<f32> =
+            (i..i + 8).flat_map(|k| test.image(k).to_vec()).collect();
+        let logits = handle.infer(&imgs, i as u32).unwrap();
+        for k in 0..8 {
+            if argmax(&logits[k * classes..(k + 1) * classes]) as i32
+                == test.labels[i + k]
+            {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // checkpoint reported ~0.96 on the full set; allow sampling slack
+    assert!(acc > 0.80, "PJRT accuracy {acc}");
+}
+
+#[test]
+fn native_model_agrees_with_pjrt() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m).unwrap();
+    let store = WeightStore::load(&m).unwrap();
+    let native = NativeModel::load(&m, &store).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    let handle = engine.model(8).unwrap();
+    let classes = m.spec.num_classes;
+
+    let imgs: Vec<f32> = (0..8).flat_map(|k| test.image(k).to_vec()).collect();
+    let lp = handle.infer(&imgs, 42).unwrap();
+    let ln = native.forward(&imgs, 8, 42);
+    let mut agree = 0;
+    for k in 0..8 {
+        if argmax(&lp[k * classes..(k + 1) * classes])
+            == argmax(&ln[k * classes..(k + 1) * classes])
+        {
+            agree += 1;
+        }
+    }
+    // same counter-based bits on both sides; tanh ULP edge cases may flip
+    // an occasional prediction on ambiguous inputs
+    assert!(agree >= 7, "agreement {agree}/8");
+}
+
+#[test]
+fn served_pipeline_accuracy() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    let spec = &m.spec;
+    let elems = spec.image_size * spec.image_size * spec.in_channels;
+    let server = Server::new(
+        Box::new(PjrtExecutor {
+            engine,
+            classes: spec.num_classes,
+            image_elems: elems,
+        }),
+        ServeConfig {
+            batcher: BatcherConfig {
+                target_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            seed: 3,
+        },
+    );
+    let n = 64.min(test.n);
+    let images: Vec<Vec<f32>> = (0..n).map(|i| test.image(i).to_vec()).collect();
+    let (tx, rx) = mpsc::channel();
+    let client = std::thread::spawn(move || {
+        let r = submit_all(&tx, images.into_iter());
+        drop(tx);
+        r
+    });
+    server.run(rx);
+    let replies = client.join().unwrap();
+    let mut correct = 0;
+    for (i, r) in replies.into_iter().enumerate() {
+        let rep = r.recv().unwrap();
+        if argmax(&rep.logits) as i32 == test.labels[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.75, "served accuracy {acc}");
+    let metrics = server.metrics.lock().unwrap().report();
+    assert_eq!(metrics.requests, n as u64);
+    assert!(metrics.mean_batch > 1.0, "batching happened");
+}
+
+#[test]
+fn native_executor_serves() {
+    let Some(m) = manifest() else { return };
+    let store = WeightStore::load(&m).unwrap();
+    let native = NativeModel::load(&m, &store).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    let server = Server::new(
+        Box::new(NativeExecutor { model: native }),
+        ServeConfig::default(),
+    );
+    let n = 16;
+    let images: Vec<Vec<f32>> = (0..n).map(|i| test.image(i).to_vec()).collect();
+    let (tx, rx) = mpsc::channel();
+    let client = std::thread::spawn(move || {
+        let r = submit_all(&tx, images.into_iter());
+        drop(tx);
+        r
+    });
+    server.run(rx);
+    for r in client.join().unwrap() {
+        assert_eq!(r.recv().unwrap().logits.len(), 10);
+    }
+}

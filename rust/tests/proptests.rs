@@ -1,0 +1,271 @@
+//! Property-based tests on coordinator + crossbar invariants, driven by
+//! the in-tree `util::prop` harness (offline stand-in for proptest).
+
+use std::time::{Duration, Instant};
+use stox_net::arch::components::{ComponentCosts, PsProcessing};
+use stox_net::arch::energy::{evaluate_design, DesignConfig};
+use stox_net::arch::mapper::{map_layer, LayerShape};
+use stox_net::coordinator::batcher::{BatcherConfig, DynamicBatcher, FlushReason};
+use stox_net::imc::{stox_mvm, PsConverter, StoxConfig};
+use stox_net::model::zoo;
+use stox_net::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------------
+// Crossbar arithmetic invariants
+// ---------------------------------------------------------------------
+
+fn random_cfg(g: &mut Gen) -> StoxConfig {
+    let (a_bits, w_bits, w_slice) =
+        *g.pick(&[(1u32, 1u32, 1u32), (2, 2, 1), (2, 2, 2), (4, 4, 1), (4, 4, 4), (8, 8, 2)]);
+    StoxConfig {
+        a_bits,
+        w_bits,
+        a_stream_bits: 1,
+        w_slice_bits: w_slice,
+        r_arr: *g.pick(&[16usize, 32, 64, 256]),
+        n_samples: g.usize_in(1, 4) as u32,
+        alpha: g.f32_in(0.5, 8.0),
+    }
+}
+
+#[test]
+fn prop_mvm_output_always_bounded() {
+    check("mvm output in [-1,1]", 40, |g| {
+        let b = g.usize_in(1, 3);
+        let m = g.usize_in(1, 120);
+        let n = g.usize_in(1, 12);
+        let cfg = random_cfg(g);
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let conv = PsConverter::StochasticMtj {
+            alpha: cfg.alpha,
+            n_samples: cfg.n_samples,
+        };
+        let out = stox_mvm(&a, &w, b, m, n, cfg, &conv, 9).unwrap();
+        for &v in &out {
+            if !(v.abs() <= 1.0 + 1e-5) {
+                return Err(format!("out of range: {v} cfg {cfg:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mvm_deterministic_per_seed() {
+    check("mvm seed determinism", 25, |g| {
+        let b = g.usize_in(1, 2);
+        let m = g.usize_in(4, 80);
+        let n = g.usize_in(1, 8);
+        let cfg = random_cfg(g);
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let conv = PsConverter::StochasticMtj {
+            alpha: cfg.alpha,
+            n_samples: cfg.n_samples,
+        };
+        let o1 = stox_mvm(&a, &w, b, m, n, cfg, &conv, 4).unwrap();
+        let o2 = stox_mvm(&a, &w, b, m, n, cfg, &conv, 4).unwrap();
+        if o1 != o2 {
+            return Err("same seed, different output".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ideal_mvm_linear_in_inputs() {
+    // ideal converter: doubling a column of w (within range) scales that
+    // output column's quantized value accordingly (monotonicity check).
+    check("ideal mvm monotone in weights", 25, |g| {
+        let m = g.usize_in(4, 60);
+        let cfg = StoxConfig {
+            a_bits: 8,
+            w_bits: 8,
+            a_stream_bits: 1,
+            w_slice_bits: 1,
+            r_arr: 64,
+            n_samples: 1,
+            alpha: 1.0,
+        };
+        let a = g.vec_f32(m, 0.05, 1.0); // strictly positive
+        let w_small = g.vec_f32(m, 0.1, 0.4);
+        let w_big: Vec<f32> = w_small.iter().map(|v| v * 2.0).collect();
+        let o_small =
+            stox_mvm(&a, &w_small, 1, m, 1, cfg, &PsConverter::IdealAdc, 0).unwrap();
+        let o_big =
+            stox_mvm(&a, &w_big, 1, m, 1, cfg, &PsConverter::IdealAdc, 0).unwrap();
+        if o_big[0] + 1e-4 < o_small[0] {
+            return Err(format!("not monotone: {} vs {}", o_big[0], o_small[0]));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_loses_or_duplicates() {
+    check("batcher conservation", 30, |g| {
+        let target = g.usize_in(1, 10);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: target,
+            max_wait: Duration::from_millis(g.usize_in(1, 20) as u64),
+        });
+        let now = Instant::now();
+        let n_req = g.usize_in(1, 100);
+        let mut pushed = Vec::new();
+        let mut flushed = Vec::new();
+        for i in 0..n_req {
+            pushed.push(b.push(i, now));
+            if g.bool() {
+                while let Some(batch) = b.try_flush(now) {
+                    if batch.items.len() > target {
+                        return Err("batch exceeds target".into());
+                    }
+                    flushed.extend(batch.items.iter().map(|p| p.id));
+                }
+            }
+        }
+        while let Some(batch) = b.drain_all() {
+            flushed.extend(batch.items.iter().map(|p| p.id));
+        }
+        if flushed.len() != n_req {
+            return Err(format!("lost requests: {} vs {}", flushed.len(), n_req));
+        }
+        let mut sorted = flushed.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != n_req {
+            return Err("duplicated requests".into());
+        }
+        // FIFO order within flush stream
+        if flushed.windows(2).any(|w| w[1] < w[0]) {
+            return Err("out-of-order flush".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_deadline_flush() {
+    check("deadline flush", 20, |g| {
+        let wait_ms = g.usize_in(1, 10) as u64;
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 100,
+            max_wait: Duration::from_millis(wait_ms),
+        });
+        let t0 = Instant::now();
+        b.push(0u32, t0);
+        let later = t0 + Duration::from_millis(wait_ms + 1);
+        match b.try_flush(later) {
+            Some(batch) if batch.reason == FlushReason::Deadline => Ok(()),
+            other => Err(format!("expected deadline flush, got {other:?}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Mapper / energy-model invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_mapper_counts_consistent() {
+    check("mapper identities", 30, |g| {
+        let cfg = random_cfg(g);
+        let shape = LayerShape::conv(
+            "l",
+            *g.pick(&[1usize, 3, 5, 7]),
+            g.usize_in(1, 128),
+            g.usize_in(1, 256),
+            g.usize_in(1, 32),
+            true,
+        );
+        let m = map_layer(&shape, &cfg, 128);
+        // conversions = P·I·J·K·N exactly
+        let want = (shape.positions()
+            * cfg.n_streams()
+            * cfg.n_slices()
+            * cfg.n_arrs(shape.m())
+            * shape.cout) as u64;
+        if m.conversions != want {
+            return Err(format!("conversions {} != {}", m.conversions, want));
+        }
+        // subarrays cover all rows
+        if m.n_arrs * cfg.r_arr < shape.m() {
+            return Err("subarrays don't cover rows".into());
+        }
+        if m.xbars != m.n_arrs * m.n_slices * m.col_tiles {
+            return Err("xbar count identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_samples() {
+    let costs = ComponentCosts::default();
+    let layers = zoo::resnet20_cifar();
+    check("energy monotone in MTJ samples", 8, |g| {
+        let s = g.usize_in(1, 7) as u32;
+        let lo = evaluate_design(
+            &costs,
+            &DesignConfig::stox(StoxConfig::default(), s, true),
+            &layers,
+        );
+        let hi = evaluate_design(
+            &costs,
+            &DesignConfig::stox(StoxConfig::default(), s + 1, true),
+            &layers,
+        );
+        if hi.energy_pj <= lo.energy_pj {
+            return Err(format!("{} samples {} pJ vs {}", s, lo.energy_pj, hi.energy_pj));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adc_designs_dominate_stox_cost() {
+    let costs = ComponentCosts::default();
+    check("StoX EDP below ADC baselines", 6, |g| {
+        let layers = match g.usize_in(0, 2) {
+            0 => zoo::resnet20_cifar(),
+            1 => zoo::resnet18_tiny(),
+            _ => zoo::resnet50_tiny(),
+        };
+        let hpfa = evaluate_design(&costs, &DesignConfig::hpfa(), &layers);
+        let sfa = evaluate_design(&costs, &DesignConfig::sfa(), &layers);
+        let stox = evaluate_design(
+            &costs,
+            &DesignConfig::stox(StoxConfig::default(), 1, true),
+            &layers,
+        );
+        if stox.edp_pj_ns >= sfa.edp_pj_ns || sfa.edp_pj_ns >= hpfa.edp_pj_ns {
+            return Err("EDP ordering violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_beat_max_of_stages() {
+    use stox_net::arch::pipeline::PipelineModel;
+    let pipe = PipelineModel::default();
+    check("beat = max stage", 30, |g| {
+        let cols = g.usize_in(1, 512);
+        let ps = match g.usize_in(0, 2) {
+            0 => PsProcessing::AdcFullPrecision { share: *g.pick(&[1usize, 8, 128]) },
+            1 => PsProcessing::SenseAmp,
+            _ => PsProcessing::StochasticMtj { samples: g.usize_in(1, 8) as u32 },
+        };
+        let s = pipe.stages(ps, cols);
+        let want = s.t_xbar_ns.max(s.t_ps_ns).max(s.t_sna_ns);
+        if (s.beat_ns - want).abs() > 1e-12 {
+            return Err("beat != max stage".into());
+        }
+        Ok(())
+    });
+}
