@@ -16,7 +16,6 @@ use stox_net::arch::components::ComponentCosts;
 use stox_net::arch::energy::DesignConfig;
 use stox_net::coordinator::server::{submit_all, PjrtExecutor, Server};
 use stox_net::coordinator::{BatcherConfig, ServeConfig, TileScheduler};
-use stox_net::imc::StoxConfig;
 use stox_net::model::weights::TestSet;
 use stox_net::model::Manifest;
 use stox_net::runtime::Engine;
@@ -37,17 +36,14 @@ fn main() -> anyhow::Result<()> {
         test.n
     );
 
-    let stox_cfg = StoxConfig {
-        a_bits: spec.stox.a_bits,
-        w_bits: spec.stox.w_bits,
-        a_stream_bits: spec.stox.a_stream_bits,
-        w_slice_bits: spec.stox.w_slice_bits,
-        r_arr: spec.stox.r_arr,
-        n_samples: spec.stox.n_samples,
-        alpha: spec.stox.alpha,
-    };
-    let design =
-        DesignConfig::stox(stox_cfg, spec.stox.n_samples, spec.first_layer == "qf");
+    // design point derived from the converter specs that actually serve
+    // (PsConvert::cost_key keeps Fig. 9 accounting and the request path
+    // in lockstep)
+    let design = DesignConfig::from_specs(
+        spec.stox_config(),
+        &spec.body_converter_spec()?,
+        &spec.first_layer_spec()?,
+    )?;
     let sched =
         TileScheduler::new(&ComponentCosts::default(), design, &manifest.layers);
     println!(
@@ -91,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     for (i, r) in replies.into_iter().enumerate() {
         let rep = r.recv()?;
         let pred = rep
-            .logits
+            .logits()?
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())

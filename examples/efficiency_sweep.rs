@@ -10,6 +10,13 @@ use stox_net::arch::energy::{evaluate_network, DesignConfig};
 use stox_net::imc::StoxConfig;
 use stox_net::model::zoo;
 
+/// Spec-built design point (the open `PsConvert` registry path: the same
+/// string you would pass to `stox-cli serve --converter`).
+fn spec_design(base: StoxConfig, body: &str, first: &str) -> DesignConfig {
+    DesignConfig::from_specs(base, &body.parse().unwrap(), &first.parse().unwrap())
+        .expect("registry spec")
+}
+
 fn main() -> anyhow::Result<()> {
     let costs = ComponentCosts::default();
     let base = StoxConfig::default(); // 4w4a4bs, r_arr=256
@@ -42,6 +49,13 @@ fn main() -> anyhow::Result<()> {
                 ],
             ), // Mix-QF
             DesignConfig::stox(StoxConfig { w_slice_bits: 1, ..base }, 1, true),
+            // registry-built converters (PsConvert::cost_key path):
+            spec_design(base, "sparse:bits=4", "quant:bits=8"), // sparse-ADC baseline
+            spec_design(
+                StoxConfig { w_slice_bits: 1, ..base },
+                "inhomo:base=1,extra=3", // §3.2.3 per-(stream, slice) sampling
+                "stox:samples=8",
+            ),
         ];
         let results = evaluate_network(&costs, &designs, &layers);
         let hpfa = results[0].0.clone();

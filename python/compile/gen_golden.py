@@ -1,0 +1,84 @@
+"""Generate the cross-language golden vectors for ``rust/tests/parity.rs``.
+
+Runs the pure-jnp oracle (``kernels/ref.py``) over a fixed matrix of
+configurations and dumps inputs + outputs to
+``rust/tests/data/mvm_golden.json``.  The Rust functional crossbar must
+reproduce these outputs to 1e-5 (bit-exact stochastic sampling; f32
+accumulation-order differences only).
+
+    python -m compile.gen_golden          # from python/
+
+Regenerate only when the oracle semantics change (the counter layout and
+threshold rule are frozen contracts).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from .kernels import ref
+
+OUT = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
+
+# (b, m, n, a_bits, w_bits, w_slice_bits, r_arr, n_samples, alpha, mode, seed)
+CASES = [
+    (2, 96, 7, 4, 4, 4, 64, 2, 4.0, "stox", 5),      # case 0 MUST be stox
+    (2, 64, 5, 4, 4, 1, 32, 1, 4.0, "stox", 9),      # sliced weights
+    (1, 300, 8, 4, 4, 4, 256, 1, 4.0, "stox", 42),   # multi-subarray + pad
+    (2, 80, 6, 4, 4, 4, 64, 1, 4.0, "sa", 7),
+    (2, 80, 6, 4, 4, 4, 64, 1, 2.0, "expected", 7),
+    (2, 80, 6, 8, 8, 2, 64, 1, 4.0, "ideal", 7),
+    (1, 50, 4, 2, 2, 1, 64, 3, 4.0, "stox", 11),     # low precision, multi-sample
+]
+
+
+def rand_unit(rs: np.random.RandomState, n: int) -> np.ndarray:
+    return (rs.rand(n).astype(np.float32) * 2.0 - 1.0).astype(np.float32)
+
+
+def main() -> None:
+    out = []
+    for b, m, n, ab, wb, ws, r_arr, ns, alpha, mode, seed in CASES:
+        cfg = ref.StoxConfig(
+            a_bits=ab,
+            w_bits=wb,
+            a_stream_bits=1,
+            w_slice_bits=ws,
+            r_arr=r_arr,
+            n_samples=ns,
+            alpha=alpha,
+            mode=mode,
+        )
+        rs = np.random.RandomState(1000 + seed)
+        a = rand_unit(rs, b * m).reshape(b, m)
+        w = rand_unit(rs, m * n).reshape(m, n)
+        o = np.asarray(ref.stox_mvm(a, w, cfg, seed=seed), dtype=np.float32)
+        out.append(
+            {
+                "b": b,
+                "m": m,
+                "n": n,
+                "a_bits": ab,
+                "w_bits": wb,
+                "w_slice_bits": ws,
+                "r_arr": r_arr,
+                "n_samples": ns,
+                "alpha": alpha,
+                "mode": mode,
+                "seed": seed,
+                "a": [float(v) for v in a.reshape(-1)],
+                "w": [float(v) for v in w.reshape(-1)],
+                "out": [float(v) for v in o.reshape(-1)],
+            }
+        )
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / "mvm_golden.json"
+    path.write_text(json.dumps(out))
+    print(f"wrote {len(out)} cases to {path} ({path.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 
 use stox_net::device::llg::{LlgParams, LlgSim};
 use stox_net::device::mtj::{SotMtj, SwitchingCurve};
-use stox_net::imc::PsConverter;
+use stox_net::imc::{PsConvert, PsConverterSpec, StoxConfig};
 use stox_net::stats::rng::CounterRng;
 use stox_net::util::bench;
 
@@ -35,8 +35,12 @@ fn main() {
 
     println!("\n== stochastic conversion (Eq. 1 fast path) ==");
     let rng = CounterRng::new(3);
-    let mtj1 = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 };
-    let mtj8 = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 8 };
+    let cfg = StoxConfig::default();
+    let build = |s: &str| {
+        s.parse::<PsConverterSpec>().unwrap().build(&cfg).unwrap()
+    };
+    let mtj1 = build("stox:alpha=4,samples=1");
+    let mtj8 = build("stox:alpha=4,samples=8");
     let mut c = 0u32;
     bench::quick("convert/MTJ x1 (1k PS)", || {
         let mut acc = 0.0;

@@ -4,8 +4,13 @@
 //! Regenerates the per-conversion cost story behind Table 2 / Fig. 9 at
 //! the functional level: MTJ sampling cost scales with samples; the
 //! converter choice does not change the analog PS work.
+//!
+//! All converters are constructed through the `PsConverterSpec` registry
+//! (the production path); the final section isolates the converter-path
+//! redesign itself — legacy per-element enum dispatch vs the
+//! slice-vectorized `PsConvert::convert_slice`.
 
-use stox_net::imc::{PsConverter, StoxConfig, StoxMvm};
+use stox_net::imc::{PsConvert, PsConverter, PsConverterSpec, StoxConfig, StoxMvm};
 use stox_net::stats::rng::CounterRng;
 use stox_net::util::bench;
 
@@ -21,31 +26,19 @@ fn main() {
     let w = rand_vec(m * n, 2);
 
     println!("== stox MVM (B={b}, M={m}, N={n}) ==");
-    for (name, cfg, conv) in [
-        (
-            "4w4a4bs ideal-ADC",
-            StoxConfig::default(),
-            PsConverter::IdealAdc,
-        ),
-        (
-            "4w4a4bs 1b-SA",
-            StoxConfig::default(),
-            PsConverter::SenseAmp,
-        ),
-        (
-            "4w4a4bs MTJ x1",
-            StoxConfig::default(),
-            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
-        ),
+    for (name, cfg, spec) in [
+        ("4w4a4bs ideal-ADC", StoxConfig::default(), "ideal"),
+        ("4w4a4bs 1b-SA", StoxConfig::default(), "sa"),
+        ("4w4a4bs MTJ x1", StoxConfig::default(), "stox:samples=1"),
         (
             "4w4a4bs MTJ x8",
             StoxConfig { n_samples: 8, ..Default::default() },
-            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 8 },
+            "stox:samples=8",
         ),
         (
             "4w4a1bs MTJ x1 (sliced)",
             StoxConfig { w_slice_bits: 1, ..Default::default() },
-            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
+            "stox:samples=1",
         ),
         (
             "2w2a1bs MTJ x1",
@@ -55,14 +48,57 @@ fn main() {
                 w_slice_bits: 1,
                 ..Default::default()
             },
-            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 1 },
+            "stox:samples=1",
         ),
+        (
+            "4w4a1bs inhomo 1..4",
+            StoxConfig { w_slice_bits: 1, ..Default::default() },
+            "inhomo:base=1,extra=3",
+        ),
+        ("4w4a4bs sparse-ADC 4b", StoxConfig::default(), "sparse:bits=4"),
     ] {
+        let conv = spec
+            .parse::<PsConverterSpec>()
+            .unwrap()
+            .build(&cfg)
+            .unwrap();
         let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
         let mut seed = 0u32;
         bench::quick(&format!("mvm/{name}"), || {
             seed = seed.wrapping_add(1);
-            bench::black_box(mvm.run(&a, b, &conv, seed));
+            bench::black_box(mvm.run(&a, b, conv.as_ref(), seed));
+        });
+    }
+
+    println!("\n== converter path: legacy scalar dispatch vs convert_slice ==");
+    // one full PS column set of the layer above, converted in isolation —
+    // the seam the PsConvert redesign vectorizes
+    let ps = rand_vec(16 * 1024, 7);
+    let mut out = vec![0.0f32; ps.len()];
+    let rng = CounterRng::new(5);
+    for (name, legacy, spec) in [
+        (
+            "MTJ x4",
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 4 },
+            "stox:alpha=4,samples=4",
+        ),
+        ("quant-ADC 8b", PsConverter::QuantAdc { bits: 8 }, "quant:bits=8"),
+        ("ideal-ADC", PsConverter::IdealAdc, "ideal"),
+    ] {
+        bench::quick(&format!("convert/scalar-dispatch {name} (16k PS)"), || {
+            for (idx, (&p, o)) in ps.iter().zip(out.iter_mut()).enumerate() {
+                *o = legacy.convert(p, idx as u32, &rng);
+            }
+            bench::black_box(&out);
+        });
+        let conv = spec
+            .parse::<PsConverterSpec>()
+            .unwrap()
+            .build(&StoxConfig::default())
+            .unwrap();
+        bench::quick(&format!("convert/slice {name} (16k PS)"), || {
+            conv.convert_slice(&ps, &mut out, 0, 1, &rng);
+            bench::black_box(&out);
         });
     }
 

@@ -4,7 +4,7 @@
 use super::components::{ComponentCosts, PsProcessing};
 use super::mapper::{map_layer, LayerShape, MappedLayer};
 use super::pipeline::PipelineModel;
-use crate::imc::StoxConfig;
+use crate::imc::{PsConvert, PsConverterSpec, StoxConfig};
 use std::collections::HashMap;
 
 /// A full IMC design point: precision mapping + PS processing choice.
@@ -89,6 +89,31 @@ impl DesignConfig {
             layer_samples: HashMap::new(),
             activity: 1.0,
         }
+    }
+
+    /// Design point derived from converter *specs* through the
+    /// [`PsConvert::cost_key`] hook — the cost model charges exactly the
+    /// component rows of the converters that actually run on the
+    /// functional path, so serving metrics and Fig. 9 rollups stay in
+    /// lockstep with whatever the registry built (including converters
+    /// the closed constructors above never knew about).
+    pub fn from_specs(
+        stox: StoxConfig,
+        body: &PsConverterSpec,
+        first: &PsConverterSpec,
+    ) -> crate::Result<Self> {
+        let ps = body.build(&stox)?.cost_key();
+        let first_layer_ps = first.build(&stox)?.cost_key();
+        Ok(Self {
+            name: format!("StoX-{}-{body}/{first}", stox.tag()),
+            stox,
+            ps,
+            first_layer_ps,
+            c_arr: 128,
+            bits_per_cell: stox.w_slice_bits.min(2),
+            layer_samples: HashMap::new(),
+            activity: 1.0,
+        })
     }
 
     /// Mix variant: base 1-sample MTJ with per-layer overrides.
@@ -347,6 +372,71 @@ mod tests {
             &layers,
         );
         assert!(lo.energy_pj < hi.energy_pj);
+    }
+
+    #[test]
+    fn design_from_specs_matches_legacy_constructor() {
+        // the cost_key hook must reproduce what DesignConfig::stox charged
+        let legacy = DesignConfig::stox(StoxConfig::default(), 4, true);
+        let spec = DesignConfig::from_specs(
+            StoxConfig::default(),
+            &"stox:alpha=4,samples=4".parse().unwrap(),
+            &"stox:alpha=4,samples=8".parse().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.ps, legacy.ps);
+        assert_eq!(spec.first_layer_ps, legacy.first_layer_ps);
+        let layers = zoo::resnet20_cifar();
+        let a = evaluate_design(&costs(), &legacy, &layers);
+        let b = evaluate_design(&costs(), &spec, &layers);
+        assert_eq!(a.energy_pj, b.energy_pj);
+        assert_eq!(a.latency_ns, b.latency_ns);
+    }
+
+    #[test]
+    fn sparse_adc_spec_costs_between_sa_and_fp_adc() {
+        let layers = zoo::resnet20_cifar();
+        let mk = |body: &str| {
+            evaluate_design(
+                &costs(),
+                &DesignConfig::from_specs(
+                    StoxConfig::default(),
+                    &body.parse().unwrap(),
+                    &"ideal".parse().unwrap(),
+                )
+                .unwrap(),
+                &layers,
+            )
+        };
+        let sa = mk("sa");
+        let sparse = mk("sparse:bits=4");
+        let fp = mk("quant:bits=8");
+        assert!(sa.energy_pj < sparse.energy_pj, "1b-SA under sparse ADC");
+        assert!(sparse.energy_pj < fp.energy_pj, "sparse ADC under FP ADC");
+    }
+
+    #[test]
+    fn inhomogeneous_spec_costs_between_base_and_max_sampling() {
+        // 4w4a1bs → a 4×4 (stream × slice) grid, base 1 .. 1+3 samples
+        let cfg = StoxConfig { w_slice_bits: 1, ..StoxConfig::default() };
+        let layers = zoo::resnet20_cifar();
+        let mk = |body: &str| {
+            evaluate_design(
+                &costs(),
+                &DesignConfig::from_specs(
+                    cfg,
+                    &body.parse().unwrap(),
+                    &"stox:samples=8".parse().unwrap(),
+                )
+                .unwrap(),
+                &layers,
+            )
+        };
+        let lo = mk("stox:samples=1");
+        let hi = mk("stox:samples=4");
+        let mix = mk("inhomo:base=1,extra=3");
+        assert!(mix.energy_pj > lo.energy_pj, "inhomo above 1-sample");
+        assert!(mix.energy_pj < hi.energy_pj, "inhomo below max-sample");
     }
 
     #[test]

@@ -22,11 +22,25 @@ pub struct Request {
     pub reply: mpsc::Sender<Reply>,
 }
 
+/// One reply per request.  `result` is `Err(message)` when the executor
+/// failed on the batch this request rode in — every member of a failed
+/// batch receives the error, so no client ever blocks forever on a
+/// dropped reply channel.
 #[derive(Debug, Clone)]
 pub struct Reply {
-    pub logits: Vec<f32>,
+    pub result: Result<Vec<f32>, String>,
     pub latency: Duration,
     pub batch: usize,
+}
+
+impl Reply {
+    /// The logits, or the executor failure as an error.
+    pub fn logits(&self) -> crate::Result<&[f32]> {
+        match &self.result {
+            Ok(l) => Ok(l),
+            Err(e) => Err(anyhow::anyhow!("executor error: {e}")),
+        }
+    }
 }
 
 /// Batch executor abstraction.
@@ -161,7 +175,19 @@ impl Server {
         let logits = match self.executor.execute(&images, n, seed) {
             Ok(l) => l,
             Err(e) => {
-                eprintln!("executor error: {e}");
+                // fail the whole batch *loudly*: every pending request gets
+                // an error reply instead of a dropped channel (clients
+                // would otherwise block forever on recv()).
+                let msg = e.to_string();
+                eprintln!("executor error: {msg}");
+                let now = Instant::now();
+                for p in batch.items.into_iter() {
+                    let _ = p.payload.reply.send(Reply {
+                        result: Err(msg.clone()),
+                        latency: now.duration_since(t0),
+                        batch: n,
+                    });
+                }
                 return;
             }
         };
@@ -179,7 +205,7 @@ impl Server {
             let lat = now.duration_since(p.enqueued);
             latencies.push(lat);
             let _ = p.payload.reply.send(Reply {
-                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
                 latency: now.duration_since(t0),
                 batch: n,
             });
@@ -229,7 +255,8 @@ impl Server {
 }
 
 /// Convenience client: submit every image of a test set through a running
-/// server and wait for all replies; returns (predictions, replies).
+/// server; returns the per-request reply receivers in submission order
+/// (call `recv()` on each to wait for its [`Reply`]).
 pub fn submit_all(
     tx: &mpsc::Sender<Request>,
     images: impl Iterator<Item = Vec<f32>>,
@@ -293,7 +320,7 @@ mod tests {
         let mut got = 0;
         for r in replies {
             let rep = r.recv().unwrap();
-            assert_eq!(rep.logits.len(), 10);
+            assert_eq!(rep.logits().unwrap().len(), 10);
             got += 1;
         }
         assert_eq!(got, 10);
@@ -307,5 +334,56 @@ mod tests {
         let e = MockExec { classes: 2, elems: 3 };
         let out = e.execute(&vec![0.0; 7 * 3], 7, 0).unwrap();
         assert_eq!(out.len(), 14);
+    }
+
+    struct FailingExec;
+
+    impl Executor for FailingExec {
+        fn execute(&self, _images: &[f32], _batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+            Err(anyhow::anyhow!("injected executor failure"))
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    /// Regression: a failing executor used to silently drop every pending
+    /// Reply, leaving clients blocked forever on `recv()`.  Now each
+    /// request of the failed batch receives an error reply.
+    #[test]
+    fn failed_batch_replies_error_to_every_request() {
+        let server = Server::new(
+            Box::new(FailingExec),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                seed: 0,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..10).map(|_| vec![0.0f32; 4]));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        assert_eq!(replies.len(), 10);
+        for r in replies {
+            // recv() must succeed — the reply channel was not dropped —
+            // and carry the executor error
+            let rep = r.recv().expect("reply delivered, not abandoned");
+            let err = rep.result.expect_err("executor failed");
+            assert!(err.contains("injected executor failure"), "{err}");
+            assert!(rep.logits().is_err());
+        }
     }
 }

@@ -1,0 +1,937 @@
+//! The open PS-conversion surface: the [`PsConvert`] trait (slice-at-a-time
+//! conversion), the converter implementations, and the [`PsConverterSpec`] /
+//! [`ConverterRegistry`] construction path.
+//!
+//! The paper's whole contribution lives at this boundary — ADC vs 1b-SA vs
+//! stochastic MTJ, plus §3.2.3's inhomogeneous sampling — so the converter
+//! family must be *open* (related designs: arXiv:2408.06390's approximate
+//! ADCs, arXiv:2411.19344's Stoch-IMC) and *fast* (one dispatch per PS
+//! column slice instead of one per element).
+//!
+//! Frozen contracts (enforced by `tests/parity.rs` + `tests/converter_equiv.rs`):
+//!
+//! * the canonical counter layout `base(c) = (((b·K + k)·N + c)·I + i)·J + j`
+//!   — a column slice is `(base(0), stride = I·J)`;
+//! * the stochastic MTJ per-sample counter `base(c)·n_samples + s` and the
+//!   `draw24 < ceil(p·2²⁴)` threshold trick, which together make the Rust
+//!   side bit-identical with the python oracle (`ref.stox_mvm`).
+
+use super::quant::StoxConfig;
+use crate::arch::components::PsProcessing;
+use crate::stats::rng::CounterRng;
+use crate::util::json::Json;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------
+
+/// A partial-sum converter: digitizes one crossbar column slice of
+/// normalized partial sums (`ps[c] ∈ [-1, 1]`) per call.
+///
+/// The slice granularity is the point of the API: the MVM kernel pays one
+/// (virtual) dispatch per `(batch, subarray, weight-slice, stream)` group
+/// instead of one enum match per element, and implementations can
+/// precompute per-slice state (quantizer levels, tanh thresholds) and emit
+/// branch-free inner loops.
+pub trait PsConvert: Send + Sync {
+    /// Convert `ps` into `out` (same length). The canonical event counter
+    /// of element `idx` is `counter_base + idx·counter_stride` (wrapping);
+    /// `rng` carries the pre-mixed seed.
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    );
+
+    /// Significance-aware entry point: the kernel passes the activation
+    /// `stream` (i) and weight `w_slice` (j) coordinates of the PS group
+    /// so converters like [`InhomogeneousMtjConv`] can vary their sampling
+    /// length with bit significance. The default ignores them.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        let _ = (stream, w_slice);
+        self.convert_slice(ps, out, counter_base, counter_stride, rng);
+    }
+
+    /// Scalar convenience (tests, device-level probes): converts one PS.
+    fn convert(&self, ps: f32, counter_base: u32, rng: &CounterRng) -> f32 {
+        let mut out = [0.0f32; 1];
+        self.convert_slice(&[ps], &mut out, counter_base, 0, rng);
+        out[0]
+    }
+
+    /// Temporal samples consumed per PS conversion; the MVM kernel folds
+    /// `1/samples()` into its output normalization, so converters whose
+    /// `convert_slice` emits *unnormalized* sample totals (the stochastic
+    /// MTJ parity contract) report their sample count here, while
+    /// converters that already emit normalized values report 1.
+    fn samples(&self) -> u32 {
+        1
+    }
+
+    /// Which Table-2 component row this converter charges — the hook the
+    /// `arch/energy.rs` rollup (and the tile scheduler behind serving
+    /// metrics) uses to keep energy accounting in lockstep with the
+    /// functional converter actually running.
+    fn cost_key(&self) -> PsProcessing;
+
+    /// Human-readable label for reports and benches.
+    fn label(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// Shared kernels
+// ---------------------------------------------------------------------
+
+/// Midtread uniform quantizer over [-1, 1] — must stay expression-identical
+/// with the legacy enum path (`2·u/levels − 1`, not a reciprocal multiply)
+/// for bit-exact equivalence.
+#[inline]
+fn quant_midtread(ps: f32, levels: f32) -> f32 {
+    let u = ((ps.clamp(-1.0, 1.0) + 1.0) * 0.5 * levels).round_ties_even();
+    2.0 * u / levels - 1.0
+}
+
+/// Slice-vectorized Eq. 1 sampling: writes the *unnormalized* ±1 sample
+/// totals. Per element `idx`, sample `s` uses counter
+/// `(counter_base + idx·stride)·counter_block + s` — with
+/// `counter_block == n_samples` this is the frozen python-parity layout.
+/// Converters that vary the read count per call (inhomogeneous sampling)
+/// pass their *maximum* count as `counter_block` so each element owns a
+/// disjoint counter range and no draw is ever reused across groups.
+/// Thresholds are precomputed per chunk so the tanh pass and the sampling
+/// pass both run as tight loops.
+#[allow(clippy::too_many_arguments)]
+fn stochastic_slice(
+    alpha: f32,
+    n_samples: u32,
+    counter_block: u32,
+    ps: &[f32],
+    out: &mut [f32],
+    counter_base: u32,
+    counter_stride: u32,
+    rng: &CounterRng,
+) {
+    debug_assert!(counter_block >= n_samples);
+    const LANES: usize = 64;
+    let mut thr = [0u32; LANES];
+    let mut c0 = counter_base;
+    let mut idx = 0usize;
+    while idx < ps.len() {
+        let hi = (idx + LANES).min(ps.len());
+        for (t, &p) in thr.iter_mut().zip(&ps[idx..hi]) {
+            // u < p  ⟺  draw24 < ceil(p·2²⁴): u is k·2⁻²⁴ exactly and the
+            // f64 scaling of an f32 p by 2²⁴ is exact, so the integer
+            // comparison is bit-equivalent to the python side while
+            // skipping the per-sample int→float conversion.
+            let pr = 0.5 * ((alpha * p).tanh() + 1.0);
+            *t = ((pr as f64) * 16_777_216.0).ceil() as u32;
+        }
+        for (o, &t) in out[idx..hi].iter_mut().zip(thr.iter()) {
+            let base = c0.wrapping_mul(counter_block);
+            let mut total = 0i32;
+            for s in 0..n_samples {
+                total += if rng.draw24(base.wrapping_add(s)) < t { 1 } else { -1 };
+            }
+            *o = total as f32;
+            c0 = c0.wrapping_add(counter_stride);
+        }
+        idx = hi;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Converter implementations
+// ---------------------------------------------------------------------
+
+/// Infinite-precision readout (HPFA-style functional reference): a plain
+/// copy — the kernel's scale factor applies the rest.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IdealAdcConv;
+
+impl PsConvert for IdealAdcConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+    ) {
+        out.copy_from_slice(ps);
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::AdcFullPrecision { share: 16 }
+    }
+
+    fn label(&self) -> String {
+        "ideal-ADC".into()
+    }
+}
+
+/// N-bit SAR ADC (midtread uniform over the normalized PS range).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantAdcConv {
+    pub bits: u32,
+}
+
+impl PsConvert for QuantAdcConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+    ) {
+        let levels = ((1u64 << self.bits) - 1) as f32;
+        for (o, &p) in out.iter_mut().zip(ps) {
+            *o = quant_midtread(p, levels);
+        }
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        if self.bits >= 8 {
+            PsProcessing::AdcFullPrecision { share: 16 }
+        } else {
+            PsProcessing::AdcSparse { share: 16 }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("quant-ADC({}b)", self.bits)
+    }
+}
+
+/// Sparsity-aware low-bit ADC (the Fig. 9 sparse-ADC baseline /
+/// arXiv:2408.06390): column slices whose partial sums are all exactly
+/// zero skip conversion entirely (output 0, no ADC action); everything
+/// else quantizes like [`QuantAdcConv`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseAdcConv {
+    pub bits: u32,
+}
+
+impl PsConvert for SparseAdcConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+    ) {
+        if ps.iter().all(|&p| p == 0.0) {
+            out.fill(0.0);
+            return;
+        }
+        let levels = ((1u64 << self.bits) - 1) as f32;
+        for (o, &p) in out.iter_mut().zip(ps) {
+            *o = quant_midtread(p, levels);
+        }
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::AdcSparse { share: 16 }
+    }
+
+    fn label(&self) -> String {
+        format!("sparse-ADC({}b)", self.bits)
+    }
+}
+
+/// Deterministic 1-bit sign readout ("1b-SA", the HPF+1b-SA baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SenseAmpConv;
+
+impl PsConvert for SenseAmpConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+    ) {
+        for (o, &p) in out.iter_mut().zip(ps) {
+            *o = if p >= 0.0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::SenseAmp
+    }
+
+    fn label(&self) -> String {
+        "1b-SA".into()
+    }
+}
+
+/// Infinite-sample limit `tanh(α·ps)` — training-time surrogate and the
+/// variance-free reference. Charged as a 1-sample MTJ in the cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpectedMtjConv {
+    pub alpha: f32,
+}
+
+impl PsConvert for ExpectedMtjConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+    ) {
+        for (o, &p) in out.iter_mut().zip(ps) {
+            *o = (self.alpha * p).tanh();
+        }
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::StochasticMtj { samples: 1 }
+    }
+
+    fn label(&self) -> String {
+        "expected-MTJ".into()
+    }
+}
+
+/// The paper's contribution: ±1 reads with `P(+1) = (tanh(α·ps)+1)/2`,
+/// `n_samples` reads summed (Eq. 1 + §3.2.3 multi-sampling). Emits the
+/// unnormalized ±1 total; the kernel divides by [`PsConvert::samples`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StochasticMtjConv {
+    pub alpha: f32,
+    pub n_samples: u32,
+}
+
+impl PsConvert for StochasticMtjConv {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        stochastic_slice(
+            self.alpha,
+            self.n_samples,
+            self.n_samples,
+            ps,
+            out,
+            counter_base,
+            counter_stride,
+            rng,
+        );
+    }
+
+    fn samples(&self) -> u32 {
+        self.n_samples
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::StochasticMtj { samples: self.n_samples }
+    }
+
+    fn label(&self) -> String {
+        format!("MTJ×{}", self.n_samples)
+    }
+}
+
+/// §3.2.3's inhomogeneous sampling, at (stream, slice) granularity: the
+/// sample length grows with the bit significance `i·d_a + j·d_w` of the
+/// PS group, from `base` reads at the LSB up to `base + extra` at the MSB
+/// (linear in normalized significance). Outputs are normalized sample
+/// means (`Σ±1 / n(i,j)`), so [`PsConvert::samples`] is 1 and the kernel
+/// normalization stays uniform.
+///
+/// This is the converter the closed enum could not express: `layer_samples`
+/// only approximated the scheme per layer, while the MSB slices are where
+/// extra reads actually pay (the Fig. 5 sensitivity signal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InhomogeneousMtjConv {
+    pub alpha: f32,
+    base: u32,
+    extra: u32,
+    j_n: usize,
+    /// samples per (stream i, weight-slice j), indexed `i·j_n + j`
+    table: Vec<u32>,
+}
+
+impl InhomogeneousMtjConv {
+    pub fn new(alpha: f32, base_samples: u32, extra_samples: u32, cfg: &StoxConfig) -> Self {
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let (da, dw) = (cfg.a_stream_bits, cfg.w_slice_bits);
+        let base = base_samples.max(1);
+        let sig_max = (i_n as u32 - 1) * da + (j_n as u32 - 1) * dw;
+        let mut table = vec![0u32; i_n * j_n];
+        for i in 0..i_n {
+            for j in 0..j_n {
+                let sig = i as u32 * da + j as u32 * dw;
+                let n = if sig_max == 0 {
+                    base + extra_samples
+                } else {
+                    base + (extra_samples as f64 * sig as f64 / sig_max as f64).round()
+                        as u32
+                };
+                table[i * j_n + j] = n.max(1);
+            }
+        }
+        Self { alpha, base, extra: extra_samples, j_n, table }
+    }
+
+    /// Sample length of the (stream, slice) PS group.
+    pub fn samples_at(&self, stream: usize, w_slice: usize) -> u32 {
+        self.table
+            .get(stream * self.j_n + w_slice)
+            .copied()
+            .unwrap_or(self.base)
+    }
+
+    /// Mean sample length over the (stream × slice) grid — the effective
+    /// conversion cost.
+    pub fn mean_samples(&self) -> f64 {
+        self.table.iter().map(|&n| n as f64).sum::<f64>() / self.table.len() as f64
+    }
+
+    /// Max read count over the grid — the per-element counter block size,
+    /// so every (stream, slice) group draws from a disjoint counter range
+    /// even though read counts differ (no RNG draw is ever shared).
+    fn n_max(&self) -> u32 {
+        self.base + self.extra
+    }
+
+    fn convert_with(&self, n: u32, ps: &[f32], out: &mut [f32], cb: u32, cs: u32, rng: &CounterRng) {
+        stochastic_slice(self.alpha, n, self.n_max(), ps, out, cb, cs, rng);
+        let inv = 1.0 / n as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+impl PsConvert for InhomogeneousMtjConv {
+    /// Significance-blind entry point: treats the slice as least
+    /// significant (`base` reads).
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        self.convert_with(self.base, ps, out, counter_base, counter_stride, rng);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        let n = self.samples_at(stream, w_slice);
+        self.convert_with(n, ps, out, counter_base, counter_stride, rng);
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        PsProcessing::StochasticMtj {
+            samples: (self.mean_samples().round() as u32).max(1),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("inhomo-MTJ({}..{})", self.base, self.base + self.extra)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec + registry
+// ---------------------------------------------------------------------
+
+/// Serializable converter specification — the single parsing/construction
+/// path for every call site (`model/infer.rs`, `main.rs`, examples,
+/// benches). Parse with [`std::str::FromStr`] / [`PsConverterSpec::from_mode`]
+/// (grammar `name[:k=v[,k=v…]]`, e.g. `stox:alpha=4,samples=2`,
+/// `sparse:bits=4`), round-trip through [`std::fmt::Display`] and
+/// [`PsConverterSpec::to_json`], and build a converter with
+/// [`PsConverterSpec::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PsConverterSpec {
+    IdealAdc,
+    QuantAdc { bits: u32 },
+    SparseAdc { bits: u32 },
+    SenseAmp,
+    ExpectedMtj { alpha: f32 },
+    StochasticMtj { alpha: f32, n_samples: u32 },
+    InhomogeneousMtj { alpha: f32, base_samples: u32, extra_samples: u32 },
+    /// A mode the built-in set does not know: resolved (or rejected) by
+    /// whatever [`ConverterRegistry`] builds it — the open end of the API.
+    Custom { name: String, params: Vec<(String, f32)> },
+}
+
+/// Default α of Eq. 1 when neither the mode string nor the caller supplies
+/// one (the paper's fitted value).
+pub const DEFAULT_ALPHA: f32 = 4.0;
+
+fn param(params: &[(String, f32)], key: &str) -> Option<f32> {
+    params.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+}
+
+impl PsConverterSpec {
+    /// Registry key of this spec.
+    pub fn mode_name(&self) -> &str {
+        match self {
+            PsConverterSpec::IdealAdc => "ideal",
+            PsConverterSpec::QuantAdc { .. } => "quant",
+            PsConverterSpec::SparseAdc { .. } => "sparse",
+            PsConverterSpec::SenseAmp => "sa",
+            PsConverterSpec::ExpectedMtj { .. } => "expected",
+            PsConverterSpec::StochasticMtj { .. } => "stox",
+            PsConverterSpec::InhomogeneousMtj { .. } => "inhomo",
+            PsConverterSpec::Custom { name, .. } => name,
+        }
+    }
+
+    /// Parse a mode string with caller-supplied defaults (typically the
+    /// trained config's `alpha` / `n_samples`). Grammar:
+    /// `name[:key=value[,key=value…]]`; unknown names become
+    /// [`PsConverterSpec::Custom`] and surface an error at build time
+    /// unless a registry knows them.
+    pub fn from_mode(mode: &str, default_alpha: f32, default_samples: u32) -> crate::Result<Self> {
+        let mode = mode.trim();
+        let (name, rest) = match mode.split_once(':') {
+            Some((n, r)) => (n.trim(), r.trim()),
+            None => (mode, ""),
+        };
+        anyhow::ensure!(!name.is_empty(), "empty converter mode");
+        let mut params: Vec<(String, f32)> = Vec::new();
+        if !rest.is_empty() {
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("bad converter param '{kv}' (want k=v)"))?;
+                let v: f32 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad converter param value '{kv}'"))?;
+                params.push((k.trim().to_string(), v));
+            }
+        }
+        Self::from_parts(name, &params, default_alpha, default_samples)
+    }
+
+    fn from_parts(
+        name: &str,
+        params: &[(String, f32)],
+        default_alpha: f32,
+        default_samples: u32,
+    ) -> crate::Result<Self> {
+        let alpha = param(params, "alpha").unwrap_or(default_alpha);
+        let samples = param(params, "samples")
+            .map(|v| v as u32)
+            .unwrap_or(default_samples)
+            .max(1);
+        let bits = |d: u32| -> crate::Result<u32> {
+            let b = param(params, "bits").map(|v| v as u32).unwrap_or(d);
+            anyhow::ensure!((1..=16).contains(&b), "converter bits {b} out of range 1..=16");
+            Ok(b)
+        };
+        Ok(match name {
+            "ideal" | "adc" => PsConverterSpec::IdealAdc,
+            "quant" => PsConverterSpec::QuantAdc { bits: bits(8)? },
+            "sparse" => PsConverterSpec::SparseAdc { bits: bits(4)? },
+            "sa" | "sense" => PsConverterSpec::SenseAmp,
+            "expected" => PsConverterSpec::ExpectedMtj { alpha },
+            "stox" | "mtj" | "stochastic" => {
+                PsConverterSpec::StochasticMtj { alpha, n_samples: samples }
+            }
+            "inhomo" | "inhomogeneous" | "mix" => PsConverterSpec::InhomogeneousMtj {
+                alpha,
+                base_samples: param(params, "base").map(|v| v as u32).unwrap_or(samples).max(1),
+                extra_samples: param(params, "extra").map(|v| v as u32).unwrap_or(3),
+            },
+            _ => PsConverterSpec::Custom {
+                name: name.to_string(),
+                params: params.to_vec(),
+            },
+        })
+    }
+
+    /// Build through the process-wide default registry.
+    pub fn build(&self, cfg: &StoxConfig) -> crate::Result<Box<dyn PsConvert>> {
+        default_registry().build(self, cfg)
+    }
+
+    /// JSON form (`{"mode": ..., params…}`) — the coordinator/config wire
+    /// format.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(&str, Json)> = vec![("mode", Json::Str(self.mode_name().into()))];
+        match self {
+            PsConverterSpec::QuantAdc { bits } | PsConverterSpec::SparseAdc { bits } => {
+                entries.push(("bits", Json::Num(*bits as f64)));
+            }
+            PsConverterSpec::ExpectedMtj { alpha } => {
+                entries.push(("alpha", Json::Num(*alpha as f64)));
+            }
+            PsConverterSpec::StochasticMtj { alpha, n_samples } => {
+                entries.push(("alpha", Json::Num(*alpha as f64)));
+                entries.push(("samples", Json::Num(*n_samples as f64)));
+            }
+            PsConverterSpec::InhomogeneousMtj { alpha, base_samples, extra_samples } => {
+                entries.push(("alpha", Json::Num(*alpha as f64)));
+                entries.push(("base", Json::Num(*base_samples as f64)));
+                entries.push(("extra", Json::Num(*extra_samples as f64)));
+            }
+            PsConverterSpec::Custom { params, .. } => {
+                for (k, v) in params {
+                    entries.push((k.as_str(), Json::Num(*v as f64)));
+                }
+            }
+            _ => {}
+        }
+        Json::obj(entries)
+    }
+
+    /// Parse the JSON form written by [`PsConverterSpec::to_json`].
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let name = j
+            .get("mode")
+            .and_then(|m| m.as_str())
+            .ok_or_else(|| anyhow::anyhow!("converter spec json: missing 'mode'"))?;
+        let params: Vec<(String, f32)> = match j {
+            Json::Obj(m) => m
+                .iter()
+                .filter(|(k, _)| k.as_str() != "mode")
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n as f32)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Self::from_parts(name, &params, DEFAULT_ALPHA, 1)
+    }
+}
+
+impl std::str::FromStr for PsConverterSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::from_mode(s, DEFAULT_ALPHA, 1)
+    }
+}
+
+impl std::fmt::Display for PsConverterSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PsConverterSpec::IdealAdc => write!(f, "ideal"),
+            PsConverterSpec::QuantAdc { bits } => write!(f, "quant:bits={bits}"),
+            PsConverterSpec::SparseAdc { bits } => write!(f, "sparse:bits={bits}"),
+            PsConverterSpec::SenseAmp => write!(f, "sa"),
+            PsConverterSpec::ExpectedMtj { alpha } => write!(f, "expected:alpha={alpha}"),
+            PsConverterSpec::StochasticMtj { alpha, n_samples } => {
+                write!(f, "stox:alpha={alpha},samples={n_samples}")
+            }
+            PsConverterSpec::InhomogeneousMtj { alpha, base_samples, extra_samples } => {
+                write!(f, "inhomo:alpha={alpha},base={base_samples},extra={extra_samples}")
+            }
+            PsConverterSpec::Custom { name, params } => {
+                write!(f, "{name}")?;
+                for (i, (k, v)) in params.iter().enumerate() {
+                    write!(f, "{}{k}={v}", if i == 0 { ":" } else { "," })?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+type BuilderFn =
+    Box<dyn Fn(&PsConverterSpec, &StoxConfig) -> crate::Result<Box<dyn PsConvert>> + Send + Sync>;
+
+/// Name → builder map. [`ConverterRegistry::builtin`] carries the seven
+/// in-tree converters; [`ConverterRegistry::register`] adds (or overrides)
+/// designs without touching the kernel — the open end of the redesign.
+pub struct ConverterRegistry {
+    entries: Vec<(String, BuilderFn)>,
+}
+
+impl ConverterRegistry {
+    pub fn empty() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// The in-tree converter family.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("ideal", |_s, _c| Ok(Box::new(IdealAdcConv) as Box<dyn PsConvert>));
+        r.register("quant", |s, _c| match *s {
+            PsConverterSpec::QuantAdc { bits } => {
+                Ok(Box::new(QuantAdcConv { bits }) as Box<dyn PsConvert>)
+            }
+            _ => anyhow::bail!("quant builder got spec {s}"),
+        });
+        r.register("sparse", |s, _c| match *s {
+            PsConverterSpec::SparseAdc { bits } => {
+                Ok(Box::new(SparseAdcConv { bits }) as Box<dyn PsConvert>)
+            }
+            _ => anyhow::bail!("sparse builder got spec {s}"),
+        });
+        r.register("sa", |_s, _c| Ok(Box::new(SenseAmpConv) as Box<dyn PsConvert>));
+        r.register("expected", |s, _c| match *s {
+            PsConverterSpec::ExpectedMtj { alpha } => {
+                Ok(Box::new(ExpectedMtjConv { alpha }) as Box<dyn PsConvert>)
+            }
+            _ => anyhow::bail!("expected builder got spec {s}"),
+        });
+        r.register("stox", |s, _c| match *s {
+            PsConverterSpec::StochasticMtj { alpha, n_samples } => {
+                Ok(Box::new(StochasticMtjConv { alpha, n_samples }) as Box<dyn PsConvert>)
+            }
+            _ => anyhow::bail!("stox builder got spec {s}"),
+        });
+        r.register("inhomo", |s, cfg| match *s {
+            PsConverterSpec::InhomogeneousMtj { alpha, base_samples, extra_samples } => {
+                Ok(Box::new(InhomogeneousMtjConv::new(alpha, base_samples, extra_samples, cfg))
+                    as Box<dyn PsConvert>)
+            }
+            _ => anyhow::bail!("inhomo builder got spec {s}"),
+        });
+        r
+    }
+
+    /// Register `name`; an existing entry of the same name is replaced
+    /// (latest wins).
+    pub fn register<F>(&mut self, name: &str, build: F)
+    where
+        F: Fn(&PsConverterSpec, &StoxConfig) -> crate::Result<Box<dyn PsConvert>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = Box::new(build);
+        } else {
+            self.entries.push((name.to_string(), Box::new(build)));
+        }
+    }
+
+    /// Construct the converter for `spec` under hardware config `cfg`.
+    pub fn build(
+        &self,
+        spec: &PsConverterSpec,
+        cfg: &StoxConfig,
+    ) -> crate::Result<Box<dyn PsConvert>> {
+        let name = spec.mode_name();
+        let (_, b) = self
+            .entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no PS converter registered for mode '{name}' (known: {})",
+                    self.names().join(", ")
+                )
+            })?;
+        b(spec, cfg)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+/// Process-wide registry of the built-in converters (use a local
+/// [`ConverterRegistry`] to extend the family).
+pub fn default_registry() -> &'static ConverterRegistry {
+    static REG: OnceLock<ConverterRegistry> = OnceLock::new();
+    REG.get_or_init(ConverterRegistry::builtin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> CounterRng {
+        CounterRng::new(9)
+    }
+
+    fn cfg() -> StoxConfig {
+        StoxConfig::default() // 4w4a4bs: I=4 streams, J=1 slice
+    }
+
+    #[test]
+    fn ideal_is_copy() {
+        let ps = [0.37f32, -0.5, 0.0];
+        let mut out = [0.0f32; 3];
+        IdealAdcConv.convert_slice(&ps, &mut out, 0, 1, &rng());
+        assert_eq!(out, ps);
+    }
+
+    #[test]
+    fn scalar_convenience_matches_slice() {
+        let c = StochasticMtjConv { alpha: 4.0, n_samples: 3 };
+        let mut out = [0.0f32; 1];
+        c.convert_slice(&[0.2], &mut out, 77, 5, &rng());
+        assert_eq!(out[0], c.convert(0.2, 77, &rng()));
+    }
+
+    #[test]
+    fn stochastic_slice_respects_stride() {
+        // element idx of a strided slice must see counter base + idx·stride
+        let c = StochasticMtjConv { alpha: 4.0, n_samples: 2 };
+        let ps = [0.1f32, 0.1, 0.1, 0.1];
+        let mut out = [0.0f32; 4];
+        c.convert_slice(&ps, &mut out, 100, 7, &rng());
+        for (idx, &o) in out.iter().enumerate() {
+            let want = c.convert(0.1, 100u32.wrapping_add(idx as u32 * 7), &rng());
+            assert_eq!(o, want, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn sparse_adc_skips_zero_slices_and_quantizes_dense() {
+        let sp = SparseAdcConv { bits: 4 };
+        let q = QuantAdcConv { bits: 4 };
+        let zeros = [0.0f32; 8];
+        let mut out = [9.0f32; 8];
+        sp.convert_slice(&zeros, &mut out, 0, 1, &rng());
+        assert!(out.iter().all(|&v| v == 0.0), "all-zero slice skipped");
+        // note: a real 4b ADC reads midtread(0) = 1/15, not 0 — the skip
+        // is the approximation that buys the energy.
+        let dense = [0.3f32, -0.8, 0.0, 1.0];
+        let mut o1 = [0.0f32; 4];
+        let mut o2 = [0.0f32; 4];
+        sp.convert_slice(&dense, &mut o1, 0, 1, &rng());
+        q.convert_slice(&dense, &mut o2, 0, 1, &rng());
+        assert_eq!(o1, o2, "dense slice == plain quant");
+    }
+
+    #[test]
+    fn inhomo_table_monotone_in_significance() {
+        let cfg = StoxConfig { a_bits: 4, w_bits: 4, w_slice_bits: 1, ..cfg() }; // I=4, J=4
+        let c = InhomogeneousMtjConv::new(4.0, 1, 3, &cfg);
+        assert_eq!(c.samples_at(0, 0), 1, "LSB gets base");
+        assert_eq!(c.samples_at(3, 3), 4, "MSB gets base+extra");
+        for i in 0..3 {
+            assert!(c.samples_at(i + 1, 0) >= c.samples_at(i, 0));
+            assert!(c.samples_at(0, i + 1) >= c.samples_at(0, i));
+        }
+        let m = c.mean_samples();
+        assert!(m > 1.0 && m < 4.0, "mean {m}");
+        assert_eq!(c.samples(), 1, "outputs are normalized means");
+    }
+
+    #[test]
+    fn inhomo_outputs_are_means_in_range() {
+        let c = InhomogeneousMtjConv::new(4.0, 2, 4, &cfg());
+        let ps = [0.4f32; 16];
+        let mut out = [0.0f32; 16];
+        c.convert_slice_at(3, 0, &ps, &mut out, 0, 1, &rng());
+        for &v in &out {
+            assert!(v.abs() <= 1.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn spec_parse_and_display_roundtrip() {
+        for s in [
+            "ideal",
+            "quant:bits=8",
+            "sparse:bits=4",
+            "sa",
+            "expected:alpha=2",
+            "stox:alpha=4,samples=2",
+            "inhomo:alpha=4,base=1,extra=3",
+        ] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let round: PsConverterSpec = spec.to_string().parse().unwrap();
+            assert_eq!(spec, round, "display round-trip of {s}");
+        }
+    }
+
+    #[test]
+    fn spec_defaults_flow_from_caller() {
+        let s = PsConverterSpec::from_mode("stox", 2.5, 6).unwrap();
+        assert_eq!(s, PsConverterSpec::StochasticMtj { alpha: 2.5, n_samples: 6 });
+        let s = PsConverterSpec::from_mode("stox:samples=2", 2.5, 6).unwrap();
+        assert_eq!(s, PsConverterSpec::StochasticMtj { alpha: 2.5, n_samples: 2 });
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for s in ["stox:alpha=3,samples=2", "sparse:bits=5", "inhomo:base=2,extra=1", "sa"] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let j = spec.to_json();
+            let back = PsConverterSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(spec, back, "json round-trip of {s}");
+        }
+    }
+
+    #[test]
+    fn unknown_mode_is_custom_until_registered() {
+        let spec: PsConverterSpec = "frobnicator:gain=2".parse().unwrap();
+        assert_eq!(spec.mode_name(), "frobnicator");
+        assert!(spec.build(&cfg()).is_err(), "not in the default registry");
+        let mut reg = ConverterRegistry::builtin();
+        reg.register("frobnicator", |_s, _c| {
+            Ok(Box::new(SenseAmpConv) as Box<dyn PsConvert>)
+        });
+        let c = reg.build(&spec, &cfg()).unwrap();
+        assert_eq!(c.convert(0.5, 0, &rng()), 1.0);
+    }
+
+    #[test]
+    fn registry_builds_every_builtin() {
+        let reg = default_registry();
+        for s in [
+            "ideal", "quant:bits=6", "sparse", "sa", "expected", "stox:samples=3", "inhomo",
+        ] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let c = reg.build(&spec, &cfg()).unwrap();
+            let v = c.convert(0.3, 0, &rng());
+            assert!(v.is_finite(), "{s} -> {v}");
+        }
+    }
+
+    #[test]
+    fn cost_keys_map_to_table2_rows() {
+        let cfg = cfg();
+        assert_eq!(
+            IdealAdcConv.cost_key(),
+            PsProcessing::AdcFullPrecision { share: 16 }
+        );
+        assert_eq!(
+            SparseAdcConv { bits: 4 }.cost_key(),
+            PsProcessing::AdcSparse { share: 16 }
+        );
+        assert_eq!(SenseAmpConv.cost_key(), PsProcessing::SenseAmp);
+        assert_eq!(
+            StochasticMtjConv { alpha: 4.0, n_samples: 5 }.cost_key(),
+            PsProcessing::StochasticMtj { samples: 5 }
+        );
+        match InhomogeneousMtjConv::new(4.0, 1, 3, &cfg).cost_key() {
+            PsProcessing::StochasticMtj { samples } => assert!((1..=4).contains(&samples)),
+            other => panic!("inhomo cost key {other:?}"),
+        }
+    }
+}

@@ -1,4 +1,11 @@
-//! Array-level partial-sum converters: the component the paper replaces.
+//! The legacy closed converter enum, kept as the scalar *reference
+//! implementation* and golden-test fixture vocabulary.
+//!
+//! New code should construct converters through
+//! [`super::convert::PsConverterSpec`] and run them through the
+//! [`super::convert::PsConvert`] trait (the enum implements the trait by
+//! delegating to the slice-vectorized converter structs, so either path is
+//! bit-identical — `tests/converter_equiv.rs` enforces it).
 //!
 //! * [`PsConverter::IdealAdc`] — infinite-precision readout (HPFA-style
 //!   functional reference; energy model separately charges FP ADC cost).
@@ -12,6 +19,10 @@
 //! * [`PsConverter::ExpectedMtj`] — infinite-sample limit `tanh(α·ps)`
 //!   (training-time surrogate; also the variance-free reference).
 
+use super::convert::{
+    ExpectedMtjConv, IdealAdcConv, PsConvert, QuantAdcConv, SenseAmpConv, StochasticMtjConv,
+};
+use crate::arch::components::PsProcessing;
 use crate::stats::rng::CounterRng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,7 +43,9 @@ impl PsConverter {
         }
     }
 
-    /// Convert one normalized partial sum (`ps ∈ [-1, 1]`).
+    /// Convert one normalized partial sum (`ps ∈ [-1, 1]`) — the scalar
+    /// reference path (the slice-vectorized hot path lives in
+    /// [`super::convert`]; equivalence is property-tested).
     ///
     /// `counter_base` is the canonical event index of this PS element
     /// (shared layout with python, see `ref.ps_counter_base`); the `rng`
@@ -68,6 +81,69 @@ impl PsConverter {
                     total += if rng.draw24(c) < thr { 1 } else { -1 };
                 }
                 total as f32
+            }
+        }
+    }
+}
+
+/// The enum rides on the open trait by delegating each slice call to the
+/// matching slice-vectorized converter struct: one match per PS column
+/// slice instead of one per element, and a single shared implementation
+/// of every conversion rule.
+impl PsConvert for PsConverter {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        match *self {
+            PsConverter::IdealAdc => {
+                IdealAdcConv.convert_slice(ps, out, counter_base, counter_stride, rng)
+            }
+            PsConverter::QuantAdc { bits } => {
+                QuantAdcConv { bits }.convert_slice(ps, out, counter_base, counter_stride, rng)
+            }
+            PsConverter::SenseAmp => {
+                SenseAmpConv.convert_slice(ps, out, counter_base, counter_stride, rng)
+            }
+            PsConverter::ExpectedMtj { alpha } => {
+                ExpectedMtjConv { alpha }.convert_slice(ps, out, counter_base, counter_stride, rng)
+            }
+            PsConverter::StochasticMtj { alpha, n_samples } => StochasticMtjConv {
+                alpha,
+                n_samples,
+            }
+            .convert_slice(ps, out, counter_base, counter_stride, rng),
+        }
+    }
+
+    fn samples(&self) -> u32 {
+        PsConverter::samples(self)
+    }
+
+    fn cost_key(&self) -> PsProcessing {
+        match *self {
+            PsConverter::IdealAdc => IdealAdcConv.cost_key(),
+            PsConverter::QuantAdc { bits } => QuantAdcConv { bits }.cost_key(),
+            PsConverter::SenseAmp => SenseAmpConv.cost_key(),
+            PsConverter::ExpectedMtj { alpha } => ExpectedMtjConv { alpha }.cost_key(),
+            PsConverter::StochasticMtj { alpha, n_samples } => {
+                StochasticMtjConv { alpha, n_samples }.cost_key()
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        match *self {
+            PsConverter::IdealAdc => IdealAdcConv.label(),
+            PsConverter::QuantAdc { bits } => QuantAdcConv { bits }.label(),
+            PsConverter::SenseAmp => SenseAmpConv.label(),
+            PsConverter::ExpectedMtj { alpha } => ExpectedMtjConv { alpha }.label(),
+            PsConverter::StochasticMtj { alpha, n_samples } => {
+                StochasticMtjConv { alpha, n_samples }.label()
             }
         }
     }

@@ -5,12 +5,32 @@
 //! row partitioning, same counter-based stochastic sampling.  Exactness is
 //! enforced by golden-vector tests generated from the python side
 //! (`rust/tests/parity.rs`).
+//!
+//! PS conversion is an **open, slice-vectorized API** ([`convert`]):
+//!
+//! * [`PsConvert`] — the trait; converts a whole PS column slice per call
+//!   (`convert_slice_at`), reports its temporal [`PsConvert::samples`] and
+//!   its [`PsConvert::cost_key`] (the `arch/energy.rs` hook);
+//! * [`PsConverterSpec`] + [`ConverterRegistry`] — the single parsing
+//!   (`FromStr`/json) and construction path used by `model/infer.rs`,
+//!   `main.rs`, examples and benches; [`default_registry`] carries the
+//!   in-tree family (ideal / quant / sparse ADC, 1b-SA, expected MTJ,
+//!   stochastic MTJ, §3.2.3 inhomogeneous MTJ), `register` adds more;
+//! * [`PsConverter`] — the legacy closed enum, kept as the scalar
+//!   reference implementation (it implements [`PsConvert`] by delegating
+//!   to the slice converters; `tests/converter_equiv.rs` pins the
+//!   equivalence on the parity fixtures).
 
+pub mod convert;
 pub mod converters;
 pub mod mvm;
 pub mod nonideal;
 pub mod quant;
 
+pub use convert::{
+    default_registry, ConverterRegistry, ExpectedMtjConv, IdealAdcConv, InhomogeneousMtjConv,
+    PsConvert, PsConverterSpec, QuantAdcConv, SenseAmpConv, SparseAdcConv, StochasticMtjConv,
+};
 pub use converters::PsConverter;
 pub use mvm::{im2col, stox_conv2d, stox_mvm, StoxMvm};
 pub use nonideal::{Nonideality, NonidealCrossbar};

@@ -1,12 +1,17 @@
 //! Algorithm 1 end-to-end: the StoX crossbar MVM, bit-identical with the
-//! python oracle (`ref.stox_mvm`) when driven by [`PsConverter::StochasticMtj`].
+//! python oracle (`ref.stox_mvm`) when driven by the stochastic MTJ
+//! converter.
 //!
 //! [`StoxMvm`] is the production shape: weights are quantized, sliced and
 //! partitioned into subarrays **once** (crossbar programming), then many
 //! activations run through [`StoxMvm::run`].  `stox_mvm` is the one-shot
 //! convenience used by tests.
+//!
+//! The kernel is generic over [`PsConvert`]: conversion happens one PS
+//! *column slice* at a time (`convert_slice_at`), so converter dispatch is
+//! hoisted out of the inner loop and implementations vectorize freely.
 
-use super::converters::PsConverter;
+use super::convert::PsConvert;
 use super::quant::{self, StoxConfig};
 use crate::stats::rng::CounterRng;
 
@@ -66,11 +71,11 @@ impl StoxMvm {
     /// all `I` input streams simultaneously — `I×` less weight traffic
     /// than the naive per-(stream, slice) loop, and the inner kernel is a
     /// branch-free `ps[i][c] += x_i · w[c]` that vectorizes.
-    pub fn run(
+    pub fn run<C: PsConvert + ?Sized>(
         &self,
         a: &[f32],
         batch: usize,
-        conv: &PsConverter,
+        conv: &C,
         seed: u32,
     ) -> Vec<f32> {
         // Batch rows are independent (the RNG counter space is keyed by
@@ -95,12 +100,12 @@ impl StoxMvm {
     }
 
     /// Sequential kernel over batch rows [b0, b1).
-    fn run_range(
+    fn run_range<C: PsConvert + ?Sized>(
         &self,
         a: &[f32],
         b0: usize,
         b1: usize,
-        conv: &PsConverter,
+        conv: &C,
         seed: u32,
     ) -> Vec<f32> {
         let batch = b1 - b0;
@@ -122,6 +127,9 @@ impl StoxMvm {
         let mut digits = vec![0i32; i_n];
         // per-stream PS accumulators [i][n] (I·N f32 — L1-resident)
         let mut ps = vec![0.0f32; i_n * self.n];
+        // per-slice scratch: normalized PS in, converted values out
+        let mut psn = vec![0.0f32; self.n];
+        let mut cv = vec![0.0f32; self.n];
 
         for b in b0..b1 {
             for k in 0..self.n_arrs {
@@ -152,16 +160,24 @@ impl StoxMvm {
                     for i in 0..i_n {
                         let scale = sa[i] * sw[j] * norm;
                         let ps_i = &ps[i * self.n..(i + 1) * self.n];
-                        for c in 0..self.n {
-                            // canonical counter layout shared with python:
-                            // (((b·K + k)·N + n)·I + i)·J + j
-                            let base = ((((b * self.n_arrs + k) * self.n + c)
-                                * i_n
-                                + i) as u32)
-                                .wrapping_mul(j_n as u32)
-                                .wrapping_add(j as u32);
-                            let v = conv.convert(ps_i[c] * inv_r, base, &rng);
-                            out[(b - b0) * self.n + c] += v * scale;
+                        for (pn, &p) in psn.iter_mut().zip(ps_i) {
+                            *pn = p * inv_r;
+                        }
+                        // canonical counter layout shared with python
+                        // (frozen contract): base(c) = (((b·K + k)·N + c)·I
+                        // + i)·J + j, so the whole column slice is
+                        // (base(0), stride I·J) — wrapping arithmetic is
+                        // congruent mod 2³² wherever the truncation lands.
+                        let base0 = ((((b * self.n_arrs + k) * self.n) * i_n
+                            + i) as u32)
+                            .wrapping_mul(j_n as u32)
+                            .wrapping_add(j as u32);
+                        let stride = (i_n * j_n) as u32;
+                        conv.convert_slice_at(i, j, &psn, &mut cv, base0, stride, &rng);
+                        let orow =
+                            &mut out[(b - b0) * self.n..(b - b0 + 1) * self.n];
+                        for (o, &v) in orow.iter_mut().zip(cv.iter()) {
+                            *o += v * scale;
                         }
                     }
                 }
@@ -222,14 +238,14 @@ impl StoxMvm {
 }
 
 /// One-shot Algorithm 1 (program + run); mirrors `ref.stox_mvm`.
-pub fn stox_mvm(
+pub fn stox_mvm<C: PsConvert + ?Sized>(
     a: &[f32],
     w: &[f32],
     batch: usize,
     m: usize,
     n: usize,
     cfg: StoxConfig,
-    conv: &PsConverter,
+    conv: &C,
     seed: u32,
 ) -> crate::Result<Vec<f32>> {
     Ok(StoxMvm::program(w, m, n, cfg)?.run(a, batch, conv, seed))
@@ -283,7 +299,7 @@ pub fn im2col(
 /// python).  `w` is [kh,kw,cin,cout] row-major and must already be
 /// normalized into [-1,1].
 #[allow(clippy::too_many_arguments)]
-pub fn stox_conv2d(
+pub fn stox_conv2d<C: PsConvert + ?Sized>(
     x: &[f32],
     b: usize,
     h: usize,
@@ -295,7 +311,7 @@ pub fn stox_conv2d(
     cout: usize,
     stride: usize,
     cfg: StoxConfig,
-    conv: &PsConverter,
+    conv: &C,
     seed: u32,
 ) -> crate::Result<(Vec<f32>, usize, usize)> {
     let (patches, ho, wo) = im2col(x, b, h, w_, cin, kh, kw, stride);
@@ -307,6 +323,7 @@ pub fn stox_conv2d(
 
 #[cfg(test)]
 mod tests {
+    use super::super::converters::PsConverter;
     use super::*;
 
     fn rand_vec(n: usize, seed: u32) -> Vec<f32> {

@@ -19,7 +19,7 @@
 //! noise by construction (Eq. 1's sloped tanh), the interesting output is
 //! the accuracy-vs-severity curve (`stox-cli nonideal`).
 
-use super::converters::PsConverter;
+use super::convert::PsConvert;
 use super::mvm::StoxMvm;
 use super::quant::{self, StoxConfig};
 use crate::stats::rng::CounterRng;
@@ -90,11 +90,11 @@ impl NonidealCrossbar {
 
     /// Run a batch through the non-ideal array (mirrors `StoxMvm::run`
     /// with the three error models injected into the analog path).
-    pub fn run(
+    pub fn run<C: PsConvert + ?Sized>(
         &self,
         a: &[f32],
         batch: usize,
-        conv: &PsConverter,
+        conv: &C,
         seed: u32,
     ) -> Vec<f32> {
         let cfg = &self.mvm.cfg;
@@ -115,6 +115,9 @@ impl NonidealCrossbar {
         let mut digits = vec![0i32; i_n];
         let mut xd = vec![0.0f32; cfg.r_arr * i_n];
         let mut ps = vec![0.0f32; i_n * n];
+        // per-slice scratch: noisy normalized PS in, converted values out
+        let mut psn = vec![0.0f32; n];
+        let mut cv = vec![0.0f32; n];
         let mut noise_c = 0u32;
 
         for b in 0..batch {
@@ -149,18 +152,24 @@ impl NonidealCrossbar {
                     }
                     for i in 0..i_n {
                         let scale = sa[i] * sw[j] * norm;
-                        for c in 0..n {
-                            let base = ((((b * n_arrs + k) * n + c) * i_n + i)
-                                as u32)
-                                .wrapping_mul(j_n as u32)
-                                .wrapping_add(j as u32);
+                        for (c, pn) in psn.iter_mut().enumerate() {
                             let mut v = ps[i * n + c] * inv_r;
                             if self.nonideal.sigma_read > 0.0 {
                                 v += self.nonideal.sigma_read
                                     * noise_rng.normal(noise_c);
                                 noise_c = noise_c.wrapping_add(1);
                             }
-                            out[b * n + c] += conv.convert(v, base, &rng) * scale;
+                            *pn = v;
+                        }
+                        // same frozen counter layout as StoxMvm::run_range:
+                        // the column slice is (base(0), stride I·J)
+                        let base0 = ((((b * n_arrs + k) * n) * i_n + i) as u32)
+                            .wrapping_mul(j_n as u32)
+                            .wrapping_add(j as u32);
+                        let stride = (i_n * j_n) as u32;
+                        conv.convert_slice_at(i, j, &psn, &mut cv, base0, stride, &rng);
+                        for (c, &v) in cv.iter().enumerate() {
+                            out[b * n + c] += v * scale;
                         }
                     }
                 }
@@ -172,6 +181,7 @@ impl NonidealCrossbar {
 
 #[cfg(test)]
 mod tests {
+    use super::super::converters::PsConverter;
     use super::*;
 
     fn rand_vec(n: usize, seed: u32) -> Vec<f32> {

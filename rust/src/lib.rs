@@ -5,9 +5,14 @@
 //! * [`device`] — SOT-MTJ physics: macro-spin LLG solver, switching
 //!   probability extraction, the analog-to-stochastic converter circuit.
 //! * [`imc`] — functional crossbar model: quantization, bit slicing and
-//!   streaming, array partitioning, PS converters (ADC / sense-amp /
-//!   stochastic MTJ), Algorithm 1 end to end.  Bit-identical with the
-//!   python oracle via the shared counter-based RNG.
+//!   streaming, array partitioning, Algorithm 1 end to end.  PS conversion
+//!   is an open trait (`imc::PsConvert`) that digitizes whole column
+//!   slices per call; converters (ideal / quant / sparse ADC, 1b-SA,
+//!   expected / stochastic / inhomogeneous MTJ, plus anything registered
+//!   at runtime) are parsed and constructed through the
+//!   `imc::PsConverterSpec` registry and report their `cost_key` to the
+//!   energy model.  Bit-identical with the python oracle via the shared
+//!   counter-based RNG.
 //! * [`model`] — DNN workload zoo (ResNet-20/18/50 shapes), exported-weight
 //!   loading, native hardware-exact inference.
 //! * [`arch`] — ISAAC-like architecture accounting: component cost DB

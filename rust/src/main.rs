@@ -12,7 +12,9 @@
 //! * `sensitivity` — Fig. 5 Monte-Carlo layer perturbation;
 //! * `fig8`        — pipeline occupancy comparison;
 //! * `fig9a`/`fig9b` — hardware-efficiency rollups;
-//! * `accuracy`    — native crossbar-model accuracy on the test set;
+//! * `accuracy`    — native crossbar-model accuracy on the test set
+//!                   (`--converter` runs any registered PS-converter spec);
+//! * `converters`  — list the PS-converter registry (the open PsConvert API);
 //! * `tables`      — pretty-print the python training sweeps (Tables 3/4,
 //!                   Fig. 7) from `python/results/*.json`.
 
@@ -27,7 +29,7 @@ use stox_net::coordinator::{BatcherConfig, ServeConfig, Server, TileScheduler};
 use stox_net::device::llg::LlgParams;
 use stox_net::device::mtj::{SotMtj, SwitchingCurve};
 use stox_net::device::MtjConverter;
-use stox_net::imc::StoxConfig;
+use stox_net::imc::{PsConvert, PsConverterSpec, StoxConfig};
 use stox_net::model::weights::TestSet;
 use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
 use stox_net::runtime::Engine;
@@ -39,6 +41,8 @@ const USAGE: &str = "stox-cli <command> [--artifacts DIR] [flags]
 
 commands:
   serve        [--requests N] [--batch B] [--max-wait-ms MS] [--native]
+               [--converter SPEC]   (SPEC: name[:k=v,..], e.g. stox:samples=4,
+                                     sparse:bits=4, inhomo:base=1,extra=3)
   device-sim   [--points N] [--trials N]
   table2
   fig4         [--images N]
@@ -46,7 +50,8 @@ commands:
   fig8         [--cols N] [--adc-share N] [--samples N]
   fig9a
   fig9b
-  accuracy     [--images N] [--batch B]
+  accuracy     [--images N] [--batch B] [--converter SPEC]
+  converters   (list the registered PS-converter modes)
   tables       [--results DIR]
   nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise)";
 
@@ -60,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             args.usize("batch", 8),
             args.u64("max-wait-ms", 5),
             args.flag("native"),
+            args.get("converter").map(|s| s.to_string()),
         ),
         Some("device-sim") => device_sim(
             args.usize("points", 21),
@@ -90,7 +96,9 @@ fn main() -> anyhow::Result<()> {
             &artifacts,
             args.usize("images", 256),
             args.usize("batch", 8),
+            args.get("converter").map(|s| s.to_string()),
         ),
+        Some("converters") => converters(),
         Some("tables") => tables(&PathBuf::from(
             args.string("results", "python/results"),
         )),
@@ -108,15 +116,44 @@ fn serve(
     batch: usize,
     max_wait_ms: u64,
     native: bool,
+    converter: Option<String>,
 ) -> anyhow::Result<()> {
     let manifest = Manifest::load(artifacts)?;
     let test = TestSet::load(&manifest)?;
     let spec = &manifest.spec;
     let elems = spec.image_size * spec.image_size * spec.in_channels;
+    let stox_cfg = spec.stox_config();
+
+    // --converter swaps the functional converter, which only the native
+    // executor can do (PJRT artifacts bake the trained converter into the
+    // compiled graph) — refuse rather than report energy for a converter
+    // that never ran.
+    anyhow::ensure!(
+        converter.is_none() || native,
+        "--converter requires --native (PJRT artifacts run the trained converter)"
+    );
+    // the registry is the single parse/construct path: the manifest's
+    // trained mode by default, any `--converter` spec as an override
+    let body_spec = match &converter {
+        Some(s) => PsConverterSpec::from_mode(s, stox_cfg.alpha, stox_cfg.n_samples)?,
+        None => spec.body_converter_spec()?,
+    };
+    // with_converter_spec overrides every crossbar-mapped layer, including
+    // a stochastic (QF) first layer — keep the accounting in lockstep
+    let first_spec = if converter.is_some() && spec.first_layer == "qf" {
+        body_spec.clone()
+    } else {
+        spec.first_layer_spec()?
+    };
 
     let executor: Box<dyn Executor> = if native {
         let store = WeightStore::load(&manifest)?;
-        Box::new(NativeExecutor { model: NativeModel::load(&manifest, &store)? })
+        let mut model = NativeModel::load(&manifest, &store)?;
+        if converter.is_some() {
+            model = model.with_converter_spec(&body_spec)?;
+            println!("native converter override: {body_spec}");
+        }
+        Box::new(NativeExecutor { model })
     } else {
         let engine = Engine::load(&manifest)?;
         println!("PJRT platform: {}", engine.platform);
@@ -127,20 +164,9 @@ fn serve(
         })
     };
 
-    // serving design point = the trained model's hardware config
-    let design = DesignConfig::stox(
-        StoxConfig {
-            a_bits: spec.stox.a_bits,
-            w_bits: spec.stox.w_bits,
-            a_stream_bits: spec.stox.a_stream_bits,
-            w_slice_bits: spec.stox.w_slice_bits,
-            r_arr: spec.stox.r_arr,
-            n_samples: spec.stox.n_samples,
-            alpha: spec.stox.alpha,
-        },
-        spec.stox.n_samples,
-        spec.first_layer == "qf",
-    );
+    // serving design point: energy accounting derived from the converter
+    // specs actually running (PsConvert::cost_key)
+    let design = DesignConfig::from_specs(stox_cfg, &body_spec, &first_spec)?;
     let sched =
         TileScheduler::new(&ComponentCosts::default(), design, &manifest.layers);
     println!(
@@ -177,7 +203,7 @@ fn serve(
     let mut correct = 0usize;
     for (i, r) in replies.into_iter().enumerate() {
         let rep = r.recv()?;
-        let pred = argmax(&rep.logits);
+        let pred = argmax(rep.logits()?);
         if pred as i32 == test.labels[i] {
             correct += 1;
         }
@@ -396,11 +422,25 @@ fn fig9b() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn accuracy(artifacts: &PathBuf, images: usize, batch: usize) -> anyhow::Result<()> {
+fn accuracy(
+    artifacts: &PathBuf,
+    images: usize,
+    batch: usize,
+    converter: Option<String>,
+) -> anyhow::Result<()> {
     let manifest = Manifest::load(artifacts)?;
     let store = WeightStore::load(&manifest)?;
     let test = TestSet::load(&manifest)?;
-    let model = NativeModel::load(&manifest, &store)?;
+    let mut model = NativeModel::load(&manifest, &store)?;
+    if let Some(c) = &converter {
+        let spec = PsConverterSpec::from_mode(
+            c,
+            manifest.spec.stox.alpha,
+            manifest.spec.stox.n_samples,
+        )?;
+        println!("converter override: {spec}");
+        model = model.with_converter_spec(&spec)?;
+    }
     let n = images.min(test.n);
     let t0 = std::time::Instant::now();
     let acc = model.accuracy(&test.images, &test.labels, n, batch, 0);
@@ -417,6 +457,25 @@ fn accuracy(artifacts: &PathBuf, images: usize, batch: usize) -> anyhow::Result<
         .and_then(|j| j.at(&["checkpoint_record", "test_acc"]).and_then(|v| v.as_f64()))
     {
         println!("python-side checkpoint accuracy (manifest): {:.2}%", 100.0 * pyacc);
+    }
+    Ok(())
+}
+
+/// List the registered PS-converter modes (the open end of the PsConvert
+/// API): everything here can be passed to `--converter` and runs
+/// end-to-end with matched energy accounting.
+fn converters() -> anyhow::Result<()> {
+    use stox_net::imc::default_registry;
+    let cfg = StoxConfig::default();
+    println!("== registered PS converters (spec grammar: name[:k=v,..]) ==");
+    for name in default_registry().names() {
+        let spec = PsConverterSpec::from_mode(name, cfg.alpha, cfg.n_samples)?;
+        let built = spec.build(&cfg)?;
+        println!(
+            "{name:<10} default spec {:<28} label {}",
+            spec.to_string(),
+            built.label()
+        );
     }
     Ok(())
 }
@@ -453,7 +512,7 @@ fn tables(results: &PathBuf) -> anyhow::Result<()> {
 /// that multi-sampling also averages out *analog* noise (robustness
 /// extension, DESIGN.md).
 fn nonideal_ablation() -> anyhow::Result<()> {
-    use stox_net::imc::{Nonideality, NonidealCrossbar, PsConverter, StoxMvm};
+    use stox_net::imc::{Nonideality, NonidealCrossbar, StoxMvm};
     use stox_net::stats::rng::CounterRng;
 
     let (b, m, n) = (4usize, 576usize, 64usize);
@@ -462,10 +521,15 @@ fn nonideal_ablation() -> anyhow::Result<()> {
     let w: Vec<f32> =
         (0..m * n).map(|i| rng.uniform_in((b * m + i) as u32, -1.0, 1.0)).collect();
     let cfg = StoxConfig::default();
+    // all converters through the registry — the same construction path
+    // the serving stack uses
+    let build = |s: &str| -> anyhow::Result<Box<dyn PsConvert>> {
+        PsConverterSpec::from_mode(s, cfg.alpha, cfg.n_samples)?.build(&cfg)
+    };
     let ideal = StoxMvm::program(&w, m, n, cfg)?
-        .run(&a, b, &PsConverter::ExpectedMtj { alpha: cfg.alpha }, 0);
+        .run(&a, b, build("expected")?.as_ref(), 0);
 
-    let rms = |xb: &NonidealCrossbar, conv: &PsConverter, seeds: u32| -> f64 {
+    let rms = |xb: &NonidealCrossbar, conv: &dyn PsConvert, seeds: u32| -> f64 {
         let mut acc = 0.0f64;
         for s in 0..seeds {
             let o = xb.run(&a, b, conv, s);
@@ -495,19 +559,14 @@ fn nonideal_ablation() -> anyhow::Result<()> {
             Nonideality { sigma_g: 0.10, ir_drop: 0.05, sigma_read: 0.03 },
         ),
     ];
+    let conv_sa = build("sa")?;
+    let conv_m1 = build("stox:samples=1")?;
+    let conv_m4 = build("stox:samples=4")?;
     for (name, sev) in cases {
         let xb = NonidealCrossbar::program(&w, m, n, cfg, sev, 11)?;
-        let sa = rms(&xb, &PsConverter::SenseAmp, 4);
-        let m1 = rms(
-            &xb,
-            &PsConverter::StochasticMtj { alpha: cfg.alpha, n_samples: 1 },
-            4,
-        );
-        let m4 = rms(
-            &xb,
-            &PsConverter::StochasticMtj { alpha: cfg.alpha, n_samples: 4 },
-            4,
-        );
+        let sa = rms(&xb, conv_sa.as_ref(), 4);
+        let m1 = rms(&xb, conv_m1.as_ref(), 4);
+        let m4 = rms(&xb, conv_m4.as_ref(), 4);
         println!("{name:<34} {sa:>10.5} {m1:>10.5} {m4:>10.5}");
     }
     println!("\n(multi-sampling averages analog read noise as well as MTJ");

@@ -9,7 +9,7 @@
 //! collection run on.
 
 use super::weights::{Manifest, WeightStore};
-use crate::imc::{im2col, PsConverter, StoxConfig, StoxMvm};
+use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxMvm};
 use crate::stats::rng::mix32;
 
 /// One batch-norm affine (folded running stats).
@@ -52,7 +52,11 @@ struct ConvOp {
     cin: usize,
     cout: usize,
     stride: usize,
-    converter: PsConverter,
+    /// converter spec (kept so shallow clones / overrides can rebuild)
+    conv_spec: PsConverterSpec,
+    /// built converter — one registry construction per layer, reused for
+    /// every forward pass
+    converter: Box<dyn PsConvert>,
     layer_idx: usize,
 }
 
@@ -84,28 +88,17 @@ fn normalize_weights(w: &[f32]) -> Vec<f32> {
     w.iter().map(|v| v / scale).collect()
 }
 
-fn converter_for(mode: &str, alpha: f32, n_samples: u32) -> PsConverter {
-    match mode {
-        "sa" => PsConverter::SenseAmp,
-        "expected" => PsConverter::ExpectedMtj { alpha },
-        "ideal" => PsConverter::IdealAdc,
-        _ => PsConverter::StochasticMtj { alpha, n_samples },
-    }
+/// Rebuild a ConvOp's converter from its spec (shallow clones, overrides).
+fn rebuild_converter(spec: &PsConverterSpec, mvm: Option<&StoxMvm>) -> Box<dyn PsConvert> {
+    let cfg = mvm.map(|m| m.cfg).unwrap_or_default();
+    spec.build(&cfg).expect("converter spec was buildable at load time")
 }
 
 impl NativeModel {
     pub fn load(manifest: &Manifest, store: &WeightStore) -> crate::Result<Self> {
         let spec = &manifest.spec;
         let _widths = spec.widths();
-        let cfg = StoxConfig {
-            a_bits: spec.stox.a_bits,
-            w_bits: spec.stox.w_bits,
-            a_stream_bits: spec.stox.a_stream_bits,
-            w_slice_bits: spec.stox.w_slice_bits,
-            r_arr: spec.stox.r_arr,
-            n_samples: spec.stox.n_samples,
-            alpha: spec.stox.alpha,
-        };
+        let cfg = spec.stox_config();
         let first_qf = spec.first_layer == "qf";
         let samples_for = |layer_idx: usize| -> u32 {
             if layer_idx == 0 {
@@ -132,6 +125,11 @@ impl NativeModel {
             let (kh, kw, cin, cout) = (shape[0], shape[1], shape[2], shape[3]);
             let wn = normalize_weights(w_raw);
             let mvm = StoxMvm::program(&wn, kh * kw * cin, cout, cfg)?;
+            // the registry is the single parse/construct path: manifest
+            // mode strings ("stox", "sa", "expected", "ideal", or any
+            // extended `name:k=v` form) all resolve here
+            let conv_spec = PsConverterSpec::from_mode(mode, cfg.alpha, n_samples)?;
+            let converter = conv_spec.build(&cfg)?;
             Ok(ConvOp {
                 mvm: Some(mvm),
                 raw_w: wn,
@@ -140,7 +138,8 @@ impl NativeModel {
                 cin,
                 cout,
                 stride,
-                converter: converter_for(mode, cfg.alpha, n_samples),
+                conv_spec,
+                converter,
                 layer_idx,
             })
         };
@@ -162,7 +161,8 @@ impl NativeModel {
                 cin: c1_shape[2],
                 cout: c1_shape[3],
                 stride: 1,
-                converter: PsConverter::IdealAdc,
+                conv_spec: PsConverterSpec::IdealAdc,
+                converter: PsConverterSpec::IdealAdc.build(&cfg)?,
                 layer_idx: 0,
             }
         };
@@ -257,7 +257,8 @@ impl NativeModel {
                     // probe path: record normalized PS of this layer
                     self.record_ps(mvm, &patches, b * ho * wo, probe);
                 }
-                let out = mvm.run(&patches, b * ho * wo, &op.converter, seed);
+                let out =
+                    mvm.run(&patches, b * ho * wo, op.converter.as_ref(), seed);
                 (out, ho, wo)
             }
             None => {
@@ -419,6 +420,30 @@ impl NativeModel {
         clone
     }
 
+    /// Replace the PS converter of every crossbar-mapped conv layer with
+    /// one built from `spec` (the full-precision first layer, when
+    /// present, is untouched).  This is the serving-side hook that lets
+    /// any registry converter — including `sparse` and `inhomo` — run
+    /// end-to-end through the native model regardless of what mode the
+    /// checkpoint was trained with.
+    pub fn with_converter_spec(mut self, spec: &PsConverterSpec) -> crate::Result<Self> {
+        fn apply(op: &mut ConvOp, spec: &PsConverterSpec) -> crate::Result<()> {
+            if let Some(m) = &op.mvm {
+                op.converter = spec.build(&m.cfg)?;
+                op.conv_spec = spec.clone();
+            }
+            Ok(())
+        }
+        apply(&mut self.conv1, spec)?;
+        for stage in self.blocks.iter_mut() {
+            for blk in stage.iter_mut() {
+                apply(&mut blk.0, spec)?;
+                apply(&mut blk.2, spec)?;
+            }
+        }
+        Ok(self)
+    }
+
     /// Number of conv layers (perturbation targets).
     pub fn n_conv_layers(&self) -> usize {
         1 + self.blocks.iter().map(|s| s.len() * 2).sum::<usize>()
@@ -463,7 +488,8 @@ impl ConvOp {
             cin: self.cin,
             cout: self.cout,
             stride: self.stride,
-            converter: self.converter,
+            conv_spec: self.conv_spec.clone(),
+            converter: rebuild_converter(&self.conv_spec, self.mvm.as_ref()),
             layer_idx: self.layer_idx,
         }
     }

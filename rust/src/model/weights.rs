@@ -5,6 +5,7 @@
 //! `['params']['stages'][0][1]['conv1']` — stored verbatim; [`WeightStore`]
 //! offers path-based lookup so `infer.rs` can mirror `model.py`'s pytree.
 
+use crate::imc::{PsConverterSpec, StoxConfig};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -36,11 +37,53 @@ pub struct ModelSpecJson {
     pub layer_samples: Option<Vec<(usize, u32)>>,
 }
 
+impl StoxSpecJson {
+    /// The functional-simulator hardware config this spec trained for —
+    /// the one place the manifest json becomes a [`StoxConfig`].
+    pub fn to_config(&self) -> StoxConfig {
+        StoxConfig {
+            a_bits: self.a_bits,
+            w_bits: self.w_bits,
+            a_stream_bits: self.a_stream_bits,
+            w_slice_bits: self.w_slice_bits,
+            r_arr: self.r_arr,
+            n_samples: self.n_samples,
+            alpha: self.alpha,
+        }
+    }
+}
+
 impl ModelSpecJson {
     /// Stage widths, mirroring `ModelSpec.widths()`.
     pub fn widths(&self) -> [usize; 3] {
         let w = ((self.base_width as f64 * self.width_mult).round() as usize).max(4);
         [w, 2 * w, 4 * w]
+    }
+
+    /// Hardware config of the trained checkpoint.
+    pub fn stox_config(&self) -> StoxConfig {
+        self.stox.to_config()
+    }
+
+    /// Converter spec of the stochastic body layers (trained mode + the
+    /// checkpoint's alpha / n_samples defaults) via the registry grammar.
+    pub fn body_converter_spec(&self) -> crate::Result<PsConverterSpec> {
+        PsConverterSpec::from_mode(&self.stox.mode, self.stox.alpha, self.stox.n_samples)
+    }
+
+    /// Converter spec of the first conv layer: QF → the trained stochastic
+    /// mode (`first_layer_mode` falling back to the body mode) with
+    /// `first_layer_samples`; HPF → an ideal (full-precision ADC) readout.
+    pub fn first_layer_spec(&self) -> crate::Result<PsConverterSpec> {
+        if self.first_layer == "qf" {
+            let mode = self
+                .first_layer_mode
+                .clone()
+                .unwrap_or_else(|| self.stox.mode.clone());
+            PsConverterSpec::from_mode(&mode, self.stox.alpha, self.first_layer_samples)
+        } else {
+            Ok(PsConverterSpec::IdealAdc)
+        }
     }
 }
 

@@ -114,7 +114,7 @@ fn served_pipeline_accuracy() {
     let mut correct = 0;
     for (i, r) in replies.into_iter().enumerate() {
         let rep = r.recv().unwrap();
-        if argmax(&rep.logits) as i32 == test.labels[i] {
+        if argmax(rep.logits().unwrap()) as i32 == test.labels[i] {
             correct += 1;
         }
     }
@@ -145,6 +145,6 @@ fn native_executor_serves() {
     });
     server.run(rx);
     for r in client.join().unwrap() {
-        assert_eq!(r.recv().unwrap().logits.len(), 10);
+        assert_eq!(r.recv().unwrap().logits().unwrap().len(), 10);
     }
 }

@@ -6,8 +6,11 @@ use stox_net::arch::components::{ComponentCosts, PsProcessing};
 use stox_net::arch::energy::{evaluate_design, DesignConfig};
 use stox_net::arch::mapper::{map_layer, LayerShape};
 use stox_net::coordinator::batcher::{BatcherConfig, DynamicBatcher, FlushReason};
-use stox_net::imc::{stox_mvm, PsConverter, StoxConfig};
+use stox_net::imc::{
+    stox_mvm, PsConvert, PsConverter, PsConverterSpec, QuantAdcConv, SparseAdcConv, StoxConfig,
+};
 use stox_net::model::zoo;
+use stox_net::stats::rng::CounterRng;
 use stox_net::util::prop::{check, Gen};
 
 // ---------------------------------------------------------------------
@@ -97,6 +100,141 @@ fn prop_ideal_mvm_linear_in_inputs() {
             stox_mvm(&a, &w_big, 1, m, 1, cfg, &PsConverter::IdealAdc, 0).unwrap();
         if o_big[0] + 1e-4 < o_small[0] {
             return Err(format!("not monotone: {} vs {}", o_big[0], o_small[0]));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// PS-conversion API invariants (the PsConvert redesign)
+// ---------------------------------------------------------------------
+
+/// `convert_slice` must equal element-wise scalar `convert` — bit for bit
+/// — for every ported converter, across random slices, counter bases and
+/// strides (the slice vectorization must not change a single sample).
+#[test]
+fn prop_convert_slice_equals_elementwise_convert() {
+    check("convert_slice == element-wise convert", 40, |g| {
+        let n = g.usize_in(1, 200);
+        let ps = g.vec_f32(n, -1.5, 1.5);
+        let base = g.usize_in(0, 1 << 20) as u32;
+        let stride = g.usize_in(1, 64) as u32;
+        let rng = CounterRng::new(g.usize_in(0, 1000) as u32);
+        let convs = [
+            PsConverter::IdealAdc,
+            PsConverter::QuantAdc { bits: g.usize_in(1, 8) as u32 },
+            PsConverter::SenseAmp,
+            PsConverter::ExpectedMtj { alpha: g.f32_in(0.5, 8.0) },
+            PsConverter::StochasticMtj {
+                alpha: g.f32_in(0.5, 8.0),
+                n_samples: g.usize_in(1, 6) as u32,
+            },
+        ];
+        let mut out = vec![0.0f32; n];
+        for conv in convs {
+            PsConvert::convert_slice(&conv, &ps, &mut out, base, stride, &rng);
+            for (idx, (&p, &o)) in ps.iter().zip(&out).enumerate() {
+                let c = base.wrapping_add((idx as u32).wrapping_mul(stride));
+                let want = conv.convert(p, c, &rng); // legacy scalar path
+                if o.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "{conv:?} idx {idx}: slice {o} != scalar {want}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// On dense input (no all-zero slice to skip) the sparse ADC is exactly
+/// the plain quant ADC.
+#[test]
+fn prop_sparse_adc_equals_quant_adc_on_dense_input() {
+    check("SparseAdc dense == QuantAdc", 30, |g| {
+        let n = g.usize_in(1, 128);
+        let mut ps = g.vec_f32(n, -1.0, 1.0);
+        for v in ps.iter_mut() {
+            if *v == 0.0 {
+                *v = 0.25; // force density
+            }
+        }
+        let bits = g.usize_in(1, 8) as u32;
+        let rng = CounterRng::new(3);
+        let mut o_sparse = vec![0.0f32; n];
+        let mut o_quant = vec![0.0f32; n];
+        SparseAdcConv { bits }.convert_slice(&ps, &mut o_sparse, 0, 1, &rng);
+        QuantAdcConv { bits }.convert_slice(&ps, &mut o_quant, 0, 1, &rng);
+        if o_sparse
+            .iter()
+            .zip(&o_quant)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(format!("diverged at bits={bits}"));
+        }
+        Ok(())
+    });
+}
+
+/// The registry path (`spec string → PsConverterSpec → build`) yields a
+/// converter whose full-MVM output is bit-identical to the legacy enum's.
+#[test]
+fn prop_registry_path_matches_enum_in_mvm() {
+    check("registry converter == enum in MVM", 15, |g| {
+        let b = g.usize_in(1, 2);
+        let m = g.usize_in(4, 80);
+        let n = g.usize_in(1, 8);
+        let cfg = random_cfg(g);
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let (legacy, mode): (PsConverter, &str) = match g.usize_in(0, 3) {
+            0 => (PsConverter::IdealAdc, "ideal"),
+            1 => (PsConverter::SenseAmp, "sa"),
+            2 => (PsConverter::ExpectedMtj { alpha: cfg.alpha }, "expected"),
+            _ => (
+                PsConverter::StochasticMtj {
+                    alpha: cfg.alpha,
+                    n_samples: cfg.n_samples,
+                },
+                "stox",
+            ),
+        };
+        let spec = PsConverterSpec::from_mode(mode, cfg.alpha, cfg.n_samples)
+            .map_err(|e| e.to_string())?;
+        let built = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let o1 = stox_mvm(&a, &w, b, m, n, cfg, &legacy, 11).unwrap();
+        let o2 = stox_mvm(&a, &w, b, m, n, cfg, built.as_ref(), 11).unwrap();
+        if o1 != o2 {
+            return Err(format!("mode {mode}: registry path diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Spec strings round-trip through Display/FromStr for random parameters.
+#[test]
+fn prop_spec_display_roundtrip() {
+    check("spec display round-trip", 30, |g| {
+        let spec = match g.usize_in(0, 6) {
+            0 => PsConverterSpec::IdealAdc,
+            1 => PsConverterSpec::QuantAdc { bits: g.usize_in(1, 16) as u32 },
+            2 => PsConverterSpec::SparseAdc { bits: g.usize_in(1, 16) as u32 },
+            3 => PsConverterSpec::SenseAmp,
+            4 => PsConverterSpec::ExpectedMtj { alpha: g.f32_in(0.1, 9.0) },
+            5 => PsConverterSpec::StochasticMtj {
+                alpha: g.f32_in(0.1, 9.0),
+                n_samples: g.usize_in(1, 16) as u32,
+            },
+            _ => PsConverterSpec::InhomogeneousMtj {
+                alpha: g.f32_in(0.1, 9.0),
+                base_samples: g.usize_in(1, 8) as u32,
+                extra_samples: g.usize_in(0, 8) as u32,
+            },
+        };
+        let round: PsConverterSpec =
+            spec.to_string().parse().map_err(|e| format!("{e}"))?;
+        if round != spec {
+            return Err(format!("{spec} round-tripped to {round}"));
         }
         Ok(())
     });
