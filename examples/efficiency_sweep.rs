@@ -1,12 +1,16 @@
 //! Hardware-efficiency sweep (Fig. 9a + 9b): evaluate the full design
 //! matrix — HPFA / SFA baselines vs StoX configurations — across the
 //! paper's three workloads, and print normalized energy / latency / area
-//! / EDP exactly like the paper's bar charts.
+//! / EDP exactly like the paper's bar charts.  Ends with the
+//! registry-driven accuracy × energy Pareto front (`stox-cli sweep`
+//! path): every registered converter spec scored on the deterministic
+//! golden workload and joined with the cost rollup.
 //!
 //!   cargo run --release --example efficiency_sweep
 
 use stox_net::arch::components::ComponentCosts;
 use stox_net::arch::energy::{evaluate_network, DesignConfig};
+use stox_net::arch::sweep::{default_grid, run_sweep, GoldenWorkload};
 use stox_net::imc::StoxConfig;
 use stox_net::model::zoo;
 
@@ -84,5 +88,23 @@ fn main() -> anyhow::Result<()> {
             stox1.latency_ns / 1e3
         );
     }
+
+    // ----- registry-driven accuracy × energy Pareto front -----
+    // the open PsConvert story end to end: every registered spec plus the
+    // MTJ-sample and ADC-bit grids, task accuracy on the golden workload,
+    // cost via PsConvert::cost_key, `*` marks the non-dominated front
+    let gw = GoldenWorkload::new(base, 48, 9)?;
+    let specs = default_grid(&base, &[1, 2, 4, 8, 16, 32], &[1, 2, 4, 8]);
+    let pareto = run_sweep(
+        &specs,
+        &base,
+        &zoo::resnet20_cifar(),
+        "resnet20_cifar",
+        9,
+        stox_net::util::pool::default_threads(),
+        |spec| Ok(gw.accuracy(spec.build(&base)?.as_ref())),
+    )?;
+    println!("\n===== accuracy × energy Pareto sweep (ResNet-20 cost model) =====");
+    println!("{}", pareto.render_table());
     Ok(())
 }

@@ -23,7 +23,10 @@ from .kernels import ref
 
 OUT = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
 
-# (b, m, n, a_bits, w_bits, w_slice_bits, r_arr, n_samples, alpha, mode, seed)
+# (b, m, n, a_bits, w_bits, w_slice_bits, r_arr, n_samples, alpha, mode, seed
+#  [, params]) — params carries the mode-specific spec knobs (sparse bits,
+# inhomo base/extra) and is emitted verbatim into the JSON record so the
+# Rust side can rebuild the exact `PsConverterSpec`.
 CASES = [
     (2, 96, 7, 4, 4, 4, 64, 2, 4.0, "stox", 5),      # case 0 MUST be stox
     (2, 64, 5, 4, 4, 1, 32, 1, 4.0, "stox", 9),      # sliced weights
@@ -32,6 +35,11 @@ CASES = [
     (2, 80, 6, 4, 4, 4, 64, 1, 2.0, "expected", 7),
     (2, 80, 6, 8, 8, 2, 64, 1, 4.0, "ideal", 7),
     (1, 50, 4, 2, 2, 1, 64, 3, 4.0, "stox", 11),     # low precision, multi-sample
+    # registry-only converters (PR-1 additions) — pinned against the oracle
+    (2, 96, 7, 4, 4, 4, 64, 1, 4.0, "sparse", 13, {"bits": 4}),
+    (1, 300, 8, 4, 4, 4, 256, 1, 4.0, "sparse", 21, {"bits": 2}),
+    (2, 64, 5, 4, 4, 1, 32, 1, 4.0, "inhomo", 23, {"base": 1, "extra": 3}),
+    (1, 50, 4, 4, 4, 4, 64, 1, 4.0, "inhomo", 29, {"base": 2, "extra": 2}),
 ]
 
 
@@ -41,7 +49,9 @@ def rand_unit(rs: np.random.RandomState, n: int) -> np.ndarray:
 
 def main() -> None:
     out = []
-    for b, m, n, ab, wb, ws, r_arr, ns, alpha, mode, seed in CASES:
+    for case in CASES:
+        b, m, n, ab, wb, ws, r_arr, ns, alpha, mode, seed = case[:11]
+        params: dict = case[11] if len(case) > 11 else {}
         cfg = ref.StoxConfig(
             a_bits=ab,
             w_bits=wb,
@@ -51,29 +61,32 @@ def main() -> None:
             n_samples=ns,
             alpha=alpha,
             mode=mode,
+            sparse_bits=params.get("bits", 4),
+            base_samples=params.get("base", 1),
+            extra_samples=params.get("extra", 3),
         )
         rs = np.random.RandomState(1000 + seed)
         a = rand_unit(rs, b * m).reshape(b, m)
         w = rand_unit(rs, m * n).reshape(m, n)
         o = np.asarray(ref.stox_mvm(a, w, cfg, seed=seed), dtype=np.float32)
-        out.append(
-            {
-                "b": b,
-                "m": m,
-                "n": n,
-                "a_bits": ab,
-                "w_bits": wb,
-                "w_slice_bits": ws,
-                "r_arr": r_arr,
-                "n_samples": ns,
-                "alpha": alpha,
-                "mode": mode,
-                "seed": seed,
-                "a": [float(v) for v in a.reshape(-1)],
-                "w": [float(v) for v in w.reshape(-1)],
-                "out": [float(v) for v in o.reshape(-1)],
-            }
-        )
+        record = {
+            "b": b,
+            "m": m,
+            "n": n,
+            "a_bits": ab,
+            "w_bits": wb,
+            "w_slice_bits": ws,
+            "r_arr": r_arr,
+            "n_samples": ns,
+            "alpha": alpha,
+            "mode": mode,
+            "seed": seed,
+            "a": [float(v) for v in a.reshape(-1)],
+            "w": [float(v) for v in w.reshape(-1)],
+            "out": [float(v) for v in o.reshape(-1)],
+        }
+        record.update(params)
+        out.append(record)
     OUT.mkdir(parents=True, exist_ok=True)
     path = OUT / "mvm_golden.json"
     path.write_text(json.dumps(out))

@@ -33,7 +33,13 @@ import jax.numpy as jnp
 
 from . import rng
 
+# Modes every backend implements (the Pallas kernel included — test_kernel
+# parametrizes its parity suite over this tuple).
 MODES = ("stox", "sa", "expected", "ideal")
+# Oracle-only converter modes (the Rust registry implements them; golden
+# vectors pin the Rust side against this oracle — gen_golden.py).
+ORACLE_ONLY_MODES = ("sparse", "inhomo")
+ALL_MODES = MODES + ORACLE_ONLY_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +54,14 @@ class StoxConfig:
       * ``"sa"``       — deterministic 1-bit sense amplifier (alpha → inf)
       * ``"expected"`` — infinite-sample limit, PS → tanh(alpha·ps)
       * ``"ideal"``    — no PS quantization at all (full-precision ADC)
+      * ``"sparse"``   — sparsity-aware low-bit ADC (``sparse_bits``): column
+        slices whose partial sums are all exactly zero skip conversion,
+        everything else is midtread-quantized (Rust ``SparseAdcConv``)
+      * ``"inhomo"``   — §3.2.3 inhomogeneous MTJ sampling: the read count
+        of a (stream i, slice j) group grows linearly with its bit
+        significance, from ``base_samples`` at the LSB to ``base_samples +
+        extra_samples`` at the MSB; outputs are normalized sample means
+        (Rust ``InhomogeneousMtjConv``)
     """
 
     a_bits: int = 4
@@ -58,18 +72,29 @@ class StoxConfig:
     n_samples: int = 1
     alpha: float = 4.0
     mode: str = "stox"
+    # sparse-ADC resolution (mode == "sparse")
+    sparse_bits: int = 4
+    # inhomogeneous sampling range (mode == "inhomo")
+    base_samples: int = 1
+    extra_samples: int = 3
 
     def __post_init__(self):
         if self.a_bits % self.a_stream_bits != 0:
             raise ValueError("a_bits must be divisible by a_stream_bits")
         if self.w_bits % self.w_slice_bits != 0:
             raise ValueError("w_bits must be divisible by w_slice_bits")
-        if self.mode not in MODES:
-            raise ValueError(f"mode must be one of {MODES}")
+        if self.mode not in ALL_MODES:
+            raise ValueError(f"mode must be one of {ALL_MODES}")
         if self.n_samples < 1:
             raise ValueError("n_samples >= 1")
         if self.r_arr < 1:
             raise ValueError("r_arr >= 1")
+        if not 1 <= self.sparse_bits <= 16:
+            raise ValueError("sparse_bits in 1..=16")
+        if self.base_samples < 1:
+            raise ValueError("base_samples >= 1")
+        if self.extra_samples < 0:
+            raise ValueError("extra_samples >= 0")
 
     @property
     def n_streams(self) -> int:
@@ -222,6 +247,85 @@ def ps_counter_base(
     )
 
 
+def quant_midtread(ps: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Midtread uniform quantizer over [-1, 1] (N-bit SAR ADC readout).
+
+    Expression-identical with the Rust ``quant_midtread`` (``2·u/levels −
+    1``, round-half-even): same f32 operations, same bits.
+    """
+    levels = jnp.float32((1 << bits) - 1)
+    u = jnp.round((jnp.clip(ps, -1.0, 1.0) + 1.0) * 0.5 * levels)
+    return 2.0 * u / levels - 1.0
+
+
+def sparse_adc_convert(ps: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Sparsity-aware low-bit ADC (Rust ``SparseAdcConv``).
+
+    A column slice is one (b, k, i, j) group over the N output columns;
+    groups whose partial sums are all exactly zero skip conversion (output
+    0, no ADC action), everything else quantizes like the plain N-bit ADC.
+    """
+    # ps: [B, K, N, I, J]; the column-slice axis is N (axis 2)
+    zero_group = jnp.all(ps == 0.0, axis=2, keepdims=True)
+    return jnp.where(zero_group, jnp.float32(0.0), quant_midtread(ps, bits))
+
+
+def inhomo_sample_table(cfg: StoxConfig) -> list[list[int]]:
+    """Per-(stream i, slice j) read counts of §3.2.3 inhomogeneous sampling.
+
+    ``n(i, j) = base + round(extra · sig(i, j) / sig_max)`` with
+    ``sig = i·a_stream_bits + j·w_slice_bits`` — round half *away from
+    zero*, matching the Rust ``InhomogeneousMtjConv::new`` (f64 ``round``).
+    """
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    da, dw = cfg.a_stream_bits, cfg.w_slice_bits
+    base = max(1, cfg.base_samples)
+    sig_max = (i_n - 1) * da + (j_n - 1) * dw
+    table = []
+    for i in range(i_n):
+        row = []
+        for j in range(j_n):
+            sig = i * da + j * dw
+            if sig_max == 0:
+                n = base + cfg.extra_samples
+            else:
+                n = base + int(
+                    math.floor(cfg.extra_samples * sig / sig_max + 0.5)
+                )
+            row.append(max(1, n))
+        table.append(row)
+    return table
+
+
+def inhomo_convert(
+    ps: jnp.ndarray, cfg: StoxConfig, seed, counter_base: jnp.ndarray
+) -> jnp.ndarray:
+    """§3.2.3 inhomogeneous MTJ sampling (Rust ``InhomogeneousMtjConv``).
+
+    Each (stream, slice) group draws its own ``n(i, j)`` reads; element
+    counters advance in blocks of ``n_max = base + extra`` so every group
+    owns a disjoint counter range (no draw reused), and outputs are
+    normalized sample means so the shift-and-add normalization stays
+    uniform (samples = 1).
+    """
+    table = inhomo_sample_table(cfg)
+    n_max = max(1, cfg.base_samples) + cfg.extra_samples
+    p = mtj_probability(ps, cfg.alpha)
+    out = jnp.zeros_like(ps)
+    for i in range(cfg.n_streams):
+        for j in range(cfg.n_slices):
+            n_ij = table[i][j]
+            total = jnp.zeros_like(ps[..., i, j])
+            for s in range(n_ij):
+                c = counter_base[..., i, j] * jnp.uint32(n_max) + jnp.uint32(s)
+                u = rng.uniform01(seed, c)
+                total = total + jnp.where(u < p[..., i, j], 1.0, -1.0)
+            # reciprocal multiply, not division — bitwise what Rust does
+            inv = jnp.float32(1.0) / jnp.float32(n_ij)
+            out = out.at[..., i, j].set(total * inv)
+    return out
+
+
 def convert_ps(
     ps: jnp.ndarray, cfg: StoxConfig, seed, counter_base: jnp.ndarray | None
 ) -> tuple[jnp.ndarray, int]:
@@ -232,6 +336,11 @@ def convert_ps(
         return jnp.tanh(cfg.alpha * ps), 1
     if cfg.mode == "sa":
         return jnp.where(ps >= 0.0, 1.0, -1.0), 1
+    if cfg.mode == "sparse":
+        return sparse_adc_convert(ps, cfg.sparse_bits), 1
+    if cfg.mode == "inhomo":
+        assert counter_base is not None
+        return inhomo_convert(ps, cfg, seed, counter_base), 1
     assert counter_base is not None
     conv = mtj_sample_counts(ps, cfg.alpha, cfg.n_samples, seed, counter_base)
     return conv, cfg.n_samples
@@ -259,7 +368,9 @@ def stox_mvm(a: jnp.ndarray, w: jnp.ndarray, cfg: StoxConfig, seed=0) -> jnp.nda
     n = w.shape[1]
     ps = partial_sums(a, w, cfg)
     base = (
-        ps_counter_base(b_sz, cfg.n_arrs(m), n, cfg) if cfg.mode == "stox" else None
+        ps_counter_base(b_sz, cfg.n_arrs(m), n, cfg)
+        if cfg.mode in ("stox", "inhomo")
+        else None
     )
     conv, samples = convert_ps(ps, cfg, seed, base)
     return shift_and_add(conv, cfg, samples)

@@ -1,0 +1,121 @@
+"""Oracle semantics of the registry-only PS converters (sparse / inhomo).
+
+These are the python-side definitions the Rust ``SparseAdcConv`` /
+``InhomogeneousMtjConv`` are pinned against through the golden vectors
+(``compile/gen_golden.py`` → ``rust/tests/data/mvm_golden.json`` →
+``rust/tests/converter_equiv.rs``).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def _rand(seed: int, n: int) -> np.ndarray:
+    rs = np.random.RandomState(seed)
+    return (rs.rand(n).astype(np.float32) * 2.0 - 1.0).astype(np.float32)
+
+
+def _case(mode: str, **kw) -> ref.StoxConfig:
+    return ref.StoxConfig(r_arr=64, mode=mode, **kw)
+
+
+def test_sparse_matches_plain_quant_on_dense_ps():
+    a = _rand(1, 2 * 96).reshape(2, 96)
+    w = _rand(2, 96 * 5).reshape(96, 5)
+    cfg = _case("sparse", sparse_bits=4)
+    ps = ref.partial_sums(jnp.asarray(a), jnp.asarray(w), cfg)
+    conv = ref.sparse_adc_convert(ps, 4)
+    # random PS are essentially never all-zero per column slice, so the
+    # sparse path must agree with the plain midtread quantizer
+    assert np.allclose(np.asarray(conv), np.asarray(ref.quant_midtread(ps, 4)))
+
+
+def test_sparse_skips_all_zero_column_slices():
+    ps = jnp.zeros((1, 1, 6, 2, 2), jnp.float32)
+    out = np.asarray(ref.sparse_adc_convert(ps, 4))
+    assert (out == 0.0).all()
+    # a real 4b midtread ADC would read 1/15, not 0 — the skip is the
+    # approximation that buys the energy
+    assert float(ref.quant_midtread(jnp.float32(0.0), 4)) != 0.0
+
+
+def test_inhomo_table_monotone_and_clamped():
+    cfg = _case("inhomo", w_slice_bits=1, base_samples=1, extra_samples=3)
+    table = ref.inhomo_sample_table(cfg)  # 4 streams x 4 slices
+    assert table[0][0] == 1 and table[3][3] == 4
+    flat = [n for row in table for n in row]
+    assert min(flat) >= 1 and max(flat) <= 4
+    for i in range(3):
+        assert table[i + 1][0] >= table[i][0]
+        assert table[0][i + 1] >= table[0][i]
+
+
+def test_inhomo_with_no_extra_matches_uniform_stox():
+    a = _rand(3, 2 * 64).reshape(2, 64)
+    w = _rand(4, 64 * 5).reshape(64, 5)
+    for base in (1, 2, 4):
+        uni = ref.stox_mvm(
+            jnp.asarray(a),
+            jnp.asarray(w),
+            _case("stox", n_samples=base),
+            seed=7,
+        )
+        inh = ref.stox_mvm(
+            jnp.asarray(a),
+            jnp.asarray(w),
+            _case("inhomo", base_samples=base, extra_samples=0),
+            seed=7,
+        )
+        # identical draws; only where the 1/n normalization is applied
+        # differs, so agreement is to f32 rounding
+        assert np.abs(np.asarray(uni) - np.asarray(inh)).max() < 1e-5
+
+
+def test_inhomo_outputs_bounded_and_deterministic():
+    a = _rand(5, 2 * 96).reshape(2, 96)
+    w = _rand(6, 96 * 4).reshape(96, 4)
+    cfg = _case("inhomo", w_slice_bits=1, base_samples=1, extra_samples=3)
+    o1 = np.asarray(ref.stox_mvm(jnp.asarray(a), jnp.asarray(w), cfg, seed=3))
+    o2 = np.asarray(ref.stox_mvm(jnp.asarray(a), jnp.asarray(w), cfg, seed=3))
+    assert (o1 == o2).all()
+    assert np.abs(o1).max() <= 1.0 + 1e-5
+
+
+def test_inhomo_more_extra_reduces_variance():
+    a = _rand(8, 1 * 128).reshape(1, 128)
+    w = _rand(9, 128 * 6).reshape(128, 6)
+    exp = np.asarray(
+        ref.stox_mvm(jnp.asarray(a), jnp.asarray(w), _case("expected"), seed=0)
+    )
+
+    def mse(extra: int) -> float:
+        cfg = _case(
+            "inhomo", w_slice_bits=1, base_samples=1, extra_samples=extra
+        )
+        acc = 0.0
+        for s in range(16):
+            o = np.asarray(
+                ref.stox_mvm(jnp.asarray(a), jnp.asarray(w), cfg, seed=s)
+            )
+            acc += float(((o - exp) ** 2).mean())
+        return acc / 16
+
+    assert mse(15) < mse(0)
+
+
+def test_mode_validation():
+    import pytest
+
+    with pytest.raises(ValueError):
+        ref.StoxConfig(mode="bogus")
+    with pytest.raises(ValueError):
+        ref.StoxConfig(mode="sparse", sparse_bits=0)
+    with pytest.raises(ValueError):
+        ref.StoxConfig(mode="inhomo", base_samples=0)
+    # frozen dataclass still supports replace-based mode switches
+    cfg = dataclasses.replace(ref.StoxConfig(), mode="sparse")
+    assert cfg.mode == "sparse"

@@ -1,0 +1,46 @@
+//! Sweep-path bench: times the registry-driven accuracy × energy Pareto
+//! sweep (`arch::sweep::run_sweep`) over the default grid on the golden
+//! workload, at 1 thread vs the pool fan-out — the perf tracking the
+//! ISSUE asks for, and a smoke report of the front itself.
+//!
+//! Run with `cargo bench --bench sweep`.
+
+use stox_net::arch::sweep::{default_grid, run_sweep, GoldenWorkload};
+use stox_net::imc::StoxConfig;
+use stox_net::model::zoo;
+use stox_net::util::bench;
+
+fn main() {
+    let cfg = StoxConfig::default();
+    let layers = zoo::resnet20_cifar();
+    let gw = GoldenWorkload::new(cfg, 32, 1).expect("golden workload");
+    let specs = default_grid(&cfg, &[1, 2, 4, 8], &[2, 4, 8]);
+    println!(
+        "sweep grid: {} specs, {} golden inputs\n",
+        specs.len(),
+        gw.n_inputs()
+    );
+
+    for threads in [1usize, stox_net::util::pool::default_threads()] {
+        bench::quick(&format!("sweep/golden32/threads={threads}"), || {
+            let r = run_sweep(
+                &specs,
+                &cfg,
+                &layers,
+                "resnet20_cifar",
+                1,
+                threads,
+                |spec| Ok(gw.accuracy(spec.build(&cfg)?.as_ref())),
+            )
+            .expect("sweep");
+            bench::black_box(r.points.len());
+        });
+    }
+
+    // the front itself, once — the bench doubles as a smoke report
+    let r = run_sweep(&specs, &cfg, &layers, "resnet20_cifar", 1, 4, |spec| {
+        Ok(gw.accuracy(spec.build(&cfg)?.as_ref()))
+    })
+    .expect("sweep");
+    println!("\n{}", r.render_table());
+}

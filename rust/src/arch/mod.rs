@@ -13,15 +13,22 @@
 //!   all-column-parallel MTJ conversion (Fig. 8);
 //! * [`energy`] — per-layer and per-network energy/latency/area/EDP for a
 //!   design configuration (HPFA / SFA / StoX / Mix), behind Fig. 9;
+//! * [`sweep`] — registry-driven accuracy × energy Pareto sweep over all
+//!   PS-converter specs (`stox-cli sweep`, the Fig. 9 trade-off front);
 //! * [`tile`] — chip→tile→IMA→crossbar hierarchy instance counting.
 
 pub mod components;
 pub mod energy;
 pub mod mapper;
 pub mod pipeline;
+pub mod sweep;
 pub mod tile;
 
 pub use components::{ComponentCosts, PsProcessing};
 pub use energy::{DesignConfig, DesignReport, evaluate_design, evaluate_network};
 pub use mapper::{LayerShape, MappedLayer};
 pub use pipeline::PipelineModel;
+pub use sweep::{
+    default_grid, pareto_front_flags, parse_grid, run_sweep, GoldenWorkload, SweepPoint,
+    SweepResult,
+};

@@ -22,14 +22,35 @@ pub struct Request {
     pub reply: mpsc::Sender<Reply>,
 }
 
-/// One reply per request.  `result` is `Err(message)` when the executor
-/// failed on the batch this request rode in — every member of a failed
-/// batch receives the error, so no client ever blocks forever on a
-/// dropped reply channel.
+/// One reply per request.
+///
+/// # The `result` error contract (fail-loud batches)
+///
+/// `result` is `Err(message)` when the executor failed on the batch this
+/// request rode in.  The server's `execute_batch` guarantees, for every
+/// submitted [`Request`], exactly one of:
+///
+/// * `Ok(logits)` — the batch executed; `logits` is this request's slice
+///   of the batch output, or
+/// * `Err(message)` — the executor returned an error; **every** member of
+///   the failed batch receives the same message, and the batch is *not*
+///   silently retried.
+///
+/// A reply channel is therefore never dropped with a pending `recv()` —
+/// clients can block on [`std::sync::mpsc::Receiver::recv`] without a
+/// timeout (the pre-PR-1 behaviour dropped the channel on executor error,
+/// deadlocking clients).  Retry/requeue of transient failures is the
+/// caller's policy decision: inspect the `Err` and resubmit if desired
+/// (see ROADMAP).  [`Reply::logits`] converts the error side into
+/// `anyhow::Error` for `?`-style call sites.
 #[derive(Debug, Clone)]
 pub struct Reply {
+    /// Per-request logits, or the executor failure message (see the
+    /// error contract above).
     pub result: Result<Vec<f32>, String>,
+    /// Wall-clock time from batch execution start to reply.
     pub latency: Duration,
+    /// Size of the batch this request was executed in.
     pub batch: usize,
 }
 

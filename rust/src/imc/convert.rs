@@ -186,6 +186,7 @@ impl PsConvert for IdealAdcConv {
 /// N-bit SAR ADC (midtread uniform over the normalized PS range).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantAdcConv {
+    /// ADC resolution in bits (1..=16).
     pub bits: u32,
 }
 
@@ -223,6 +224,7 @@ impl PsConvert for QuantAdcConv {
 /// else quantizes like [`QuantAdcConv`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SparseAdcConv {
+    /// ADC resolution in bits (1..=16) for non-skipped slices.
     pub bits: u32,
 }
 
@@ -285,6 +287,7 @@ impl PsConvert for SenseAmpConv {
 /// variance-free reference. Charged as a 1-sample MTJ in the cost model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExpectedMtjConv {
+    /// Eq. 1 tanh slope.
     pub alpha: f32,
 }
 
@@ -316,7 +319,9 @@ impl PsConvert for ExpectedMtjConv {
 /// unnormalized ±1 total; the kernel divides by [`PsConvert::samples`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StochasticMtjConv {
+    /// Eq. 1 tanh slope.
     pub alpha: f32,
+    /// Temporal ±1 reads summed per conversion.
     pub n_samples: u32,
 }
 
@@ -366,6 +371,7 @@ impl PsConvert for StochasticMtjConv {
 /// extra reads actually pay (the Fig. 5 sensitivity signal).
 #[derive(Debug, Clone, PartialEq)]
 pub struct InhomogeneousMtjConv {
+    /// Eq. 1 tanh slope.
     pub alpha: f32,
     base: u32,
     extra: u32,
@@ -375,6 +381,9 @@ pub struct InhomogeneousMtjConv {
 }
 
 impl InhomogeneousMtjConv {
+    /// Build the per-(stream, slice) sample table for hardware config
+    /// `cfg`: `base_samples` reads at the LSB group growing linearly to
+    /// `base_samples + extra_samples` at the MSB group.
     pub fn new(alpha: f32, base_samples: u32, extra_samples: u32, cfg: &StoxConfig) -> Self {
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
         let (da, dw) = (cfg.a_stream_bits, cfg.w_slice_bits);
@@ -479,16 +488,53 @@ impl PsConvert for InhomogeneousMtjConv {
 /// [`PsConverterSpec::build`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum PsConverterSpec {
+    /// Infinite-precision readout (mode `ideal`) → [`IdealAdcConv`].
     IdealAdc,
-    QuantAdc { bits: u32 },
-    SparseAdc { bits: u32 },
+    /// N-bit SAR ADC (mode `quant:bits=N`) → [`QuantAdcConv`].
+    QuantAdc {
+        /// ADC resolution, 1..=16.
+        bits: u32,
+    },
+    /// Sparsity-aware low-bit ADC (mode `sparse:bits=N`) →
+    /// [`SparseAdcConv`].
+    SparseAdc {
+        /// ADC resolution, 1..=16.
+        bits: u32,
+    },
+    /// Deterministic 1-bit sense amplifier (mode `sa`) → [`SenseAmpConv`].
     SenseAmp,
-    ExpectedMtj { alpha: f32 },
-    StochasticMtj { alpha: f32, n_samples: u32 },
-    InhomogeneousMtj { alpha: f32, base_samples: u32, extra_samples: u32 },
+    /// Infinite-sample tanh limit (mode `expected:alpha=A`) →
+    /// [`ExpectedMtjConv`].
+    ExpectedMtj {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+    },
+    /// Stochastic SOT-MTJ sampling (mode `stox:alpha=A,samples=N`) →
+    /// [`StochasticMtjConv`].
+    StochasticMtj {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+        /// Temporal reads per conversion.
+        n_samples: u32,
+    },
+    /// §3.2.3 inhomogeneous sampling (mode `inhomo:alpha=A,base=B,extra=E`)
+    /// → [`InhomogeneousMtjConv`].
+    InhomogeneousMtj {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+        /// Reads of the least-significant (stream, slice) group.
+        base_samples: u32,
+        /// Additional reads granted linearly up to the MSB group.
+        extra_samples: u32,
+    },
     /// A mode the built-in set does not know: resolved (or rejected) by
     /// whatever [`ConverterRegistry`] builds it — the open end of the API.
-    Custom { name: String, params: Vec<(String, f32)> },
+    Custom {
+        /// Registry key the spec resolves under.
+        name: String,
+        /// Raw `k=v` parameters, in parse order.
+        params: Vec<(String, f32)>,
+    },
 }
 
 /// Default α of Eq. 1 when neither the mode string nor the caller supplies

@@ -25,13 +25,34 @@ use super::convert::{
 use crate::arch::components::PsProcessing;
 use crate::stats::rng::CounterRng;
 
+/// The closed PS-converter family, kept as the scalar reference
+/// implementation for the open [`PsConvert`] trait (see the module doc;
+/// equivalence is pinned by `tests/converter_equiv.rs`).  Registry-only
+/// converters (`sparse`, `inhomo`) have no variant here on purpose.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PsConverter {
+    /// Infinite-precision readout (HPFA-style functional reference).
     IdealAdc,
-    QuantAdc { bits: u32 },
+    /// N-bit SAR ADC, midtread uniform over the normalized PS range.
+    QuantAdc {
+        /// ADC resolution in bits.
+        bits: u32,
+    },
+    /// Deterministic 1-bit sign readout ("1b-SA").
     SenseAmp,
-    StochasticMtj { alpha: f32, n_samples: u32 },
-    ExpectedMtj { alpha: f32 },
+    /// Stochastic SOT-MTJ: ±1 reads with `P(+1) = (tanh(α·ps)+1)/2`,
+    /// `n_samples` reads summed (Eq. 1 + §3.2.3 multi-sampling).
+    StochasticMtj {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+        /// Temporal reads per conversion.
+        n_samples: u32,
+    },
+    /// Infinite-sample limit `tanh(α·ps)` (training-time surrogate).
+    ExpectedMtj {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+    },
 }
 
 impl PsConverter {

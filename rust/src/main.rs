@@ -14,6 +14,10 @@
 //! * `fig9a`/`fig9b` — hardware-efficiency rollups;
 //! * `accuracy`    — native crossbar-model accuracy on the test set
 //!                   (`--converter` runs any registered PS-converter spec);
+//! * `sweep`       — registry-driven accuracy × energy Pareto sweep: every
+//!                   registered converter spec (plus MTJ sample-length and
+//!                   ADC bit-width grids) evaluated for task accuracy and
+//!                   joined with the Fig. 9 cost rollup (JSON/CSV + table);
 //! * `converters`  — list the PS-converter registry (the open PsConvert API);
 //! * `tables`      — pretty-print the python training sweeps (Tables 3/4,
 //!                   Fig. 7) from `python/results/*.json`.
@@ -22,6 +26,7 @@ use std::path::PathBuf;
 use stox_net::arch::components::ComponentCosts;
 use stox_net::arch::energy::{evaluate_network, DesignConfig};
 use stox_net::arch::pipeline::PipelineModel;
+use stox_net::arch::sweep::argmax;
 use stox_net::coordinator::server::{
     submit_all, Executor, NativeExecutor, PjrtExecutor,
 };
@@ -51,6 +56,12 @@ commands:
   fig9a
   fig9b
   accuracy     [--images N] [--batch B] [--converter SPEC]
+  sweep        [--images N] [--seed S] [--samples GRID] [--bits GRID]
+               [--specs A;B;..] [--workload resnet20|resnet18|resnet50]
+               [--threads N] [--out DIR] [--model]
+               (GRID: comma/range list, e.g. 1,2,4..8; --model scores
+                checkpoint accuracy from --artifacts instead of the
+                built-in golden workload)
   converters   (list the registered PS-converter modes)
   tables       [--results DIR]
   nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise)";
@@ -98,6 +109,7 @@ fn main() -> anyhow::Result<()> {
             args.usize("batch", 8),
             args.get("converter").map(|s| s.to_string()),
         ),
+        Some("sweep") => sweep(&artifacts, &args),
         Some("converters") => converters(),
         Some("tables") => tables(&PathBuf::from(
             args.string("results", "python/results"),
@@ -218,13 +230,6 @@ fn serve(
     Ok(())
 }
 
-fn argmax(v: &[f32]) -> usize {
-    v.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
 
 fn device_sim(points: usize, trials: u32) -> anyhow::Result<()> {
     let mtj = SotMtj::default();
@@ -476,6 +481,85 @@ fn converters() -> anyhow::Result<()> {
             spec.to_string(),
             built.label()
         );
+    }
+    Ok(())
+}
+
+/// Registry-driven accuracy × energy Pareto sweep (the ROADMAP follow-up
+/// that turns the PR-1 converter API into the paper's Fig. 9 trade-off
+/// front): every registered spec plus MTJ sample-length / ADC bit-width
+/// grids, task accuracy joined with the cost rollup via `cost_key()`,
+/// non-dominated front marked, JSON/CSV artifacts optionally written.
+fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    use stox_net::arch::sweep::{default_grid, parse_grid, run_sweep, GoldenWorkload};
+
+    let images = args.usize("images", 64);
+    let seed = args.u32("seed", 0);
+    let threads =
+        args.usize("threads", stox_net::util::pool::default_threads());
+    let samples = parse_grid(&args.string("samples", "1,2,4,8,16,32"))?;
+    let bits = parse_grid(&args.string("bits", "1..8"))?;
+    let workload = args.string("workload", "resnet20");
+    let layers = match workload.as_str() {
+        "resnet20" | "resnet20_cifar" => zoo::resnet20_cifar(),
+        "resnet18" | "resnet18_tiny" => zoo::resnet18_tiny(),
+        "resnet50" | "resnet50_tiny" => zoo::resnet50_tiny(),
+        w => anyhow::bail!(
+            "unknown sweep workload '{w}' (resnet20|resnet18|resnet50)"
+        ),
+    };
+
+    // hardware config: the trained manifest's when scoring a checkpoint
+    // (--model), the paper's 4w4a4bs default otherwise
+    let manifest = if args.flag("model") {
+        Some(Manifest::load(artifacts)?)
+    } else {
+        None
+    };
+    let cfg = manifest
+        .as_ref()
+        .map(|m| m.spec.stox_config())
+        .unwrap_or_default();
+    let mut specs = default_grid(&cfg, &samples, &bits);
+    if let Some(extra) = args.get("specs") {
+        // user-supplied additions, ';'-separated (specs contain commas)
+        for tok in extra.split(';').filter(|t| !t.trim().is_empty()) {
+            let s = PsConverterSpec::from_mode(tok, cfg.alpha, cfg.n_samples)?;
+            if !specs.iter().any(|e| e.to_string() == s.to_string()) {
+                specs.push(s);
+            }
+        }
+    }
+    println!(
+        "sweeping {} converter specs over {workload} ({threads} threads, seed {seed})",
+        specs.len()
+    );
+
+    let result = if let Some(manifest) = &manifest {
+        let store = WeightStore::load(manifest)?;
+        let test = TestSet::load(manifest)?;
+        let n = images.min(test.n);
+        run_sweep(&specs, &cfg, &layers, &workload, seed, threads, |spec| {
+            let model =
+                NativeModel::load(manifest, &store)?.with_converter_spec(spec)?;
+            Ok(model.accuracy(&test.images, &test.labels, n, 8, 777))
+        })?
+    } else {
+        let gw = GoldenWorkload::new(cfg, images, seed)?;
+        run_sweep(&specs, &cfg, &layers, &workload, seed, threads, |spec| {
+            Ok(gw.accuracy(spec.build(&cfg)?.as_ref()))
+        })?
+    };
+
+    println!("{}", result.render_table());
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let json_path = dir.join("sweep.json");
+        std::fs::write(&json_path, result.to_json().to_string())?;
+        let csv_path = dir.join("sweep.csv");
+        std::fs::write(&csv_path, result.to_csv())?;
+        println!("wrote {} and {}", json_path.display(), csv_path.display());
     }
     Ok(())
 }

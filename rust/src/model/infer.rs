@@ -361,12 +361,16 @@ impl NativeModel {
                 self.forward(&images[i * img_sz..(i + b) * img_sz], b, seed + i as u32);
             for bi in 0..b {
                 let row = &logits[bi * self.num_classes..(bi + 1) * self.num_classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                // first-max argmax: ties resolve to the lowest class index,
+                // matching numpy/jnp argmax (the python evaluation) and
+                // arch::sweep::argmax, so accuracies are comparable across
+                // the native, sweep, and python paths
+                let mut pred = 0usize;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > row[pred] {
+                        pred = k;
+                    }
+                }
                 if pred as i32 == labels[i + bi] {
                     correct += 1;
                 }

@@ -32,31 +32,60 @@ struct Case {
     n: usize,
     cfg: StoxConfig,
     mode: String,
+    /// Full converter spec string (`mode[:k=v,..]`) rebuilt from the
+    /// fixture's params — what the registry parses.
+    spec: String,
     seed: u32,
     a: Vec<f32>,
     w: Vec<f32>,
+    /// Oracle (python `ref.stox_mvm`) output for this case.
+    out: Vec<f32>,
+}
+
+/// Modes the legacy `PsConverter` enum can express (the enum-equivalence
+/// fixtures); `sparse` / `inhomo` exist only behind the registry.
+fn enum_mode(mode: &str) -> bool {
+    matches!(mode, "stox" | "sa" | "expected" | "ideal")
 }
 
 fn cases() -> Vec<Case> {
     golden()
         .iter()
-        .map(|case| Case {
-            b: case.get("b").unwrap().as_usize().unwrap(),
-            m: case.get("m").unwrap().as_usize().unwrap(),
-            n: case.get("n").unwrap().as_usize().unwrap(),
-            cfg: StoxConfig {
-                a_bits: case.get("a_bits").unwrap().as_u32().unwrap(),
-                w_bits: case.get("w_bits").unwrap().as_u32().unwrap(),
-                a_stream_bits: 1,
-                w_slice_bits: case.get("w_slice_bits").unwrap().as_u32().unwrap(),
-                r_arr: case.get("r_arr").unwrap().as_usize().unwrap(),
-                n_samples: case.get("n_samples").unwrap().as_u32().unwrap(),
-                alpha: case.get("alpha").unwrap().as_f64().unwrap() as f32,
-            },
-            mode: case.get("mode").unwrap().as_str().unwrap().to_string(),
-            seed: case.get("seed").unwrap().as_u32().unwrap(),
-            a: f32s(case.get("a").unwrap()),
-            w: f32s(case.get("w").unwrap()),
+        .map(|case| {
+            let mode = case.get("mode").unwrap().as_str().unwrap().to_string();
+            let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+            let spec = match mode.as_str() {
+                "sparse" => format!(
+                    "sparse:bits={}",
+                    case.get("bits").unwrap().as_u32().unwrap()
+                ),
+                "inhomo" => format!(
+                    "inhomo:alpha={alpha},base={},extra={}",
+                    case.get("base").unwrap().as_u32().unwrap(),
+                    case.get("extra").unwrap().as_u32().unwrap()
+                ),
+                m => m.to_string(),
+            };
+            Case {
+                b: case.get("b").unwrap().as_usize().unwrap(),
+                m: case.get("m").unwrap().as_usize().unwrap(),
+                n: case.get("n").unwrap().as_usize().unwrap(),
+                cfg: StoxConfig {
+                    a_bits: case.get("a_bits").unwrap().as_u32().unwrap(),
+                    w_bits: case.get("w_bits").unwrap().as_u32().unwrap(),
+                    a_stream_bits: 1,
+                    w_slice_bits: case.get("w_slice_bits").unwrap().as_u32().unwrap(),
+                    r_arr: case.get("r_arr").unwrap().as_usize().unwrap(),
+                    n_samples: case.get("n_samples").unwrap().as_u32().unwrap(),
+                    alpha,
+                },
+                mode,
+                spec,
+                seed: case.get("seed").unwrap().as_u32().unwrap(),
+                a: f32s(case.get("a").unwrap()),
+                w: f32s(case.get("w").unwrap()),
+                out: f32s(case.get("out").unwrap()),
+            }
         })
         .collect()
 }
@@ -78,6 +107,9 @@ fn legacy_converter(mode: &str, cfg: &StoxConfig) -> PsConverter {
 #[test]
 fn registry_converters_bit_identical_to_enum_on_golden_fixtures() {
     for (ci, c) in cases().iter().enumerate() {
+        if !enum_mode(&c.mode) {
+            continue; // registry-only converters: see the oracle test below
+        }
         let legacy = legacy_converter(&c.mode, &c.cfg);
         let spec =
             PsConverterSpec::from_mode(&c.mode, c.cfg.alpha, c.cfg.n_samples).unwrap();
@@ -111,6 +143,36 @@ fn quant_adc_trait_matches_enum_on_fixture_shapes() {
             assert_eq!(via_enum, via_trait, "case {ci} quant {bits}b");
         }
     }
+}
+
+/// The registry-only converters (`sparse`, `inhomo`) are pinned against
+/// the python oracle: their golden fixtures carry `ref.stox_mvm` outputs
+/// computed with the shared counter RNG, so the Rust converters must
+/// reproduce them to f32 rounding (same tolerance as `tests/parity.rs`).
+#[test]
+fn sparse_and_inhomo_match_python_oracle() {
+    let mut pinned = 0usize;
+    for (ci, c) in cases().iter().enumerate() {
+        if enum_mode(&c.mode) {
+            continue;
+        }
+        let spec: PsConverterSpec = c.spec.parse().unwrap();
+        let conv = spec.build(&c.cfg).unwrap();
+        let got = stox_mvm(&c.a, &c.w, c.b, c.m, c.n, c.cfg, conv.as_ref(), c.seed)
+            .unwrap();
+        assert_eq!(got.len(), c.out.len(), "case {ci} ({}) shape", c.spec);
+        let mut max_err = 0.0f32;
+        for (g, w) in got.iter().zip(&c.out) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(
+            max_err < 1e-5,
+            "case {ci} ({}): max err vs oracle {max_err}",
+            c.spec
+        );
+        pinned += 1;
+    }
+    assert!(pinned >= 4, "expected >= 4 oracle-pinned sparse/inhomo cases");
 }
 
 /// New converters run end-to-end through the MVM on the fixture shapes:

@@ -1,0 +1,189 @@
+//! Sweep coverage (ISSUE 2): a fixed-seed run over a fixed spec set must
+//! produce a byte-stable Pareto JSON (pinned by a golden file), the front
+//! must be non-dominated (property-tested), and the stochastic-MTJ spec
+//! must dominate the full-precision-ADC spec on EDP as in the paper.
+
+use std::path::PathBuf;
+use stox_net::arch::sweep::{pareto_front_flags, run_sweep, GoldenWorkload, SweepResult};
+use stox_net::imc::{PsConverterSpec, StoxConfig};
+use stox_net::model::zoo;
+use stox_net::util::prop;
+
+/// Fixed spec set (≥ 3, covering ADC / SA / MTJ / sparse / inhomo) — the
+/// golden sweep input.  Canonical strings, so the JSON is reproducible.
+fn fixed_specs() -> Vec<PsConverterSpec> {
+    [
+        "ideal",
+        "quant:bits=8",
+        "sparse:bits=4",
+        "sa",
+        "expected:alpha=4",
+        "stox:alpha=4,samples=1",
+        "stox:alpha=4,samples=4",
+        "inhomo:alpha=4,base=1,extra=3",
+    ]
+    .iter()
+    .map(|s| s.parse().unwrap())
+    .collect()
+}
+
+fn fixed_sweep(threads: usize) -> SweepResult {
+    let cfg = StoxConfig::default();
+    let gw = GoldenWorkload::new(cfg, 48, 2024).unwrap();
+    run_sweep(
+        &fixed_specs(),
+        &cfg,
+        &zoo::resnet20_cifar(),
+        "resnet20_cifar",
+        2024,
+        threads,
+        |spec| Ok(gw.accuracy(spec.build(&cfg)?.as_ref())),
+    )
+    .unwrap()
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/sweep_golden.json")
+}
+
+/// The same (specs, seed) input must serialize to the same bytes on every
+/// run and every thread count, and match the committed golden file.
+/// Regenerate intentionally with `UPDATE_SWEEP_GOLDEN=1 cargo test`; on a
+/// checkout without the golden file the first run blesses it.
+#[test]
+fn sweep_json_is_byte_stable() {
+    let j1 = fixed_sweep(1).to_json().to_string();
+    let j2 = fixed_sweep(8).to_json().to_string();
+    assert_eq!(j1, j2, "sweep must not depend on thread count");
+    let j3 = fixed_sweep(1).to_json().to_string();
+    assert_eq!(j1, j3, "sweep must be deterministic run-to-run");
+
+    let path = golden_path();
+    if std::env::var("UPDATE_SWEEP_GOLDEN").is_ok() || !path.exists() {
+        // bless: the builder container has no rustc, so the file is first
+        // produced by a toolchain run (see ROADMAP — commit it then; until
+        // that lands, the determinism assertions above are the gate).
+        // Ignore write errors so read-only checkouts still pass the
+        // determinism half of this test.
+        eprintln!(
+            "sweep_golden.json was missing — blessed a fresh golden at {} \
+             (byte comparison SKIPPED this run; commit the file to arm it)",
+            path.display()
+        );
+        let _ = std::fs::write(&path, &j1);
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        j1,
+        want.trim_end(),
+        "sweep JSON diverged from rust/tests/data/sweep_golden.json; \
+         rerun with UPDATE_SWEEP_GOLDEN=1 if the change is intentional"
+    );
+}
+
+/// The marked front is exactly the non-dominated set: no front point is
+/// strictly dominated, and every off-front point is covered by a front
+/// point that is at least as good on both axes.
+#[test]
+fn pareto_front_is_non_dominated_and_covering() {
+    prop::check("pareto front", 200, |g| {
+        let n = g.usize_in(1, 40);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                (
+                    // coarse values force acc/EDP ties so the duplicate
+                    // handling is exercised, not just the generic case
+                    (g.usize_in(0, 10) as f64) / 10.0,
+                    (g.usize_in(1, 20) as f64) * 5.0,
+                )
+            })
+            .collect();
+        let flags = pareto_front_flags(&pts);
+        if !flags.iter().any(|&f| f) {
+            return Err("front is empty".into());
+        }
+        for (i, &fi) in flags.iter().enumerate() {
+            if fi {
+                for (j, q) in pts.iter().enumerate() {
+                    let strictly_dominates = j != i
+                        && q.1 <= pts[i].1
+                        && q.0 >= pts[i].0
+                        && (q.1 < pts[i].1 || q.0 > pts[i].0);
+                    if strictly_dominates {
+                        return Err(format!(
+                            "front point {i} {:?} dominated by {j} {q:?}",
+                            pts[i]
+                        ));
+                    }
+                }
+            } else {
+                let covered = flags.iter().enumerate().any(|(j, &fj)| {
+                    fj && pts[j].1 <= pts[i].1 && pts[j].0 >= pts[i].0
+                });
+                if !covered {
+                    return Err(format!(
+                        "off-front point {i} {:?} not covered by the front",
+                        pts[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The sweep result itself satisfies the same dominance contract.
+#[test]
+fn sweep_front_is_non_dominated() {
+    let r = fixed_sweep(4);
+    let front = r.front();
+    assert!(!front.is_empty());
+    for p in &r.points {
+        if p.on_front {
+            for q in &r.points {
+                let strictly_dominates = q.spec != p.spec
+                    && q.edp_pj_ns <= p.edp_pj_ns
+                    && q.accuracy >= p.accuracy
+                    && (q.edp_pj_ns < p.edp_pj_ns || q.accuracy > p.accuracy);
+                assert!(
+                    !strictly_dominates,
+                    "front point {} dominated by {}",
+                    p.spec, q.spec
+                );
+            }
+        }
+    }
+}
+
+/// The paper's ordering: stochastic MTJ processing dominates the
+/// full-precision ADC on EDP, with the sparse low-bit ADC in between;
+/// the ideal (label-defining) readout scores accuracy 1.0.
+#[test]
+fn stochastic_mtj_dominates_fp_adc_on_edp() {
+    let r = fixed_sweep(2);
+    let mtj = r.point("stox:alpha=4,samples=1").unwrap();
+    let fp = r.point("ideal").unwrap();
+    let sparse = r.point("sparse:bits=4").unwrap();
+    assert!(
+        mtj.edp_pj_ns < fp.edp_pj_ns,
+        "MTJ EDP {} must beat FP-ADC EDP {}",
+        mtj.edp_pj_ns,
+        fp.edp_pj_ns
+    );
+    assert!(
+        mtj.edp_pj_ns < sparse.edp_pj_ns && sparse.edp_pj_ns < fp.edp_pj_ns,
+        "sparse ADC must sit between MTJ and FP ADC on EDP"
+    );
+    assert_eq!(fp.accuracy, 1.0, "ideal readout defines the golden labels");
+    // multi-sampling trades EDP for accuracy (§3.2.3) — allow a small
+    // per-input quantum of slack on the 48-input golden set
+    let m4 = r.point("stox:alpha=4,samples=4").unwrap();
+    assert!(m4.edp_pj_ns > mtj.edp_pj_ns);
+    assert!(
+        m4.accuracy >= mtj.accuracy - 3.0 / 48.0,
+        "4-sample accuracy {} collapsed below 1-sample {}",
+        m4.accuracy,
+        mtj.accuracy
+    );
+}
