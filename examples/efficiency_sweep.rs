@@ -10,8 +10,10 @@
 
 use stox_net::arch::components::ComponentCosts;
 use stox_net::arch::energy::{evaluate_network, DesignConfig};
-use stox_net::arch::sweep::{default_grid, run_sweep, GoldenWorkload};
-use stox_net::imc::StoxConfig;
+use stox_net::arch::sweep::{
+    default_grid, parse_precision_tags, run_matrix_sweep, GoldenWorkload,
+};
+use stox_net::imc::{PsConverterSpec, StoxConfig};
 use stox_net::model::zoo;
 
 /// Spec-built design point (the open `PsConvert` registry path: the same
@@ -89,22 +91,36 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ----- registry-driven accuracy × energy Pareto front -----
-    // the open PsConvert story end to end: every registered spec plus the
-    // MTJ-sample and ADC-bit grids, task accuracy on the golden workload,
-    // cost via PsConvert::cost_key, `*` marks the non-dominated front
-    let gw = GoldenWorkload::new(base, 48, 9)?;
-    let specs = default_grid(&base, &[1, 2, 4, 8, 16, 32], &[1, 2, 4, 8]);
-    let pareto = run_sweep(
-        &specs,
-        &base,
+    // ----- the Fig. 9a design matrix as one Pareto front -----
+    // precision tags × every registered converter spec (plus MTJ-sample
+    // and ADC-bit grids): task accuracy on a per-tag golden workload,
+    // cost via PsConvert::cost_key, `*` marks the joint non-dominated
+    // front — HPFA-class (`ideal` at 8w8a), SFA-class (`sparse`) and
+    // StoX cells land on one front
+    let tags = parse_precision_tags("4w4a4bs,8w8a4bs", &base)?;
+    let workloads: Vec<GoldenWorkload> = tags
+        .iter()
+        .map(|c| GoldenWorkload::new(*c, 48, 9))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> = tags
+        .iter()
+        .map(|c| (*c, default_grid(c, &[1, 2, 4, 8, 16, 32], &[1, 2, 4, 8])))
+        .collect();
+    let pareto = run_matrix_sweep(
+        &grid,
         &zoo::resnet20_cifar(),
         "resnet20_cifar",
         9,
         stox_net::util::pool::default_threads(),
-        |spec| Ok(gw.accuracy(spec.build(&base)?.as_ref())),
+        |ti, spec| {
+            let gw = &workloads[ti];
+            Ok(gw.accuracy(spec.build(gw.cfg())?.as_ref()))
+        },
     )?;
-    println!("\n===== accuracy × energy Pareto sweep (ResNet-20 cost model) =====");
+    println!(
+        "\n===== accuracy × energy design matrix ({} tags, ResNet-20 cost model) =====",
+        tags.len()
+    );
     println!("{}", pareto.render_table());
     Ok(())
 }

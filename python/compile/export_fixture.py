@@ -1,0 +1,230 @@
+"""Export the tiny committed checkpoint fixture ``rust/tests/data/tiny_inhomo``.
+
+The fixture is a deterministic, random-init (untrained) StoX ResNet whose
+manifest selects the §3.2.3 inhomogeneous converter through an *extended
+registry mode string* — ``spec.stox.mode = "inhomo:base=1,extra=3"`` —
+instead of a plain built-in mode name.  The Rust side
+(``rust/tests/model_sweep.rs``) loads it with **no** ``--converter``
+override anywhere, pinning manifest-driven converter selection through
+``PsConverterSpec::from_mode`` end-to-end (a ROADMAP follow-up of PR 1),
+and reuses it as the checkpoint for the shared-weight-programming
+regression tests and the ``benches/sweep.rs`` programming-reuse case.
+
+Layout mirrors ``aot.py``'s export exactly (same jax-``keystr`` tensor
+names, same ``manifest.json`` schema, minus the HLO artifacts that a
+functional-model test does not need), but is numpy-only so it runs — and
+reproduces byte-for-byte — anywhere.
+
+    python -m compile.export_fixture          # from python/
+
+Regeneration is deterministic (``np.random.RandomState``);
+``python/tests/test_fixture_export.py`` pins the committed bytes against
+a fresh export.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+OUT = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "data"
+    / "tiny_inhomo"
+)
+
+# Tiny geometry: 8×8×3 inputs, base width 4 (stages 4/8/16), one block per
+# stage — a few KiB of weights, fast enough for `cargo test` in debug.
+SPEC = {
+    "name": "tiny-inhomo-fixture",
+    "num_classes": 10,
+    "in_channels": 3,
+    "image_size": 8,
+    "base_width": 4,
+    "width_mult": 1.0,
+    "blocks_per_stage": 1,
+    "stox": {
+        "a_bits": 4,
+        "w_bits": 4,
+        "a_stream_bits": 1,
+        "w_slice_bits": 4,
+        "r_arr": 64,
+        "n_samples": 1,
+        "alpha": 4.0,
+        # the point of the fixture: an extended `name:k=v,..` mode string
+        # resolved by the Rust ConverterRegistry at load time
+        "mode": "inhomo:base=1,extra=3",
+    },
+    "first_layer": "qf",
+    "first_layer_samples": 2,
+    "first_layer_mode": None,
+    "layer_samples": None,
+}
+
+TESTSET_N = 8
+
+
+def widths() -> tuple[int, int, int]:
+    w = max(4, int(round(SPEC["base_width"] * SPEC["width_mult"])))
+    return (w, 2 * w, 4 * w)
+
+
+def conv_layer_shapes() -> list[dict]:
+    """Mirror of ``model.conv_layer_shapes`` for the fixture spec."""
+    w1, w2, w3 = widths()
+    size = SPEC["image_size"]
+    layers = [
+        dict(
+            name="conv1", kh=3, kw=3, cin=SPEC["in_channels"], cout=w1,
+            h_out=size, w_out=size, stride=1, stochastic=True,
+        )
+    ]
+    cin, cur = w1, size
+    for s, cout in enumerate((w1, w2, w3)):
+        for b in range(SPEC["blocks_per_stage"]):
+            stride = 2 if (s > 0 and b == 0) else 1
+            cur = cur // stride
+            layers.append(
+                dict(
+                    name=f"s{s}b{b}c1", kh=3, kw=3, cin=cin, cout=cout,
+                    h_out=cur, w_out=cur, stride=stride, stochastic=True,
+                )
+            )
+            layers.append(
+                dict(
+                    name=f"s{s}b{b}c2", kh=3, kw=3, cin=cout, cout=cout,
+                    h_out=cur, w_out=cur, stride=1, stochastic=True,
+                )
+            )
+            cin = cout
+    layers.append(
+        dict(
+            name="fc", kh=1, kw=1, cin=w3, cout=SPEC["num_classes"],
+            h_out=1, w_out=1, stride=1, stochastic=False,
+        )
+    )
+    return layers
+
+
+def build_tensors(seed: int = 0) -> list[tuple[str, np.ndarray]]:
+    """(jax-keystr name, float32 array) pairs, He-init convs, identity BN."""
+    rs = np.random.RandomState(seed)
+    w1, w2, w3 = widths()
+
+    def conv(kh: int, kw: int, cin: int, cout: int) -> np.ndarray:
+        std = (2.0 / (kh * kw * cin)) ** 0.5
+        return (std * rs.randn(kh, kw, cin, cout)).astype(np.float32)
+
+    tensors: list[tuple[str, np.ndarray]] = []
+
+    def bn(prefix: str, c: int) -> None:
+        tensors.append((f"['params']{prefix}['beta']", np.zeros(c, np.float32)))
+        tensors.append((f"['params']{prefix}['gamma']", np.ones(c, np.float32)))
+
+    def bn_state(prefix: str, c: int) -> None:
+        tensors.append((f"['states']{prefix}['mean']", np.zeros(c, np.float32)))
+        tensors.append((f"['states']{prefix}['var']", np.ones(c, np.float32)))
+
+    tensors.append(("['params']['conv1']", conv(3, 3, SPEC["in_channels"], w1)))
+    bn("['bn1']", w1)
+    cin = w1
+    for s, cout in enumerate((w1, w2, w3)):
+        for b in range(SPEC["blocks_per_stage"]):
+            p = f"['stages'][{s}][{b}]"
+            tensors.append((f"['params']{p}['conv1']", conv(3, 3, cin, cout)))
+            bn(f"{p}['bn1']", cout)
+            tensors.append((f"['params']{p}['conv2']", conv(3, 3, cout, cout)))
+            bn(f"{p}['bn2']", cout)
+            cin = cout
+    tensors.append(
+        (
+            "['params']['fc_w']",
+            (0.1 * rs.randn(w3, SPEC["num_classes"])).astype(np.float32),
+        )
+    )
+    tensors.append(
+        ("['params']['fc_b']", np.zeros(SPEC["num_classes"], np.float32))
+    )
+    # BN running stats after the params, like the aot.py pytree flatten
+    bn_state("['bn1']", w1)
+    cin = w1
+    for s, cout in enumerate((w1, w2, w3)):
+        for b in range(SPEC["blocks_per_stage"]):
+            p = f"['stages'][{s}][{b}]"
+            bn_state(f"{p}['bn1']", cout)
+            bn_state(f"{p}['bn2']", cout)
+            cin = cout
+    return tensors
+
+
+def build_testset(seed: int = 1) -> tuple[np.ndarray, np.ndarray]:
+    rs = np.random.RandomState(seed)
+    size = SPEC["image_size"]
+    images = rs.uniform(-1.0, 1.0, (TESTSET_N, size, size, SPEC["in_channels"]))
+    labels = rs.randint(0, SPEC["num_classes"], TESTSET_N)
+    return images.astype(np.float32), labels.astype(np.int32)
+
+
+def export(outdir: pathlib.Path) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    tensors = build_tensors()
+    entries = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors:
+        entries.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "numel": int(arr.size),
+            }
+        )
+        blobs.append(arr.tobytes())
+        offset += int(arr.size)
+    (outdir / "weights.bin").write_bytes(b"".join(blobs))
+
+    images, labels = build_testset()
+    (outdir / "testset.bin").write_bytes(images.tobytes() + labels.tobytes())
+
+    manifest = {
+        "spec": SPEC,
+        "checkpoint_record": {
+            "note": "untrained random-init fixture (export_fixture.py)"
+        },
+        "layers": conv_layer_shapes(),
+        "models": [],
+        "mvms": [],
+        "weights": {
+            "file": "weights.bin",
+            "tensors": entries,
+            "total_f32": offset,
+        },
+        "testset": {
+            "file": "testset.bin",
+            "dataset": "synth",
+            "n": TESTSET_N,
+            "image_shape": [
+                SPEC["image_size"],
+                SPEC["image_size"],
+                SPEC["in_channels"],
+            ],
+        },
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    manifest = export(OUT)
+    total = manifest["weights"]["total_f32"]
+    print(f"wrote tiny_inhomo fixture to {OUT} ({total} f32 weights)")
+
+
+if __name__ == "__main__":
+    main()

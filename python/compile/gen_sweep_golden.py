@@ -1,0 +1,611 @@
+"""Generate the committed design-matrix sweep golden for ``rust/tests/sweep.rs``.
+
+The Rust golden test pins ``arch::sweep::run_matrix_sweep`` over a fixed
+input — precision tags ``4w4a4bs,8w8a4bs`` × a fixed converter-spec set,
+48 golden-workload inputs, seed 2024 — against
+``rust/tests/data/sweep_golden.json``.  This script produces that file
+from the *python side*: it re-implements the sweep as an exact port of
+the Rust pipeline —
+
+  * the counter RNG (``stats/rng.rs``), bit-identical by construction;
+  * the golden workload and MVM kernel (``imc/mvm.rs`` ``run_range``)
+    with the same float32 operation order, so accuracies match up to
+    last-ulp libm ``tanh`` differences (the ``converter_equiv.rs``
+    tolerance class);
+  * the Fig. 9 cost rollup (``arch/{components,mapper,pipeline,energy}``)
+    in pure f64, which matches exactly.
+
+The emitted golden is an envelope ``{"generator": "python-oracle",
+"result": …}``; the Rust test compares cost fields exactly and accuracies
+to a few input quanta.  Re-blessing from a Rust toolchain
+(``UPDATE_SWEEP_GOLDEN=1 cargo test``) switches the envelope to
+``generator: "rust"`` and byte-exact comparison.
+
+    python -m compile.gen_sweep_golden        # from python/
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+
+import numpy as np
+
+F32 = np.float32
+OUT = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
+
+GOLDEN_INPUTS = 48
+GOLDEN_SEED = 2024
+GOLDEN_TAGS = ("4w4a4bs", "8w8a4bs")
+
+# ---------------------------------------------------------------------------
+# Counter RNG (rust/src/stats/rng.rs) — numpy-uint32 arrays, wrapping ops
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+_GOLDEN_MIX = np.uint32(0x9E3779B9)
+
+
+def mix32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1
+    x = x ^ (x >> np.uint32(15))
+    x = x * _M2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def mixed_seed(seed: int) -> np.uint32:
+    """``CounterRng::new(seed).mixed_seed``."""
+    return mix32(np.array([np.uint32(seed) ^ _GOLDEN_MIX], np.uint32))[0]
+
+
+def draw24(mixed: np.uint32, counters: np.ndarray) -> np.ndarray:
+    return mix32(counters.astype(np.uint32) ^ mixed) >> np.uint32(8)
+
+
+def uniform(mixed: np.uint32, counters: np.ndarray) -> np.ndarray:
+    return draw24(mixed, counters).astype(F32) * F32(1.0 / (1 << 24))
+
+
+def uniform_in(mixed: np.uint32, counters: np.ndarray, lo: float, hi: float) -> np.ndarray:
+    return F32(lo) + F32(hi - lo) * uniform(mixed, counters)
+
+
+# ---------------------------------------------------------------------------
+# Hardware config + precision tags (rust/src/imc/quant.rs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    a_bits: int = 4
+    w_bits: int = 4
+    a_stream_bits: int = 1
+    w_slice_bits: int = 4
+    r_arr: int = 256
+    n_samples: int = 1
+    alpha: float = 4.0
+
+    @property
+    def n_streams(self) -> int:
+        return self.a_bits // self.a_stream_bits
+
+    @property
+    def n_slices(self) -> int:
+        return self.w_bits // self.w_slice_bits
+
+    def n_arrs(self, m: int) -> int:
+        return max(1, math.ceil(m / self.r_arr))
+
+    @property
+    def tag(self) -> str:
+        return f"{self.w_bits}w{self.a_bits}a{self.w_slice_bits}bs"
+
+
+def cfg_from_tag(tag: str, base: Cfg) -> Cfg:
+    w_str, rest = tag.split("w", 1)
+    a_str, slice_str = rest.split("a", 1)
+    w_bits, a_bits = int(w_str), int(a_str)
+    if slice_str:
+        assert slice_str.endswith("bs"), tag
+        w_slice_bits = int(slice_str[:-2])
+    else:
+        w_slice_bits = max(1, min(base.w_slice_bits, w_bits))
+    return dataclasses.replace(
+        base,
+        a_bits=a_bits,
+        w_bits=w_bits,
+        w_slice_bits=w_slice_bits,
+        a_stream_bits=max(1, min(base.a_stream_bits, a_bits)),
+    )
+
+
+def quantize_unit(v: np.ndarray, bits: int) -> np.ndarray:
+    """f32 `((v+1)*0.5*levels).round_ties_even() as i32` (rust order)."""
+    levels = F32((1 << bits) - 1)
+    v = np.clip(v.astype(F32), F32(-1.0), F32(1.0))
+    return np.round((v + F32(1.0)) * F32(0.5) * levels).astype(np.int32)
+
+
+def signed_digits(u: np.ndarray, bits: int, digit_bits: int) -> np.ndarray:
+    """[..., n_digits] float32 signed digits, LSB first."""
+    n_digits = bits // digit_bits
+    base = 1 << digit_bits
+    shifts = np.arange(n_digits, dtype=np.int32) * digit_bits
+    d = (u[..., None] >> shifts) & (base - 1)
+    return (2 * d - (base - 1)).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# Converters (rust/src/imc/convert.rs), slice-at-a-time over column vectors
+# ---------------------------------------------------------------------------
+
+
+def quant_midtread(ps: np.ndarray, bits: int) -> np.ndarray:
+    levels = F32((1 << bits) - 1)
+    u = np.round((np.clip(ps, F32(-1.0), F32(1.0)) + F32(1.0)) * F32(0.5) * levels)
+    return F32(2.0) * u / levels - F32(1.0)
+
+
+def stochastic_totals(
+    alpha: float,
+    n_samples: int,
+    counter_block: int,
+    ps: np.ndarray,
+    base0: np.uint32,
+    stride: int,
+    mixed: np.uint32,
+) -> np.ndarray:
+    """Unnormalized ±1 sample totals (rust ``stochastic_slice``)."""
+    pr = F32(0.5) * (np.tanh(F32(alpha) * ps) + F32(1.0))
+    thr = np.ceil(pr.astype(np.float64) * 16777216.0).astype(np.uint32)
+    idx = np.arange(len(ps), dtype=np.uint32)
+    c0 = (np.uint32(base0) + idx * np.uint32(stride)).astype(np.uint32)
+    base = c0 * np.uint32(counter_block)
+    total = np.zeros(len(ps), np.int32)
+    for s in range(n_samples):
+        d = draw24(mixed, base + np.uint32(s))
+        total = total + np.where(d < thr, 1, -1).astype(np.int32)
+    return total.astype(F32)
+
+
+class Converter:
+    """One registry converter: spec string, label, samples(), cost key."""
+
+    def __init__(self, spec: str, cfg: Cfg):
+        self.spec = spec
+        self.cfg = cfg
+        name, _, rest = spec.partition(":")
+        params = {}
+        if rest:
+            for kv in rest.split(","):
+                k, v = kv.split("=")
+                params[k] = float(v)
+        self.name = name
+        self.alpha = params.get("alpha", 4.0)
+        self.n_samples = max(1, int(params.get("samples", 1)))
+        self.bits = int(params.get("bits", 8 if name == "quant" else 4))
+        self.base = max(1, int(params.get("base", 1)))
+        self.extra = int(params.get("extra", 3))
+        if name == "inhomo":
+            self.table = inhomo_table(cfg, self.base, self.extra)
+
+    # -- identity ---------------------------------------------------------
+    def label(self) -> str:
+        return {
+            "ideal": "ideal-ADC",
+            "quant": f"quant-ADC({self.bits}b)",
+            "sparse": f"sparse-ADC({self.bits}b)",
+            "sa": "1b-SA",
+            "expected": "expected-MTJ",
+            "stox": f"MTJ×{self.n_samples}",
+            "inhomo": f"inhomo-MTJ({self.base}..{self.base + self.extra})",
+        }[self.name]
+
+    def samples(self) -> int:
+        return self.n_samples if self.name == "stox" else 1
+
+    def cost_key(self):
+        """(kind, param) mirroring ``PsConvert::cost_key``."""
+        if self.name == "ideal":
+            return ("adc_fp", 16)
+        if self.name == "quant":
+            return ("adc_fp", 16) if self.bits >= 8 else ("adc_sparse", 16)
+        if self.name == "sparse":
+            return ("adc_sparse", 16)
+        if self.name == "sa":
+            return ("sa", 0)
+        if self.name == "expected":
+            return ("mtj", 1)
+        if self.name == "stox":
+            return ("mtj", self.n_samples)
+        if self.name == "inhomo":
+            mean = sum(float(n) for row in self.table for n in row) / (
+                len(self.table) * len(self.table[0])
+            )
+            return ("mtj", max(1, int(rust_round(mean))))
+        raise ValueError(self.name)
+
+    # -- conversion -------------------------------------------------------
+    def convert_at(
+        self,
+        stream: int,
+        w_slice: int,
+        ps: np.ndarray,
+        base0: np.uint32,
+        stride: int,
+        mixed: np.uint32,
+    ) -> np.ndarray:
+        if self.name == "ideal":
+            return ps.copy()
+        if self.name == "quant":
+            return quant_midtread(ps, self.bits)
+        if self.name == "sparse":
+            if np.all(ps == 0.0):
+                return np.zeros_like(ps)
+            return quant_midtread(ps, self.bits)
+        if self.name == "sa":
+            return np.where(ps >= 0.0, F32(1.0), F32(-1.0))
+        if self.name == "expected":
+            return np.tanh(F32(self.alpha) * ps)
+        if self.name == "stox":
+            return stochastic_totals(
+                self.alpha, self.n_samples, self.n_samples, ps, base0, stride, mixed
+            )
+        if self.name == "inhomo":
+            n_ij = self.table[stream][w_slice]
+            n_max = self.base + self.extra
+            totals = stochastic_totals(
+                self.alpha, n_ij, n_max, ps, base0, stride, mixed
+            )
+            return totals * (F32(1.0) / F32(n_ij))
+        raise ValueError(self.name)
+
+
+def rust_round(x: float) -> float:
+    """f64 ``round`` (half away from zero)."""
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+def inhomo_table(cfg: Cfg, base: int, extra: int) -> list[list[int]]:
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    da, dw = cfg.a_stream_bits, cfg.w_slice_bits
+    sig_max = (i_n - 1) * da + (j_n - 1) * dw
+    table = []
+    for i in range(i_n):
+        row = []
+        for j in range(j_n):
+            sig = i * da + j * dw
+            if sig_max == 0:
+                n = base + extra
+            else:
+                n = base + int(rust_round(extra * sig / sig_max))
+            row.append(max(1, n))
+        table.append(row)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# The MVM kernel, ported from StoxMvm::program / run_range with identical
+# f32 operation order (accumulation over rows ascending, per-column adds)
+# ---------------------------------------------------------------------------
+
+
+class Mvm:
+    def __init__(self, w: np.ndarray, m: int, n: int, cfg: Cfg):
+        self.cfg, self.m, self.n = cfg, m, n
+        self.n_arrs = cfg.n_arrs(m)
+        uw = quantize_unit(w.reshape(m, n), cfg.w_bits)
+        td = signed_digits(uw, cfg.w_bits, cfg.w_slice_bits)  # [m, n, J]
+        self.wd = np.zeros((self.n_arrs, cfg.n_slices, cfg.r_arr, n), F32)
+        for r in range(m):
+            k, rr = divmod(r, cfg.r_arr)
+            for j in range(cfg.n_slices):
+                self.wd[k, j, rr, :] = td[r, :, j]
+
+    def run(self, a: np.ndarray, batch: int, conv: Converter, seed: int) -> np.ndarray:
+        cfg = self.cfg
+        i_n, j_n = cfg.n_streams, cfg.n_slices
+        samples = F32(conv.samples())
+        mixed = mixed_seed(seed)
+        sa = [F32(1 << (i * cfg.a_stream_bits)) for i in range(i_n)]
+        sw = [F32(1 << (j * cfg.w_slice_bits)) for j in range(j_n)]
+        lev = F32(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+        norm = F32(1.0) / (lev * F32(self.n_arrs) * samples)
+        inv_r = F32(1.0) / F32(cfg.r_arr)
+        a = a.reshape(batch, self.m)
+        out = np.zeros((batch, self.n), F32)
+        for b in range(batch):
+            for k in range(self.n_arrs):
+                row0 = k * cfg.r_arr
+                rows = min(self.m - row0, cfg.r_arr)
+                ua = quantize_unit(a[b, row0 : row0 + rows], cfg.a_bits)
+                xd = signed_digits(ua, cfg.a_bits, cfg.a_stream_bits)  # [rows, I]
+                for j in range(j_n):
+                    ps = np.zeros((i_n, self.n), F32)
+                    w_sl = self.wd[k, j]
+                    for rr in range(rows):
+                        # one row feeds every stream; per-element add order
+                        # over rr matches the rust kernel exactly
+                        ps += xd[rr][:, None] * w_sl[rr][None, :]
+                    for i in range(i_n):
+                        scale = sa[i] * sw[j] * norm
+                        psn = ps[i] * inv_r
+                        base0 = np.uint32(
+                            (((b * self.n_arrs + k) * self.n) * i_n + i)
+                            & 0xFFFFFFFF
+                        ) * np.uint32(j_n) + np.uint32(j)
+                        cv = conv.convert_at(
+                            i, j, psn, base0, i_n * j_n, mixed
+                        )
+                        out[b] += cv * scale
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Golden workload (arch/sweep.rs GoldenWorkload)
+# ---------------------------------------------------------------------------
+
+FEATURES, HIDDEN, CLASSES = 96, 32, 10
+
+
+class GoldenWorkload:
+    def __init__(self, cfg: Cfg, n_inputs: int, seed: int):
+        self.cfg, self.n, self.seed = cfg, n_inputs, seed
+        m, h, c = FEATURES, HIDDEN, CLASSES
+        mx = mixed_seed(seed ^ 0x5EEDDA7A)
+        w1 = uniform_in(mx, np.arange(m * h, dtype=np.uint32), -1.0, 1.0)
+        w2 = uniform_in(
+            mx, np.arange(m * h, m * h + h * c, dtype=np.uint32), -1.0, 1.0
+        )
+        base = m * h + h * c
+        inputs = uniform_in(
+            mx, np.arange(base, base + n_inputs * m, dtype=np.uint32), -1.0, 1.0
+        )
+        self.inputs = inputs.reshape(n_inputs, m)
+        self.mvm1 = Mvm(w1, m, h, cfg)
+        self.mvm2 = Mvm(w2, h, c, cfg)
+        ideal = Converter("ideal", cfg)
+        o1 = self.mvm1.run(self.inputs, n_inputs, ideal, seed)
+        max_abs = F32(np.max(np.abs(o1))) if o1.size else F32(0.0)
+        self.gain = F32(1.0) / max_abs if max_abs > 0.0 else F32(1.0)
+        h1 = np.clip(o1 * self.gain, F32(-1.0), F32(1.0))
+        o2 = self.mvm2.run(h1, n_inputs, ideal, seed ^ 0x9E3779B9)
+        self.labels = np.argmax(o2, axis=1)
+
+    def accuracy(self, conv: Converter) -> float:
+        o1 = self.mvm1.run(self.inputs, self.n, conv, self.seed)
+        h1 = np.clip(o1 * self.gain, F32(-1.0), F32(1.0))
+        o2 = self.mvm2.run(h1, self.n, conv, self.seed ^ 0x9E3779B9)
+        correct = int(np.sum(np.argmax(o2, axis=1) == self.labels))
+        return correct / self.n
+
+
+# ---------------------------------------------------------------------------
+# Cost rollup (arch/{components,mapper,pipeline,energy}.rs), pure f64
+# ---------------------------------------------------------------------------
+
+COST = dict(
+    dac_energy_pj=2.99e-2,
+    dac_area_um2=0.127,
+    cell_energy_1b_pj=6.16e-3,
+    cell_energy_2b_pj=4.16e-3,
+    cell_area_um2=0.0308,
+    adc_fp_energy_pj=2.137,
+    adc_fp_area_um2=6600.0,
+    adc_sparse_energy_pj=1.171,
+    adc_sparse_area_um2=2700.0,
+    mtj_energy_pj=6.14e-15 * 1e12,
+    mtj_area_um2=1.47,
+    sa_energy_pj=1.0e-3,
+    sa_area_um2=1.2,
+    sna_energy_pj=4.1e-3,
+    sna_area_um2=28.0,
+    adc_latency_ns=1.0,
+    mtj_latency_ns=2e-9 * 1e9,
+    sa_latency_ns=0.5,
+    xbar_read_ns=4.0,
+    io_energy_pj=0.18,
+    tile_overhead_um2=15_000.0,
+    sna_ns=1.0,
+)
+
+C_ARR = 128
+
+
+def ps_energy_pj(key) -> float:
+    kind, param = key
+    if kind == "adc_fp":
+        return COST["adc_fp_energy_pj"]
+    if kind == "adc_sparse":
+        return COST["adc_sparse_energy_pj"]
+    if kind == "sa":
+        return COST["sa_energy_pj"]
+    return COST["mtj_energy_pj"] * float(param)
+
+
+def ps_area_per_column_um2(key) -> float:
+    kind, param = key
+    if kind == "adc_fp":
+        return COST["adc_fp_area_um2"] / float(param)
+    if kind == "adc_sparse":
+        return COST["adc_sparse_area_um2"] / float(param)
+    if kind == "sa":
+        return COST["sa_area_um2"]
+    return COST["mtj_area_um2"]
+
+
+def ps_stage_ns(key, n_cols: int) -> float:
+    kind, param = key
+    if kind in ("adc_fp", "adc_sparse"):
+        return COST["adc_latency_ns"] * float(min(n_cols, param))
+    if kind == "sa":
+        return COST["sa_latency_ns"]
+    return COST["mtj_latency_ns"] * float(param)
+
+
+def key_samples(key) -> int:
+    kind, param = key
+    return param if kind == "mtj" else 1
+
+
+def resnet20_layers() -> list[dict]:
+    layers = [dict(name="conv1", k=3, cin=3, cout=16, h=32)]
+    widths, sizes = [16, 32, 64], [32, 16, 8]
+    cin = 16
+    for s, (w, hw) in enumerate(zip(widths, sizes)):
+        for b in range(3):
+            layers.append(dict(name=f"s{s}b{b}c1", k=3, cin=cin, cout=w, h=hw))
+            layers.append(dict(name=f"s{s}b{b}c2", k=3, cin=w, cout=w, h=hw))
+            cin = w
+    layers.append(dict(name="fc", k=1, cin=64, cout=10, h=1))
+    return layers
+
+
+def evaluate_design(cfg: Cfg, key, bits_per_cell: int, layers: list[dict]):
+    """Port of ``evaluate_design`` for the uniform-spec design points the
+    sweep builds (body == first layer, activity 1, no per-layer samples)."""
+    cell_e = (
+        COST["cell_energy_2b_pj"] if bits_per_cell >= 2 else COST["cell_energy_1b_pj"]
+    )
+    e_tot = t_tot = a_tot = 0.0
+    conv_tot = 0
+    xb_tot = 0
+    for shape in layers:
+        m = shape["k"] * shape["k"] * shape["cin"]
+        n = shape["cout"]
+        p = shape["h"] * shape["h"]
+        n_arrs = cfg.n_arrs(m)
+        n_slices = cfg.n_slices
+        n_streams = cfg.n_streams
+        col_tiles = max(1, math.ceil(2 * n / C_ARR))
+        xbars = n_arrs * n_slices * col_tiles
+        converter_sites = n * n_arrs * n_slices
+        conversions = p * n_streams * n_slices * n_arrs * n
+        dac_actions = p * n_streams * m
+        cell_actions = p * n_streams * (m * 2 * n_slices)
+        sna_actions = conversions
+        io_actions = dac_actions + p * n_streams * n
+
+        e_dac = float(dac_actions) * COST["dac_energy_pj"] * 1.0
+        e_cell = float(cell_actions) * cell_e * 1.0
+        e_ps = float(conversions) * ps_energy_pj(key) * 1.0
+        e_sna = float(sna_actions) * COST["sna_energy_pj"] * 1.0
+        e_io = float(io_actions) * COST["io_energy_pj"] * 1.0
+        energy = e_dac + e_cell + e_ps + e_sna + e_io
+
+        beats = float(p * n_streams) + 2.0
+        cols = min(n, 128)
+        beat = max(COST["xbar_read_ns"], ps_stage_ns(key, cols), COST["sna_ns"])
+        latency = beats * beat
+
+        a_cells = float(xbars) * float(cfg.r_arr * C_ARR) * COST["cell_area_um2"]
+        a_dac = float(xbars) * float(cfg.r_arr) * COST["dac_area_um2"]
+        a_ps = float(converter_sites) * ps_area_per_column_um2(key)
+        a_sna = float(xbars) * COST["sna_area_um2"]
+        a_overhead = float(xbars) * COST["tile_overhead_um2"]
+        area = a_cells + a_dac + a_ps + a_sna + a_overhead
+
+        e_tot += energy
+        t_tot += latency
+        a_tot += area
+        conv_tot += conversions * key_samples(key)
+        xb_tot += xbars
+    return e_tot, t_tot, a_tot, e_tot * t_tot, conv_tot, xb_tot
+
+
+def round_to(x: float, decimals: int) -> float:
+    f = 10.0 ** decimals
+    return rust_round(x * f) / f
+
+
+def pareto_front_flags(acc_edp: list[tuple[float, float]]) -> list[bool]:
+    order = sorted(
+        range(len(acc_edp)), key=lambda i: (acc_edp[i][1], -acc_edp[i][0], i)
+    )
+    flags = [False] * len(acc_edp)
+    best_acc = -math.inf
+    for i in order:
+        if acc_edp[i][0] > best_acc:
+            flags[i] = True
+            best_acc = acc_edp[i][0]
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# The pinned matrix sweep (mirrors fixed_sweep() in rust/tests/sweep.rs)
+# ---------------------------------------------------------------------------
+
+FIXED_SPECS = (
+    "ideal",
+    "quant:bits=8",
+    "sparse:bits=4",
+    "sa",
+    "expected:alpha=4",
+    "stox:alpha=4,samples=1",
+    "stox:alpha=4,samples=4",
+    "inhomo:alpha=4,base=1,extra=3",
+)
+
+
+def run_fixed_sweep() -> dict:
+    base = Cfg()
+    tags = [cfg_from_tag(t, base) for t in GOLDEN_TAGS]
+    layers = resnet20_layers()
+    points = []
+    for cfg in tags:
+        gw = GoldenWorkload(cfg, GOLDEN_INPUTS, GOLDEN_SEED)
+        for spec in FIXED_SPECS:
+            conv = Converter(spec, cfg)
+            acc = gw.accuracy(conv)
+            e, t, a, edp, conversions, xbars = evaluate_design(
+                cfg, conv.cost_key(), min(cfg.w_slice_bits, 2), layers
+            )
+            points.append(
+                dict(
+                    tag=cfg.tag,
+                    spec=spec,
+                    label=conv.label(),
+                    accuracy=acc,
+                    energy_pj=round_to(e, 3),
+                    latency_ns=round_to(t, 3),
+                    area_um2=round_to(a, 3),
+                    edp_pj_ns=round_to(edp, 1),
+                    conversions=conversions,
+                    xbars=xbars,
+                    on_front=False,
+                )
+            )
+    points.sort(
+        key=lambda p: (p["edp_pj_ns"], -p["accuracy"], p["tag"], p["spec"])
+    )
+    flags = pareto_front_flags([(p["accuracy"], p["edp_pj_ns"]) for p in points])
+    for p, f in zip(points, flags):
+        p["on_front"] = f
+    front = [dict(tag=p["tag"], spec=p["spec"]) for p in points if p["on_front"]]
+    return dict(
+        workload="resnet20_cifar", seed=GOLDEN_SEED, points=points, front=front
+    )
+
+
+def main() -> None:
+    result = run_fixed_sweep()
+    envelope = dict(generator="python-oracle", result=result)
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / "sweep_golden.json"
+    path.write_text(json.dumps(envelope, sort_keys=True, separators=(",", ":")))
+    front = result["front"]
+    print(
+        f"wrote {path} ({len(result['points'])} points, "
+        f"{len(front)} on the front: "
+        + "  ->  ".join(f"{p['tag']} {p['spec']}" for p in front)
+    )
+
+
+if __name__ == "__main__":
+    main()

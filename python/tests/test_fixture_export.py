@@ -1,0 +1,83 @@
+"""The committed tiny checkpoint fixture (``compile/export_fixture.py``).
+
+``rust/tests/data/tiny_inhomo`` pins manifest-driven converter selection
+(mode ``"inhomo:base=1,extra=3"``) and the shared-weight-programming
+regression tests on the Rust side; here we pin that the committed bytes
+are exactly what a fresh deterministic export produces, and that the
+manifest is internally consistent (offsets, sizes, layer inventory).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+
+from compile import export_fixture as fx
+
+COMMITTED = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "data"
+    / "tiny_inhomo"
+)
+
+
+def test_export_is_deterministic_and_matches_committed(tmp_path):
+    fx.export(tmp_path)
+    for name in ("manifest.json", "weights.bin", "testset.bin"):
+        fresh = (tmp_path / name).read_bytes()
+        committed = (COMMITTED / name).read_bytes()
+        assert fresh == committed, f"{name} drifted from the committed fixture"
+
+
+def test_manifest_mode_is_extended_registry_string():
+    manifest = json.loads((COMMITTED / "manifest.json").read_text())
+    mode = manifest["spec"]["stox"]["mode"]
+    assert mode == "inhomo:base=1,extra=3"
+    # the extended grammar, not a bare builtin name
+    assert ":" in mode and "=" in mode
+    assert manifest["spec"]["first_layer"] == "qf"
+
+
+def test_weights_offsets_are_contiguous_and_sized():
+    manifest = json.loads((COMMITTED / "manifest.json").read_text())
+    weights = manifest["weights"]
+    offset = 0
+    for t in weights["tensors"]:
+        assert t["offset"] == offset, t["name"]
+        numel = int(np.prod(t["shape"])) if t["shape"] else 1
+        assert numel == t["numel"], t["name"]
+        offset += t["numel"]
+    assert offset == weights["total_f32"]
+    blob = (COMMITTED / "weights.bin").read_bytes()
+    assert len(blob) == 4 * weights["total_f32"]
+
+
+def test_testset_shapes_and_ranges():
+    manifest = json.loads((COMMITTED / "manifest.json").read_text())
+    ts = manifest["testset"]
+    h, w, c = ts["image_shape"]
+    blob = (COMMITTED / "testset.bin").read_bytes()
+    n = ts["n"]
+    img_f32 = n * h * w * c
+    assert len(blob) == 4 * img_f32 + 4 * n
+    images = np.frombuffer(blob[: 4 * img_f32], np.float32)
+    labels = np.frombuffer(blob[4 * img_f32 :], np.int32)
+    assert np.all(np.abs(images) <= 1.0)
+    assert np.all((labels >= 0) & (labels < manifest["spec"]["num_classes"]))
+
+
+def test_layer_inventory_matches_tensor_shapes():
+    manifest = json.loads((COMMITTED / "manifest.json").read_text())
+    tensors = {t["name"]: t["shape"] for t in manifest["weights"]["tensors"]}
+    for layer in manifest["layers"]:
+        if layer["name"] == "conv1":
+            shape = tensors["['params']['conv1']"]
+        elif layer["name"] == "fc":
+            assert tensors["['params']['fc_w']"] == [layer["cin"], layer["cout"]]
+            continue
+        else:
+            s, b, which = int(layer["name"][1]), int(layer["name"][3]), layer["name"][4:]
+            shape = tensors[f"['params']['stages'][{s}][{b}]['{which[0] + 'onv' + which[1]}']"]
+        assert shape == [layer["kh"], layer["kw"], layer["cin"], layer["cout"]], layer

@@ -1,0 +1,117 @@
+"""The design-matrix sweep golden generator (``compile/gen_sweep_golden.py``).
+
+Three layers of protection for ``rust/tests/data/sweep_golden.json``:
+
+  * the generator's numpy MVM port (rust ``run_range`` operation order) is
+    cross-checked against the *jnp* oracle through the committed
+    ``mvm_golden.json`` vectors — bit-aligned stochastic draws, f32
+    accumulation-order differences only;
+  * the generator's counter RNG reproduces the shared known-answer vectors;
+  * re-running the generator reproduces the committed golden (cost fields
+    exactly — pure f64 — and accuracies to the libm-``tanh`` tolerance the
+    Rust golden test also applies).  Skipped once the golden has been
+    re-blessed from a Rust toolchain (``generator: "rust"``).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import gen_sweep_golden as g
+
+DATA = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
+
+
+def test_counter_rng_known_answers():
+    # same vectors as python/tests/test_rng.py and rust/src/stats/rng.rs
+    counters = np.array([0, 1, 2, 3, 1000, 2**31, 2**32 - 1], np.uint32)
+    want = [0xAE6F80F1, 0xA07C7A97, 0x0E77CEB6, 0x7E1BD18E, 0xD6663A0C,
+            0x182BE288, 0x5F3DDEE1]
+    got = g.mix32(counters ^ g.mix32(np.array([g._GOLDEN_MIX], np.uint32))[0])
+    assert [int(x) for x in got] == want
+
+
+def test_mvm_port_matches_oracle_golden_vectors():
+    """Every committed mvm_golden case reproduces through the numpy port
+    (rust-order accumulation) to the cross-backend f32 tolerance."""
+    cases = json.loads((DATA / "mvm_golden.json").read_text())
+    assert len(cases) >= 7
+    for ci, c in enumerate(cases):
+        cfg = g.Cfg(
+            a_bits=c["a_bits"], w_bits=c["w_bits"], a_stream_bits=1,
+            w_slice_bits=c["w_slice_bits"], r_arr=c["r_arr"],
+            n_samples=c["n_samples"], alpha=c["alpha"],
+        )
+        mode = c["mode"]
+        if mode == "stox":
+            spec = f"stox:alpha={c['alpha']:g},samples={c['n_samples']}"
+        elif mode == "sparse":
+            spec = f"sparse:bits={c['bits']}"
+        elif mode == "inhomo":
+            spec = f"inhomo:alpha={c['alpha']:g},base={c['base']},extra={c['extra']}"
+        elif mode == "expected":
+            spec = f"expected:alpha={c['alpha']:g}"
+        else:
+            spec = mode
+        a = np.array(c["a"], np.float32).reshape(c["b"], c["m"])
+        w = np.array(c["w"], np.float32).reshape(c["m"], c["n"])
+        out = g.Mvm(w, c["m"], c["n"], cfg).run(
+            a, c["b"], g.Converter(spec, cfg), c["seed"]
+        )
+        want = np.array(c["out"], np.float32).reshape(out.shape)
+        err = float(np.max(np.abs(out - want)))
+        assert err < 1e-5, f"case {ci} ({mode}): max err {err}"
+
+
+def test_precision_tags_parse():
+    base = g.Cfg()
+    c = g.cfg_from_tag("8w8a4bs", base)
+    assert (c.w_bits, c.a_bits, c.w_slice_bits) == (8, 8, 4)
+    assert c.tag == "8w8a4bs"
+    assert c.r_arr == base.r_arr and c.alpha == base.alpha
+    # slice width defaults from the base config when omitted
+    assert g.cfg_from_tag("2w2a", base).w_slice_bits == 2
+
+
+def test_pareto_flags_mark_the_staircase():
+    pts = [(1.0, 100.0), (0.9, 10.0), (0.8, 50.0), (0.5, 1.0), (0.5, 1.0)]
+    assert g.pareto_front_flags(pts) == [True, True, False, True, False]
+
+
+def test_committed_sweep_golden_regenerates():
+    path = DATA / "sweep_golden.json"
+    envelope = json.loads(path.read_text())
+    if envelope.get("generator") != "python-oracle":
+        pytest.skip("golden re-blessed from a Rust toolchain")
+    want = envelope["result"]
+    got = g.run_fixed_sweep()
+    assert got["workload"] == want["workload"]
+    assert got["seed"] == want["seed"]
+    assert len(got["points"]) == len(want["points"])
+    tol = 3.0 / g.GOLDEN_INPUTS + 1e-12
+    by_cell = {(p["tag"], p["spec"]): p for p in want["points"]}
+    for p in got["points"]:
+        w = by_cell[(p["tag"], p["spec"])]
+        assert p["label"] == w["label"]
+        # pure-f64 cost rollups are exact
+        for key in ("energy_pj", "latency_ns", "area_um2", "edp_pj_ns",
+                    "conversions", "xbars"):
+            assert p[key] == w[key], (p["tag"], p["spec"], key)
+        # f32 accuracies may drift by libm-tanh ulps across numpy builds
+        assert abs(p["accuracy"] - w["accuracy"]) <= tol, (p["tag"], p["spec"])
+
+
+def test_matrix_covers_paper_design_points():
+    """The pinned golden carries HPFA-, SFA- and MTJ-class cells at both
+    precision tags, ordered on EDP as in Fig. 9a."""
+    envelope = json.loads((DATA / "sweep_golden.json").read_text())
+    pts = {(p["tag"], p["spec"]): p for p in envelope["result"]["points"]}
+    for tag in g.GOLDEN_TAGS:
+        mtj = pts[(tag, "stox:alpha=4,samples=1")]
+        sparse = pts[(tag, "sparse:bits=4")]
+        fp = pts[(tag, "ideal")]
+        assert mtj["edp_pj_ns"] < sparse["edp_pj_ns"] < fp["edp_pj_ns"]
+        assert fp["accuracy"] == 1.0
+    assert pts[("4w4a4bs", "ideal")]["edp_pj_ns"] < pts[("8w8a4bs", "ideal")]["edp_pj_ns"]

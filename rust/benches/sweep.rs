@@ -1,13 +1,19 @@
 //! Sweep-path bench: times the registry-driven accuracy × energy Pareto
 //! sweep (`arch::sweep::run_sweep`) over the default grid on the golden
-//! workload, at 1 thread vs the pool fan-out — the perf tracking the
-//! ISSUE asks for, and a smoke report of the front itself.
+//! workload at 1 thread vs the pool fan-out, the two-tag design-matrix
+//! sweep (`run_matrix_sweep`), and — on the model path — the
+//! programming-reuse speedup: one `Arc`-shared programming pass vs a
+//! reload-per-spec sweep over the committed tiny checkpoint (the ISSUE 3
+//! measurement backing the shared-weight-programming refactor).
 //!
 //! Run with `cargo bench --bench sweep`.
 
-use stox_net::arch::sweep::{default_grid, run_sweep, GoldenWorkload};
-use stox_net::imc::StoxConfig;
-use stox_net::model::zoo;
+use stox_net::arch::sweep::{
+    default_grid, parse_precision_tags, run_matrix_sweep, run_sweep, GoldenWorkload,
+};
+use stox_net::imc::{PsConverterSpec, StoxConfig};
+use stox_net::model::weights::TestSet;
+use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
 use stox_net::util::bench;
 
 fn main() {
@@ -35,6 +41,77 @@ fn main() {
             .expect("sweep");
             bench::black_box(r.points.len());
         });
+    }
+
+    // the two-axis design matrix: precision tags × the same spec grid
+    let tags = parse_precision_tags("4w4a4bs,8w8a4bs", &cfg).expect("tags");
+    let gws: Vec<GoldenWorkload> = tags
+        .iter()
+        .map(|c| GoldenWorkload::new(*c, 32, 1).expect("golden workload"))
+        .collect();
+    let grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> = tags
+        .iter()
+        .map(|c| (*c, default_grid(c, &[1, 2, 4, 8], &[2, 4, 8])))
+        .collect();
+    bench::quick("sweep/matrix2x/golden32", || {
+        let r = run_matrix_sweep(
+            &grid,
+            &layers,
+            "resnet20_cifar",
+            1,
+            stox_net::util::pool::default_threads(),
+            |ti, spec| Ok(gws[ti].accuracy(spec.build(gws[ti].cfg())?.as_ref())),
+        )
+        .expect("matrix sweep");
+        bench::black_box(r.points.len());
+    });
+
+    // programming-reuse on the model path: N converter specs against the
+    // committed tiny checkpoint — shared Arc programming vs the old
+    // reload-and-reprogram-per-spec shape
+    let fixture = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/tiny_inhomo");
+    if fixture.join("manifest.json").exists() {
+        let m = Manifest::load(&fixture).expect("fixture manifest");
+        let store = WeightStore::load(&m).expect("fixture weights");
+        let test = TestSet::load(&m).expect("fixture testset");
+        let model_cfg = m.spec.stox_config();
+        let model_specs: Vec<PsConverterSpec> = [
+            "ideal",
+            "sa",
+            "sparse:bits=4",
+            "stox:alpha=4,samples=1",
+            "stox:alpha=4,samples=2",
+            "inhomo:alpha=4,base=1,extra=3",
+        ]
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+        let n = test.n.min(4);
+        let base =
+            NativeModel::load_with_config(&m, &store, model_cfg).expect("model");
+        println!();
+        bench::quick("sweep/model-6spec/shared-programming", || {
+            let mut acc = 0.0;
+            for spec in &model_specs {
+                let view = base.share_with_converter_spec(spec).expect("view");
+                acc += view.accuracy(&test.images, &test.labels, n, 4, 7);
+            }
+            bench::black_box(acc);
+        });
+        bench::quick("sweep/model-6spec/reload-per-spec", || {
+            let mut acc = 0.0;
+            for spec in &model_specs {
+                let model = NativeModel::load(&m, &store)
+                    .expect("model")
+                    .with_converter_spec(spec)
+                    .expect("converter");
+                acc += model.accuracy(&test.images, &test.labels, n, 4, 7);
+            }
+            bench::black_box(acc);
+        });
+    } else {
+        println!("(tiny_inhomo fixture missing — skipping model-path bench)");
     }
 
     // the front itself, once — the bench doubles as a smoke report

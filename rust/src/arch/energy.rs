@@ -97,11 +97,17 @@ impl DesignConfig {
     /// functional path, so serving metrics and Fig. 9 rollups stay in
     /// lockstep with whatever the registry built (including converters
     /// the closed constructors above never knew about).
+    ///
+    /// `stox` is validated first: this is the constructor the design-matrix
+    /// sweep calls once per `(precision tag, converter spec)` cell, so a
+    /// malformed tag config (indivisible slice/stream widths) fails here
+    /// with the reason instead of producing a nonsense rollup.
     pub fn from_specs(
         stox: StoxConfig,
         body: &PsConverterSpec,
         first: &PsConverterSpec,
     ) -> crate::Result<Self> {
+        stox.validate()?;
         let ps = body.build(&stox)?.cost_key();
         let first_layer_ps = first.build(&stox)?.cost_key();
         Ok(Self {

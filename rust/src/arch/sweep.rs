@@ -3,18 +3,27 @@
 //! paper's actual trade-off story (Fig. 9: stochastic PS processing buys
 //! 24–130× EDP over ADC baselines while holding near-software accuracy).
 //!
-//! The sweep enumerates converter specs (every mode registered in the
-//! [`ConverterRegistry`](crate::imc::ConverterRegistry), plus MTJ
-//! sample-length and ADC bit-width grids), measures per-spec task accuracy
-//! on a deterministic golden workload, joins each spec with the
-//! [`energy`](super::energy) rollup through
-//! [`PsConvert::cost_key`](crate::imc::PsConvert::cost_key), and marks the
-//! non-dominated (accuracy ↑, EDP ↓) front.  Specs fan out across threads
-//! with [`par_map`]; results are bit-identical for every thread count
-//! because each point is a pure function of `(spec, seed)`.
+//! The sweep is the paper's full §4 *design matrix*, two axes:
 //!
-//! Entry points: [`default_grid`] → [`run_sweep`] → [`SweepResult`]
-//! (JSON / CSV / markdown table).  The CLI front-end is
+//! * the **precision axis** — `XwYaZbs` [`StoxConfig`] tags
+//!   ([`parse_precision_tags`], e.g. `4w4a4bs,8w8a4bs`), and
+//! * the **PS-processing axis** — converter specs (every mode registered
+//!   in the [`ConverterRegistry`](crate::imc::ConverterRegistry), plus MTJ
+//!   sample-length and ADC bit-width grids, [`default_grid`]).
+//!
+//! Every (tag, spec) cell measures task accuracy on a deterministic golden
+//! workload (or a checkpoint), joins with the [`energy`](super::energy)
+//! rollup through [`PsConvert::cost_key`](crate::imc::PsConvert::cost_key),
+//! and lands on one (accuracy ↑, EDP ↓) front — so the HPFA-class
+//! (`ideal` at 8-bit tags), SFA-class (`sparse`) and StoX (`stox` /
+//! `inhomo`) design points are directly comparable, as in Fig. 9a.  Cells
+//! fan out across threads with [`par_map`]; results are bit-identical for
+//! every thread count because each point is a pure function of
+//! `(tag, spec, seed)`.
+//!
+//! Entry points: [`parse_precision_tags`] + [`default_grid`] →
+//! [`run_matrix_sweep`] (or the single-tag [`run_sweep`]) →
+//! [`SweepResult`] (JSON / CSV / markdown table).  The CLI front-end is
 //! `stox-cli sweep`; `examples/efficiency_sweep.rs` and
 //! `rust/benches/sweep.rs` drive the same path.
 
@@ -28,10 +37,14 @@ use crate::stats::rng::CounterRng;
 use crate::util::json::Json;
 use crate::util::pool::par_map;
 
-/// One evaluated design point of the sweep: a converter spec joined with
-/// its task accuracy and its architecture cost rollup.
+/// One evaluated design point of the sweep: a (precision tag, converter
+/// spec) cell joined with its task accuracy and its architecture cost
+/// rollup.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Precision tag of the [`StoxConfig`] this cell ran at (`XwYaZbs`,
+    /// [`StoxConfig::tag`]) — the Fig. 9a precision axis.
+    pub tag: String,
     /// Canonical spec string (`name[:k=v,..]`) — parseable by
     /// [`PsConverterSpec::from_mode`] / `--converter`.
     pub spec: String,
@@ -57,7 +70,7 @@ pub struct SweepPoint {
 }
 
 /// A completed sweep: points sorted by ascending EDP (ties: accuracy
-/// descending, then spec), with the Pareto front marked.
+/// descending, then tag, then spec), with the Pareto front marked.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
     /// Workload name the energy rollup was evaluated on.
@@ -123,6 +136,26 @@ pub fn parse_grid(s: &str) -> crate::Result<Vec<u32>> {
         }
     }
     anyhow::ensure!(!out.is_empty(), "empty sweep grid '{s}'");
+    Ok(out)
+}
+
+/// Parse the precision axis of the design matrix: a comma-separated list
+/// of `XwYa[Zbs]` tags (`"4w4a4bs,8w8a4bs"`) into [`StoxConfig`]s derived
+/// from `base` via [`StoxConfig::from_tag`].  Duplicate tags are dropped
+/// (first occurrence wins); an empty list is an error.
+pub fn parse_precision_tags(s: &str, base: &StoxConfig) -> crate::Result<Vec<StoxConfig>> {
+    let mut out: Vec<StoxConfig> = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let cfg = StoxConfig::from_tag(tok, base)?;
+        if !out.iter().any(|c| c.tag() == cfg.tag()) {
+            out.push(cfg);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "empty precision-tag list '{s}'");
     Ok(out)
 }
 
@@ -296,17 +329,21 @@ fn round_to(x: f64, decimals: i32) -> f64 {
     (x * f).round() / f
 }
 
-/// Run the sweep: for every spec, build the converter, measure accuracy
-/// via `accuracy_fn`, evaluate the [`DesignConfig::from_specs`] cost
-/// rollup over `layers`, and mark the (accuracy, EDP) Pareto front.
+/// Run the full two-axis design-matrix sweep (Fig. 9a): for every
+/// `(precision tag, converter spec)` cell of `grid`, build the converter,
+/// measure accuracy via `accuracy_fn(tag_index, spec)`, evaluate the
+/// [`DesignConfig::from_specs`] cost rollup over `layers` at that tag's
+/// config, and mark one joint (accuracy, EDP) Pareto front across the
+/// whole matrix.
 ///
-/// Specs fan out over up to `threads` OS threads ([`par_map`]); the
-/// result is identical for every thread count.  Costs are rounded (3
-/// decimals pJ/ns/µm², 1 decimal pJ·ns) so emitted artifacts are stable
-/// under f64 formatting.
-pub fn run_sweep<F>(
-    specs: &[PsConverterSpec],
-    cfg: &StoxConfig,
+/// `grid` pairs each tag config with its own spec list (callers usually
+/// reuse one [`default_grid`] per tag); duplicate `(tag, spec)` cells are
+/// dropped, first occurrence wins.  Cells fan out over up to `threads` OS
+/// threads ([`par_map`]); the result is identical for every thread count.
+/// Costs are rounded (3 decimals pJ/ns/µm², 1 decimal pJ·ns) so emitted
+/// artifacts are stable under f64 formatting.
+pub fn run_matrix_sweep<F>(
+    grid: &[(StoxConfig, Vec<PsConverterSpec>)],
     layers: &[LayerShape],
     workload: &str,
     seed: u32,
@@ -314,21 +351,41 @@ pub fn run_sweep<F>(
     accuracy_fn: F,
 ) -> crate::Result<SweepResult>
 where
-    F: Fn(&PsConverterSpec) -> crate::Result<f64> + Sync,
+    F: Fn(usize, &PsConverterSpec) -> crate::Result<f64> + Sync,
 {
-    anyhow::ensure!(!specs.is_empty(), "sweep needs at least one spec");
+    anyhow::ensure!(!grid.is_empty(), "matrix sweep needs at least one precision tag");
+    // flatten to (tag index, spec) cells, dropping duplicate cells
+    let mut cells: Vec<(usize, PsConverterSpec)> = Vec::new();
+    let mut seen: Vec<(String, String)> = Vec::new();
+    for (ti, (cfg, specs)) in grid.iter().enumerate() {
+        cfg.validate()?;
+        anyhow::ensure!(
+            !specs.is_empty(),
+            "no converter specs for precision tag {}",
+            cfg.tag()
+        );
+        for spec in specs {
+            let key = (cfg.tag(), spec.to_string());
+            if !seen.contains(&key) {
+                seen.push(key);
+                cells.push((ti, spec.clone()));
+            }
+        }
+    }
     let costs = ComponentCosts::default();
     let evaluated: Vec<crate::Result<SweepPoint>> =
-        par_map(specs.len(), threads.max(1), |i| {
-            let spec = &specs[i];
+        par_map(cells.len(), threads.max(1), |i| {
+            let (ti, spec) = &cells[i];
+            let cfg = &grid[*ti].0;
             let conv = spec.build(cfg)?;
-            let accuracy = accuracy_fn(spec)?;
+            let accuracy = accuracy_fn(*ti, spec)?;
             // uniform design point: the swept converter runs on every
             // crossbar-mapped layer (first layer included), so EDP ranks
-            // converters one-on-one as in Fig. 9
+            // (tag, converter) cells one-on-one as in Fig. 9
             let design = DesignConfig::from_specs(*cfg, spec, spec)?;
             let report = evaluate_design(&costs, &design, layers);
             Ok(SweepPoint {
+                tag: cfg.tag(),
                 spec: spec.to_string(),
                 label: conv.label(),
                 accuracy,
@@ -349,6 +406,7 @@ where
         a.edp_pj_ns
             .total_cmp(&b.edp_pj_ns)
             .then(b.accuracy.total_cmp(&a.accuracy))
+            .then(a.tag.cmp(&b.tag))
             .then(a.spec.cmp(&b.spec))
     });
     let pairs: Vec<(f64, f64)> =
@@ -359,19 +417,45 @@ where
     Ok(SweepResult { workload: workload.to_string(), seed, points })
 }
 
+/// Single-tag convenience over [`run_matrix_sweep`]: sweep `specs` at one
+/// hardware config `cfg` (the pre-matrix behaviour of `stox-cli sweep`).
+pub fn run_sweep<F>(
+    specs: &[PsConverterSpec],
+    cfg: &StoxConfig,
+    layers: &[LayerShape],
+    workload: &str,
+    seed: u32,
+    threads: usize,
+    accuracy_fn: F,
+) -> crate::Result<SweepResult>
+where
+    F: Fn(&PsConverterSpec) -> crate::Result<f64> + Sync,
+{
+    anyhow::ensure!(!specs.is_empty(), "sweep needs at least one spec");
+    let grid = [(*cfg, specs.to_vec())];
+    run_matrix_sweep(&grid, layers, workload, seed, threads, |_, spec| accuracy_fn(spec))
+}
+
 impl SweepResult {
     /// Points on the non-dominated front, EDP-ascending.
     pub fn front(&self) -> Vec<&SweepPoint> {
         self.points.iter().filter(|p| p.on_front).collect()
     }
 
-    /// Find a point by its canonical spec string.
+    /// Find a point by its canonical spec string — the *first* (cheapest
+    /// EDP) match when a matrix sweep evaluated the spec at several
+    /// precision tags; use [`SweepResult::point_at`] to pin the tag.
     pub fn point(&self, spec: &str) -> Option<&SweepPoint> {
         self.points.iter().find(|p| p.spec == spec)
     }
 
+    /// Find the (precision tag, spec) cell of a matrix sweep.
+    pub fn point_at(&self, tag: &str, spec: &str) -> Option<&SweepPoint> {
+        self.points.iter().find(|p| p.tag == tag && p.spec == spec)
+    }
+
     /// Canonical JSON form (sorted object keys, EDP-ascending points) —
-    /// byte-stable for a fixed `(specs, seed)` input; pinned by the
+    /// byte-stable for a fixed `(grid, seed)` input; pinned by the
     /// golden-file test in `rust/tests/sweep.rs`.
     pub fn to_json(&self) -> Json {
         let points: Vec<Json> = self
@@ -379,6 +463,7 @@ impl SweepResult {
             .iter()
             .map(|p| {
                 Json::obj(vec![
+                    ("tag", Json::Str(p.tag.clone())),
                     ("spec", Json::Str(p.spec.clone())),
                     ("label", Json::Str(p.label.clone())),
                     ("accuracy", Json::Num(p.accuracy)),
@@ -395,7 +480,12 @@ impl SweepResult {
         let front: Vec<Json> = self
             .front()
             .iter()
-            .map(|p| Json::Str(p.spec.clone()))
+            .map(|p| {
+                Json::obj(vec![
+                    ("tag", Json::Str(p.tag.clone())),
+                    ("spec", Json::Str(p.spec.clone())),
+                ])
+            })
             .collect();
         Json::obj(vec![
             ("workload", Json::Str(self.workload.clone())),
@@ -410,11 +500,12 @@ impl SweepResult {
     /// (`stox:alpha=4,samples=1`).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "spec,label,accuracy,energy_pj,latency_ns,area_um2,edp_pj_ns,conversions,xbars,on_front\n",
+            "tag,spec,label,accuracy,energy_pj,latency_ns,area_um2,edp_pj_ns,conversions,xbars,on_front\n",
         );
         for p in &self.points {
             s.push_str(&format!(
-                "\"{}\",\"{}\",{:.6},{:.3},{:.3},{:.3},{:.1},{},{},{}\n",
+                "{},\"{}\",\"{}\",{:.6},{:.3},{:.3},{:.3},{:.1},{},{},{}\n",
+                p.tag,
                 p.spec,
                 p.label,
                 p.accuracy,
@@ -431,21 +522,24 @@ impl SweepResult {
     }
 
     /// Markdown-style summary table (`*` marks the Pareto front), plus
-    /// the front as spec strings and the paper's headline: the EDP gain
-    /// of the cheapest stochastic-MTJ spec over the full-precision ADC.
+    /// the front as `tag spec` cells and the paper's headline: the EDP
+    /// gain of the cheapest stochastic-MTJ cell over the *most expensive*
+    /// full-precision-ADC cell (HPFA sits at the high-precision tag, as
+    /// in Fig. 9a).
     pub fn render_table(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "| {:<28} | {:<16} | {:>7} | {:>12} | {:>11} | {:>14} | {:>5} |\n",
-            "spec", "label", "acc %", "energy nJ", "latency µs", "EDP pJ·ns", "front"
+            "| {:<8} | {:<28} | {:<16} | {:>7} | {:>12} | {:>11} | {:>14} | {:>5} |\n",
+            "tag", "spec", "label", "acc %", "energy nJ", "latency µs", "EDP pJ·ns", "front"
         ));
         s.push_str(&format!(
-            "|{:-<30}|{:-<18}|{:->9}|{:->14}|{:->13}|{:->16}|{:->7}|\n",
-            "", "", "", "", "", "", ""
+            "|{:-<10}|{:-<30}|{:-<18}|{:->9}|{:->14}|{:->13}|{:->16}|{:->7}|\n",
+            "", "", "", "", "", "", "", ""
         ));
         for p in &self.points {
             s.push_str(&format!(
-                "| {:<28} | {:<16} | {:>7.2} | {:>12.3} | {:>11.3} | {:>14.4e} | {:>5} |\n",
+                "| {:<8} | {:<28} | {:<16} | {:>7.2} | {:>12.3} | {:>11.3} | {:>14.4e} | {:>5} |\n",
+                p.tag,
                 p.spec,
                 p.label,
                 100.0 * p.accuracy,
@@ -462,21 +556,25 @@ impl SweepResult {
             self.points.len(),
             front
                 .iter()
-                .map(|p| p.spec.as_str())
+                .map(|p| format!("{} {}", p.tag, p.spec))
                 .collect::<Vec<_>>()
                 .join("  ->  ")
         ));
         // the paper's headline compares *stochastic MTJ* processing to the
         // FP ADC (not whatever baseline happens to be cheapest, e.g. the
         // accuracy-destroying 1b-SA) — points are EDP-ascending, so the
-        // first stox spec is the cheapest MTJ design point
+        // first stox cell is the cheapest MTJ design point and the last
+        // ideal cell is the HPFA-class corner of the matrix
         let mtj = self.points.iter().find(|p| p.spec.starts_with("stox"));
-        let fp = self.points.iter().find(|p| p.spec == "ideal");
+        let fp = self.points.iter().rev().find(|p| p.spec == "ideal");
         if let (Some(mtj), Some(fp)) = (mtj, fp) {
             if mtj.edp_pj_ns > 0.0 {
                 s.push_str(&format!(
-                    "EDP gain of stochastic MTJ '{}' over full-precision ADC: {:.1}x (paper: up to 130x)\n",
+                    "EDP gain of stochastic MTJ '{} {}' over full-precision ADC '{} {}': {:.1}x (paper: up to 130x)\n",
+                    mtj.tag,
                     mtj.spec,
+                    fp.tag,
+                    fp.spec,
                     fp.edp_pj_ns / mtj.edp_pj_ns
                 ));
             }
@@ -575,6 +673,61 @@ mod tests {
         let a = mini_sweep(1);
         let b = mini_sweep(8);
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn parse_precision_tags_dedupes_and_validates() {
+        let base = StoxConfig::default();
+        let tags = parse_precision_tags("4w4a4bs, 8w8a4bs,4w4a4bs", &base).unwrap();
+        assert_eq!(tags.len(), 2);
+        assert_eq!(tags[0].tag(), "4w4a4bs");
+        assert_eq!(tags[1].tag(), "8w8a4bs");
+        assert!(parse_precision_tags("", &base).is_err());
+        assert!(parse_precision_tags("6w4a4bs", &base).is_err());
+    }
+
+    #[test]
+    fn matrix_sweep_crosses_tags_and_specs() {
+        let base = StoxConfig::default();
+        let tags = parse_precision_tags("4w4a4bs,8w8a4bs", &base).unwrap();
+        let gws: Vec<GoldenWorkload> = tags
+            .iter()
+            .map(|c| GoldenWorkload::new(*c, 16, 5).unwrap())
+            .collect();
+        let grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> =
+            tags.iter().map(|c| (*c, mini_specs())).collect();
+        let r = run_matrix_sweep(
+            &grid,
+            &zoo::resnet20_cifar(),
+            "resnet20_cifar",
+            5,
+            4,
+            |ti, spec| Ok(gws[ti].accuracy(spec.build(gws[ti].cfg())?.as_ref())),
+        )
+        .unwrap();
+        assert_eq!(r.points.len(), 2 * mini_specs().len());
+        // every cell is addressable and the tags really differ in cost
+        let lo = r.point_at("4w4a4bs", "ideal").unwrap();
+        let hi = r.point_at("8w8a4bs", "ideal").unwrap();
+        assert!(
+            lo.energy_pj < hi.energy_pj,
+            "4w4a must be cheaper than 8w8a at the same converter"
+        );
+        // the single joint front spans the matrix
+        assert!(!r.front().is_empty());
+        // duplicate (tag, spec) cells are dropped
+        let mut dup_grid = grid.clone();
+        dup_grid.push((tags[0], mini_specs()));
+        let r2 = run_matrix_sweep(
+            &dup_grid,
+            &zoo::resnet20_cifar(),
+            "resnet20_cifar",
+            5,
+            2,
+            |ti, spec| Ok(gws[ti.min(1)].accuracy(spec.build(gws[ti.min(1)].cfg())?.as_ref())),
+        )
+        .unwrap();
+        assert_eq!(r2.points.len(), r.points.len());
     }
 
     #[test]

@@ -374,6 +374,101 @@ mod tests {
         }
     }
 
+    /// Executor that fails its first `fail_first` batches, then recovers —
+    /// the transient-error shape (e.g. a PJRT hiccup) behind the ROADMAP
+    /// retry/requeue question.
+    struct FlakyExec {
+        calls: std::sync::atomic::AtomicUsize,
+        fail_first: usize,
+    }
+
+    impl Executor for FlakyExec {
+        fn execute(&self, _images: &[f32], batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+            let call = self
+                .calls
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if call < self.fail_first {
+                anyhow::bail!("transient executor failure #{call}");
+            }
+            Ok((0..batch * 10).map(|i| i as f32).collect())
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    /// Documents the `Reply.result` retry-worthiness contract with
+    /// evidence (ROADMAP): a *transient* executor error fails exactly the
+    /// batch it hit — every member gets a per-reply `Err` carrying the
+    /// message — and does NOT poison the server loop: subsequent batches
+    /// execute normally and their requests get `Ok` logits.  A caller can
+    /// therefore implement retry by resubmitting only the `Err` replies.
+    #[test]
+    fn transient_executor_error_does_not_poison_later_batches() {
+        let server = Server::new(
+            Box::new(FlakyExec {
+                calls: std::sync::atomic::AtomicUsize::new(0),
+                fail_first: 1,
+            }),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                seed: 0,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..12).map(|_| vec![0.0f32; 4]));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        assert_eq!(replies.len(), 12);
+
+        let mut errs = 0usize;
+        let mut oks = 0usize;
+        let mut seen_ok_after_err = false;
+        for r in replies {
+            // every reply is delivered (never a dropped channel), failed
+            // batch or not
+            let rep = r.recv().expect("reply delivered, not abandoned");
+            match &rep.result {
+                Err(e) => {
+                    assert!(e.contains("transient executor failure"), "{e}");
+                    errs += 1;
+                }
+                Ok(logits) => {
+                    assert_eq!(logits.len(), 10);
+                    if errs > 0 {
+                        seen_ok_after_err = true;
+                    }
+                    oks += 1;
+                }
+            }
+        }
+        // exactly the first batch failed (≤ target_batch requests — the
+        // batcher may flush early under scheduling jitter); every other
+        // batch executed normally
+        assert!(
+            (1..=4).contains(&errs),
+            "exactly one batch (1..=4 requests) fails loudly, got {errs}"
+        );
+        assert_eq!(oks, 12 - errs, "later batches are not poisoned");
+        assert!(
+            seen_ok_after_err,
+            "successful batches must follow the failed one in submission order"
+        );
+    }
+
     /// Regression: a failing executor used to silently drop every pending
     /// Reply, leaving clients blocked forever on `recv()`.  Now each
     /// request of the failed batch receives an error reply.

@@ -73,6 +73,43 @@ impl StoxConfig {
         format!("{}w{}a{}bs", self.w_bits, self.a_bits, self.w_slice_bits)
     }
 
+    /// Parse a paper §4.1 precision tag (`XwYa[Zbs]`, e.g. `4w4a4bs` or
+    /// `8w8a`) into a hardware config derived from `base`: the tag sets
+    /// `w_bits`/`a_bits` (and `w_slice_bits` when the `Zbs` part is
+    /// present), everything else — `r_arr`, `alpha`, `n_samples`, the DAC
+    /// stream width — carries over from `base`.  When `Zbs` is omitted the
+    /// slice width defaults to `min(base.w_slice_bits, w_bits)`.  The
+    /// result is [`StoxConfig::validate`]d, so tags that break the
+    /// divisibility rules (e.g. `6w4a4bs`) are rejected with the reason.
+    ///
+    /// This is the precision axis of the Fig. 9a design matrix
+    /// (`stox-cli sweep --precision 4w4a4bs,8w8a4bs`); round-trips with
+    /// [`StoxConfig::tag`].
+    pub fn from_tag(tag: &str, base: &StoxConfig) -> crate::Result<Self> {
+        let t = tag.trim();
+        let bad = || anyhow::anyhow!("bad precision tag '{t}' (want XwYa[Zbs], e.g. 4w4a4bs)");
+        let (w_str, rest) = t.split_once('w').ok_or_else(bad)?;
+        let (a_str, slice_str) = rest.split_once('a').ok_or_else(bad)?;
+        let w_bits: u32 = w_str.trim().parse().map_err(|_| bad())?;
+        let a_bits: u32 = a_str.trim().parse().map_err(|_| bad())?;
+        anyhow::ensure!(w_bits >= 1 && a_bits >= 1, "precision tag '{t}': bits must be >= 1");
+        let slice_str = slice_str.trim();
+        let w_slice_bits: u32 = if slice_str.is_empty() {
+            base.w_slice_bits.min(w_bits)
+        } else {
+            let digits = slice_str.strip_suffix("bs").ok_or_else(bad)?;
+            digits.trim().parse().map_err(|_| bad())?
+        };
+        let a_stream_bits = base.a_stream_bits.min(a_bits);
+        anyhow::ensure!(
+            w_slice_bits >= 1 && a_stream_bits >= 1,
+            "precision tag '{t}': zero-width slices/streams"
+        );
+        let cfg = StoxConfig { a_bits, w_bits, a_stream_bits, w_slice_bits, ..*base };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     /// Required baseline ADC resolution for this mapping (§2.1):
     /// `N = log2(N_row) + I + W - 2`.
     pub fn adc_bits(&self) -> u32 {
@@ -198,5 +235,39 @@ mod tests {
         let bad = StoxConfig { a_bits: 4, a_stream_bits: 3, ..Default::default() };
         assert!(bad.validate().is_err());
         assert!(StoxConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn tag_round_trips_through_from_tag() {
+        let base = StoxConfig::default();
+        for tag in ["4w4a4bs", "8w8a4bs", "8w8a2bs", "2w2a1bs", "8w4a1bs"] {
+            let cfg = StoxConfig::from_tag(tag, &base).unwrap();
+            assert_eq!(cfg.tag(), tag, "round trip of {tag}");
+            // non-precision knobs carry over from base
+            assert_eq!(cfg.r_arr, base.r_arr);
+            assert_eq!(cfg.alpha, base.alpha);
+            assert_eq!(cfg.n_samples, base.n_samples);
+        }
+    }
+
+    #[test]
+    fn from_tag_defaults_slice_width_when_omitted() {
+        let base = StoxConfig::default(); // 4-bit slices
+        let cfg = StoxConfig::from_tag("8w8a", &base).unwrap();
+        assert_eq!((cfg.w_bits, cfg.a_bits, cfg.w_slice_bits), (8, 8, 4));
+        // slice default clamps to the tag's weight width
+        let cfg2 = StoxConfig::from_tag("2w2a", &base).unwrap();
+        assert_eq!(cfg2.w_slice_bits, 2);
+    }
+
+    #[test]
+    fn from_tag_rejects_malformed_and_indivisible() {
+        let base = StoxConfig::default();
+        for bad in ["", "4w", "4w4", "w4a4bs", "4w4a4", "4x4a4bs", "6w4a4bs"] {
+            assert!(
+                StoxConfig::from_tag(bad, &base).is_err(),
+                "tag '{bad}' must be rejected"
+            );
+        }
     }
 }

@@ -57,11 +57,15 @@ commands:
   fig9b
   accuracy     [--images N] [--batch B] [--converter SPEC]
   sweep        [--images N] [--seed S] [--samples GRID] [--bits GRID]
-               [--specs A;B;..] [--workload resnet20|resnet18|resnet50]
+               [--precision TAGS] [--specs A;B;..]
+               [--workload resnet20|resnet18|resnet50]
                [--threads N] [--out DIR] [--model]
-               (GRID: comma/range list, e.g. 1,2,4..8; --model scores
-                checkpoint accuracy from --artifacts instead of the
-                built-in golden workload)
+               (GRID: comma/range list, e.g. 1,2,4..8; TAGS: comma list of
+                XwYa[Zbs] precision tags, e.g. 4w4a4bs,8w8a4bs — the full
+                Fig. 9a design matrix of precision x converter; --model
+                scores checkpoint accuracy from --artifacts instead of the
+                built-in golden workload, loading + programming the weights
+                exactly once per precision tag)
   converters   (list the registered PS-converter modes)
   tables       [--results DIR]
   nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise)";
@@ -485,13 +489,18 @@ fn converters() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Registry-driven accuracy × energy Pareto sweep (the ROADMAP follow-up
-/// that turns the PR-1 converter API into the paper's Fig. 9 trade-off
-/// front): every registered spec plus MTJ sample-length / ADC bit-width
-/// grids, task accuracy joined with the cost rollup via `cost_key()`,
-/// non-dominated front marked, JSON/CSV artifacts optionally written.
+/// Registry-driven accuracy × energy Pareto sweep over the full Fig. 9a
+/// design matrix: precision tags (`--precision 4w4a4bs,8w8a4bs`) crossed
+/// with every registered converter spec plus MTJ sample-length / ADC
+/// bit-width grids, task accuracy joined with the cost rollup via
+/// `cost_key()`, one joint non-dominated front marked, JSON/CSV artifacts
+/// optionally written.  With `--model`, the checkpoint is loaded and
+/// programmed exactly once per precision tag and every converter spec
+/// shares the programmed crossbars (`share_with_converter_spec`).
 fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
-    use stox_net::arch::sweep::{default_grid, parse_grid, run_sweep, GoldenWorkload};
+    use stox_net::arch::sweep::{
+        default_grid, parse_grid, parse_precision_tags, run_matrix_sweep, GoldenWorkload,
+    };
 
     let images = args.usize("images", 64);
     let seed = args.u32("seed", 0);
@@ -509,45 +518,69 @@ fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
         ),
     };
 
-    // hardware config: the trained manifest's when scoring a checkpoint
-    // (--model), the paper's 4w4a4bs default otherwise
+    // base hardware config: the trained manifest's when scoring a
+    // checkpoint (--model), the paper's 4w4a4bs default otherwise; the
+    // precision axis derives tag configs from it (r_arr/alpha carry over)
     let manifest = if args.flag("model") {
         Some(Manifest::load(artifacts)?)
     } else {
         None
     };
-    let cfg = manifest
+    let base_cfg = manifest
         .as_ref()
         .map(|m| m.spec.stox_config())
         .unwrap_or_default();
-    let mut specs = default_grid(&cfg, &samples, &bits);
-    if let Some(extra) = args.get("specs") {
-        // user-supplied additions, ';'-separated (specs contain commas)
-        for tok in extra.split(';').filter(|t| !t.trim().is_empty()) {
-            let s = PsConverterSpec::from_mode(tok, cfg.alpha, cfg.n_samples)?;
-            if !specs.iter().any(|e| e.to_string() == s.to_string()) {
-                specs.push(s);
+    let tag_cfgs: Vec<StoxConfig> = match args.get("precision") {
+        Some(tags) => parse_precision_tags(tags, &base_cfg)?,
+        None => vec![base_cfg],
+    };
+
+    // converter axis: one default grid per tag, plus user additions
+    // (';'-separated — canonical specs contain commas)
+    let mut grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> = Vec::new();
+    for cfg in &tag_cfgs {
+        let mut specs = default_grid(cfg, &samples, &bits);
+        if let Some(extra) = args.get("specs") {
+            for tok in extra.split(';').filter(|t| !t.trim().is_empty()) {
+                let s = PsConverterSpec::from_mode(tok, cfg.alpha, cfg.n_samples)?;
+                if !specs.iter().any(|e| e.to_string() == s.to_string()) {
+                    specs.push(s);
+                }
             }
         }
+        grid.push((*cfg, specs));
     }
+    let n_cells: usize = grid.iter().map(|(_, s)| s.len()).sum();
     println!(
-        "sweeping {} converter specs over {workload} ({threads} threads, seed {seed})",
-        specs.len()
+        "sweeping {} precision tag(s) x converter specs = {} design points over {workload} \
+         ({threads} threads, seed {seed})",
+        tag_cfgs.len(),
+        n_cells,
     );
 
     let result = if let Some(manifest) = &manifest {
         let store = WeightStore::load(manifest)?;
         let test = TestSet::load(manifest)?;
         let n = images.min(test.n);
-        run_sweep(&specs, &cfg, &layers, &workload, seed, threads, |spec| {
-            let model =
-                NativeModel::load(manifest, &store)?.with_converter_spec(spec)?;
-            Ok(model.accuracy(&test.images, &test.labels, n, 8, 777))
+        // exactly one weight load + one programming pass per precision
+        // tag; every converter spec then shares the programmed crossbars
+        let models: Vec<NativeModel> = tag_cfgs
+            .iter()
+            .map(|cfg| NativeModel::load_with_config(manifest, &store, *cfg))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        run_matrix_sweep(&grid, &layers, &workload, seed, threads, |ti, spec| {
+            let view = models[ti].share_with_converter_spec(spec)?;
+            Ok(view.accuracy(&test.images, &test.labels, n, 8, 777))
         })?
     } else {
-        let gw = GoldenWorkload::new(cfg, images, seed)?;
-        run_sweep(&specs, &cfg, &layers, &workload, seed, threads, |spec| {
-            Ok(gw.accuracy(spec.build(&cfg)?.as_ref()))
+        // one golden workload (programmed once) per tag, shared by specs
+        let workloads: Vec<GoldenWorkload> = tag_cfgs
+            .iter()
+            .map(|cfg| GoldenWorkload::new(*cfg, images, seed))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        run_matrix_sweep(&grid, &layers, &workload, seed, threads, |ti, spec| {
+            let gw = &workloads[ti];
+            Ok(gw.accuracy(spec.build(gw.cfg())?.as_ref()))
         })?
     };
 

@@ -7,10 +7,23 @@
 //! the cross-layer validation behind `rust/tests/parity.rs`.  It is also
 //! what the sensitivity analysis (Fig. 5) and the Fig. 4 PS-distribution
 //! collection run on.
+//!
+//! # Weight programming is shared, converter dispatch is per-view
+//!
+//! Programming a checkpoint onto crossbars ([`StoxMvm::program`]:
+//! quantize → slice → partition) depends only on the weights and the
+//! [`StoxConfig`] precision — never on the PS converter, which is applied
+//! per column slice at run time.  The programmed crossbars are therefore
+//! held behind `Arc` and shared: [`NativeModel::load_with_config`]
+//! programs once per precision tag, and
+//! [`NativeModel::share_with_converter_spec`] derives per-converter views
+//! that reuse the same programmed arrays — the `sweep --model` fast path
+//! (one load + program per tag, N converter specs for free).
 
 use super::weights::{Manifest, WeightStore};
-use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxMvm};
+use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
 use crate::stats::rng::mix32;
+use std::sync::Arc;
 
 /// One batch-norm affine (folded running stats).
 #[derive(Debug, Clone)]
@@ -44,8 +57,9 @@ impl BnFold {
 }
 
 struct ConvOp {
-    /// programmed crossbars (None → full-precision first layer)
-    mvm: Option<StoxMvm>,
+    /// programmed crossbars (None → full-precision first layer); `Arc` so
+    /// per-converter model views share one programming pass
+    mvm: Option<Arc<StoxMvm>>,
     raw_w: Vec<f32>, // [kh,kw,cin,cout] (normalized for stox; raw for fp)
     kh: usize,
     kw: usize,
@@ -95,10 +109,25 @@ fn rebuild_converter(spec: &PsConverterSpec, mvm: Option<&StoxMvm>) -> Box<dyn P
 }
 
 impl NativeModel {
+    /// Load + program the checkpoint at its trained hardware config.
     pub fn load(manifest: &Manifest, store: &WeightStore) -> crate::Result<Self> {
+        Self::load_with_config(manifest, store, manifest.spec.stox_config())
+    }
+
+    /// Load + program the checkpoint at an explicit hardware config —
+    /// e.g. a `--precision` tag other than the trained one
+    /// ([`StoxConfig::from_tag`]).  Every crossbar-mapped layer is
+    /// quantized and programmed exactly once per call; evaluate many
+    /// converter specs against one programming pass with
+    /// [`NativeModel::share_with_converter_spec`].
+    pub fn load_with_config(
+        manifest: &Manifest,
+        store: &WeightStore,
+        cfg: StoxConfig,
+    ) -> crate::Result<Self> {
+        cfg.validate()?;
         let spec = &manifest.spec;
         let _widths = spec.widths();
-        let cfg = spec.stox_config();
         let first_qf = spec.first_layer == "qf";
         let samples_for = |layer_idx: usize| -> u32 {
             if layer_idx == 0 {
@@ -124,7 +153,7 @@ impl NativeModel {
          -> crate::Result<ConvOp> {
             let (kh, kw, cin, cout) = (shape[0], shape[1], shape[2], shape[3]);
             let wn = normalize_weights(w_raw);
-            let mvm = StoxMvm::program(&wn, kh * kw * cin, cout, cfg)?;
+            let mvm = Arc::new(StoxMvm::program(&wn, kh * kw * cin, cout, cfg)?);
             // the registry is the single parse/construct path: manifest
             // mode strings ("stox", "sa", "expected", "ideal", or any
             // extended `name:k=v` form) all resolve here
@@ -404,7 +433,9 @@ impl NativeModel {
                 .map(|(i, v)| v + rng.uniform_in(i as u32, -sigma, sigma) * maxw)
                 .collect();
             let mvm = op.mvm.as_ref().map(|m| {
-                StoxMvm::program(&normalize_weights(&w2), m.m, m.n, m.cfg).unwrap()
+                Arc::new(
+                    StoxMvm::program(&normalize_weights(&w2), m.m, m.n, m.cfg).unwrap(),
+                )
             });
             Some(ConvOp { mvm, raw_w: w2, ..op.clone_shallow() })
         };
@@ -448,6 +479,43 @@ impl NativeModel {
         Ok(self)
     }
 
+    /// Cheap per-converter view over this model's single programming pass:
+    /// clones the model sharing the programmed crossbars (`Arc::clone`,
+    /// no re-quantization or re-programming) and swaps every
+    /// crossbar-mapped layer's converter to `spec` — semantically
+    /// identical to reloading the checkpoint and calling
+    /// [`NativeModel::with_converter_spec`] (pinned bit-identical by
+    /// `rust/tests/model_sweep.rs`), but O(converters) instead of
+    /// O(weights).  This is what makes `sweep --model` perform exactly
+    /// one weight load + program per precision tag regardless of how many
+    /// converter specs are swept.
+    pub fn share_with_converter_spec(&self, spec: &PsConverterSpec) -> crate::Result<Self> {
+        self.clone_shallow().with_converter_spec(spec)
+    }
+
+    /// True iff every crossbar-mapped layer of `self` shares its
+    /// programmed crossbars (pointer-equal `Arc`) with the corresponding
+    /// layer of `other` — the regression hook asserting that per-spec
+    /// model views reuse one programming pass instead of re-programming.
+    pub fn shares_programming_with(&self, other: &Self) -> bool {
+        fn same(a: &ConvOp, b: &ConvOp) -> bool {
+            match (&a.mvm, &b.mvm) {
+                (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+                (None, None) => true,
+                _ => false,
+            }
+        }
+        if !same(&self.conv1, &other.conv1) || self.blocks.len() != other.blocks.len() {
+            return false;
+        }
+        self.blocks.iter().zip(&other.blocks).all(|(s, o)| {
+            s.len() == o.len()
+                && s.iter()
+                    .zip(o)
+                    .all(|(x, y)| same(&x.0, &y.0) && same(&x.2, &y.2))
+        })
+    }
+
     /// Number of conv layers (perturbation targets).
     pub fn n_conv_layers(&self) -> usize {
         1 + self.blocks.iter().map(|s| s.len() * 2).sum::<usize>()
@@ -481,11 +549,11 @@ impl NativeModel {
 }
 
 impl ConvOp {
+    /// Clone sharing the programmed crossbars (`Arc`); only the converter
+    /// is rebuilt.  No re-quantization, no re-programming.
     fn clone_shallow(&self) -> Self {
         Self {
-            mvm: self.mvm.as_ref().map(|m| {
-                StoxMvm::program(&self.raw_w, m.m, m.n, m.cfg).unwrap()
-            }),
+            mvm: self.mvm.clone(),
             raw_w: self.raw_w.clone(),
             kh: self.kh,
             kw: self.kw,
@@ -493,7 +561,7 @@ impl ConvOp {
             cout: self.cout,
             stride: self.stride,
             conv_spec: self.conv_spec.clone(),
-            converter: rebuild_converter(&self.conv_spec, self.mvm.as_ref()),
+            converter: rebuild_converter(&self.conv_spec, self.mvm.as_deref()),
             layer_idx: self.layer_idx,
         }
     }

@@ -65,6 +65,16 @@ impl ModelSpecJson {
         self.stox.to_config()
     }
 
+    /// Hardware config for a paper §4.1 precision tag (`XwYa[Zbs]`),
+    /// derived from the trained config — `r_arr`, `alpha`, `n_samples`
+    /// and the DAC stream width carry over, the tag overrides the
+    /// operand/slice widths ([`StoxConfig::from_tag`]).  This is how
+    /// `sweep --model --precision …` re-programs one checkpoint across
+    /// the Fig. 9a precision axis.
+    pub fn precision_config(&self, tag: &str) -> crate::Result<StoxConfig> {
+        StoxConfig::from_tag(tag, &self.stox_config())
+    }
+
     /// Converter spec of the stochastic body layers (trained mode + the
     /// checkpoint's alpha / n_samples defaults) via the registry grammar.
     pub fn body_converter_spec(&self) -> crate::Result<PsConverterSpec> {

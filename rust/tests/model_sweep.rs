@@ -1,0 +1,165 @@
+//! Model-path design-matrix coverage (ISSUE 3): the committed tiny
+//! checkpoint fixture (`rust/tests/data/tiny_inhomo/`, exported by
+//! `python/compile/export_fixture.py`) carries `mode:
+//! "inhomo:base=1,extra=3"` in its manifest, pinning manifest-driven
+//! converter selection through the registry end-to-end (no `--converter`
+//! override anywhere), and backs the shared-weight-programming regression
+//! tests: per-spec model views must share one programming pass per
+//! precision tag and be bit-identical to the old reload-per-spec path.
+
+use std::path::PathBuf;
+use stox_net::arch::components::ComponentCosts;
+use stox_net::arch::energy::{evaluate_design, DesignConfig};
+use stox_net::arch::sweep::{parse_precision_tags, run_matrix_sweep};
+use stox_net::imc::{PsConverterSpec, StoxConfig};
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/tiny_inhomo")
+}
+
+fn fixture() -> (Manifest, WeightStore, TestSet) {
+    let m = Manifest::load(fixture_dir()).expect("tiny_inhomo fixture present");
+    let store = WeightStore::load(&m).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    (m, store, test)
+}
+
+/// The manifest's extended mode string resolves through the registry with
+/// no CLI override: the body (and QF first layer) run the §3.2.3
+/// inhomogeneous converter, the forward pass is finite and deterministic,
+/// and the energy accounting follows the same specs via `cost_key()`.
+#[test]
+fn manifest_inhomo_mode_resolves_through_registry() {
+    let (m, store, test) = fixture();
+    assert_eq!(m.spec.stox.mode, "inhomo:base=1,extra=3");
+    let body = m.spec.body_converter_spec().unwrap();
+    assert_eq!(
+        body,
+        PsConverterSpec::InhomogeneousMtj {
+            alpha: 4.0,
+            base_samples: 1,
+            extra_samples: 3
+        }
+    );
+    // QF first layer inherits the manifest mode (with its own read count
+    // defaulting handled by the spec grammar)
+    let first = m.spec.first_layer_spec().unwrap();
+    assert_eq!(first.mode_name(), "inhomo");
+
+    let model = NativeModel::load(&m, &store).unwrap();
+    let img = test.h * test.w * test.c;
+    let logits = model.forward(&test.images[..2 * img], 2, 7);
+    assert_eq!(logits.len(), 2 * m.spec.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let logits2 = model.forward(&test.images[..2 * img], 2, 7);
+    assert_eq!(logits, logits2, "inhomo forward must be seed-deterministic");
+
+    // cost rollup stays in lockstep with the manifest-selected converters
+    let design =
+        DesignConfig::from_specs(m.spec.stox_config(), &body, &first).unwrap();
+    let report = evaluate_design(&ComponentCosts::default(), &design, &m.layers);
+    assert!(report.energy_pj > 0.0 && report.conversions > 0);
+}
+
+/// Regression (ISSUE 3 satellite): a sweep evaluating its converter specs
+/// against shared programmed crossbars produces byte-identical front JSON
+/// to the old path that reloaded + re-programmed the checkpoint per spec.
+#[test]
+fn shared_programming_sweep_bit_identical_to_reload() {
+    let (m, store, test) = fixture();
+    let cfg = m.spec.stox_config();
+    let specs: Vec<PsConverterSpec> = [
+        "ideal",
+        "sa",
+        "sparse:bits=4",
+        "stox:alpha=4,samples=2",
+        "inhomo:alpha=4,base=1,extra=3",
+    ]
+    .iter()
+    .map(|s| s.parse().unwrap())
+    .collect();
+    let grid = vec![(cfg, specs)];
+    let n = test.n.min(8);
+
+    // fast path: one load + one programming pass, Arc-shared across specs
+    let base = NativeModel::load_with_config(&m, &store, cfg).unwrap();
+    let shared = run_matrix_sweep(&grid, &m.layers, "tiny", 3, 2, |_, spec| {
+        let view = base.share_with_converter_spec(spec)?;
+        assert!(
+            base.shares_programming_with(&view),
+            "per-spec view must share the programming pass"
+        );
+        Ok(view.accuracy(&test.images, &test.labels, n, 4, 77))
+    })
+    .unwrap();
+
+    // slow path: fresh load + programming per spec (the pre-refactor shape)
+    let reload = run_matrix_sweep(&grid, &m.layers, "tiny", 3, 1, |_, spec| {
+        let model = NativeModel::load(&m, &store)?.with_converter_spec(spec)?;
+        assert!(
+            !base.shares_programming_with(&model),
+            "a fresh load must not alias the shared programming"
+        );
+        Ok(model.accuracy(&test.images, &test.labels, n, 4, 77))
+    })
+    .unwrap();
+
+    assert_eq!(
+        shared.to_json().to_string(),
+        reload.to_json().to_string(),
+        "shared-programming sweep must be bit-identical to per-spec reload"
+    );
+}
+
+/// The precision axis of a `--model` sweep: one programming pass per tag,
+/// shared by every converter spec of that tag, and the matrix result
+/// carries both tags' cells.
+#[test]
+fn model_matrix_one_programming_pass_per_tag() {
+    let (m, store, test) = fixture();
+    let tags = parse_precision_tags("4w4a4bs,8w8a4bs", &m.spec.stox_config()).unwrap();
+    // the manifest helper derives the same configs from tag strings
+    assert_eq!(m.spec.precision_config("8w8a4bs").unwrap().tag(), "8w8a4bs");
+
+    let models: Vec<NativeModel> = tags
+        .iter()
+        .map(|c| NativeModel::load_with_config(&m, &store, *c).unwrap())
+        .collect();
+    for model in &models {
+        for s in ["ideal", "stox:alpha=4,samples=2"] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let view = model.share_with_converter_spec(&spec).unwrap();
+            assert!(
+                model.shares_programming_with(&view),
+                "{s}: view must reuse the tag's programming pass"
+            );
+        }
+    }
+    assert!(
+        !models[0].shares_programming_with(&models[1]),
+        "different precision tags are different programmings"
+    );
+
+    let specs: Vec<PsConverterSpec> = ["ideal", "stox:alpha=4,samples=1"]
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> =
+        tags.iter().map(|c| (*c, specs.clone())).collect();
+    let n = test.n.min(4);
+    let r = run_matrix_sweep(&grid, &m.layers, "tiny", 0, 2, |ti, spec| {
+        let view = models[ti].share_with_converter_spec(spec)?;
+        Ok(view.accuracy(&test.images, &test.labels, n, 4, 7))
+    })
+    .unwrap();
+    assert_eq!(r.points.len(), 4);
+    assert!(r.point_at("4w4a4bs", "ideal").is_some());
+    assert!(r.point_at("8w8a4bs", "ideal").is_some());
+    assert!(r.point_at("8w8a4bs", "stox:alpha=4,samples=1").is_some());
+    // precision axis shows up in the cost rollup on the model path too
+    let lo = r.point_at("4w4a4bs", "ideal").unwrap();
+    let hi = r.point_at("8w8a4bs", "ideal").unwrap();
+    assert!(lo.energy_pj < hi.energy_pj);
+}
