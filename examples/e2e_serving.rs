@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: std::time::Duration::from_millis(2),
             },
             seed: 7,
+            max_retries: 2,
         },
     )
     .with_scheduler(sched);

@@ -76,6 +76,7 @@ fn main() {
                         max_wait: Duration::from_micros(200),
                     },
                     seed: 0,
+                    max_retries: 0,
                 },
             );
             let (tx, rx) = mpsc::channel();

@@ -1,18 +1,24 @@
 //! MVM hot-path bench: the Rust-native Algorithm 1 crossbar MVM across
 //! converter types and configurations (the L3 functional hot loop).
 //!
-//! Regenerates the per-conversion cost story behind Table 2 / Fig. 9 at
-//! the functional level: MTJ sampling cost scales with samples; the
-//! converter choice does not change the analog PS work.
+//! The headline section is the integer digit-plane kernel before/after:
+//! the retained pre-PR f32 kernel (`StoxMvm::program_reference`) against
+//! the i8/i32 kernel (`StoxMvm::program`) on the ResNet-20 mid-layer case
+//! (B=8, M=576, N=64, MTJ ×1) — the EXPERIMENTS.md §Perf acceptance case.
+//! Results are also written to `BENCH_mvm.json` (median ns/op per case)
+//! for the CI perf-trajectory artifact.
 //!
 //! All converters are constructed through the `PsConverterSpec` registry
-//! (the production path); the final section isolates the converter-path
-//! redesign itself — legacy per-element enum dispatch vs the
+//! (the production path); the converter section isolates the converter
+//! dispatch redesign — legacy per-element enum dispatch vs the
 //! slice-vectorized `PsConvert::convert_slice`.
 
-use stox_net::imc::{PsConvert, PsConverter, PsConverterSpec, StoxConfig, StoxMvm};
+use stox_net::imc::{
+    decompose_activations, im2col, ConvArena, PsConvert, PsConverter, PsConverterSpec,
+    StoxConfig, StoxMvm,
+};
 use stox_net::stats::rng::CounterRng;
-use stox_net::util::bench;
+use stox_net::util::bench::{self, BenchSuite};
 
 fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
     let rng = CounterRng::new(seed);
@@ -20,16 +26,57 @@ fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
 }
 
 fn main() {
+    let mut suite = BenchSuite::new("mvm");
+
     // a mid-network ResNet-20 layer: M = 3·3·64 = 576 rows, 64 cols
     let (b, m, n) = (8usize, 576usize, 64usize);
     let a = rand_vec(b * m, 1);
     let w = rand_vec(m * n, 2);
 
+    println!("== integer digit-plane kernel before/after (B={b}, M={m}, N={n}, MTJ x1) ==");
+    let mtj1 = "stox:samples=1"
+        .parse::<PsConverterSpec>()
+        .unwrap()
+        .build(&StoxConfig::default())
+        .unwrap();
+    let pre = StoxMvm::program_reference(&w, m, n, StoxConfig::default()).unwrap();
+    let post = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    assert!(post.is_integer_kernel());
+    let mut seed = 0u32;
+    // kernel-only comparison: both sides strictly sequential, so the
+    // ratio isolates the i8/i32 layout + threshold memo from threading
+    let before = suite.quick("mvm/4w4a4bs MTJ x1 [pre-PR f32 kernel, sequential]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(pre.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    let after = suite.quick("mvm/4w4a4bs MTJ x1 [integer kernel, sequential]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(post.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    println!(
+        "-> integer-kernel median speedup (sequential, kernel-only): {:.2}x\n",
+        suite.median_ns(before) / suite.median_ns(after)
+    );
+    // end-to-end comparison: the auto-dispatching run() both before and
+    // after — includes the new (b, k) sub-batch split, i.e. what every
+    // consumer of StoxMvm::run actually observes
+    let before_e2e = suite.quick("mvm/4w4a4bs MTJ x1 [pre-PR kernel, auto-parallel]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(pre.run(&a, b, mtj1.as_ref(), seed));
+    });
+    let after_e2e = suite.quick("mvm/4w4a4bs MTJ x1 [integer kernel, auto-parallel]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(post.run(&a, b, mtj1.as_ref(), seed));
+    });
+    println!(
+        "-> end-to-end median speedup (run() before vs after): {:.2}x\n",
+        suite.median_ns(before_e2e) / suite.median_ns(after_e2e)
+    );
+
     println!("== stox MVM (B={b}, M={m}, N={n}) ==");
     for (name, cfg, spec) in [
         ("4w4a4bs ideal-ADC", StoxConfig::default(), "ideal"),
         ("4w4a4bs 1b-SA", StoxConfig::default(), "sa"),
-        ("4w4a4bs MTJ x1", StoxConfig::default(), "stox:samples=1"),
         (
             "4w4a4bs MTJ x8",
             StoxConfig { n_samples: 8, ..Default::default() },
@@ -64,11 +111,51 @@ fn main() {
             .unwrap();
         let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
         let mut seed = 0u32;
-        bench::quick(&format!("mvm/{name}"), || {
+        suite.quick(&format!("mvm/{name}"), || {
             seed = seed.wrapping_add(1);
             bench::black_box(mvm.run(&a, b, conv.as_ref(), seed));
         });
     }
+
+    println!("\n== sub-batch (b, k) split at batch=1 (single-image serving shape) ==");
+    let single = rand_vec(m, 3);
+    let threads = stox_net::util::pool::default_threads();
+    suite.quick("ksplit/4w4a4bs MTJ x1 batch=1 [sequential]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(post.run_sequential(&single, 1, mtj1.as_ref(), seed));
+    });
+    suite.quick(
+        &format!("ksplit/4w4a4bs MTJ x1 batch=1 [{threads} threads]"),
+        || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(post.run_ksplit(&single, 1, mtj1.as_ref(), seed, threads));
+        },
+    );
+
+    println!("\n== fused digit-domain conv before/after (x [2,16,16,16], w [3,3,16,32]) ==");
+    let (cb, ch, cw, cin, cout) = (2usize, 16usize, 16usize, 16usize, 32usize);
+    let x = rand_vec(cb * ch * cw * cin, 4);
+    let cwts = rand_vec(3 * 3 * cin * cout, 5);
+    let ccfg = StoxConfig::default();
+    let cm = 3 * 3 * cin;
+    let conv_pre = StoxMvm::program_reference(&cwts, cm, cout, ccfg).unwrap();
+    let conv_int = StoxMvm::program(&cwts, cm, cout, ccfg).unwrap();
+    suite.quick("conv/im2col + pre-PR f32 kernel", || {
+        seed = seed.wrapping_add(1);
+        let (patches, ho, wo) = im2col(&x, cb, ch, cw, cin, 3, 3, 1);
+        bench::black_box(conv_pre.run(&patches, cb * ho * wo, mtj1.as_ref(), seed));
+    });
+    suite.quick("conv/im2col + integer kernel", || {
+        seed = seed.wrapping_add(1);
+        let (patches, ho, wo) = im2col(&x, cb, ch, cw, cin, 3, 3, 1);
+        bench::black_box(conv_int.run(&patches, cb * ho * wo, mtj1.as_ref(), seed));
+    });
+    let mut arena = ConvArena::new();
+    suite.quick("conv/fused digit-domain", || {
+        seed = seed.wrapping_add(1);
+        let acts = decompose_activations(&mut arena, &x, cb, ch, cw, cin, &ccfg);
+        bench::black_box(conv_int.run_conv_digits(&acts, 3, 3, 1, mtj1.as_ref(), seed));
+    });
 
     println!("\n== converter path: legacy scalar dispatch vs convert_slice ==");
     // one full PS column set of the layer above, converted in isolation —
@@ -85,7 +172,7 @@ fn main() {
         ("quant-ADC 8b", PsConverter::QuantAdc { bits: 8 }, "quant:bits=8"),
         ("ideal-ADC", PsConverter::IdealAdc, "ideal"),
     ] {
-        bench::quick(&format!("convert/scalar-dispatch {name} (16k PS)"), || {
+        suite.quick(&format!("convert/scalar-dispatch {name} (16k PS)"), || {
             for (idx, (&p, o)) in ps.iter().zip(out.iter_mut()).enumerate() {
                 *o = legacy.convert(p, idx as u32, &rng);
             }
@@ -96,20 +183,22 @@ fn main() {
             .unwrap()
             .build(&StoxConfig::default())
             .unwrap();
-        bench::quick(&format!("convert/slice {name} (16k PS)"), || {
+        suite.quick(&format!("convert/slice {name} (16k PS)"), || {
             conv.convert_slice(&ps, &mut out, 0, 1, &rng);
             bench::black_box(&out);
         });
     }
 
     println!("\n== crossbar programming (weight reload) ==");
-    bench::quick("program/4w4a4bs 576x64", || {
+    suite.quick("program/4w4a4bs 576x64", || {
         bench::black_box(StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap());
     });
 
     println!("\n== PS collection (Fig. 4 probe path) ==");
     let mvm = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
-    bench::quick("collect_ps/4w4a4bs", || {
+    suite.quick("collect_ps/4w4a4bs", || {
         bench::black_box(mvm.collect_ps(&a, b));
     });
+
+    suite.write_json().expect("bench artifact written");
 }

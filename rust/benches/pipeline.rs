@@ -1,14 +1,19 @@
 //! Fig. 8 regeneration bench: pipeline stage occupancy, ADC sharing
-//! sweep, multi-sampling sweep, and layer/network latency model timings.
+//! sweep, multi-sampling sweep, and layer/network latency model timings —
+//! plus the native-model forward before/after (fused digit-domain conv
+//! path vs the legacy im2col path) on the committed tiny checkpoint.
+//! Writes `BENCH_pipeline.json` (median ns/op per case).
 
 use stox_net::arch::components::PsProcessing;
 use stox_net::arch::mapper::map_network;
 use stox_net::arch::pipeline::PipelineModel;
 use stox_net::imc::StoxConfig;
-use stox_net::model::zoo;
-use stox_net::util::bench;
+use stox_net::model::weights::TestSet;
+use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
+use stox_net::util::bench::{self, BenchSuite};
 
 fn main() {
+    let mut suite = BenchSuite::new("pipeline");
     let pipe = PipelineModel::default();
 
     // ----- Fig. 8 panel -----
@@ -38,9 +43,41 @@ fn main() {
     );
 
     println!("\n== timing the model itself ==");
-    bench::quick("pipeline/network_latency resnet20", || {
+    suite.quick("pipeline/network_latency resnet20", || {
         bench::black_box(
             pipe.network_latency_ns(&layers, |_| PsProcessing::StochasticMtj { samples: 1 }),
         );
     });
+
+    // ----- native forward: fused digit-domain conv vs legacy im2col -----
+    let fixture = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/tiny_inhomo");
+    if fixture.join("manifest.json").exists() {
+        let m = Manifest::load(&fixture).expect("fixture manifest");
+        let store = WeightStore::load(&m).expect("fixture weights");
+        let test = TestSet::load(&m).expect("fixture testset");
+        let n = test.n.min(4);
+        let images = &test.images[..n * m.spec.image_size * m.spec.image_size * m.spec.in_channels];
+        println!("\n== native forward: fused digit-domain vs legacy im2col ==");
+        let mut legacy = NativeModel::load(&m, &store).expect("model");
+        legacy.set_fused_conv(false);
+        let mut seed = 0u32;
+        let before = suite.quick("forward/tiny legacy im2col", || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(legacy.forward(images, n, seed));
+        });
+        let fused = NativeModel::load(&m, &store).expect("model");
+        let after = suite.quick("forward/tiny fused digit-domain", || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(fused.forward(images, n, seed));
+        });
+        println!(
+            "-> fused-conv median speedup: {:.2}x",
+            suite.median_ns(before) / suite.median_ns(after)
+        );
+    } else {
+        println!("(tiny_inhomo fixture missing — skipping forward bench)");
+    }
+
+    suite.write_json().expect("bench artifact written");
 }

@@ -14,9 +14,10 @@ use stox_net::arch::sweep::{
 use stox_net::imc::{PsConverterSpec, StoxConfig};
 use stox_net::model::weights::TestSet;
 use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
-use stox_net::util::bench;
+use stox_net::util::bench::{self, BenchSuite};
 
 fn main() {
+    let mut suite = BenchSuite::new("sweep");
     let cfg = StoxConfig::default();
     let layers = zoo::resnet20_cifar();
     let gw = GoldenWorkload::new(cfg, 32, 1).expect("golden workload");
@@ -28,7 +29,7 @@ fn main() {
     );
 
     for threads in [1usize, stox_net::util::pool::default_threads()] {
-        bench::quick(&format!("sweep/golden32/threads={threads}"), || {
+        suite.quick(&format!("sweep/golden32/threads={threads}"), || {
             let r = run_sweep(
                 &specs,
                 &cfg,
@@ -53,7 +54,7 @@ fn main() {
         .iter()
         .map(|c| (*c, default_grid(c, &[1, 2, 4, 8], &[2, 4, 8])))
         .collect();
-    bench::quick("sweep/matrix2x/golden32", || {
+    suite.quick("sweep/matrix2x/golden32", || {
         let r = run_matrix_sweep(
             &grid,
             &layers,
@@ -91,7 +92,7 @@ fn main() {
         let base =
             NativeModel::load_with_config(&m, &store, model_cfg).expect("model");
         println!();
-        bench::quick("sweep/model-6spec/shared-programming", || {
+        suite.quick("sweep/model-6spec/shared-programming", || {
             let mut acc = 0.0;
             for spec in &model_specs {
                 let view = base.share_with_converter_spec(spec).expect("view");
@@ -99,7 +100,7 @@ fn main() {
             }
             bench::black_box(acc);
         });
-        bench::quick("sweep/model-6spec/reload-per-spec", || {
+        suite.quick("sweep/model-6spec/reload-per-spec", || {
             let mut acc = 0.0;
             for spec in &model_specs {
                 let model = NativeModel::load(&m, &store)
@@ -120,4 +121,6 @@ fn main() {
     })
     .expect("sweep");
     println!("\n{}", r.render_table());
+
+    suite.write_json().expect("bench artifact written");
 }

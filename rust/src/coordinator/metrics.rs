@@ -14,6 +14,8 @@ pub struct Metrics {
     batch_occupancy: Histogram,
     pub requests: u64,
     pub batches: u64,
+    /// executor-error batch resubmits (`ServeConfig::max_retries` policy)
+    pub retries: u64,
     /// simulated IMC hardware charges
     pub hw_energy_pj: f64,
     pub hw_latency_ns: f64,
@@ -35,6 +37,7 @@ impl Metrics {
             batch_occupancy: Histogram::new(0.0, 64.0, 64),
             requests: 0,
             batches: 0,
+            retries: 0,
             hw_energy_pj: 0.0,
             hw_latency_ns: 0.0,
         }
@@ -75,6 +78,7 @@ impl Metrics {
         MetricsReport {
             requests: self.requests,
             batches: self.batches,
+            retries: self.retries,
             throughput_rps: self.throughput_rps(),
             p50_us: self.latency_percentile_us(50.0),
             p95_us: self.latency_percentile_us(95.0),
@@ -95,6 +99,7 @@ impl Metrics {
 pub struct MetricsReport {
     pub requests: u64,
     pub batches: u64,
+    pub retries: u64,
     pub throughput_rps: f64,
     pub p50_us: f32,
     pub p95_us: f32,
@@ -109,6 +114,9 @@ impl std::fmt::Display for MetricsReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests        : {}", self.requests)?;
         writeln!(f, "batches         : {} (mean occupancy {:.2})", self.batches, self.mean_batch)?;
+        if self.retries > 0 {
+            writeln!(f, "batch retries   : {}", self.retries)?;
+        }
         writeln!(f, "throughput      : {:.1} req/s", self.throughput_rps)?;
         writeln!(
             f,

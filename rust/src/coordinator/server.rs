@@ -32,17 +32,18 @@ pub struct Request {
 ///
 /// * `Ok(logits)` — the batch executed; `logits` is this request's slice
 ///   of the batch output, or
-/// * `Err(message)` — the executor returned an error; **every** member of
-///   the failed batch receives the same message, and the batch is *not*
-///   silently retried.
+/// * `Err(message)` — the executor kept failing through the configured
+///   retry budget; **every** member of the failed batch receives the same
+///   message, and the batch is *not* silently re-queued beyond that.
 ///
 /// A reply channel is therefore never dropped with a pending `recv()` —
 /// clients can block on [`std::sync::mpsc::Receiver::recv`] without a
 /// timeout (the pre-PR-1 behaviour dropped the channel on executor error,
-/// deadlocking clients).  Retry/requeue of transient failures is the
-/// caller's policy decision: inspect the `Err` and resubmit if desired
-/// (see ROADMAP).  [`Reply::logits`] converts the error side into
-/// `anyhow::Error` for `?`-style call sites.
+/// deadlocking clients).  Transient failures can be absorbed server-side
+/// with [`ServeConfig::max_retries`] (bounded in-place resubmit, default
+/// off); anything beyond that budget is the caller's policy decision:
+/// inspect the `Err` and resubmit if desired.  [`Reply::logits`] converts
+/// the error side into `anyhow::Error` for `?`-style call sites.
 #[derive(Debug, Clone)]
 pub struct Reply {
     /// Per-request logits, or the executor failure message (see the
@@ -151,11 +152,20 @@ impl Executor for NativeExecutor {
 pub struct ServeConfig {
     pub batcher: BatcherConfig,
     pub seed: u32,
+    /// Bounded retry of transiently failing batches (the ROADMAP
+    /// retry/requeue policy): when the executor returns `Err`, the batch
+    /// is re-executed in place up to `max_retries` more times (same
+    /// images, same seed — the failure contract is about infrastructure
+    /// hiccups, not stochastic draws) before the whole batch fails
+    /// loudly per the [`Reply`] error contract.  `0` (the default)
+    /// preserves the strict fail-loud behaviour; retries are counted in
+    /// [`super::metrics::Metrics::retries`].
+    pub max_retries: u32,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), seed: 0 }
+        Self { batcher: BatcherConfig::default(), seed: 0, max_retries: 0 }
     }
 }
 
@@ -193,23 +203,36 @@ impl Server {
             images.extend_from_slice(&p.payload.image);
         }
         let t0 = Instant::now();
-        let logits = match self.executor.execute(&images, n, seed) {
-            Ok(l) => l,
-            Err(e) => {
-                // fail the whole batch *loudly*: every pending request gets
-                // an error reply instead of a dropped channel (clients
-                // would otherwise block forever on recv()).
-                let msg = e.to_string();
-                eprintln!("executor error: {msg}");
-                let now = Instant::now();
-                for p in batch.items.into_iter() {
-                    let _ = p.payload.reply.send(Reply {
-                        result: Err(msg.clone()),
-                        latency: now.duration_since(t0),
-                        batch: n,
-                    });
+        let mut attempt = 0u32;
+        let logits = loop {
+            match self.executor.execute(&images, n, seed) {
+                Ok(l) => break l,
+                Err(e) if attempt < self.cfg.max_retries => {
+                    // bounded in-place resubmit of the failed batch
+                    // (transient-error policy; see ServeConfig::max_retries)
+                    attempt += 1;
+                    eprintln!(
+                        "executor error (retry {attempt}/{}): {e}",
+                        self.cfg.max_retries
+                    );
+                    self.metrics.lock().unwrap().retries += 1;
                 }
-                return;
+                Err(e) => {
+                    // fail the whole batch *loudly*: every pending request
+                    // gets an error reply instead of a dropped channel
+                    // (clients would otherwise block forever on recv()).
+                    let msg = e.to_string();
+                    eprintln!("executor error: {msg}");
+                    let now = Instant::now();
+                    for p in batch.items.into_iter() {
+                        let _ = p.payload.reply.send(Reply {
+                            result: Err(msg.clone()),
+                            latency: now.duration_since(t0),
+                            batch: n,
+                        });
+                    }
+                    return;
+                }
             }
         };
         let now = Instant::now();
@@ -325,6 +348,7 @@ mod tests {
                     max_wait: Duration::from_millis(1),
                 },
                 seed: 0,
+                max_retries: 0,
             },
         );
         let (tx, rx) = mpsc::channel();
@@ -422,6 +446,7 @@ mod tests {
                     max_wait: Duration::from_millis(1),
                 },
                 seed: 0,
+                max_retries: 0,
             },
         );
         let (tx, rx) = mpsc::channel();
@@ -469,6 +494,85 @@ mod tests {
         );
     }
 
+    /// The bounded retry policy: with `max_retries >=` the transient
+    /// failure count, a flaky executor eventually succeeds and **every**
+    /// request gets `Ok` logits — no error replies, retries counted in
+    /// the metrics.
+    #[test]
+    fn transient_failures_are_retried_to_success() {
+        let server = Server::new(
+            Box::new(FlakyExec {
+                calls: std::sync::atomic::AtomicUsize::new(0),
+                fail_first: 2,
+            }),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                seed: 0,
+                max_retries: 3,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..8).map(|_| vec![0.0f32; 4]));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        assert_eq!(replies.len(), 8);
+        for r in replies {
+            let rep = r.recv().expect("reply delivered");
+            assert_eq!(
+                rep.result.expect("retried to success").len(),
+                10,
+                "every request succeeds after bounded retries"
+            );
+        }
+        let m = server.metrics.lock().unwrap().report();
+        assert_eq!(m.retries, 2, "both transient failures were retried");
+        assert_eq!(m.requests, 8);
+    }
+
+    /// A permanently failing executor still fails loudly: the retry cap
+    /// is exhausted, every member of the batch receives the error reply,
+    /// and exactly `max_retries` resubmits are charged per batch.
+    #[test]
+    fn permanent_failures_exhaust_retries_and_fail_loudly() {
+        let server = Server::new(
+            Box::new(FailingExec),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                seed: 0,
+                max_retries: 2,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..4).map(|_| vec![0.0f32; 4]));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        for r in replies {
+            let rep = r.recv().expect("reply delivered, not abandoned");
+            let err = rep.result.expect_err("executor is permanently down");
+            assert!(err.contains("injected executor failure"), "{err}");
+        }
+        let m = server.metrics.lock().unwrap().report();
+        // every failed batch burned exactly max_retries resubmits (the
+        // batcher may have split the 4 requests into 1..=4 batches)
+        assert!(m.retries >= 2, "retry cap exercised: {}", m.retries);
+        assert_eq!(m.retries % 2, 0, "2 retries per failed batch");
+        assert!(m.retries <= 8, "at most 4 batches × 2 retries");
+    }
+
     /// Regression: a failing executor used to silently drop every pending
     /// Reply, leaving clients blocked forever on `recv()`.  Now each
     /// request of the failed batch receives an error reply.
@@ -482,6 +586,7 @@ mod tests {
                     max_wait: Duration::from_millis(1),
                 },
                 seed: 0,
+                max_retries: 0,
             },
         );
         let (tx, rx) = mpsc::channel();

@@ -66,6 +66,37 @@ pub trait PsConvert: Send + Sync {
         self.convert_slice(ps, out, counter_base, counter_stride, rng);
     }
 
+    /// Integer digit-domain entry point (the `StoxMvm` integer kernel's
+    /// conversion seam): the kernel hands over the raw `i32` PS
+    /// accumulator of one column slice plus the normalization factor —
+    /// element `c`'s normalized PS is **exactly** `ps_int[c] as f32 *
+    /// ps_scale` (the integer kernel's exactness contract).  `cache` is
+    /// caller-owned per-run scratch ([`PsIntCache`]); converters with
+    /// per-level work (the tanh→threshold of the stochastic MTJ) memoize
+    /// it there across calls — partial sums concentrate on few distinct
+    /// integer levels (the Fig. 4 observation), so the memo eliminates
+    /// most `tanh` evaluations of a run.
+    ///
+    /// Implementations MUST be bit-identical to materializing the
+    /// normalized PS and calling [`PsConvert::convert_slice_at`]; the
+    /// default does exactly that (property-pinned in `tests/proptests.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_int_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        let psn = cache.materialize(ps_int, ps_scale);
+        self.convert_slice_at(stream, w_slice, psn, out, counter_base, counter_stride, rng);
+    }
+
     /// Scalar convenience (tests, device-level probes): converts one PS.
     fn convert(&self, ps: f32, counter_base: u32, rng: &CounterRng) -> f32 {
         let mut out = [0.0f32; 1];
@@ -90,6 +121,73 @@ pub trait PsConvert: Send + Sync {
 
     /// Human-readable label for reports and benches.
     fn label(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// Integer-domain conversion cache
+// ---------------------------------------------------------------------
+
+/// Caller-owned scratch for [`PsConvert::convert_slice_int_at`]: a dense
+/// memo table over the integer PS levels of one kernel run plus a
+/// materialization buffer for converters without an integer fast path.
+/// One cache serves one (kernel run, converter) pair; the kernel resets
+/// it with the run's PS bound before the first conversion.
+#[derive(Default)]
+pub struct PsIntCache {
+    /// Memoized per-level `u32` payloads (sampling thresholds, or f32
+    /// bits for value-memoizing converters), indexed `ps_int + offset`.
+    /// `u32::MAX` marks an unfilled slot — unreachable as a real payload
+    /// (thresholds are ≤ 2²⁴; `tanh` of a finite input never returns the
+    /// NaN with those bits).  Empty disables memoization.
+    memo: Vec<u32>,
+    offset: i32,
+    /// scratch for the default materialize-and-delegate path
+    psn: Vec<f32>,
+}
+
+impl PsIntCache {
+    /// Level ranges beyond this disable the memo (compute directly)
+    /// instead of allocating a multi-MB table.
+    const MAX_MEMO_LEVELS: usize = 1 << 20;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare the memo for integer PS levels in `[-bound, bound]`
+    /// (discarding any previously memoized payloads).
+    pub fn reset(&mut self, bound: usize) {
+        self.memo.clear();
+        if bound <= Self::MAX_MEMO_LEVELS {
+            self.offset = bound as i32;
+            self.memo.resize(2 * bound + 1, u32::MAX);
+        }
+    }
+
+    /// Memoized `u32` payload of level `v`; `f` computes it on a miss.
+    #[inline]
+    fn memo_at(&mut self, v: i32, f: impl FnOnce() -> u32) -> u32 {
+        if self.memo.is_empty() {
+            return f();
+        }
+        let idx = (v + self.offset) as usize;
+        let t = self.memo[idx];
+        if t != u32::MAX {
+            t
+        } else {
+            let t = f();
+            self.memo[idx] = t;
+            t
+        }
+    }
+
+    /// Materialize the normalized PS (`ps_int[c]·scale`) for the default
+    /// delegate path.
+    fn materialize(&mut self, ps_int: &[i32], scale: f32) -> &[f32] {
+        self.psn.clear();
+        self.psn.extend(ps_int.iter().map(|&p| p as f32 * scale));
+        &self.psn
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -150,6 +248,47 @@ fn stochastic_slice(
             c0 = c0.wrapping_add(counter_stride);
         }
         idx = hi;
+    }
+}
+
+/// Integer-domain core shared by the stochastic MTJ fast paths: per
+/// element, the `ceil(p·2²⁴)` threshold is memoized by integer PS level
+/// in `cache`, then `n_samples` ±1 draws are summed in counter blocks of
+/// `counter_block` — the exact frozen layout of [`stochastic_slice`]
+/// (`base = c0·block`, `draw24 < thr`) — and the total is written as-is
+/// (`post_scale == None`, the parity contract's unnormalized counts) or
+/// scaled once (`Some(1/n)`, the inhomogeneous normalized means).
+#[allow(clippy::too_many_arguments)]
+fn stochastic_slice_int(
+    alpha: f32,
+    n_samples: u32,
+    counter_block: u32,
+    post_scale: Option<f32>,
+    ps_int: &[i32],
+    ps_scale: f32,
+    out: &mut [f32],
+    counter_base: u32,
+    counter_stride: u32,
+    rng: &CounterRng,
+    cache: &mut PsIntCache,
+) {
+    debug_assert!(counter_block >= n_samples);
+    let mut c0 = counter_base;
+    for (o, &pi) in out.iter_mut().zip(ps_int) {
+        let thr = cache.memo_at(pi, || {
+            let pr = 0.5 * ((alpha * (pi as f32 * ps_scale)).tanh() + 1.0);
+            ((pr as f64) * 16_777_216.0).ceil() as u32
+        });
+        let base = c0.wrapping_mul(counter_block);
+        let mut total = 0i32;
+        for s in 0..n_samples {
+            total += if rng.draw24(base.wrapping_add(s)) < thr { 1 } else { -1 };
+        }
+        *o = match post_scale {
+            Some(inv) => total as f32 * inv,
+            None => total as f32,
+        };
+        c0 = c0.wrapping_add(counter_stride);
     }
 }
 
@@ -305,6 +444,28 @@ impl PsConvert for ExpectedMtjConv {
         }
     }
 
+    /// Integer fast path: memoizes the `tanh` *value* (as f32 bits) per
+    /// integer PS level.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_int_at(
+        &self,
+        _stream: usize,
+        _w_slice: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        _counter_base: u32,
+        _counter_stride: u32,
+        _rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        for (o, &pi) in out.iter_mut().zip(ps_int) {
+            let bits =
+                cache.memo_at(pi, || (self.alpha * (pi as f32 * ps_scale)).tanh().to_bits());
+            *o = f32::from_bits(bits);
+        }
+    }
+
     fn cost_key(&self) -> PsProcessing {
         PsProcessing::StochasticMtj { samples: 1 }
     }
@@ -343,6 +504,38 @@ impl PsConvert for StochasticMtjConv {
             counter_base,
             counter_stride,
             rng,
+        );
+    }
+
+    /// Integer fast path: the `ceil(p·2²⁴)` sampling threshold depends
+    /// only on the integer PS level, so it is memoized per level across
+    /// the whole run — same thresholds, same draws, same bits as
+    /// `stochastic_slice`.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_int_at(
+        &self,
+        _stream: usize,
+        _w_slice: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        stochastic_slice_int(
+            self.alpha,
+            self.n_samples,
+            self.n_samples,
+            None,
+            ps_int,
+            ps_scale,
+            out,
+            counter_base,
+            counter_stride,
+            rng,
+            cache,
         );
     }
 
@@ -462,6 +655,39 @@ impl PsConvert for InhomogeneousMtjConv {
     ) {
         let n = self.samples_at(stream, w_slice);
         self.convert_with(n, ps, out, counter_base, counter_stride, rng);
+    }
+
+    /// Integer fast path: thresholds depend only on (α, level) — one memo
+    /// serves every (stream, slice) group even though read counts differ.
+    /// Counter layout and the final `·1/n` normalization replicate
+    /// `InhomogeneousMtjConv::convert_with` bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_int_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        let n = self.samples_at(stream, w_slice);
+        stochastic_slice_int(
+            self.alpha,
+            n,
+            self.n_max(),
+            Some(1.0 / n as f32),
+            ps_int,
+            ps_scale,
+            out,
+            counter_base,
+            counter_stride,
+            rng,
+            cache,
+        );
     }
 
     fn cost_key(&self) -> PsProcessing {
@@ -956,6 +1182,56 @@ mod tests {
             let c = reg.build(&spec, &cfg()).unwrap();
             let v = c.convert(0.3, 0, &rng());
             assert!(v.is_finite(), "{s} -> {v}");
+        }
+    }
+
+    /// The integer entry point must be bit-identical to materializing the
+    /// normalized PS and calling the float entry point — for every
+    /// builtin, with and without a usable memo, across repeated calls
+    /// (memo hits) and multiple (stream, slice) groups.
+    #[test]
+    fn int_entry_matches_float_entry_for_every_builtin() {
+        let cfg = StoxConfig { w_slice_bits: 1, ..cfg() }; // I=4, J=4
+        let specs = [
+            "ideal",
+            "quant:bits=5",
+            "sparse:bits=4",
+            "sa",
+            "expected:alpha=3",
+            "stox:alpha=4,samples=3",
+            "inhomo:alpha=4,base=1,extra=3",
+        ];
+        let r = rng();
+        let bound = 64usize;
+        let ps_int: Vec<i32> = (0..24).map(|i| ((i * 7) % 129) - 64).collect();
+        let scale = 1.0f32 / 64.0;
+        for s in specs {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let conv = spec.build(&cfg).unwrap();
+            for memo_bound in [bound, PsIntCache::MAX_MEMO_LEVELS + 1] {
+                let mut cache = PsIntCache::new();
+                cache.reset(memo_bound);
+                for (i, j) in [(0usize, 0usize), (3, 2), (1, 3)] {
+                    let psn: Vec<f32> =
+                        ps_int.iter().map(|&p| p as f32 * scale).collect();
+                    let mut want = vec![0.0f32; ps_int.len()];
+                    conv.convert_slice_at(i, j, &psn, &mut want, 1000, 7, &r);
+                    // twice: second pass hits the memo
+                    for pass in 0..2 {
+                        let mut got = vec![0.0f32; ps_int.len()];
+                        conv.convert_slice_int_at(
+                            i, j, &ps_int, scale, &mut got, 1000, 7, &r, &mut cache,
+                        );
+                        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{s} (i={i}, j={j}, pass {pass}) idx {idx}: {g} vs {w}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

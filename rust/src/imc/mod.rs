@@ -6,6 +6,12 @@
 //! enforced by golden-vector tests generated from the python side
 //! (`rust/tests/parity.rs`).
 //!
+//! The hot path is the **integer digit-plane kernel** ([`mvm`]): `i8`
+//! weight-slice planes, `i8` activation digit stripes, `i32` PS
+//! accumulation — exact, hence still bit-identical with the oracle — plus
+//! a fused digit-domain convolution ([`StoxMvm::run_conv_digits`]) that
+//! decomposes each input pixel once instead of kh·kw times.
+//!
 //! PS conversion is an **open, slice-vectorized API** ([`convert`]):
 //!
 //! * [`PsConvert`] — the trait; converts a whole PS column slice per call
@@ -29,9 +35,12 @@ pub mod quant;
 
 pub use convert::{
     default_registry, ConverterRegistry, ExpectedMtjConv, IdealAdcConv, InhomogeneousMtjConv,
-    PsConvert, PsConverterSpec, QuantAdcConv, SenseAmpConv, SparseAdcConv, StochasticMtjConv,
+    PsConvert, PsConverterSpec, PsIntCache, QuantAdcConv, SenseAmpConv, SparseAdcConv,
+    StochasticMtjConv,
 };
 pub use converters::PsConverter;
-pub use mvm::{im2col, stox_conv2d, stox_mvm, StoxMvm};
+pub use mvm::{
+    decompose_activations, im2col, stox_conv2d, stox_mvm, ActivationDigits, ConvArena, StoxMvm,
+};
 pub use nonideal::{Nonideality, NonidealCrossbar};
 pub use quant::StoxConfig;

@@ -7,13 +7,42 @@
 //! activations run through [`StoxMvm::run`].  `stox_mvm` is the one-shot
 //! convenience used by tests.
 //!
+//! # The integer digit-plane kernel (EXPERIMENTS.md §Perf)
+//!
+//! Crossbar arithmetic happens in the *quantized digit domain*: weight
+//! slices and activation streams are small signed odd integers.  The hot
+//! kernel therefore stores weight digits as contiguous `i8` planes (4×
+//! denser than the legacy f32 layout — a 256×64 plane is 16 KB and
+//! L1-resident), decomposes activations into `i8` digit stripes once per
+//! (batch row, subarray), and accumulates partial sums in `i32` with the
+//! inner loop blocked over output columns so it autovectorizes.  This is
+//! **exact**: every digit product and every `r_arr`-bounded sum is an
+//! integer far below 2²⁴ ([`StoxConfig::int_kernel_ok`]), so converting
+//! the `i32` accumulator to f32 before normalization is bit-identical to
+//! the legacy f32 MAC path — the frozen RNG counter contract and all
+//! golden files pin unchanged.  Configs outside the exactness bound fall
+//! back to the retained f32 reference kernel ([`StoxMvm::program_reference`]
+//! forces it), and `tests/proptests.rs` pins integer == reference exactly.
+//!
 //! The kernel is generic over [`PsConvert`]: conversion happens one PS
-//! *column slice* at a time (`convert_slice_at`), so converter dispatch is
-//! hoisted out of the inner loop and implementations vectorize freely.
+//! *column slice* at a time, through the integer entry point
+//! (`convert_slice_int_at`) so converters can memoize per-level work
+//! (the stochastic MTJ's tanh→threshold) across the run.
 
-use super::convert::PsConvert;
+use super::convert::{PsConvert, PsIntCache};
 use super::quant::{self, StoxConfig};
 use crate::stats::rng::CounterRng;
+
+/// Programmed weight-slice digit planes, flattened `[k][j][r][c]`
+/// (subarray, slice, row, column — one contiguous allocation).
+enum WeightPlanes {
+    /// `i8` digit planes — the integer digit-plane kernel layout.
+    I8(Vec<i8>),
+    /// Legacy f32 planes — the retained reference kernel's layout, used
+    /// when the config is outside the integer exactness bound (or forced
+    /// by [`StoxMvm::program_reference`] for A/B benchmarking).
+    F32(Vec<f32>),
+}
 
 /// A crossbar-programmed weight matrix ready for repeated MVMs.
 pub struct StoxMvm {
@@ -21,23 +50,84 @@ pub struct StoxMvm {
     pub m: usize,
     pub n: usize,
     n_arrs: usize,
-    /// weight slice digits: `[k][j]` → row-major `[r_arr × n]` f32
-    /// (digits are small odd integers, exact in f32).
-    wd: Vec<Vec<Vec<f32>>>,
+    planes: WeightPlanes,
+}
+
+/// Per-worker scratch of the integer kernel: activation digit stripe,
+/// PS accumulators, conversion buffers and the per-level threshold memo —
+/// allocated once per worker thread and reused across (batch, subarray)
+/// tasks.
+struct IntScratch {
+    /// stripe digits, row-major [r][i] (matches the digit-plane gather)
+    xd: Vec<i8>,
+    /// one row's stream digits
+    digits: Vec<i8>,
+    /// integer PS accumulator of one column slice
+    ps_int: Vec<i32>,
+    /// converted column slice
+    cv: Vec<f32>,
+    /// converter-level memo ([`PsIntCache`])
+    cache: PsIntCache,
+    /// scaled conversion terms of one (b, k) group, layout [j][i][c] —
+    /// folded into the output in exactly the sequential accumulation order
+    contrib: Vec<f32>,
+}
+
+impl IntScratch {
+    fn new(mvm: &StoxMvm) -> Self {
+        let cfg = &mvm.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let mut cache = PsIntCache::new();
+        cache.reset(cfg.int_ps_bound() as usize);
+        Self {
+            xd: vec![0; cfg.r_arr * i_n],
+            digits: vec![0; i_n],
+            ps_int: vec![0; mvm.n],
+            cv: vec![0.0; mvm.n],
+            cache,
+            contrib: vec![0.0; j_n * i_n * mvm.n],
+        }
+    }
 }
 
 impl StoxMvm {
     /// Program the crossbar: quantize + slice + partition `w` ([M×N],
-    /// values in [-1,1], row-major).
+    /// values in [-1,1], row-major).  Stores `i8` digit planes (the
+    /// integer kernel layout) whenever [`StoxConfig::int_kernel_ok`]
+    /// holds — every paper config — and the legacy f32 planes otherwise.
     pub fn program(w: &[f32], m: usize, n: usize, cfg: StoxConfig) -> crate::Result<Self> {
+        Self::program_impl(w, m, n, cfg, cfg.int_kernel_ok())
+    }
+
+    /// Program with the retained pre-integer f32 plane layout regardless
+    /// of config — the reference kernel for equivalence proptests and the
+    /// before/after perf cases in `benches/mvm.rs`.  Bit-identical
+    /// results, legacy speed.
+    pub fn program_reference(
+        w: &[f32],
+        m: usize,
+        n: usize,
+        cfg: StoxConfig,
+    ) -> crate::Result<Self> {
+        Self::program_impl(w, m, n, cfg, false)
+    }
+
+    fn program_impl(
+        w: &[f32],
+        m: usize,
+        n: usize,
+        cfg: StoxConfig,
+        int_planes: bool,
+    ) -> crate::Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(w.len() == m * n, "weight shape mismatch");
         let n_arrs = cfg.n_arrs(m);
-        let n_slices = cfg.n_slices();
-        let mut digits = vec![0i32; n_slices];
-
-        let mut wd =
-            vec![vec![vec![0.0f32; cfg.r_arr * n]; n_slices]; n_arrs];
+        let j_n = cfg.n_slices();
+        let plane_sz = cfg.r_arr * n;
+        let mut digits = vec![0i32; j_n];
+        // rows beyond m stay 0 (absent cells contribute no current)
+        let mut wd8 = vec![0i8; if int_planes { n_arrs * j_n * plane_sz } else { 0 }];
+        let mut wd32 = vec![0.0f32; if int_planes { 0 } else { n_arrs * j_n * plane_sz }];
         for r in 0..m {
             let k = r / cfg.r_arr;
             let rr = r % cfg.r_arr;
@@ -45,32 +135,62 @@ impl StoxMvm {
                 let u = quant::quantize_unit(w[r * n + c], cfg.w_bits);
                 quant::signed_digits(u, cfg.w_bits, cfg.w_slice_bits, &mut digits);
                 for (j, &d) in digits.iter().enumerate() {
-                    wd[k][j][rr * n + c] = d as f32;
+                    let idx = ((k * j_n + j) * cfg.r_arr + rr) * n + c;
+                    if int_planes {
+                        wd8[idx] = d as i8;
+                    } else {
+                        wd32[idx] = d as f32;
+                    }
                 }
             }
         }
-        // rows beyond m stay 0 (absent cells contribute no current)
-        Ok(Self { cfg, m, n, n_arrs, wd })
+        let planes = if int_planes {
+            WeightPlanes::I8(wd8)
+        } else {
+            WeightPlanes::F32(wd32)
+        };
+        Ok(Self { cfg, m, n, n_arrs, planes })
     }
 
     pub fn n_arrs(&self) -> usize {
         self.n_arrs
     }
 
-    /// Weight digits of subarray `k`, slice `j` (row-major [r_arr × n]) —
-    /// exposed for the non-ideality wrapper.
-    pub(crate) fn slice(&self, k: usize, j: usize) -> &[f32] {
-        &self.wd[k][j]
+    /// Whether this crossbar runs the integer digit-plane kernel
+    /// (i8 planes) rather than the retained f32 reference kernel.
+    pub fn is_integer_kernel(&self) -> bool {
+        matches!(self.planes, WeightPlanes::I8(_))
+    }
+
+    /// Flat byte range of subarray `k`, slice `j` within the plane store.
+    fn plane_range(&self, k: usize, j: usize) -> std::ops::Range<usize> {
+        let plane_sz = self.cfg.r_arr * self.n;
+        let base = (k * self.cfg.n_slices() + j) * plane_sz;
+        base..base + plane_sz
+    }
+
+    /// Borrow the stored planes directly when this crossbar already holds
+    /// the f32 reference layout — lets wrappers avoid duplicating them.
+    pub(crate) fn planes_f32_ref(&self) -> Option<&[f32]> {
+        match &self.planes {
+            WeightPlanes::F32(p) => Some(p),
+            WeightPlanes::I8(_) => None,
+        }
     }
 
     /// Run a batch of activations (`a`: [B×M] row-major, values in [-1,1])
     /// through the crossbar with the given PS converter; returns [B×N].
     ///
-    /// Hot-path structure (EXPERIMENTS.md §Perf): each weight slice is
-    /// streamed over its rows **once**, accumulating the partial sums of
-    /// all `I` input streams simultaneously — `I×` less weight traffic
-    /// than the naive per-(stream, slice) loop, and the inner kernel is a
-    /// branch-free `ps[i][c] += x_i · w[c]` that vectorizes.
+    /// Parallelism (all paths bit-identical — the RNG counter space is
+    /// keyed by absolute indices and f32 folds replay the sequential
+    /// order):
+    ///
+    /// * `batch ≥ 2·threads` — batch rows fan out in contiguous chunks;
+    /// * otherwise, when there are ≥ 2 (batch row, subarray) tasks, the
+    ///   sub-batch split ([`StoxMvm::run_ksplit`]) fans out over subarrays
+    ///   too — the single-image serving shape where the batch fan-out
+    ///   alone never triggers;
+    /// * `STOX_THREADS=1` forces the sequential kernel.
     pub fn run<C: PsConvert + ?Sized>(
         &self,
         a: &[f32],
@@ -78,9 +198,6 @@ impl StoxMvm {
         conv: &C,
         seed: u32,
     ) -> Vec<f32> {
-        // Batch rows are independent (the RNG counter space is keyed by
-        // b), so large batches fan out across cores; per-element results
-        // are bit-identical to the sequential path.
         let threads = crate::util::pool::default_threads();
         if batch >= 2 * threads && threads > 1 {
             let chunk = batch.div_ceil(threads);
@@ -96,6 +213,21 @@ impl StoxMvm {
             }
             return out;
         }
+        if threads > 1 && batch * self.n_arrs >= 2 && self.is_integer_kernel() {
+            return self.run_ksplit(a, batch, conv, seed, threads);
+        }
+        self.run_range(a, 0, batch, conv, seed)
+    }
+
+    /// The sequential kernel over the whole batch — the bit-identity
+    /// reference every parallel path is pinned against.
+    pub fn run_sequential<C: PsConvert + ?Sized>(
+        &self,
+        a: &[f32],
+        batch: usize,
+        conv: &C,
+        seed: u32,
+    ) -> Vec<f32> {
         self.run_range(a, 0, batch, conv, seed)
     }
 
@@ -108,16 +240,204 @@ impl StoxMvm {
         conv: &C,
         seed: u32,
     ) -> Vec<f32> {
+        match &self.planes {
+            WeightPlanes::I8(planes) => self.run_range_int(planes, a, b0, b1, conv, seed),
+            WeightPlanes::F32(planes) => self.run_range_ref(planes, a, b0, b1, conv, seed),
+        }
+    }
+
+    /// Integer digit-plane kernel over batch rows [b0, b1).
+    fn run_range_int<C: PsConvert + ?Sized>(
+        &self,
+        planes: &[i8],
+        a: &[f32],
+        b0: usize,
+        b1: usize,
+        conv: &C,
+        seed: u32,
+    ) -> Vec<f32> {
+        let batch = b1 - b0;
+        debug_assert!(a.len() >= b1 * self.m);
+        if self.n == 0 || batch == 0 {
+            return vec![0.0f32; batch * self.n];
+        }
+        let cfg = &self.cfg;
+        let rng = CounterRng::new(seed);
+        let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+        let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+        let norm = self.out_norm(conv.samples());
+
+        let mut out = vec![0.0f32; batch * self.n];
+        let mut scratch = IntScratch::new(self);
+        for b in b0..b1 {
+            for k in 0..self.n_arrs {
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                self.decompose_stripe(a, b, row0, rows, &mut scratch);
+                self.run_stripe_int(planes, rows, b, k, conv, &rng, &sa, &sw, norm, &mut scratch);
+                let orow = &mut out[(b - b0) * self.n..(b - b0 + 1) * self.n];
+                // fold the (j, i) terms in exactly the sequential order
+                for terms in scratch.contrib.chunks_exact(self.n) {
+                    for (o, &v) in orow.iter_mut().zip(terms) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Sub-batch fan-out over (batch row, subarray) tasks — the
+    /// single-image serving path where `batch < 2·threads` never triggers
+    /// the batch fan-out.  Bit-identical to [`StoxMvm::run_sequential`]:
+    /// each task produces its (b, k) group's scaled conversion terms and
+    /// the calling thread folds them in exactly the sequential
+    /// accumulation order (f32 addition is order-sensitive, so the fold
+    /// replays it rather than summing per-thread partials).
+    pub fn run_ksplit<C: PsConvert + ?Sized>(
+        &self,
+        a: &[f32],
+        batch: usize,
+        conv: &C,
+        seed: u32,
+        threads: usize,
+    ) -> Vec<f32> {
+        let WeightPlanes::I8(planes) = &self.planes else {
+            // reference layout: no stripe kernel to fan out — stay sequential
+            return self.run_range(a, 0, batch, conv, seed);
+        };
+        if self.n == 0 || batch == 0 {
+            return vec![0.0f32; batch * self.n];
+        }
+        let cfg = &self.cfg;
+        let rng = CounterRng::new(seed);
+        let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+        let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+        let norm = self.out_norm(conv.samples());
+        debug_assert!(a.len() >= batch * self.m);
+
+        let n_tasks = batch * self.n_arrs;
+        let parts = crate::util::pool::par_map_scratch(
+            n_tasks,
+            threads,
+            || IntScratch::new(self),
+            |scratch, t| {
+                let b = t / self.n_arrs;
+                let k = t % self.n_arrs;
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                self.decompose_stripe(a, b, row0, rows, scratch);
+                self.run_stripe_int(planes, rows, b, k, conv, &rng, &sa, &sw, norm, scratch);
+                scratch.contrib.clone()
+            },
+        );
+        let mut out = vec![0.0f32; batch * self.n];
+        for (t, part) in parts.iter().enumerate() {
+            let b = t / self.n_arrs;
+            let orow = &mut out[b * self.n..(b + 1) * self.n];
+            // tasks arrive in (b, k) order and each part holds its (j, i)
+            // terms in order — the fold replays the sequential accumulation
+            for terms in part.chunks_exact(self.n) {
+                for (o, &v) in orow.iter_mut().zip(terms) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Algorithm 1 output normalization factor.
+    fn out_norm(&self, samples: u32) -> f32 {
+        let cfg = &self.cfg;
+        let lev = (((1u64 << cfg.a_bits) - 1) * ((1u64 << cfg.w_bits) - 1)) as f32;
+        1.0 / (lev * self.n_arrs as f32 * samples as f32)
+    }
+
+    /// Quantize + decompose the activation stripe of (batch row `b`,
+    /// subarray rows [row0, row0+rows)) into `scratch.xd` ([r][i] i8).
+    fn decompose_stripe(
+        &self,
+        a: &[f32],
+        b: usize,
+        row0: usize,
+        rows: usize,
+        scratch: &mut IntScratch,
+    ) {
+        let cfg = &self.cfg;
+        let i_n = cfg.n_streams();
+        for rr in 0..rows {
+            let u = quant::quantize_unit(a[b * self.m + row0 + rr], cfg.a_bits);
+            quant::signed_digits_i8(u, cfg.a_bits, cfg.a_stream_bits, &mut scratch.digits);
+            scratch.xd[rr * i_n..(rr + 1) * i_n].copy_from_slice(&scratch.digits);
+        }
+    }
+
+    /// Integer kernel core for one (b, k) group: for every (slice j,
+    /// stream i) accumulate the column slice in i32, convert it through
+    /// the integer entry point, and write the scaled terms into
+    /// `scratch.contrib` ([j][i][c] — the sequential fold order).
+    #[allow(clippy::too_many_arguments)]
+    fn run_stripe_int<C: PsConvert + ?Sized>(
+        &self,
+        planes: &[i8],
+        rows: usize,
+        b: usize,
+        k: usize,
+        conv: &C,
+        rng: &CounterRng,
+        sa: &[f32],
+        sw: &[f32],
+        norm: f32,
+        scratch: &mut IntScratch,
+    ) {
+        let cfg = &self.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let n = self.n;
+        let inv_r = 1.0 / cfg.r_arr as f32;
+        let IntScratch { xd, ps_int, cv, cache, contrib, .. } = scratch;
+        for j in 0..j_n {
+            let w_pl = &planes[self.plane_range(k, j)];
+            for i in 0..i_n {
+                accumulate_int(w_pl, xd, rows, i_n, i, n, ps_int);
+                // canonical counter layout shared with python (frozen
+                // contract): base(c) = (((b·K + k)·N + c)·I + i)·J + j, so
+                // the whole column slice is (base(0), stride I·J) —
+                // wrapping arithmetic is congruent mod 2³² wherever the
+                // truncation lands.
+                let base0 = ((((b * self.n_arrs + k) * n) * i_n + i) as u32)
+                    .wrapping_mul(j_n as u32)
+                    .wrapping_add(j as u32);
+                let stride = (i_n * j_n) as u32;
+                conv.convert_slice_int_at(i, j, ps_int, inv_r, cv, base0, stride, rng, cache);
+                let scale = sa[i] * sw[j] * norm;
+                let crow = &mut contrib[(j * i_n + i) * n..(j * i_n + i + 1) * n];
+                for (o, &v) in crow.iter_mut().zip(cv.iter()) {
+                    *o = v * scale;
+                }
+            }
+        }
+    }
+
+    /// Retained f32 reference kernel over batch rows [b0, b1) — the
+    /// pre-integer hot loop, kept verbatim for configs outside the
+    /// exactness bound and as the equivalence/benchmark baseline.
+    fn run_range_ref<C: PsConvert + ?Sized>(
+        &self,
+        planes: &[f32],
+        a: &[f32],
+        b0: usize,
+        b1: usize,
+        conv: &C,
+        seed: u32,
+    ) -> Vec<f32> {
         let batch = b1 - b0;
         debug_assert!(a.len() >= b1 * self.m);
         let cfg = &self.cfg;
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
-        let samples = conv.samples() as f32;
         let rng = CounterRng::new(seed);
         let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
         let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
-        let lev = (((1u64 << cfg.a_bits) - 1) * ((1u64 << cfg.w_bits) - 1)) as f32;
-        let norm = 1.0 / (lev * self.n_arrs as f32 * samples);
+        let norm = self.out_norm(conv.samples());
         let inv_r = 1.0 / cfg.r_arr as f32;
 
         let mut out = vec![0.0f32; batch * self.n];
@@ -145,7 +465,7 @@ impl StoxMvm {
                 }
                 for j in 0..j_n {
                     ps.iter_mut().for_each(|v| *v = 0.0);
-                    let w_sl = &self.wd[k][j];
+                    let w_sl = &planes[self.plane_range(k, j)];
                     // one pass over the slice rows feeds every stream
                     for rr in 0..rows {
                         let wrow = &w_sl[rr * self.n..(rr + 1) * self.n];
@@ -163,11 +483,7 @@ impl StoxMvm {
                         for (pn, &p) in psn.iter_mut().zip(ps_i) {
                             *pn = p * inv_r;
                         }
-                        // canonical counter layout shared with python
-                        // (frozen contract): base(c) = (((b·K + k)·N + c)·I
-                        // + i)·J + j, so the whole column slice is
-                        // (base(0), stride I·J) — wrapping arithmetic is
-                        // congruent mod 2³² wherever the truncation lands.
+                        // same frozen counter layout as run_stripe_int
                         let base0 = ((((b * self.n_arrs + k) * self.n) * i_n
                             + i) as u32)
                             .wrapping_mul(j_n as u32)
@@ -187,11 +503,104 @@ impl StoxMvm {
     }
 }
 
+/// Blocked i8×i8→i32 MAC of activation stream `stream` against one weight
+/// slice plane: `ps[c] = Σ_r xd[r][stream] · w_pl[r][c]`.  The column loop
+/// runs in fixed blocks of `MAC_BLK` i32 register accumulators so LLVM
+/// unrolls and vectorizes it; zero activation digits skip their row
+/// entirely (signed-digit decomposition makes in-range digits odd — the
+/// skip fires for structurally absent rows and custom sparse operands, and
+/// costs one predictable branch when dense).
+fn accumulate_int(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    const MAC_BLK: usize = 16;
+    let mut c0 = 0usize;
+    while c0 + MAC_BLK <= n {
+        let mut acc = [0i32; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i32;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + MAC_BLK];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i32;
+            }
+        }
+        ps[c0..c0 + MAC_BLK].copy_from_slice(&acc);
+        c0 += MAC_BLK;
+    }
+    if c0 < n {
+        let rem = n - c0;
+        let mut acc = [0i32; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i32;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + rem];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i32;
+            }
+        }
+        ps[c0..n].copy_from_slice(&acc[..rem]);
+    }
+}
+
 impl StoxMvm {
     /// Enumerate all normalized array-level partial sums for a batch
     /// (the Fig. 4 distribution probe).  Order: [b][k][i][j][col].
     pub fn collect_ps(&self, a: &[f32], batch: usize) -> Vec<f32> {
         assert_eq!(a.len(), batch * self.m);
+        match &self.planes {
+            WeightPlanes::I8(planes) => self.collect_ps_int(planes, a, batch),
+            WeightPlanes::F32(planes) => self.collect_ps_ref(planes, a, batch),
+        }
+    }
+
+    /// Integer digit-plane probe: same i32 accumulation as the hot
+    /// kernel, so the emitted values are bit-identical to the f32 path.
+    fn collect_ps_int(&self, planes: &[i8], a: &[f32], batch: usize) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+        let inv_r = 1.0 / cfg.r_arr as f32;
+        let mut out = Vec::with_capacity(batch * self.n_arrs * i_n * j_n * self.n);
+        let mut scratch = IntScratch::new(self);
+        for b in 0..batch {
+            for k in 0..self.n_arrs {
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                self.decompose_stripe(a, b, row0, rows, &mut scratch);
+                for i in 0..i_n {
+                    for j in 0..j_n {
+                        let w_pl = &planes[self.plane_range(k, j)];
+                        accumulate_int(
+                            w_pl,
+                            &scratch.xd,
+                            rows,
+                            i_n,
+                            i,
+                            self.n,
+                            &mut scratch.ps_int,
+                        );
+                        out.extend(scratch.ps_int.iter().map(|&p| p as f32 * inv_r));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reference (f32 plane) probe — pre-integer code path.
+    fn collect_ps_ref(&self, planes: &[f32], a: &[f32], batch: usize) -> Vec<f32> {
         let cfg = &self.cfg;
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
         let inv_r = 1.0 / cfg.r_arr as f32;
@@ -204,9 +613,6 @@ impl StoxMvm {
             for k in 0..self.n_arrs {
                 let row0 = k * cfg.r_arr;
                 let rows = (self.m - row0).min(cfg.r_arr);
-                for i in 0..i_n {
-                    xd[i][rows..].iter_mut().for_each(|v| *v = 0.0);
-                }
                 for rr in 0..rows {
                     let u = quant::quantize_unit(a[b * self.m + row0 + rr], cfg.a_bits);
                     quant::signed_digits(u, cfg.a_bits, cfg.a_stream_bits, &mut digits);
@@ -217,7 +623,7 @@ impl StoxMvm {
                 for i in 0..i_n {
                     for j in 0..j_n {
                         ps_row.iter_mut().for_each(|v| *v = 0.0);
-                        let w_sl = &self.wd[k][j];
+                        let w_sl = &planes[self.plane_range(k, j)];
                         for rr in 0..rows {
                             let x = xd[i][rr];
                             if x == 0.0 {
@@ -229,6 +635,234 @@ impl StoxMvm {
                             }
                         }
                         out.extend(ps_row.iter().map(|p| p * inv_r));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused digit-domain convolution
+// ---------------------------------------------------------------------
+
+/// Reusable scratch for the fused digit-domain conv path: holds the
+/// per-pixel activation digit planes of the current layer, grown to the
+/// largest layer seen and never shrunk — `NativeModel::forward` threads
+/// one arena through every layer instead of allocating im2col patch
+/// buffers per layer.
+#[derive(Default)]
+pub struct ConvArena {
+    digits: Vec<i8>,
+    pad: Vec<i8>,
+}
+
+impl ConvArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Pre-decomposed NHWC activation digits (a view into a [`ConvArena`]):
+/// each input pixel's quantized code is decomposed into its I signed
+/// stream digits exactly **once**, laid out `[b][y][x][c][i]` (stream
+/// fastest) so an im2col row gather over consecutive channels is one
+/// contiguous copy of `cin·I` digits.
+pub struct ActivationDigits<'a> {
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    i_n: usize,
+    digits: &'a [i8],
+    /// digit pattern of the padding value `quantize(0.0)`, inserted for
+    /// out-of-bounds taps — exactly what `im2col`'s zero fill quantizes to
+    pad: &'a [i8],
+}
+
+/// Decompose every pixel of `x` ([b,h,w,c] NHWC) once into signed digit
+/// stripes, reusing `arena`'s buffer.  Values are clamped by
+/// [`quant::quantize_unit`] itself, so the legacy path's pre-clipped
+/// `xin` copy is unnecessary — `quantize(clamp(v)) == quantize(v)` for
+/// every input.
+pub fn decompose_activations<'a>(
+    arena: &'a mut ConvArena,
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    cfg: &StoxConfig,
+) -> ActivationDigits<'a> {
+    assert_eq!(x.len(), b * h * w * c, "activation shape mismatch");
+    assert!(
+        cfg.a_stream_bits <= 7,
+        "digit-domain conv needs i8 stream digits (int_kernel_ok)"
+    );
+    let i_n = cfg.n_streams();
+    arena.digits.clear();
+    arena.digits.resize(x.len() * i_n, 0);
+    let mut dig = vec![0i8; i_n];
+    for (p, &v) in x.iter().enumerate() {
+        let u = quant::quantize_unit(v, cfg.a_bits);
+        quant::signed_digits_i8(u, cfg.a_bits, cfg.a_stream_bits, &mut dig);
+        arena.digits[p * i_n..(p + 1) * i_n].copy_from_slice(&dig);
+    }
+    arena.pad.clear();
+    arena.pad.resize(i_n, 0);
+    let u0 = quant::quantize_unit(0.0, cfg.a_bits);
+    quant::signed_digits_i8(u0, cfg.a_bits, cfg.a_stream_bits, &mut arena.pad);
+    ActivationDigits {
+        b,
+        h,
+        w,
+        c,
+        i_n,
+        digits: &arena.digits,
+        pad: &arena.pad,
+    }
+}
+
+impl ActivationDigits<'_> {
+    /// Gather the digit stripe of subarray rows [row0, row0+rows) of the
+    /// patch at (bi, oy, ox) into `xd` ([r][i] row-major): one contiguous
+    /// copy per kernel tap run, the pad pattern for out-of-bounds taps.
+    #[allow(clippy::too_many_arguments)]
+    fn gather_stripe(
+        &self,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        bi: usize,
+        oy: usize,
+        ox: usize,
+        row0: usize,
+        rows: usize,
+        xd: &mut [i8],
+    ) {
+        let (h, w, cin, i_n) = (self.h, self.w, self.c, self.i_n);
+        let mut rr = 0usize;
+        while rr < rows {
+            let row = row0 + rr;
+            let tap = row / cin;
+            let ci0 = row % cin;
+            let len = (cin - ci0).min(rows - rr);
+            let ky = tap / kw;
+            let kx = tap % kw;
+            let iy = (oy * stride + ky) as isize - pad as isize;
+            let ix = (ox * stride + kx) as isize - pad as isize;
+            let dst = &mut xd[rr * i_n..(rr + len) * i_n];
+            if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                let pix = ((bi * h + iy as usize) * w + ix as usize) * cin + ci0;
+                dst.copy_from_slice(&self.digits[pix * i_n..(pix + len) * i_n]);
+            } else {
+                for d in dst.chunks_exact_mut(i_n) {
+                    d.copy_from_slice(self.pad);
+                }
+            }
+            rr += len;
+        }
+    }
+}
+
+impl StoxMvm {
+    /// Fused digit-domain convolution (SAME padding, (kh, kw, cin) feature
+    /// order — the [`im2col`] contract): runs this crossbar over every
+    /// output position of `acts`, gathering each patch's digit stripes
+    /// straight from the pre-decomposed planes.  Bit-identical to
+    /// `im2col` + [`StoxMvm::run`] without materializing the patch matrix
+    /// or re-decomposing any pixel kh·kw times; requires the integer
+    /// kernel (`self.m == kh·kw·acts_channels`, [`StoxConfig::int_kernel_ok`]).
+    pub fn run_conv_digits<C: PsConvert + ?Sized>(
+        &self,
+        acts: &ActivationDigits<'_>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        conv: &C,
+        seed: u32,
+    ) -> (Vec<f32>, usize, usize) {
+        assert_eq!(self.m, kh * kw * acts.c, "conv geometry mismatch");
+        assert_eq!(acts.i_n, self.cfg.n_streams(), "activation digit width mismatch");
+        let WeightPlanes::I8(planes) = &self.planes else {
+            panic!("run_conv_digits requires the integer digit-plane kernel");
+        };
+        let pad = (kh - 1) / 2;
+        let ho = (acts.h + 2 * pad - kh) / stride + 1;
+        let wo = (acts.w + 2 * pad - kw) / stride + 1;
+        let patches = acts.b * ho * wo;
+
+        let threads = crate::util::pool::default_threads();
+        if threads > 1 && patches >= 2 * threads {
+            let chunk = patches.div_ceil(threads);
+            let n_chunks = patches.div_ceil(chunk);
+            let parts = crate::util::pool::par_map_scratch(
+                n_chunks,
+                threads,
+                || IntScratch::new(self),
+                |scratch, ci| {
+                    let p0 = ci * chunk;
+                    let p1 = ((ci + 1) * chunk).min(patches);
+                    self.conv_digits_range(
+                        planes, acts, kw, stride, pad, ho, wo, p0, p1, conv, seed, scratch,
+                    )
+                },
+            );
+            let mut out = Vec::with_capacity(patches * self.n);
+            for p in parts {
+                out.extend(p);
+            }
+            return (out, ho, wo);
+        }
+        let mut scratch = IntScratch::new(self);
+        let out = self.conv_digits_range(
+            planes, acts, kw, stride, pad, ho, wo, 0, patches, conv, seed, &mut scratch,
+        );
+        (out, ho, wo)
+    }
+
+    /// Fused conv kernel over patch rows [p0, p1).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_digits_range<C: PsConvert + ?Sized>(
+        &self,
+        planes: &[i8],
+        acts: &ActivationDigits<'_>,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        ho: usize,
+        wo: usize,
+        p0: usize,
+        p1: usize,
+        conv: &C,
+        seed: u32,
+        scratch: &mut IntScratch,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; (p1 - p0) * self.n];
+        if self.n == 0 || p1 == p0 {
+            return out;
+        }
+        let cfg = &self.cfg;
+        let rng = CounterRng::new(seed);
+        let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+        let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+        let norm = self.out_norm(conv.samples());
+
+        for p in p0..p1 {
+            let bi = p / (ho * wo);
+            let rem = p % (ho * wo);
+            let oy = rem / wo;
+            let ox = rem % wo;
+            for k in 0..self.n_arrs {
+                let row0 = k * cfg.r_arr;
+                let rows = (self.m - row0).min(cfg.r_arr);
+                acts.gather_stripe(kw, stride, pad, bi, oy, ox, row0, rows, &mut scratch.xd);
+                self.run_stripe_int(planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch);
+                let orow = &mut out[(p - p0) * self.n..(p - p0 + 1) * self.n];
+                for terms in scratch.contrib.chunks_exact(self.n) {
+                    for (o, &v) in orow.iter_mut().zip(terms) {
+                        *o += v;
                     }
                 }
             }
@@ -484,6 +1118,54 @@ mod tests {
     }
 
     #[test]
+    fn paper_configs_select_the_integer_kernel() {
+        let w = rand_vec(96 * 4, 13);
+        let mvm = StoxMvm::program(&w, 96, 4, StoxConfig::default()).unwrap();
+        assert!(mvm.is_integer_kernel());
+        let r = StoxMvm::program_reference(&w, 96, 4, StoxConfig::default()).unwrap();
+        assert!(!r.is_integer_kernel());
+        // 8-bit stream digits overflow i8 — automatic reference fallback
+        let wide = StoxConfig {
+            a_bits: 8,
+            w_bits: 8,
+            a_stream_bits: 8,
+            w_slice_bits: 1,
+            ..Default::default()
+        };
+        let f = StoxMvm::program(&w, 96, 4, wide).unwrap();
+        assert!(!f.is_integer_kernel());
+    }
+
+    /// The tentpole contract: integer digit-plane kernel == retained f32
+    /// reference kernel, bit for bit, stochastic converter included.
+    #[test]
+    fn integer_kernel_matches_f32_reference() {
+        let (b, m, n) = (3usize, 150usize, 9usize);
+        let a = rand_vec(b * m, 14);
+        let w = rand_vec(m * n, 15);
+        for cfg in [
+            StoxConfig::default(),
+            cfg_small(),
+            StoxConfig { a_bits: 8, w_bits: 8, w_slice_bits: 2, a_stream_bits: 2, r_arr: 48, ..Default::default() },
+        ] {
+            let int = StoxMvm::program(&w, m, n, cfg).unwrap();
+            let refk = StoxMvm::program_reference(&w, m, n, cfg).unwrap();
+            assert!(int.is_integer_kernel());
+            for conv in [
+                PsConverter::IdealAdc,
+                PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 },
+                PsConverter::ExpectedMtj { alpha: 4.0 },
+            ] {
+                let o1 = int.run_sequential(&a, b, &conv, 7);
+                let o2 = refk.run_sequential(&a, b, &conv, 7);
+                assert_eq!(o1, o2, "{conv:?} {}", cfg.tag());
+            }
+            // the Fig. 4 probe too
+            assert_eq!(int.collect_ps(&a, b), refk.collect_ps(&a, b), "{}", cfg.tag());
+        }
+    }
+
+    #[test]
     fn parallel_batch_matches_sequential() {
         // the fan-out path must be bit-identical to run_range(0, batch)
         let (m, n) = (96usize, 10usize);
@@ -496,5 +1178,49 @@ mod tests {
         let par = mvm.run(&a, batch, &conv, 5);
         let seq = mvm.run_range(&a, 0, batch, &conv, 5);
         assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn ksplit_matches_sequential() {
+        // single-image shape: batch below 2·threads, multiple subarrays
+        let (m, n) = (300usize, 12usize);
+        let a = rand_vec(2 * m, 23);
+        let w = rand_vec(m * n, 24);
+        let cfg = StoxConfig { r_arr: 64, w_slice_bits: 1, ..Default::default() };
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        for conv in [
+            PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 },
+            PsConverter::IdealAdc,
+        ] {
+            for batch in [1usize, 2] {
+                let seq = mvm.run_sequential(&a, batch, &conv, 9);
+                for threads in [2usize, 3, 8] {
+                    let par = mvm.run_ksplit(&a, batch, &conv, 9, threads);
+                    assert_eq!(par, seq, "{conv:?} batch {batch} threads {threads}");
+                }
+            }
+        }
+    }
+
+    /// Fused digit-domain conv == im2col + run, bit for bit — including
+    /// padding taps, strides and subarray splits that land mid-tap.
+    #[test]
+    fn fused_conv_matches_im2col_path() {
+        let (b, h, w, cin, cout) = (2usize, 6usize, 5usize, 3usize, 7usize);
+        let x = rand_vec(b * h * w * cin, 25);
+        let wts = rand_vec(3 * 3 * cin * cout, 26);
+        for (r_arr, stride) in [(16usize, 1usize), (8, 2), (64, 1)] {
+            let cfg = StoxConfig { r_arr, w_slice_bits: 1, ..Default::default() };
+            let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+            let (want, ho, wo) =
+                stox_conv2d(&x, b, h, w, cin, &wts, 3, 3, cout, stride, cfg, &conv, 31)
+                    .unwrap();
+            let mvm = StoxMvm::program(&wts, 3 * 3 * cin, cout, cfg).unwrap();
+            let mut arena = ConvArena::new();
+            let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
+            let (got, ho2, wo2) = mvm.run_conv_digits(&acts, 3, 3, stride, &conv, 31);
+            assert_eq!((ho, wo), (ho2, wo2));
+            assert_eq!(got, want, "r_arr {r_arr} stride {stride}");
+        }
     }
 }

@@ -43,6 +43,11 @@ impl Nonideality {
 
 /// A programmed crossbar with analog error models applied.
 pub struct NonidealCrossbar {
+    /// programmed with the f32 reference plane layout
+    /// ([`StoxMvm::program_reference`]): the analog error models multiply
+    /// digits by f32 cell gains, so the integer planes would never be
+    /// executed here — storing f32 directly avoids a duplicate copy and
+    /// the run loop borrows the planes in place.
     mvm: StoxMvm,
     nonideal: Nonideality,
     /// static per-cell multiplicative error, same layout as the weight
@@ -61,7 +66,7 @@ impl NonidealCrossbar {
         nonideal: Nonideality,
         prog_seed: u32,
     ) -> crate::Result<Self> {
-        let mvm = StoxMvm::program(w, m, n, cfg)?;
+        let mvm = StoxMvm::program_reference(w, m, n, cfg)?;
         let rng = CounterRng::new(prog_seed ^ 0x5EED_CE11);
         let n_arrs = mvm.n_arrs();
         let n_slices = cfg.n_slices();
@@ -111,6 +116,10 @@ impl NonidealCrossbar {
         let norm = 1.0 / (lev * n_arrs as f32 * samples);
         let inv_r = 1.0 / cfg.r_arr as f32;
 
+        let all_planes: &[f32] = self
+            .mvm
+            .planes_f32_ref()
+            .expect("nonideal crossbar programs the f32 reference layout");
         let mut out = vec![0.0f32; batch * n];
         let mut digits = vec![0i32; i_n];
         let mut xd = vec![0.0f32; cfg.r_arr * i_n];
@@ -137,7 +146,9 @@ impl NonidealCrossbar {
                 }
                 for j in 0..j_n {
                     ps.iter_mut().for_each(|v| *v = 0.0);
-                    let w_sl = self.mvm.slice(k, j);
+                    let plane_sz = cfg.r_arr * n;
+                    let w_sl =
+                        &all_planes[(k * j_n + j) * plane_sz..(k * j_n + j + 1) * plane_sz];
                     let gains = &self.cell_gain[k][j];
                     for rr in 0..rows {
                         let wrow = &w_sl[rr * n..(rr + 1) * n];

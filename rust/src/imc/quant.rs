@@ -117,6 +117,28 @@ impl StoxConfig {
             + self.w_slice_bits
             - 2
     }
+
+    /// Worst-case `|PS|` of one subarray column in the integer digit
+    /// domain: `r_arr · (2^a_stream_bits − 1) · (2^w_slice_bits − 1)`
+    /// (every digit at its extreme).  The integer kernel accumulates in
+    /// `i32` and converts to `f32` once, which is bit-identical to the
+    /// legacy f32 accumulation iff this bound stays ≤ 2²⁴ (all
+    /// intermediate sums are then exactly representable in f32).
+    pub fn int_ps_bound(&self) -> u64 {
+        self.r_arr as u64
+            * ((1u64 << self.a_stream_bits) - 1)
+            * ((1u64 << self.w_slice_bits) - 1)
+    }
+
+    /// Whether the exact integer digit-plane kernel applies to this
+    /// config: digits must fit `i8` (`|x_i| = 2^d − 1 ≤ 127`, i.e. digit
+    /// widths ≤ 7 bits) and [`StoxConfig::int_ps_bound`] must stay within
+    /// f32's exact-integer range.  Everything the paper sweeps (1–4 bit
+    /// streams/slices, `r_arr` ≤ 1024) qualifies; exotic configs fall back
+    /// to the retained f32 reference kernel with identical results.
+    pub fn int_kernel_ok(&self) -> bool {
+        self.a_stream_bits <= 7 && self.w_slice_bits <= 7 && self.int_ps_bound() <= 1 << 24
+    }
 }
 
 /// Quantize v ∈ [-1,1] to the integer code u ∈ [0, 2^bits - 1].
@@ -144,6 +166,21 @@ pub fn signed_digits(u: i32, bits: u32, digit_bits: u32, out: &mut [i32]) {
     for (i, o) in out.iter_mut().enumerate() {
         let d = (u >> (i as u32 * digit_bits)) & (base - 1);
         *o = 2 * d - (base - 1);
+    }
+}
+
+/// [`signed_digits`] writing `i8` digits — the integer digit-plane kernel
+/// layout (4× denser than f32 digits).  Caller guarantees
+/// `digit_bits <= 7` so every digit `|x_i| = 2^digit_bits − 1` fits
+/// (see [`StoxConfig::int_kernel_ok`]).
+pub fn signed_digits_i8(u: i32, bits: u32, digit_bits: u32, out: &mut [i8]) {
+    let n_digits = (bits / digit_bits) as usize;
+    debug_assert_eq!(out.len(), n_digits);
+    debug_assert!(digit_bits <= 7, "i8 digits need digit_bits <= 7");
+    let base = 1i32 << digit_bits;
+    for (i, o) in out.iter_mut().enumerate() {
+        let d = (u >> (i as u32 * digit_bits)) & (base - 1);
+        *o = (2 * d - (base - 1)) as i8;
     }
 }
 
@@ -214,6 +251,64 @@ mod tests {
         let mut d = vec![0i32; 4];
         signed_digits(0b1010, 4, 1, &mut d);
         assert_eq!(d, vec![-1, 1, -1, 1]);
+    }
+
+    #[test]
+    fn i8_digits_match_i32_digits() {
+        for bits in [1u32, 2, 4, 8] {
+            for digit_bits in [1u32, 2, 4] {
+                if bits % digit_bits != 0 {
+                    continue;
+                }
+                let n = (bits / digit_bits) as usize;
+                let mut d32 = vec![0i32; n];
+                let mut d8 = vec![0i8; n];
+                for u in 0..(1i32 << bits) {
+                    signed_digits(u, bits, digit_bits, &mut d32);
+                    signed_digits_i8(u, bits, digit_bits, &mut d8);
+                    for (a, b) in d32.iter().zip(&d8) {
+                        assert_eq!(*a, *b as i32, "u={u} bits={bits}/{digit_bits}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_kernel_gate() {
+        // the paper's whole design space qualifies
+        assert!(StoxConfig::default().int_kernel_ok());
+        assert!(StoxConfig { w_slice_bits: 1, ..Default::default() }.int_kernel_ok());
+        assert!(StoxConfig {
+            a_bits: 8,
+            w_bits: 8,
+            a_stream_bits: 2,
+            w_slice_bits: 2,
+            r_arr: 1024,
+            ..Default::default()
+        }
+        .int_kernel_ok());
+        // 8-bit digits overflow i8 — reference fallback
+        assert!(!StoxConfig {
+            a_bits: 8,
+            w_bits: 8,
+            a_stream_bits: 8,
+            w_slice_bits: 1,
+            ..Default::default()
+        }
+        .int_kernel_ok());
+        // PS bound beyond 2^24 — reference fallback
+        let huge = StoxConfig {
+            a_bits: 4,
+            w_bits: 4,
+            a_stream_bits: 4,
+            w_slice_bits: 4,
+            r_arr: 1 << 20,
+            ..Default::default()
+        };
+        assert!(huge.int_ps_bound() > 1 << 24);
+        assert!(!huge.int_kernel_ok());
+        assert_eq!(StoxConfig::default().int_ps_bound(), 3840); // 256 · 1 · 15
     }
 
     #[test]

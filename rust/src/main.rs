@@ -200,6 +200,8 @@ fn serve(
                 max_wait: std::time::Duration::from_millis(max_wait_ms),
             },
             seed: 0,
+            // absorb transient executor hiccups before failing a batch
+            max_retries: 2,
         },
     )
     .with_scheduler(sched);

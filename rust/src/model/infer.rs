@@ -21,7 +21,9 @@
 //! (one load + program per tag, N converter specs for free).
 
 use super::weights::{Manifest, WeightStore};
-use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
+use crate::imc::{
+    decompose_activations, im2col, ConvArena, PsConvert, PsConverterSpec, StoxConfig, StoxMvm,
+};
 use crate::stats::rng::mix32;
 use std::sync::Arc;
 
@@ -90,6 +92,11 @@ pub struct NativeModel {
     /// PS-distribution probe: when set, every normalized PS of stochastic
     /// layers is recorded into this histogram (Fig. 4 collection).
     pub ps_probe: Option<std::sync::Mutex<crate::stats::Histogram>>,
+    /// Run crossbar-mapped convs through the fused digit-domain path
+    /// (decompose each input pixel once, no im2col patch matrix) — on by
+    /// default; [`NativeModel::set_fused_conv`] keeps the legacy im2col
+    /// path reachable for A/B benchmarking (`benches/pipeline.rs`).
+    use_fused_conv: bool,
 }
 
 /// Mirrors `model._layer_seed`: independent stream per (step, layer).
@@ -259,9 +266,11 @@ impl NativeModel {
             fc_b: fcb.to_vec(),
             w3: fcw_shape[0],
             ps_probe: None,
+            use_fused_conv: true,
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_conv(
         &self,
         op: &ConvOp,
@@ -271,7 +280,28 @@ impl NativeModel {
         w: usize,
         step_seed: u32,
         clip_input: bool,
+        arena: &mut ConvArena,
     ) -> (Vec<f32>, usize, usize) {
+        // Fused digit-domain path: each input pixel is quantized and
+        // decomposed exactly once *before* patch extraction, the stripe
+        // gather reads the shared digit planes, and no `patches`/`xin`
+        // buffer is ever materialized.  `quantize_unit` clamps its input,
+        // so the legacy path's pre-clipped `xin` copy is redundant here —
+        // bit-identical outputs (pinned by `model_fused_conv` tests).
+        if let Some(mvm) = &op.mvm {
+            if self.use_fused_conv && mvm.is_integer_kernel() && self.ps_probe.is_none() {
+                let acts = decompose_activations(arena, x, b, h, w, op.cin, &mvm.cfg);
+                let seed = layer_seed(step_seed, op.layer_idx as u32);
+                return mvm.run_conv_digits(
+                    &acts,
+                    op.kh,
+                    op.kw,
+                    op.stride,
+                    op.converter.as_ref(),
+                    seed,
+                );
+            }
+        }
         let xin: Vec<f32> = if clip_input {
             x.iter().map(|v| v.clamp(-1.0, 1.0)).collect()
         } else {
@@ -300,6 +330,13 @@ impl NativeModel {
         }
     }
 
+    /// Toggle the fused digit-domain conv path (default on).  The legacy
+    /// im2col path stays bit-identical — this switch exists for the
+    /// before/after perf cases and as an escape hatch.
+    pub fn set_fused_conv(&mut self, on: bool) {
+        self.use_fused_conv = on;
+    }
+
     fn record_ps(
         &self,
         mvm: &StoxMvm,
@@ -317,6 +354,9 @@ impl NativeModel {
 
     /// Forward a batch (NHWC in [-1,1]); returns logits [B × classes].
     pub fn forward(&self, x: &[f32], batch: usize, step_seed: u32) -> Vec<f32> {
+        // one digit-plane arena serves every layer of this pass (grown to
+        // the largest layer, no per-layer patch/xin allocations)
+        let mut arena = ConvArena::new();
         let (mut h, mut hh, mut ww) = self.run_conv(
             &self.conv1,
             x,
@@ -325,6 +365,7 @@ impl NativeModel {
             self.image_size,
             step_seed,
             self.first_qf, // python clips input only on the stox path
+            &mut arena,
         );
         self.bn1.apply(&mut h, self.conv1.cout);
         let mut c = self.conv1.cout;
@@ -333,10 +374,10 @@ impl NativeModel {
             for (c1, b1, c2, b2, stride) in stage {
                 let shortcut = shortcut(&h, batch, hh, ww, c, c1.cout, *stride);
                 let (mut o1, h1, w1) =
-                    self.run_conv(c1, &h, batch, hh, ww, step_seed, true);
+                    self.run_conv(c1, &h, batch, hh, ww, step_seed, true, &mut arena);
                 b1.apply(&mut o1, c1.cout);
                 let (mut o2, h2, w2) =
-                    self.run_conv(c2, &o1, batch, h1, w1, step_seed, true);
+                    self.run_conv(c2, &o1, batch, h1, w1, step_seed, true, &mut arena);
                 b2.apply(&mut o2, c2.cout);
                 for (o, s) in o2.iter_mut().zip(&shortcut) {
                     *o += s;
@@ -544,6 +585,7 @@ impl NativeModel {
             fc_b: self.fc_b.clone(),
             w3: self.w3,
             ps_probe: None,
+            use_fused_conv: self.use_fused_conv,
         }
     }
 }

@@ -1,7 +1,14 @@
 //! Measurement harness for `rust/benches/*` (criterion-style: warmup,
 //! timed iterations, mean/p50/p95 report).  Each bench target is a plain
 //! `fn main()` (`harness = false`).
+//!
+//! [`BenchSuite`] additionally records every case and emits a
+//! machine-readable `BENCH_<name>.json` artifact (median ns/op per case)
+//! — the perf-trajectory format CI uploads per run and EXPERIMENTS.md
+//! quotes (set `STOX_BENCH_DIR` to redirect the output directory).
 
+use crate::util::json::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -72,9 +79,107 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// A named collection of bench cases that serializes to
+/// `BENCH_<name>.json` — median/mean/p95/min ns per case, in run order.
+pub struct BenchSuite {
+    name: String,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), results: Vec::new() }
+    }
+
+    /// Run and record a case with the default windows (see [`quick`]);
+    /// returns its index into [`BenchSuite::median_ns`].
+    pub fn quick<F: FnMut()>(&mut self, case: &str, f: F) -> usize {
+        let r = quick(case, f);
+        self.record(r)
+    }
+
+    /// Record an externally measured case (custom windows); returns its
+    /// index into [`BenchSuite::median_ns`].
+    pub fn record(&mut self, r: BenchResult) -> usize {
+        self.results.push(r);
+        self.results.len() - 1
+    }
+
+    /// Median ns/op of a recorded case (by [`BenchSuite::quick`] index).
+    pub fn median_ns(&self, idx: usize) -> f64 {
+        self.results[idx].p50.as_nanos() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("iters", Json::Num(r.iters as f64)),
+                    ("median_ns", Json::Num(r.p50.as_nanos() as f64)),
+                    ("mean_ns", Json::Num(r.mean.as_nanos() as f64)),
+                    ("p95_ns", Json::Num(r.p95.as_nanos() as f64)),
+                    ("min_ns", Json::Num(r.min.as_nanos() as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("cases", Json::Arr(cases)),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `STOX_BENCH_DIR` (default: the
+    /// current directory) and return the path.
+    pub fn write_json(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("STOX_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        self.write_json_to(std::path::Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory (the
+    /// env-independent path [`BenchSuite::write_json`] delegates to).
+    pub fn write_json_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        println!("bench artifact: {}", path.display());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn suite_writes_json_artifact() {
+        // write_json_to avoids mutating process env (set_var races with
+        // parallel tests reading e.g. STOX_THREADS via getenv)
+        let dir = std::env::temp_dir().join("stox_bench_suite_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut suite = BenchSuite::new("unittest");
+        let r = bench(
+            "noop-case",
+            Duration::from_millis(2),
+            Duration::from_millis(10),
+            || {},
+        );
+        let idx = suite.record(r);
+        assert!(suite.median_ns(idx) >= 0.0);
+        let path = suite.write_json_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("unittest"));
+        let cases = j.get("cases").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(
+            cases[0].get("name").and_then(|n| n.as_str()),
+            Some("noop-case")
+        );
+        assert!(cases[0].get("median_ns").and_then(|m| m.as_f64()).is_some());
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn produces_sane_stats() {

@@ -7,9 +7,26 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    par_map_scratch(n, threads, || (), |_scratch, i| f(i))
+}
+
+/// [`par_map`] with per-worker scratch state: each worker thread calls
+/// `init` exactly once and threads the resulting value (mutably) through
+/// every task it claims — the hook hot kernels use to reuse their
+/// decomposition/accumulator buffers across tasks instead of allocating
+/// per task.  Results are returned in index order and are identical to the
+/// sequential `(0..n).map(...)` evaluation whenever `f` ignores the
+/// scratch's history (the kernel scratches are overwritten per task).
+pub fn par_map_scratch<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut scratch = init();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
@@ -17,13 +34,16 @@ where
         out.iter_mut().map(std::sync::Mutex::new).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut scratch, i);
+                    **slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
@@ -77,5 +97,36 @@ mod tests {
             live.fetch_sub(1, Ordering::SeqCst);
         });
         assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn scratch_is_reused_within_a_worker_and_results_stay_ordered() {
+        // each worker gets one scratch Vec; tasks grow it and report its
+        // address stability by pushing into it — results must still land
+        // in index order regardless of which worker ran them
+        let v = par_map_scratch(
+            64,
+            4,
+            Vec::<usize>::new,
+            |scratch, i| {
+                scratch.push(i);
+                i * 3
+            },
+        );
+        assert_eq!(v, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scratch_sequential_path_single_init() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let v = par_map_scratch(
+            5,
+            1,
+            || inits.fetch_add(1, Ordering::SeqCst),
+            |s, i| *s + i,
+        );
+        assert_eq!(inits.load(Ordering::SeqCst), 1);
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
     }
 }

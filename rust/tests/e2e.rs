@@ -99,6 +99,7 @@ fn served_pipeline_accuracy() {
                 max_wait: std::time::Duration::from_millis(1),
             },
             seed: 3,
+            max_retries: 0,
         },
     );
     let n = 64.min(test.n);

@@ -26,6 +26,23 @@ fn fixture() -> (Manifest, WeightStore, TestSet) {
     (m, store, test)
 }
 
+/// The fused digit-domain conv path (ISSUE 4, the default) must produce
+/// bit-identical logits to the legacy im2col path across seeds and batch
+/// sizes — the model-level pin of the kernel's fused-conv equivalence.
+#[test]
+fn model_fused_conv_bit_identical_to_legacy_im2col() {
+    let (m, store, test) = fixture();
+    let fused = NativeModel::load(&m, &store).unwrap();
+    let mut legacy = NativeModel::load(&m, &store).unwrap();
+    legacy.set_fused_conv(false);
+    let img = test.h * test.w * test.c;
+    for (batch, seed) in [(1usize, 7u32), (2, 7), (2, 99)] {
+        let a = fused.forward(&test.images[..batch * img], batch, seed);
+        let b = legacy.forward(&test.images[..batch * img], batch, seed);
+        assert_eq!(a, b, "fused != legacy at batch {batch}, seed {seed}");
+    }
+}
+
 /// The manifest's extended mode string resolves through the registry with
 /// no CLI override: the body (and QF first layer) run the §3.2.3
 /// inhomogeneous converter, the forward pass is finite and deterministic,

@@ -7,7 +7,8 @@ use stox_net::arch::energy::{evaluate_design, DesignConfig};
 use stox_net::arch::mapper::{map_layer, LayerShape};
 use stox_net::coordinator::batcher::{BatcherConfig, DynamicBatcher, FlushReason};
 use stox_net::imc::{
-    stox_mvm, PsConvert, PsConverter, PsConverterSpec, QuantAdcConv, SparseAdcConv, StoxConfig,
+    decompose_activations, stox_mvm, ConvArena, PsConvert, PsConverter, PsConverterSpec,
+    PsIntCache, QuantAdcConv, SparseAdcConv, StoxConfig, StoxMvm,
 };
 use stox_net::model::zoo;
 use stox_net::stats::rng::CounterRng;
@@ -100,6 +101,177 @@ fn prop_ideal_mvm_linear_in_inputs() {
             stox_mvm(&a, &w_big, 1, m, 1, cfg, &PsConverter::IdealAdc, 0).unwrap();
         if o_big[0] + 1e-4 < o_small[0] {
             return Err(format!("not monotone: {} vs {}", o_big[0], o_small[0]));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Integer digit-plane kernel invariants (the perf_opt tentpole)
+// ---------------------------------------------------------------------
+
+/// Registry spec strings covering every converter family, including the
+/// registry-only ones (`sparse`, `inhomo`).
+const KERNEL_SPECS: [&str; 7] = [
+    "ideal",
+    "quant:bits=6",
+    "sparse:bits=4",
+    "sa",
+    "expected:alpha=3",
+    "stox:alpha=4,samples=2",
+    "inhomo:alpha=4,base=1,extra=2",
+];
+
+/// The tentpole contract: the integer digit-plane kernel (i8 planes, i32
+/// PS accumulation, integer conversion entry point) is bit-identical to
+/// the retained f32 reference kernel across random shapes — odd `m` vs
+/// `r_arr` splits included — random configs (1-bit slices included) and
+/// every registry converter.
+#[test]
+fn prop_integer_kernel_bit_identical_to_reference() {
+    check("integer kernel == f32 reference", 30, |g| {
+        let b = g.usize_in(1, 3);
+        let m = g.usize_in(1, 150);
+        let n = g.usize_in(1, 20);
+        let cfg = random_cfg(g);
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let int = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        let refk =
+            StoxMvm::program_reference(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        if !int.is_integer_kernel() {
+            return Err(format!("config {cfg:?} must use the integer kernel"));
+        }
+        let seed = g.usize_in(0, 10_000) as u32;
+        let o1 = int.run_sequential(&a, b, conv.as_ref(), seed);
+        let o2 = refk.run_sequential(&a, b, conv.as_ref(), seed);
+        if o1.iter().zip(&o2).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("{spec} diverged under {cfg:?}"));
+        }
+        // Fig. 4 probe shares the planes and the exactness argument
+        let p1 = int.collect_ps(&a, b);
+        let p2 = refk.collect_ps(&a, b);
+        if p1.iter().zip(&p2).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("collect_ps diverged under {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The sub-batch (b, k) split must be bit-identical to the sequential
+/// kernel at batch = 1 (the single-image serving shape) and any other
+/// small batch, for every thread count.
+#[test]
+fn prop_ksplit_bit_identical_to_sequential() {
+    check("k-split == sequential", 20, |g| {
+        let batch = g.usize_in(1, 3);
+        let m = g.usize_in(30, 300); // several subarrays at small r_arr
+        let n = g.usize_in(1, 12);
+        let cfg = StoxConfig {
+            r_arr: *g.pick(&[16usize, 32, 64]),
+            ..random_cfg(g)
+        };
+        let a = g.vec_f32(batch * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let mvm = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        let seed = g.usize_in(0, 10_000) as u32;
+        let seq = mvm.run_sequential(&a, batch, conv.as_ref(), seed);
+        for threads in [2usize, 5] {
+            let par = mvm.run_ksplit(&a, batch, conv.as_ref(), seed, threads);
+            if par.iter().zip(&seq).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!(
+                    "{spec} k-split diverged (batch {batch}, {threads} threads)"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The fused digit-domain conv path (decompose pixels once, gather digit
+/// stripes) must be bit-identical to im2col + run for random geometries,
+/// strides and subarray splits.
+#[test]
+fn prop_fused_conv_bit_identical_to_im2col() {
+    check("fused conv == im2col + run", 15, |g| {
+        let (b, h, w) = (g.usize_in(1, 2), g.usize_in(3, 8), g.usize_in(3, 8));
+        let cin = g.usize_in(1, 6);
+        let cout = g.usize_in(1, 8);
+        let k = *g.pick(&[1usize, 3]);
+        let stride = g.usize_in(1, 2);
+        let cfg = StoxConfig {
+            r_arr: *g.pick(&[8usize, 16, 64]),
+            w_slice_bits: 1,
+            ..StoxConfig::default()
+        };
+        let x = g.vec_f32(b * h * w * cin, -1.5, 1.5); // out-of-range clips
+        let wts = g.vec_f32(k * k * cin * cout, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let seed = g.usize_in(0, 10_000) as u32;
+        let (want, ho, wo) = {
+            let (patches, ho, wo) = stox_net::imc::im2col(&x, b, h, w, cin, k, k, stride);
+            let mvm =
+                StoxMvm::program(&wts, k * k * cin, cout, cfg).map_err(|e| e.to_string())?;
+            (mvm.run(&patches, b * ho * wo, conv.as_ref(), seed), ho, wo)
+        };
+        let mvm = StoxMvm::program(&wts, k * k * cin, cout, cfg).map_err(|e| e.to_string())?;
+        let mut arena = ConvArena::new();
+        let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
+        let (got, ho2, wo2) = mvm.run_conv_digits(&acts, k, k, stride, conv.as_ref(), seed);
+        if (ho, wo) != (ho2, wo2) {
+            return Err(format!("shape mismatch ({ho},{wo}) vs ({ho2},{wo2})"));
+        }
+        if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("{spec} fused conv diverged (k={k}, stride={stride})"));
+        }
+        Ok(())
+    });
+}
+
+/// The integer conversion entry point must equal the float entry point on
+/// raw slices too (independent of the kernel): random levels, scales,
+/// counter layouts, repeated calls through one cache.
+#[test]
+fn prop_int_conversion_entry_matches_float_entry() {
+    check("convert_slice_int_at == convert_slice_at", 25, |g| {
+        let cfg = random_cfg(g);
+        let n = g.usize_in(1, 64);
+        let bound = g.usize_in(1, 4096);
+        let ps_int: Vec<i32> = (0..n)
+            .map(|_| g.usize_in(0, 2 * bound) as i32 - bound as i32)
+            .collect();
+        let scale = 1.0f32 / bound as f32;
+        let base = g.usize_in(0, 1 << 20) as u32;
+        let stride = g.usize_in(1, 64) as u32;
+        let rng = CounterRng::new(g.usize_in(0, 1000) as u32);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let mut cache = PsIntCache::new();
+        cache.reset(bound);
+        let psn: Vec<f32> = ps_int.iter().map(|&p| p as f32 * scale).collect();
+        let (i, j) = (
+            g.usize_in(0, cfg.n_streams() - 1),
+            g.usize_in(0, cfg.n_slices() - 1),
+        );
+        let mut want = vec![0.0f32; n];
+        conv.convert_slice_at(i, j, &psn, &mut want, base, stride, &rng);
+        for _pass in 0..2 {
+            let mut got = vec![0.0f32; n];
+            conv.convert_slice_int_at(
+                i, j, &ps_int, scale, &mut got, base, stride, &rng, &mut cache,
+            );
+            if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!("{spec} int entry diverged at ({i},{j})"));
+            }
         }
         Ok(())
     });
