@@ -1,0 +1,306 @@
+"""Numpy reference gradients for the §3.3 digit-STE backward.
+
+Generates ``rust/tests/data/grad_golden.json``, the golden that
+``rust/tests/grad_equiv.rs`` pins ``train::grad::stox_matmul_backward``
+against (tolerance 1e-5).  The conventions here are the *definition* the
+Rust side mirrors op-for-op:
+
+* per-slice PS are captured from the exact digit-domain forward (small
+  integers summed in f32 — bit-identical on both sides);
+* the converter backward is the surrogate derivative ``D`` at those PS:
+  ``ideal`` → 1, ``quant``/``sparse`` → ``1[|ps| ≤ 1]`` (clip STE),
+  ``sa`` → ``α·1[|α·ps| ≤ 1]`` (hardtanh STE), MTJ family →
+  ``α·(1 − tanh²(α·ps))`` (Eq. 1 tanh surrogate);
+* the digit STE allocates slope uniformly: ``∂x_i/∂a_q = 2^As − 1`` for
+  every stream and ``∂t_j/∂w_q = 2^Ws − 1`` for every slice — the unique
+  per-digit split consistent with the recombination identity
+  ``Σ_i 2^{i·As}·x_i = (2^Ab − 1)·a_q`` that is uniform across digits;
+* activations chain through the clip STE (``1[|a| ≤ 1]``, inclusive).
+
+Inputs of each golden case are *derived from the seed* with the shared
+counter RNG (``uniform_in``), identically on both sides, so the file
+stores only the expected gradients.
+
+    python -m compile.gen_grad_golden        # from python/
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from .gen_sweep_golden import (
+    Cfg,
+    F32,
+    mixed_seed,
+    quantize_unit,
+    signed_digits,
+    uniform_in,
+)
+
+OUT = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
+
+
+# ---------------------------------------------------------------------------
+# Surrogate derivatives (rust ``imc::PsSurrogate``)
+# ---------------------------------------------------------------------------
+
+DEFAULT_ALPHA = 4.0
+
+
+def surrogate_grad(spec: str, alpha: float, ps: np.ndarray) -> np.ndarray:
+    """``d converted / d ps`` of the named converter's surrogate."""
+    name = spec.split(":", 1)[0]
+    if name == "ideal":
+        return np.ones_like(ps)
+    if name in ("quant", "sparse"):
+        return np.where(np.abs(ps) <= F32(1.0), F32(1.0), F32(0.0))
+    if name == "sa":
+        z = F32(DEFAULT_ALPHA) * ps
+        return np.where(np.abs(z) <= F32(1.0), F32(DEFAULT_ALPHA), F32(0.0))
+    # expected / stox / inhomo: Eq. 1 tanh surrogate
+    t = np.tanh(F32(alpha) * ps)
+    return F32(alpha) * (F32(1.0) - t * t)
+
+
+def spec_alpha(spec: str) -> float:
+    for kv in spec.partition(":")[2].split(","):
+        if kv.startswith("alpha="):
+            return float(kv.split("=")[1])
+    return DEFAULT_ALPHA
+
+
+# ---------------------------------------------------------------------------
+# Exact digit-domain PS capture + the digit-STE VJP
+# ---------------------------------------------------------------------------
+
+
+def capture_ps(a: np.ndarray, wn: np.ndarray, cfg: Cfg):
+    """Per-slice PS ``[B,K,N,I,J]`` plus the padded digit tensors."""
+    bsz, m = a.shape
+    n = wn.shape[1]
+    k_n = cfg.n_arrs(m)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    xd = signed_digits(quantize_unit(a, cfg.a_bits), cfg.a_bits, cfg.a_stream_bits)
+    td = signed_digits(quantize_unit(wn, cfg.w_bits), cfg.w_bits, cfg.w_slice_bits)
+    m_pad = k_n * cfg.r_arr
+    xp = np.zeros((bsz, m_pad, i_n), F32)
+    xp[:, :m] = xd
+    tp = np.zeros((m_pad, n, j_n), F32)
+    tp[:m] = td
+    xk = xp.reshape(bsz, k_n, cfg.r_arr, i_n)
+    tk = tp.reshape(k_n, cfg.r_arr, n, j_n)
+    # digits are small integers: the f32 einsum is exact, so ps matches
+    # the Rust integer kernel bit for bit
+    ps = np.einsum("bkri,krnj->bknij", xk, tk).astype(F32) * F32(1.0 / cfg.r_arr)
+    return ps, xk, tk
+
+
+def stox_matmul_backward_np(
+    a: np.ndarray, wn: np.ndarray, cfg: Cfg, spec: str, g: np.ndarray
+):
+    """The digit-STE VJP (mirror of ``train::grad::stox_matmul_backward``).
+
+    Returns ``(d_a, d_w)`` — ``d_a`` already masked by the clip STE,
+    ``d_w`` with respect to the *normalized* weights.
+    """
+    bsz, m = a.shape
+    n = wn.shape[1]
+    k_n = cfg.n_arrs(m)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    ps, xk, tk = capture_ps(a, wn, cfg)
+    d = surrogate_grad(spec, spec_alpha(spec), ps)  # [B,K,N,I,J]
+
+    sa = np.asarray([float(1 << (i * cfg.a_stream_bits)) for i in range(i_n)], F32)
+    sw = np.asarray([float(1 << (j * cfg.w_slice_bits)) for j in range(j_n)], F32)
+    la = float((1 << cfg.a_bits) - 1)
+    lw = float((1 << cfg.w_bits) - 1)
+    lev = la * lw
+    slope_a = float((1 << cfg.a_stream_bits) - 1)
+    slope_w = float((1 << cfg.w_slice_bits) - 1)
+    denom = F32(lev) * F32(k_n) * F32(cfg.r_arr)
+    ca = F32(slope_a) / denom
+    cw = F32(slope_w) / denom
+
+    # significance-weighted per-slice gains
+    aj = np.einsum("bknij,i,j->bknj", d, sa, sw).astype(F32)
+    wi = np.einsum("bknij,i,j->bkni", d, sa, sw).astype(F32)
+    d_a = ca * np.einsum("bn,bknj,krnj->bkr", g, aj, tk).astype(F32)
+    d_a = d_a.reshape(bsz, k_n * cfg.r_arr)[:, :m]
+    d_a = np.where(np.abs(a) <= F32(1.0), d_a, F32(0.0))
+    d_w = cw * np.einsum("bn,bkni,bkri->krn", g, wi, xk).astype(F32)
+    d_w = d_w.reshape(k_n * cfg.r_arr, n)[:m]
+    return d_a.astype(F32), d_w.astype(F32)
+
+
+def ideal_forward(a: np.ndarray, wn: np.ndarray, cfg: Cfg) -> np.ndarray:
+    """Expected forward with the ideal converter (used by the stack
+    cases): shift-and-add of the exact per-slice PS — deterministic and
+    exactly representable, so both sides agree bitwise."""
+    ps, _, _ = capture_ps(a, wn, cfg)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    sa = np.asarray([float(1 << (i * cfg.a_stream_bits)) for i in range(i_n)], F32)
+    sw = np.asarray([float(1 << (j * cfg.w_slice_bits)) for j in range(j_n)], F32)
+    lev = F32(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    k_n = ps.shape[1]
+    norm = F32(1.0) / (lev * F32(k_n) * F32(1.0))
+    out = np.zeros(ps.shape[:1] + ps.shape[2:3], F32)  # [B,N]
+    # rust fold order: k outer, then j, then i
+    for k in range(k_n):
+        for j in range(j_n):
+            for i in range(i_n):
+                out = out + ps[:, k, :, i, j] * (sa[i] * sw[j] * norm)
+    return out
+
+
+def sa_forward(a: np.ndarray, wn: np.ndarray, cfg: Cfg) -> np.ndarray:
+    """Expected forward with the 1b-SA converter (sign readout): ±1
+    conversions are exactly representable — bitwise-stable stack input."""
+    ps, _, _ = capture_ps(a, wn, cfg)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    sa = np.asarray([float(1 << (i * cfg.a_stream_bits)) for i in range(i_n)], F32)
+    sw = np.asarray([float(1 << (j * cfg.w_slice_bits)) for j in range(j_n)], F32)
+    lev = F32(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    k_n = ps.shape[1]
+    norm = F32(1.0) / (lev * F32(k_n) * F32(1.0))
+    out = np.zeros(ps.shape[:1] + ps.shape[2:3], F32)
+    for k in range(k_n):
+        for j in range(j_n):
+            for i in range(i_n):
+                cv = np.where(ps[:, k, :, i, j] >= 0.0, F32(1.0), F32(-1.0))
+                out = out + cv * (sa[i] * sw[j] * norm)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Case inventory
+# ---------------------------------------------------------------------------
+
+CFG_A = Cfg(a_bits=4, w_bits=4, a_stream_bits=1, w_slice_bits=4, r_arr=32)
+CFG_B = Cfg(a_bits=4, w_bits=4, a_stream_bits=1, w_slice_bits=1, r_arr=16)
+CFG_C = Cfg(a_bits=8, w_bits=8, a_stream_bits=2, w_slice_bits=2, r_arr=32)
+
+SINGLE_SPECS = (
+    "ideal",
+    "quant:bits=4",
+    "sparse:bits=4",
+    "sa",
+    "expected:alpha=4",
+    "stox:alpha=4,samples=2",
+    "inhomo:alpha=4,base=1,extra=3",
+)
+
+
+def cfg_json(cfg: Cfg) -> dict:
+    return {
+        "a_bits": cfg.a_bits,
+        "w_bits": cfg.w_bits,
+        "a_stream_bits": cfg.a_stream_bits,
+        "w_slice_bits": cfg.w_slice_bits,
+        "r_arr": cfg.r_arr,
+    }
+
+
+def derive_inputs(seed: int, *sizes: int) -> list[np.ndarray]:
+    """Consecutive uniform_in(-1, 1) blocks from one counter stream —
+    regenerated identically by the Rust test."""
+    mx = mixed_seed(seed)
+    out = []
+    base = 0
+    for sz in sizes:
+        out.append(
+            uniform_in(mx, np.arange(base, base + sz, dtype=np.uint32), -1.0, 1.0)
+        )
+        base += sz
+    return out
+
+
+def flat(x: np.ndarray) -> list[float]:
+    return [float(v) for v in np.asarray(x, F32).ravel()]
+
+
+def single_case(name: str, spec: str, cfg: Cfg, seed: int, b: int, m: int, n: int):
+    a, w, g = derive_inputs(seed, b * m, m * n, b * n)
+    a = a.reshape(b, m)
+    w = w.reshape(m, n)
+    g = g.reshape(b, n)
+    d_a, d_w = stox_matmul_backward_np(a, w, cfg, spec, g)
+    return {
+        "name": name,
+        "kind": "single",
+        "spec": spec,
+        "cfg": cfg_json(cfg),
+        "batch": b,
+        "m": m,
+        "n": n,
+        "seed": seed,
+        "d_a": flat(d_a),
+        "d_w": flat(d_w),
+    }
+
+
+def stack_case(name: str, spec: str, cfg: Cfg, seed: int, b: int, m: int, h: int, n: int):
+    """Two chained matmul layers with the clip STE between them; the
+    forward converter is deterministic and exactly representable (ideal
+    or sa), so the layer-2 input agrees bitwise across languages."""
+    a0, w1, w2, g = derive_inputs(seed, b * m, m * h, h * n, b * n)
+    a0 = a0.reshape(b, m)
+    w1 = w1.reshape(m, h)
+    w2 = w2.reshape(h, n)
+    g = g.reshape(b, n)
+    fwd = ideal_forward if spec == "ideal" else sa_forward
+    out1 = fwd(a0, w1, cfg)
+    x1 = np.clip(out1, F32(-1.0), F32(1.0))
+    d_x1, d_w2 = stox_matmul_backward_np(x1, w2, cfg, spec, g)
+    d_x1 = np.where(np.abs(out1) <= F32(1.0), d_x1, F32(0.0))
+    d_a0, d_w1 = stox_matmul_backward_np(a0, w1, cfg, spec, d_x1)
+    return {
+        "name": name,
+        "kind": "stack",
+        "spec": spec,
+        "cfg": cfg_json(cfg),
+        "batch": b,
+        "m": m,
+        "hidden": h,
+        "n": n,
+        "seed": seed,
+        "d_a": flat(d_a0),
+        "d_w1": flat(d_w1),
+        "d_w2": flat(d_w2),
+    }
+
+
+def build_golden() -> dict:
+    cases = []
+    for idx, spec in enumerate(SINGLE_SPECS):
+        tag = spec.split(":", 1)[0]
+        cases.append(
+            single_case(f"single_{tag}_A", spec, CFG_A, 101 + idx, 2, 40, 6)
+        )
+        cases.append(
+            single_case(f"single_{tag}_B", spec, CFG_B, 131 + idx, 2, 24, 5)
+        )
+    # a wider-digit config on the tanh family
+    cases.append(single_case("single_stox_C", "stox:alpha=4,samples=2", CFG_C, 171, 2, 48, 4))
+    cases.append(
+        single_case("single_inhomo_C", "inhomo:alpha=4,base=1,extra=3", CFG_C, 172, 2, 48, 4)
+    )
+    cases.append(stack_case("stack_ideal_B", "ideal", CFG_B, 201, 2, 24, 8, 5))
+    cases.append(stack_case("stack_sa_A", "sa", CFG_A, 202, 2, 40, 8, 5))
+    return {"generator": "gen_grad_golden.py", "cases": cases}
+
+
+def main() -> None:
+    golden = build_golden()
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / "grad_golden.json"
+    path.write_text(json.dumps(golden, sort_keys=True, separators=(",", ":")))
+    n_single = sum(1 for c in golden["cases"] if c["kind"] == "single")
+    n_stack = len(golden["cases"]) - n_single
+    print(f"wrote {path} ({n_single} single-layer cases, {n_stack} stacks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -225,10 +225,12 @@ class Converter:
         if self.name == "stox":
             return ("mtj", self.n_samples)
         if self.name == "inhomo":
+            # exact fractional mean, charged as millisamples
+            # (rust ``PsProcessing::StochasticMtjFrac``)
             mean = sum(float(n) for row in self.table for n in row) / (
                 len(self.table) * len(self.table[0])
             )
-            return ("mtj", max(1, int(rust_round(mean))))
+            return ("mtj_frac", max(1, int(rust_round(mean * 1000.0))))
         raise ValueError(self.name)
 
     # -- conversion -------------------------------------------------------
@@ -426,6 +428,8 @@ def ps_energy_pj(key) -> float:
         return COST["adc_sparse_energy_pj"]
     if kind == "sa":
         return COST["sa_energy_pj"]
+    if kind == "mtj_frac":
+        return COST["mtj_energy_pj"] * (float(param) / 1000.0)
     return COST["mtj_energy_pj"] * float(param)
 
 
@@ -446,12 +450,19 @@ def ps_stage_ns(key, n_cols: int) -> float:
         return COST["adc_latency_ns"] * float(min(n_cols, param))
     if kind == "sa":
         return COST["sa_latency_ns"]
+    if kind == "mtj_frac":
+        return COST["mtj_latency_ns"] * (float(param) / 1000.0)
     return COST["mtj_latency_ns"] * float(param)
 
 
 def key_samples(key) -> int:
     kind, param = key
-    return param if kind == "mtj" else 1
+    if kind == "mtj":
+        return param
+    if kind == "mtj_frac":
+        # whole conversions, mean rounded half-up (rust samples())
+        return max(1, (param + 500) // 1000)
+    return 1
 
 
 def resnet20_layers() -> list[dict]:

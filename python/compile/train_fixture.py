@@ -1,0 +1,606 @@
+"""Numpy mirror of the Rust `train/` subsystem + the trained tiny fixture.
+
+Trains the committed random-init checkpoint ``rust/tests/data/tiny_inhomo``
+with the *same* conventions as ``rust/src/train``: hardware-exact
+stochastic forward (counter-RNG inhomogeneous MTJ sampling, bit-identical
+thresholds and draws), the §3.3 digit-STE tanh-surrogate backward
+(``gen_grad_golden.stox_matmul_backward_np`` — the same equations
+``rust/tests/grad_equiv.rs`` pins the Rust side against), train-mode
+BatchNorm, SGD with momentum/weight-decay, cosine LR, deterministic
+counter-RNG batch sampling — and exports the result as
+``rust/tests/data/tiny_inhomo_trained`` in the exact manifest format, so
+``NativeModel::load_with_config`` reloads it through the
+``ConverterRegistry`` with no ``--converter`` override.
+
+The fixture deliberately trains *on the committed 8-image test set*
+(memorization, not generalization): its role is to be an
+accuracy-bearing checkpoint that strictly beats the random-init fixture
+on the committed images, which a few hundred steps of PS-aware training
+achieve with wide logit margins.  The evaluation here mirrors
+``NativeModel::forward`` (folded BN, im2col path, frozen layer seeds,
+exact sampling draws), so the accuracies asserted by
+``rust/tests/train.rs`` reproduce on the Rust side.
+
+Deterministic end to end (``python/tests/test_train_fixture.py`` pins
+the committed bytes against a fresh run):
+
+    python -m compile.train_fixture        # from python/
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from . import export_fixture as ef
+from .gen_grad_golden import stox_matmul_backward_np, surrogate_grad
+from .gen_sweep_golden import (
+    Cfg,
+    F32,
+    draw24,
+    inhomo_table,
+    mix32,
+    mixed_seed,
+    quantize_unit,
+    signed_digits,
+)
+
+OUT = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "data"
+    / "tiny_inhomo_trained"
+)
+
+FIXTURE_CFG = Cfg(
+    a_bits=4, w_bits=4, a_stream_bits=1, w_slice_bits=4, r_arr=64, alpha=4.0
+)
+BODY_SPEC = "inhomo:alpha=4,base=1,extra=3"
+
+# training hyperparameters of the committed fixture (recorded in its
+# checkpoint_record and in EXPERIMENTS.md §Training)
+HP = dict(steps=400, batch=4, lr=0.05, momentum=0.9, weight_decay=5e-4, seed=0)
+
+
+def layer_seed(step_seed: int, layer_idx: int) -> np.uint32:
+    x = np.uint32(step_seed & 0xFFFFFFFF) ^ np.uint32((0xA511E9B3 + layer_idx) & 0xFFFFFFFF)
+    return mix32(np.array([x], np.uint32))[0]
+
+
+# ---------------------------------------------------------------------------
+# im2col (rust imc::im2col mirror) and its adjoint
+# ---------------------------------------------------------------------------
+
+
+def im2col_np(x: np.ndarray, kh: int, kw: int, stride: int):
+    b, h, w, c = x.shape
+    pad = (kh - 1) // 2
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    xp = np.zeros((b, h + 2 * pad, w + 2 * pad, c), F32)
+    xp[:, pad : pad + h, pad : pad + w, :] = x
+    patches = np.zeros((b, ho, wo, kh * kw * c), F32)
+    for ky in range(kh):
+        for kx in range(kw):
+            sub = xp[:, ky : ky + ho * stride : stride, kx : kx + wo * stride : stride, :]
+            patches[:, :, :, (ky * kw + kx) * c : (ky * kw + kx + 1) * c] = sub
+    return patches.reshape(b * ho * wo, kh * kw * c), ho, wo
+
+
+def col2im_np(dp: np.ndarray, b: int, h: int, w: int, c: int, kh: int, kw: int, stride: int):
+    pad = (kh - 1) // 2
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    dp = dp.reshape(b, ho, wo, kh * kw * c)
+    dxp = np.zeros((b, h + 2 * pad, w + 2 * pad, c), F32)
+    for ky in range(kh):
+        for kx in range(kw):
+            dxp[:, ky : ky + ho * stride : stride, kx : kx + wo * stride : stride, :] += dp[
+                :, :, :, (ky * kw + kx) * c : (ky * kw + kx + 1) * c
+            ]
+    return dxp[:, pad : pad + h, pad : pad + w, :]
+
+
+# ---------------------------------------------------------------------------
+# Crossbar MVM with capture (rust StoxMvm::run_capture mirror)
+# ---------------------------------------------------------------------------
+
+
+class InhomoConv:
+    """§3.2.3 inhomogeneous MTJ converter, counter-exact with Rust."""
+
+    def __init__(self, alpha: float, base: int, extra: int, cfg: Cfg):
+        self.alpha = alpha
+        self.base = max(1, base)
+        self.extra = extra
+        self.table = inhomo_table(cfg, self.base, extra)
+        self.n_max = self.base + extra
+
+    def samples(self) -> int:
+        return 1
+
+    def convert(self, i, j, psn, counters, mixed):
+        n_ij = self.table[i][j]
+        pr = F32(0.5) * (np.tanh(F32(self.alpha) * psn) + F32(1.0))
+        thr = np.ceil(pr.astype(np.float64) * 16777216.0).astype(np.uint32)
+        base = counters * np.uint32(self.n_max)
+        total = np.zeros(psn.shape, np.int32)
+        for s in range(n_ij):
+            d = draw24(mixed, base + np.uint32(s))
+            total = total + np.where(d < thr, 1, -1).astype(np.int32)
+        return total.astype(F32) * (F32(1.0) / F32(n_ij))
+
+
+def mvm_capture(a2d: np.ndarray, wn2d: np.ndarray, cfg: Cfg, conv, seed):
+    """(out [P,N], ps [P,K,N,I,J]) — fold order mirrors the Rust kernel."""
+    p_n, m = a2d.shape
+    n = wn2d.shape[1]
+    k_n = cfg.n_arrs(m)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    xd = signed_digits(quantize_unit(a2d, cfg.a_bits), cfg.a_bits, cfg.a_stream_bits)
+    td = signed_digits(quantize_unit(wn2d, cfg.w_bits), cfg.w_bits, cfg.w_slice_bits)
+    m_pad = k_n * cfg.r_arr
+    xp = np.zeros((p_n, m_pad, i_n), F32)
+    xp[:, :m] = xd
+    tp = np.zeros((m_pad, n, j_n), F32)
+    tp[:m] = td
+    xk = xp.reshape(p_n, k_n, cfg.r_arr, i_n)
+    tk = tp.reshape(k_n, cfg.r_arr, n, j_n)
+    ps = np.einsum("pkri,krnj->pknij", xk, tk).astype(F32) * F32(1.0 / cfg.r_arr)
+
+    sa = [F32(1 << (i * cfg.a_stream_bits)) for i in range(i_n)]
+    sw = [F32(1 << (j * cfg.w_slice_bits)) for j in range(j_n)]
+    lev = F32(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    norm = F32(1.0) / (lev * F32(k_n) * F32(conv.samples()))
+    mixed = mixed_seed(int(seed))
+    out = np.zeros((p_n, n), F32)
+    pcol = np.arange(p_n, dtype=np.uint32)[:, None]
+    ccol = np.arange(n, dtype=np.uint32)[None, :]
+    for k in range(k_n):
+        for j in range(j_n):
+            for i in range(i_n):
+                counters = (
+                    ((pcol * np.uint32(k_n) + np.uint32(k)) * np.uint32(n) + ccol)
+                    * np.uint32(i_n)
+                    + np.uint32(i)
+                ) * np.uint32(j_n) + np.uint32(j)
+                cv = conv.convert(i, j, ps[:, k, :, i, j], counters, mixed)
+                out = out + cv * (sa[i] * sw[j] * norm)
+    return out, ps
+
+
+# ---------------------------------------------------------------------------
+# Parameter containers
+# ---------------------------------------------------------------------------
+
+
+def load_fixture_params():
+    """Random-init tensors of the committed fixture, as a name → array map."""
+    tensors = ef.build_tensors()
+    return {name: arr.copy() for name, arr in tensors}
+
+
+def conv_names():
+    """(weight key, bn prefix, stride, layer_idx, cin, cout) per conv."""
+    w1, w2, w3 = ef.widths()
+    out = [("['params']['conv1']", "['bn1']", 1, 0, ef.SPEC["in_channels"], w1)]
+    cin = w1
+    li = 1
+    for s, cout in enumerate((w1, w2, w3)):
+        for b in range(ef.SPEC["blocks_per_stage"]):
+            stride = 2 if (s > 0 and b == 0) else 1
+            p = f"['params']['stages'][{s}][{b}]"
+            out.append((f"{p}['conv1']", f"['stages'][{s}][{b}]['bn1']", stride, li, cin, cout))
+            li += 1
+            out.append((f"{p}['conv2']", f"['stages'][{s}][{b}]['bn2']", 1, li, cout, cout))
+            li += 1
+            cin = cout
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Inference forward (NativeModel::forward mirror, folded BN)
+# ---------------------------------------------------------------------------
+
+
+def normalize_weights(w: np.ndarray) -> np.ndarray:
+    scale = F32(np.max(np.abs(w.astype(F32)))) + F32(1e-8)
+    return (w.astype(F32) / scale).astype(F32)
+
+
+def bn_fold(params, prefix):
+    gamma = params[f"['params']{prefix}['gamma']"].astype(F32)
+    beta = params[f"['params']{prefix}['beta']"].astype(F32)
+    mean = params[f"['states']{prefix}['mean']"].astype(F32)
+    var = params[f"['states']{prefix}['var']"].astype(F32)
+    scale = gamma / np.sqrt(var + F32(1e-5))
+    shift = beta - mean * scale
+    return scale, shift
+
+
+def eval_forward(params, x: np.ndarray, step_seed: int, cfg: Cfg = FIXTURE_CFG):
+    """Logits of a batch (NHWC in [-1,1]) under the inhomo converter."""
+    conv = InhomoConv(cfg.alpha, 1, 3, cfg)
+    b = x.shape[0]
+    h = w = ef.SPEC["image_size"]
+    specs = conv_names()
+
+    def stox_conv(xin, key, stride, li, cin, cout):
+        wt = params[key]
+        wn = normalize_weights(wt).reshape(-1, cout)
+        xc = np.clip(xin, F32(-1.0), F32(1.0))
+        patches, ho, wo = im2col_np(xc, 3, 3, stride)
+        out, _ = mvm_capture(patches, wn, cfg, conv, layer_seed(step_seed, li))
+        return out.reshape(b, ho, wo, cout), ho, wo
+
+    key, bnp, stride, li, cin, cout = specs[0]
+    hcur, hh, ww_ = stox_conv(x, key, stride, li, cin, cout)
+    scale, shift = bn_fold(params, bnp)
+    hcur = hcur * scale + shift
+    c = cout
+    idx = 1
+    w1, w2, w3 = ef.widths()
+    for s, cout_s in enumerate((w1, w2, w3)):
+        for blk in range(ef.SPEC["blocks_per_stage"]):
+            key1, bn1, stride, li1, cin1, cout1 = specs[idx]
+            key2, bn2, _, li2, _, _ = specs[idx + 1]
+            idx += 2
+            # shortcut: strided subsample + zero channel pad
+            sc = hcur[:, ::stride, ::stride, :]
+            if c < cout1:
+                sc = np.pad(sc, ((0, 0), (0, 0), (0, 0), (0, cout1 - c)))
+            o1, h1, w1_ = stox_conv(hcur, key1, stride, li1, cin1, cout1)
+            s1, sh1 = bn_fold(params, bn1)
+            o1 = o1 * s1 + sh1
+            o2, h2, w2_ = stox_conv(o1, key2, 1, li2, cout1, cout1)
+            s2, sh2 = bn_fold(params, bn2)
+            o2 = o2 * s2 + sh2
+            hcur = o2 + sc.astype(F32)
+            hh, ww_, c = h2, w2_, cout1
+    pooled = hcur.reshape(b, hh * ww_, c).mean(axis=1).astype(F32)
+    fc_w = params["['params']['fc_w']"].astype(F32)
+    fc_b = params["['params']['fc_b']"].astype(F32)
+    return (pooled @ fc_w + fc_b).astype(F32)
+
+
+def eval_accuracy(params, images, labels, batch=8, seed=0):
+    """Mirror of `NativeModel::accuracy` (same batching, same seeds)."""
+    n = len(labels)
+    correct = 0
+    i = 0
+    while i < n:
+        bsz = min(batch, n - i)
+        logits = eval_forward(params, images[i : i + bsz], seed + i)
+        correct += int(np.sum(np.argmax(logits, axis=1) == labels[i : i + bsz]))
+        i += bsz
+    return correct / n
+
+
+def logit_margins(params, images, labels, seed=0):
+    """Per-image (top logit − best wrong logit); positive = correct with
+    that margin.  Used to confirm the fixture's accuracy is robust to
+    last-ulp cross-language differences."""
+    logits = eval_forward(params, images, seed)
+    margins = []
+    for row, lab in zip(logits, labels):
+        wrong = np.delete(row, lab)
+        margins.append(float(row[lab] - np.max(wrong)))
+    return margins
+
+
+# ---------------------------------------------------------------------------
+# Training (rust train::Trainer mirror)
+# ---------------------------------------------------------------------------
+
+
+def bn_forward_train(x2d, gamma, beta, state_mean, state_var, momentum=0.9):
+    """x2d: [N_elems, C] view; returns (y, tape); updates running stats."""
+    mean = x2d.astype(np.float64).mean(axis=0)
+    var = x2d.astype(np.float64).var(axis=0)
+    inv_std = (1.0 / np.sqrt(var.astype(F32) + F32(1e-5))).astype(F32)
+    xhat = ((x2d - mean.astype(F32)) * inv_std).astype(F32)
+    y = (xhat * gamma + beta).astype(F32)
+    state_mean[:] = momentum * state_mean + (1.0 - momentum) * mean.astype(F32)
+    state_var[:] = momentum * state_var + (1.0 - momentum) * var.astype(F32)
+    return y, (xhat, inv_std, x2d.shape[0])
+
+
+def bn_backward(tape, gamma, gy2d):
+    xhat, inv_std, count = tape
+    dbeta = gy2d.sum(axis=0).astype(F32)
+    dgamma = (gy2d * xhat).sum(axis=0).astype(F32)
+    gx = (gamma * inv_std / F32(count)) * (
+        F32(count) * gy2d - dbeta - xhat * dgamma
+    )
+    return gx.astype(F32), dgamma, dbeta
+
+
+def softmax_ce(logits, labels):
+    mx = logits.max(axis=1, keepdims=True)
+    e = np.exp(logits - mx)
+    p = e / e.sum(axis=1, keepdims=True)
+    n = len(labels)
+    loss = float(np.mean(-np.log(p[np.arange(n), labels] + 1e-30)))
+    d = p.copy()
+    d[np.arange(n), labels] -= 1.0
+    return loss, (d / n).astype(F32)
+
+
+def sgd(p, v, g, lr, momentum, wd):
+    v[:] = momentum * v + g + wd * p
+    p[:] = p - lr * v
+
+
+def batch_indices(seed, it, batch, n):
+    mx = mixed_seed(seed ^ 0x0DA7A5E1)
+    c = np.arange(it * batch, (it + 1) * batch, dtype=np.uint32)
+    return (draw24(mx, c).astype(np.int64) % n).tolist()
+
+
+def train(params, images, labels, hp=HP, cfg: Cfg = FIXTURE_CFG, verbose=True):
+    """SGD over the committed test-set images; mutates `params` in place.
+    Returns the per-step loss list."""
+    conv = InhomoConv(cfg.alpha, 1, 3, cfg)
+    specs = conv_names()
+    vel = {k: np.zeros_like(v) for k, v in params.items() if k.startswith("['params']")}
+    n = len(labels)
+    losses = []
+
+    for it in range(hp["steps"]):
+        idx = batch_indices(hp["seed"], it, hp["batch"], n)
+        xb = images[idx].astype(F32)
+        yb = labels[idx]
+        b = len(idx)
+        step_seed = (hp["seed"] + it) & 0xFFFFFFFF
+        lr = F32(hp["lr"] * 0.5 * (1.0 + np.cos(np.pi * it / hp["steps"])))
+
+        # ---------- forward with tape ----------
+        tapes = []
+
+        def conv_fwd(xin, key, stride, li, cin, cout):
+            wt = params[key].astype(F32)
+            scale = F32(np.max(np.abs(wt))) + F32(1e-8)
+            wn = (wt / scale).astype(F32).reshape(-1, cout)
+            patches, ho, wo = im2col_np(xin, 3, 3, stride)
+            out, ps = mvm_capture(patches, wn, cfg, conv, layer_seed(step_seed, li))
+            tape = dict(
+                key=key, x=xin, patches=patches, ps=ps, wn=wn, scale=scale,
+                stride=stride, cin=cin, cout=cout, ho=ho, wo=wo,
+            )
+            return out.reshape(b, ho, wo, cout), tape
+
+        def bn_fwd(y4d, prefix, cout):
+            gamma = params[f"['params']{prefix}['gamma']"]
+            beta = params[f"['params']{prefix}['beta']"]
+            y2d = y4d.reshape(-1, cout)
+            out, tape = bn_forward_train(
+                y2d, gamma, beta,
+                params[f"['states']{prefix}['mean']"],
+                params[f"['states']{prefix}['var']"],
+            )
+            return out.reshape(y4d.shape), (prefix, tape, cout)
+
+        key, bnp, stride, li, cin, cout = specs[0]
+        h0, t_c1 = conv_fwd(xb, key, stride, li, cin, cout)
+        h, t_b1 = bn_fwd(h0, bnp, cout)
+        c = cout
+        idx_l = 1
+        w1, w2, w3 = ef.widths()
+        for s, _cout_s in enumerate((w1, w2, w3)):
+            for blk in range(ef.SPEC["blocks_per_stage"]):
+                key1, bn1p, stride, li1, cin1, cout1 = specs[idx_l]
+                key2, bn2p, _, li2, _, _ = specs[idx_l + 1]
+                idx_l += 2
+                sc = h[:, ::stride, ::stride, :]
+                if c < cout1:
+                    sc = np.pad(sc, ((0, 0), (0, 0), (0, 0), (0, cout1 - c)))
+                o1, tc1 = conv_fwd(h, key1, stride, li1, cin1, cout1)
+                o1b, tb1 = bn_fwd(o1, bn1p, cout1)
+                o2, tc2 = conv_fwd(o1b, key2, 1, li2, cout1, cout1)
+                o2b, tb2 = bn_fwd(o2, bn2p, cout1)
+                out = (o2b + sc).astype(F32)
+                tapes.append(dict(tc1=tc1, tb1=tb1, tc2=tc2, tb2=tb2,
+                                  in_c=c, stride=stride, cout=cout1))
+                h = out
+                c = cout1
+        hh, ww_ = h.shape[1], h.shape[2]
+        pooled = h.reshape(b, hh * ww_, c).mean(axis=1).astype(F32)
+        fc_w = params["['params']['fc_w']"].astype(F32)
+        fc_b = params["['params']['fc_b']"].astype(F32)
+        logits = (pooled @ fc_w + fc_b).astype(F32)
+        loss, dlogits = softmax_ce(logits, yb)
+        losses.append(loss)
+
+        # ---------- backward ----------
+        d_pooled = (dlogits @ fc_w.T).astype(F32)
+        d_fc_w = (pooled.T @ dlogits).astype(F32)
+        d_fc_b = dlogits.sum(axis=0).astype(F32)
+        gh = np.repeat(d_pooled[:, None, :] / F32(hh * ww_), hh * ww_, axis=1)
+        gh = gh.reshape(b, hh, ww_, c)
+        sgd(params["['params']['fc_w']"], vel["['params']['fc_w']"], d_fc_w,
+            lr, hp["momentum"], hp["weight_decay"])
+        sgd(params["['params']['fc_b']"], vel["['params']['fc_b']"], d_fc_b,
+            lr, hp["momentum"], hp["weight_decay"])
+
+        def conv_bwd(tape, g4d):
+            cout = tape["cout"]
+            g2d = g4d.reshape(-1, cout)
+            spec_str = BODY_SPEC
+            fake_cfg = cfg
+            d_patches, d_wn = backward_mvm(
+                tape["patches"], tape["wn"], fake_cfg, spec_str, tape["ps"], g2d
+            )
+            dx = col2im_np(
+                d_patches, b, tape["x"].shape[1], tape["x"].shape[2],
+                tape["cin"], 3, 3, tape["stride"],
+            )
+            dx = np.where(np.abs(tape["x"]) <= F32(1.0), dx, F32(0.0)).astype(F32)
+            dw = (d_wn / tape["scale"]).astype(F32)
+            return dx, dw.reshape(params[tape["key"]].shape)
+
+        def bn_bwd(tb, g4d):
+            prefix, tape, cout = tb
+            gamma = params[f"['params']{prefix}['gamma']"]
+            gx, dgamma, dbeta = bn_backward(tape, gamma, g4d.reshape(-1, cout))
+            sgd(params[f"['params']{prefix}['gamma']"],
+                vel[f"['params']{prefix}['gamma']"], dgamma,
+                lr, hp["momentum"], hp["weight_decay"])
+            sgd(params[f"['params']{prefix}['beta']"],
+                vel[f"['params']{prefix}['beta']"], dbeta,
+                lr, hp["momentum"], hp["weight_decay"])
+            return gx.reshape(g4d.shape)
+
+        for tb in reversed(tapes):
+            stride, in_c, cout1 = tb["stride"], tb["in_c"], tb["cout"]
+            # shortcut adjoint
+            g_sc = gh[:, :, :, :in_c] if in_c < cout1 else gh
+            hin, win = tb["tc1"]["x"].shape[1], tb["tc1"]["x"].shape[2]
+            g_short = np.zeros((b, hin, win, in_c), F32)
+            g_short[:, ::stride, ::stride, :] = g_sc
+            g_o2 = bn_bwd(tb["tb2"], gh)
+            g_mid, dw2 = conv_bwd(tb["tc2"], g_o2)
+            sgd(params[tb["tc2"]["key"]], vel[tb["tc2"]["key"]], dw2,
+                lr, hp["momentum"], hp["weight_decay"])
+            g_o1 = bn_bwd(tb["tb1"], g_mid)
+            g_in, dw1 = conv_bwd(tb["tc1"], g_o1)
+            sgd(params[tb["tc1"]["key"]], vel[tb["tc1"]["key"]], dw1,
+                lr, hp["momentum"], hp["weight_decay"])
+            gh = (g_in + g_short).astype(F32)
+
+        g_h0 = bn_bwd(t_b1, gh)
+        _, dw0 = conv_bwd(t_c1, g_h0)
+        sgd(params[t_c1["key"]], vel[t_c1["key"]], dw0,
+            lr, hp["momentum"], hp["weight_decay"])
+
+        if verbose and (it % 50 == 0 or it == hp["steps"] - 1):
+            bacc = float(np.mean(np.argmax(logits, axis=1) == yb))
+            print(f"  step {it:4d} lr {float(lr):.4f} loss {loss:.4f} acc {bacc:.2f}",
+                  flush=True)
+    return losses
+
+
+def backward_mvm(patches, wn, cfg, spec_str, ps, g2d):
+    """Digit-STE VJP reusing the golden-generator equations, but fed the
+    *captured* PS of the stochastic forward (same convention as Rust)."""
+    p_n, m = patches.shape
+    n = wn.shape[1]
+    k_n = cfg.n_arrs(m)
+    i_n, j_n = cfg.n_streams, cfg.n_slices
+    d = surrogate_grad(spec_str, 4.0, ps)  # [P,K,N,I,J]
+    xd = signed_digits(quantize_unit(patches, cfg.a_bits), cfg.a_bits, cfg.a_stream_bits)
+    td = signed_digits(quantize_unit(wn, cfg.w_bits), cfg.w_bits, cfg.w_slice_bits)
+    m_pad = k_n * cfg.r_arr
+    xp = np.zeros((p_n, m_pad, i_n), F32)
+    xp[:, :m] = xd
+    tp = np.zeros((m_pad, n, j_n), F32)
+    tp[:m] = td
+    xk = xp.reshape(p_n, k_n, cfg.r_arr, i_n)
+    tk = tp.reshape(k_n, cfg.r_arr, n, j_n)
+    sa = np.asarray([float(1 << (i * cfg.a_stream_bits)) for i in range(i_n)], F32)
+    sw = np.asarray([float(1 << (j * cfg.w_slice_bits)) for j in range(j_n)], F32)
+    lev = float(((1 << cfg.a_bits) - 1) * ((1 << cfg.w_bits) - 1))
+    denom = F32(lev) * F32(k_n) * F32(cfg.r_arr)
+    ca = F32((1 << cfg.a_stream_bits) - 1) / denom
+    cw = F32((1 << cfg.w_slice_bits) - 1) / denom
+    aj = np.einsum("pknij,i,j->pknj", d, sa, sw).astype(F32)
+    wi = np.einsum("pknij,i,j->pkni", d, sa, sw).astype(F32)
+    d_p = ca * np.einsum("pn,pknj,krnj->pkr", g2d, aj, tk).astype(F32)
+    d_p = d_p.reshape(p_n, m_pad)[:, :m]
+    d_w = cw * np.einsum("pn,pkni,pkri->krn", g2d, wi, xk).astype(F32)
+    d_w = d_w.reshape(m_pad, n)[:m]
+    return d_p.astype(F32), d_w.astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+
+def export_trained(params, losses, outdir: pathlib.Path) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    # tensor order = export_fixture order (the loader matches by name)
+    order = [name for name, _ in ef.build_tensors()]
+    entries, blobs, offset = [], [], 0
+    for name in order:
+        arr = np.ascontiguousarray(params[name], dtype=np.float32)
+        entries.append(
+            {"name": name, "shape": list(arr.shape), "offset": offset, "numel": int(arr.size)}
+        )
+        blobs.append(arr.tobytes())
+        offset += int(arr.size)
+    (outdir / "weights.bin").write_bytes(b"".join(blobs))
+
+    images, labels = ef.build_testset()
+    (outdir / "testset.bin").write_bytes(images.tobytes() + labels.tobytes())
+
+    spec = dict(ef.SPEC)
+    spec["name"] = "tiny-inhomo-trained"
+    spec["stox"] = dict(ef.SPEC["stox"])
+    spec["stox"]["mode"] = "inhomo:base=1,extra=3"
+    curve = [float(l) for l in losses[:: max(1, len(losses) // 100)]]
+    manifest = {
+        "spec": spec,
+        "checkpoint_record": {
+            "note": (
+                "PS-quantization-aware trained fixture (train_fixture.py, the "
+                "numpy mirror of rust/src/train; trained on the committed "
+                "8-image testset by design)"
+            ),
+            "seed": HP["seed"],
+            "steps": HP["steps"],
+            "final_loss": float(np.mean(losses[-5:])),
+            "trained_with": BODY_SPEC,
+            "loss_curve": curve,
+        },
+        "layers": ef.conv_layer_shapes(),
+        "models": [],
+        "mvms": [],
+        "weights": {"file": "weights.bin", "tensors": entries, "total_f32": offset},
+        "testset": {
+            "file": "testset.bin",
+            "dataset": "synth",
+            "n": ef.TESTSET_N,
+            "image_shape": [
+                ef.SPEC["image_size"],
+                ef.SPEC["image_size"],
+                ef.SPEC["in_channels"],
+            ],
+        },
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def run(verbose=True):
+    """Train + evaluate + export; returns (params, losses, accuracies)."""
+    params = load_fixture_params()
+    random_params = load_fixture_params()
+    images, labels = ef.build_testset()
+    images = images.astype(F32)
+    losses = train(params, images, labels, verbose=verbose)
+    accs = {}
+    for seed in (0, 7, 777):
+        accs[seed] = (
+            eval_accuracy(random_params, images, labels, seed=seed),
+            eval_accuracy(params, images, labels, seed=seed),
+        )
+    return params, losses, accs
+
+
+def main() -> None:
+    params, losses, accs = run()
+    for seed, (ra, ta) in accs.items():
+        print(f"seed {seed}: random-init {ra:.3f} -> trained {ta:.3f}")
+    margins = logit_margins(params, ef.build_testset()[0].astype(F32),
+                            ef.build_testset()[1], seed=0)
+    print("trained logit margins:", [f"{m:+.3f}" for m in margins])
+    assert all(ta > ra for ra, ta in accs.values()), "trained must beat random-init"
+    export_trained(params, losses, OUT)
+    print(f"wrote trained fixture to {OUT} (loss {losses[0]:.3f} -> {np.mean(losses[-5:]):.3f})")
+
+
+if __name__ == "__main__":
+    main()

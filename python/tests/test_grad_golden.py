@@ -1,0 +1,87 @@
+"""Tests of the gradient-golden generator (`compile/gen_grad_golden.py`).
+
+The golden file is the contract `rust/tests/grad_equiv.rs` pins the Rust
+backward against, so this suite checks (a) the committed bytes match a
+fresh generation, (b) the conventions are self-consistent: the ideal
+case equals the analytic collapsed gradient, the tanh surrogate matches
+finite differences of its transfer curve, and captured PS are exact
+digit-domain values.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import gen_grad_golden as gg
+from compile.gen_sweep_golden import F32
+
+GOLDEN = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "data"
+    / "grad_golden.json"
+)
+
+
+def test_committed_golden_matches_fresh_generation():
+    fresh = json.dumps(gg.build_golden(), sort_keys=True, separators=(",", ":"))
+    assert GOLDEN.exists(), "run python -m compile.gen_grad_golden"
+    assert GOLDEN.read_text() == fresh
+
+
+def test_generation_is_deterministic():
+    a = json.dumps(gg.build_golden(), sort_keys=True)
+    b = json.dumps(gg.build_golden(), sort_keys=True)
+    assert a == b
+
+
+def test_ideal_case_matches_collapsed_analytic_gradient():
+    # for the identity surrogate the digit-STE VJP must equal the exact
+    # gradient of the collapsed linear chain a_q @ w_q / (K·r_arr)
+    cfg = gg.CFG_A
+    b, m, n = 2, 40, 6
+    a, w, g = gg.derive_inputs(55, b * m, m * n, b * n)
+    a, w, g = a.reshape(b, m), w.reshape(m, n), g.reshape(b, n)
+    d_a, d_w = gg.stox_matmul_backward_np(a, w, cfg, "ideal", g)
+    from compile.gen_sweep_golden import quantize_unit
+
+    k_n = cfg.n_arrs(m)
+    lw = (1 << cfg.w_bits) - 1
+    wq = (2.0 * quantize_unit(w, cfg.w_bits).astype(F32) / F32(lw) - F32(1.0)).astype(F32)
+    want_a = (g @ wq.T) / F32(k_n * cfg.r_arr)
+    assert np.abs(d_a - want_a).max() < 1e-6
+    la = (1 << cfg.a_bits) - 1
+    aq = (2.0 * quantize_unit(a, cfg.a_bits).astype(F32) / F32(la) - F32(1.0)).astype(F32)
+    want_w = (aq.T @ g) / F32(k_n * cfg.r_arr)
+    assert np.abs(d_w - want_w).max() < 1e-6
+
+
+@pytest.mark.parametrize("alpha", [1.0, 4.0, 8.0])
+def test_tanh_surrogate_matches_finite_difference(alpha):
+    ps = np.linspace(-0.9, 0.9, 37).astype(F32)
+    d = gg.surrogate_grad(f"stox:alpha={alpha}", alpha, ps)
+    eps = 1e-3
+    fd = (np.tanh(alpha * (ps + eps)) - np.tanh(alpha * (ps - eps))) / (2 * eps)
+    assert np.abs(d - fd).max() < 1e-2 * alpha
+
+
+def test_clip_and_hardtanh_surrogates():
+    ps = np.asarray([-1.5, -1.0, -0.2, 0.0, 0.2, 1.0, 1.5], F32)
+    d = gg.surrogate_grad("quant:bits=4", 4.0, ps)
+    assert d.tolist() == [0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0]
+    d = gg.surrogate_grad("sa", 4.0, ps)
+    # |4·ps| <= 1 only for ps in [-0.25, 0.25]
+    assert d.tolist() == [0.0, 0.0, 4.0, 4.0, 4.0, 0.0, 0.0]
+
+
+def test_captured_ps_are_exact_digit_values():
+    cfg = gg.CFG_B
+    b, m, n = 2, 24, 5
+    a, w = gg.derive_inputs(77, b * m, m * n)[:2]
+    ps, _, _ = gg.capture_ps(a.reshape(b, m), w.reshape(m, n), cfg)
+    # every PS is an integer multiple of 1/r_arr, exactly representable
+    scaled = ps * F32(cfg.r_arr)
+    assert np.array_equal(scaled, np.round(scaled))

@@ -1,0 +1,81 @@
+"""Tests of the numpy mirror trainer + the committed trained fixture
+(`compile/train_fixture.py` → `rust/tests/data/tiny_inhomo_trained`).
+
+One full training run is shared across the suite (module fixture); the
+committed bytes are pinned against it, and the accuracy/margin claims
+the Rust side (`rust/tests/train.rs`) relies on are asserted here with
+headroom for last-ulp cross-language differences.
+"""
+
+import hashlib
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import export_fixture as ef
+from compile import train_fixture as tf
+
+TRAINED = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "data"
+    / "tiny_inhomo_trained"
+)
+
+
+@pytest.fixture(scope="module")
+def trained_run(tmp_path_factory):
+    params, losses, accs = tf.run(verbose=False)
+    out = tmp_path_factory.mktemp("trained_fixture")
+    tf.export_trained(params, losses, out)
+    return params, losses, accs, out
+
+
+def _digest(d: pathlib.Path) -> dict:
+    return {
+        f.name: hashlib.sha256(f.read_bytes()).hexdigest()
+        for f in sorted(d.iterdir())
+    }
+
+
+def test_committed_trained_fixture_matches_fresh_run(trained_run):
+    _, _, _, out = trained_run
+    assert TRAINED.exists(), "run python -m compile.train_fixture"
+    assert _digest(TRAINED) == _digest(out)
+
+
+def test_loss_decreases(trained_run):
+    _, losses, _, _ = trained_run
+    head = float(np.mean(losses[:5]))
+    tail = float(np.mean(losses[-5:]))
+    assert tail < 0.1 * head, f"loss {head} -> {tail}"
+
+
+def test_trained_strictly_beats_random_init(trained_run):
+    _, _, accs, _ = trained_run
+    for seed, (random_acc, trained_acc) in accs.items():
+        assert trained_acc > random_acc, f"seed {seed}: {random_acc} vs {trained_acc}"
+        assert trained_acc == 1.0, f"seed {seed}: trained fixture must memorize"
+
+
+def test_trained_margins_have_ulp_headroom(trained_run):
+    params, _, _, _ = trained_run
+    images, labels = ef.build_testset()
+    margins = tf.logit_margins(params, images.astype(np.float32), labels, seed=0)
+    assert min(margins) > 1.0, margins
+
+
+def test_testset_bytes_match_random_init_fixture():
+    random_ts = TRAINED.parent / "tiny_inhomo" / "testset.bin"
+    assert (TRAINED / "testset.bin").read_bytes() == random_ts.read_bytes()
+
+
+def test_manifest_mode_is_registry_resolved():
+    import json
+
+    manifest = json.loads((TRAINED / "manifest.json").read_text())
+    assert manifest["spec"]["stox"]["mode"] == "inhomo:base=1,extra=3"
+    assert manifest["checkpoint_record"]["trained_with"] == tf.BODY_SPEC
+    assert manifest["weights"]["total_f32"] * 4 == (TRAINED / "weights.bin").stat().st_size

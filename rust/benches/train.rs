@@ -1,0 +1,92 @@
+//! Training-path bench: the cost of PS-quantization-aware training
+//! relative to inference on the same layer stack (the committed
+//! `tiny_inhomo` fixture), plus the capture-hook overhead in isolation.
+//!
+//! Cases (written to `BENCH_train.json` for the CI perf trajectory):
+//!
+//! * `capture/…` — `StoxMvm::run` vs `StoxMvm::run_capture` on a
+//!   mid-size crossbar: the per-slice PS capture rides the forward's
+//!   accumulation pass, so the overhead should be the capture writes
+//!   only (one f32 store per PS element);
+//! * `step/…` — one full `Trainer::step` (stochastic forward with
+//!   capture, digit-STE backward, SGD) vs one `NativeModel::forward` of
+//!   the same batch — the train:infer cost ratio.
+
+use std::path::PathBuf;
+use stox_net::imc::{PsConverterSpec, StoxConfig, StoxMvm};
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::stats::rng::CounterRng;
+use stox_net::train::{TrainConfig, Trainer};
+use stox_net::util::bench::{self, BenchSuite};
+
+fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
+    let rng = CounterRng::new(seed);
+    (0..n).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("train");
+
+    // capture-hook overhead on a ResNet-20 mid-layer shape
+    let (b, m, n) = (8usize, 576usize, 64usize);
+    let a = rand_vec(b * m, 1);
+    let w = rand_vec(m * n, 2);
+    let cfg = StoxConfig::default();
+    let conv = "inhomo:base=1,extra=3"
+        .parse::<PsConverterSpec>()
+        .unwrap()
+        .build(&cfg)
+        .unwrap();
+    let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+    let mut seed = 0u32;
+    println!("== capture-hook overhead (B={b}, M={m}, N={n}, inhomo) ==");
+    let fwd = suite.quick("capture/forward run_sequential", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(mvm.run_sequential(&a, b, conv.as_ref(), seed));
+    });
+    let cap = suite.quick("capture/forward run_capture", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(mvm.run_capture(&a, b, conv.as_ref(), seed));
+    });
+    println!(
+        "-> capture overhead: {:.2}x the plain forward\n",
+        suite.median_ns(cap) / suite.median_ns(fwd)
+    );
+
+    // full step vs inference forward on the committed tiny fixture
+    let fixture =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/tiny_inhomo");
+    if !fixture.join("manifest.json").exists() {
+        println!("(tiny_inhomo fixture missing — skipping trainer-step bench)");
+        suite.write_json().expect("bench artifact written");
+        return;
+    }
+    let manifest = Manifest::load(&fixture).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let test = TestSet::load(&manifest).unwrap();
+    let hp = TrainConfig { steps: 1, batch: 4, log_every: 0, ..TrainConfig::default() };
+    let batch = hp.batch;
+    let mut trainer = Trainer::new(&manifest, &store, manifest.spec.stox_config(), None, hp)
+        .unwrap();
+    let model = NativeModel::load(&manifest, &store).unwrap();
+    let img = test.h * test.w * test.c;
+    let xb = &test.images[..batch * img];
+    let yb = &test.labels[..batch];
+    println!("== trainer step vs inference forward (tiny fixture, batch {batch}) ==");
+    let infer = suite.quick("step/inference forward", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(model.forward(xb, batch, seed));
+    });
+    let mut it = 0usize;
+    let step = suite.quick("step/train step (fwd+bwd+sgd)", || {
+        it += 1;
+        bench::black_box(trainer.step(xb, yb, batch, it, 1e-4).unwrap());
+    });
+    println!(
+        "-> train step costs {:.2}x an inference forward\n",
+        suite.median_ns(step) / suite.median_ns(infer)
+    );
+
+    suite.write_json().expect("bench artifact written");
+}

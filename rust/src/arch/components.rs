@@ -20,6 +20,12 @@ pub enum PsProcessing {
     SenseAmp,
     /// stochastic SOT-MTJ converter per column, `samples` reads/conversion
     StochasticMtj { samples: u32 },
+    /// stochastic SOT-MTJ converter whose *mean* read count is fractional
+    /// (`millisamples` = 1000 × mean reads/conversion) — the exact energy
+    /// accounting of §3.2.3 inhomogeneous sampling, whose per-(stream,
+    /// slice) read counts average to a non-integer.  Energy and pipeline
+    /// beat scale with the exact mean instead of the rounded one.
+    StochasticMtjFrac { millisamples: u32 },
 }
 
 impl PsProcessing {
@@ -29,13 +35,22 @@ impl PsProcessing {
             PsProcessing::AdcSparse { .. } => "Sparse-ADC".into(),
             PsProcessing::SenseAmp => "1b-SA".into(),
             PsProcessing::StochasticMtj { samples } => format!("MTJ×{samples}"),
+            PsProcessing::StochasticMtjFrac { millisamples } => {
+                format!("MTJ×{}", *millisamples as f64 / 1000.0)
+            }
         }
     }
 
-    /// Temporal samples consumed per PS conversion (1 except multi-sample MTJ).
+    /// Temporal samples consumed per PS conversion (1 except multi-sample
+    /// MTJ; the fractional variant reports its mean rounded half-up —
+    /// whole conversions are counted even when the energy charge is
+    /// fractional).
     pub fn samples(&self) -> u32 {
         match self {
             PsProcessing::StochasticMtj { samples } => *samples,
+            PsProcessing::StochasticMtjFrac { millisamples } => {
+                ((millisamples + 500) / 1000).max(1)
+            }
             _ => 1,
         }
     }
@@ -119,6 +134,9 @@ impl ComponentCosts {
             PsProcessing::StochasticMtj { samples } => {
                 self.mtj_energy_pj * samples as f64
             }
+            PsProcessing::StochasticMtjFrac { millisamples } => {
+                self.mtj_energy_pj * (millisamples as f64 / 1000.0)
+            }
         }
     }
 
@@ -132,7 +150,9 @@ impl ComponentCosts {
                 self.adc_sparse_area_um2 / share as f64
             }
             PsProcessing::SenseAmp => self.sa_area_um2,
-            PsProcessing::StochasticMtj { .. } => self.mtj_area_um2,
+            PsProcessing::StochasticMtj { .. } | PsProcessing::StochasticMtjFrac { .. } => {
+                self.mtj_area_um2
+            }
         }
     }
 
@@ -149,6 +169,9 @@ impl ComponentCosts {
             PsProcessing::SenseAmp => self.sa_latency_ns,
             PsProcessing::StochasticMtj { samples } => {
                 self.mtj_latency_ns * samples as f64
+            }
+            PsProcessing::StochasticMtjFrac { millisamples } => {
+                self.mtj_latency_ns * (millisamples as f64 / 1000.0)
             }
         }
     }
@@ -210,5 +233,31 @@ mod tests {
         let e1 = c.ps_energy_pj(PsProcessing::StochasticMtj { samples: 1 });
         let e8 = c.ps_energy_pj(PsProcessing::StochasticMtj { samples: 8 });
         assert!((e8 / e1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_samples_are_exact() {
+        let c = ComponentCosts::default();
+        let frac = PsProcessing::StochasticMtjFrac { millisamples: 2500 };
+        let e1 = c.ps_energy_pj(PsProcessing::StochasticMtj { samples: 1 });
+        assert!((c.ps_energy_pj(frac) / e1 - 2.5).abs() < 1e-9);
+        // integral millisamples reduce to the whole-sample charge exactly
+        assert_eq!(
+            c.ps_energy_pj(PsProcessing::StochasticMtjFrac { millisamples: 3000 }),
+            c.ps_energy_pj(PsProcessing::StochasticMtj { samples: 3 })
+        );
+        assert_eq!(
+            c.ps_stage_ns(frac, 128),
+            c.ps_stage_ns(PsProcessing::StochasticMtj { samples: 1 }, 128) * 2.5
+        );
+        assert_eq!(
+            c.ps_area_per_column_um2(frac),
+            c.ps_area_per_column_um2(PsProcessing::StochasticMtj { samples: 1 })
+        );
+        // whole-conversion count rounds half up; label shows the mean
+        assert_eq!(frac.samples(), 3);
+        assert_eq!(PsProcessing::StochasticMtjFrac { millisamples: 2499 }.samples(), 2);
+        assert_eq!(PsProcessing::StochasticMtjFrac { millisamples: 400 }.samples(), 1);
+        assert_eq!(frac.label(), "MTJ×2.5");
     }
 }

@@ -421,6 +421,62 @@ mod tests {
         assert!(sparse.energy_pj < fp.energy_pj, "sparse ADC under FP ADC");
     }
 
+    /// The fractional-samples upgrade (carried since PR 1) changes the
+    /// sweep's EDP column only for `inhomo:*` specs: every other builtin
+    /// keeps its whole-sample cost key bit-for-bit, while inhomo charges
+    /// its exact 2.5-sample mean instead of the mean-rounded 3.
+    #[test]
+    fn fractional_samples_change_only_inhomo_edp() {
+        let cfg = StoxConfig::default();
+        let layers = zoo::resnet20_cifar();
+        for s in [
+            "ideal",
+            "quant:bits=8",
+            "sparse:bits=4",
+            "sa",
+            "expected:alpha=4",
+            "stox:alpha=4,samples=1",
+            "stox:alpha=4,samples=4",
+        ] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let key = spec.build(&cfg).unwrap().cost_key();
+            assert!(
+                !matches!(key, PsProcessing::StochasticMtjFrac { .. }),
+                "{s}: non-inhomo cost keys must be unchanged"
+            );
+        }
+        let spec: PsConverterSpec = "inhomo:alpha=4,base=1,extra=3".parse().unwrap();
+        assert_eq!(
+            spec.build(&cfg).unwrap().cost_key(),
+            PsProcessing::StochasticMtjFrac { millisamples: 2500 },
+            "4w4a4bs inhomo mean is exactly 2.5 reads"
+        );
+        let exact = evaluate_design(
+            &costs(),
+            &DesignConfig::from_specs(cfg, &spec, &spec).unwrap(),
+            &layers,
+        );
+        // the legacy mean-rounded design point (what cost_key charged
+        // before the fractional variant)
+        let mut legacy = DesignConfig::from_specs(cfg, &spec, &spec).unwrap();
+        legacy.ps = PsProcessing::StochasticMtj { samples: 3 };
+        legacy.first_layer_ps = PsProcessing::StochasticMtj { samples: 3 };
+        let rounded = evaluate_design(&costs(), &legacy, &layers);
+        assert!(
+            exact.edp_pj_ns < rounded.edp_pj_ns,
+            "exact 2.5-sample EDP {} must drop below the rounded 3-sample {}",
+            exact.edp_pj_ns,
+            rounded.edp_pj_ns
+        );
+        // and stays strictly between the 2- and 3-sample whole charges
+        legacy.ps = PsProcessing::StochasticMtj { samples: 2 };
+        legacy.first_layer_ps = PsProcessing::StochasticMtj { samples: 2 };
+        let two = evaluate_design(&costs(), &legacy, &layers);
+        assert!(two.energy_pj < exact.energy_pj && exact.energy_pj < rounded.energy_pj);
+        // conversions still count whole reads (mean rounds half-up to 3)
+        assert_eq!(exact.conversions, rounded.conversions);
+    }
+
     #[test]
     fn inhomogeneous_spec_costs_between_base_and_max_sampling() {
         // 4w4a1bs → a 4×4 (stream × slice) grid, base 1 .. 1+3 samples

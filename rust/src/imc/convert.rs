@@ -113,6 +113,30 @@ pub trait PsConvert: Send + Sync {
         1
     }
 
+    /// Training-side surrogate of this converter's transfer curve (§3.3):
+    /// the `train/` subsystem backpropagates through this instead of the
+    /// stochastic reads.  The default is the paper's Eq. 1 tanh surrogate
+    /// at [`DEFAULT_ALPHA`], so every converter — including registry
+    /// extensions that never override it — is trainable out of the box;
+    /// the built-ins override it with their exact curve (identity for the
+    /// ideal ADC, clip-STE for the quantizing ADCs, hardtanh for 1b-SA,
+    /// `tanh(α·ps)` with the converter's own α for the MTJ family).
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::Tanh { alpha: DEFAULT_ALPHA }
+    }
+
+    /// Backward hook: writes `d converted / d ps` of the surrogate for one
+    /// PS column slice at significance coordinates `(stream, w_slice)` —
+    /// the same coordinates the forward's [`PsConvert::convert_slice_at`]
+    /// receives, so converters whose backward varies per (stream, slice)
+    /// group (e.g. a future schedule-aware inhomogeneous surrogate) can
+    /// key off them.  The default ignores the coordinates and applies
+    /// [`PsConvert::surrogate`] elementwise.
+    fn grad_slice_at(&self, stream: usize, w_slice: usize, ps: &[f32], out: &mut [f32]) {
+        let _ = (stream, w_slice);
+        self.surrogate().grad_slice(ps, out);
+    }
+
     /// Which Table-2 component row this converter charges — the hook the
     /// `arch/energy.rs` rollup (and the tile scheduler behind serving
     /// metrics) uses to keep energy accounting in lockstep with the
@@ -121,6 +145,91 @@ pub trait PsConvert: Send + Sync {
 
     /// Human-readable label for reports and benches.
     fn label(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// Training-side surrogate (§3.3 backward)
+// ---------------------------------------------------------------------
+
+/// The backward abstraction of a PS converter (§3.3): training
+/// backpropagates through the converter's *expected* (infinite-sample)
+/// transfer curve, not through individual stochastic reads.  Each variant
+/// pairs the surrogate value function with its derivative; the derivative
+/// is what [`PsConvert::grad_slice_at`] hands to the `train/` tape.
+///
+/// Conventions (mirrored exactly by `python/compile/gen_grad_golden.py`):
+///
+/// * `Identity` — ideal full-precision readout, `d out/d ps = 1`;
+/// * `ClipSte` — STE of a clamping quantizer (quant/sparse ADC):
+///   derivative 1 inside `[-1, 1]` (inclusive), 0 outside;
+/// * `HardTanh` — the 1b-SA sign readout trains as `clip(α·ps, -1, 1)`
+///   (Eq. 5's hardtanh STE): derivative `α` while `|α·ps| ≤ 1`, else 0;
+/// * `Tanh` — the stochastic/expected/inhomogeneous MTJ family's Eq. 1
+///   surrogate `tanh(α·ps)`: derivative `α·(1 − tanh²(α·ps))`, the
+///   paper's saturation clamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PsSurrogate {
+    /// Full-precision readout: the identity.
+    Identity,
+    /// Straight-through clamping quantizer (N-bit ADCs).
+    ClipSte,
+    /// Hardtanh STE of the deterministic sign readout.
+    HardTanh {
+        /// Eq. 1 tanh slope (the linear-region gain).
+        alpha: f32,
+    },
+    /// Eq. 1 tanh surrogate of the MTJ family.
+    Tanh {
+        /// Eq. 1 tanh slope.
+        alpha: f32,
+    },
+}
+
+impl PsSurrogate {
+    /// Surrogate transfer value at normalized PS `ps` (the deterministic
+    /// curve the finite-difference proptests differentiate).
+    #[inline]
+    pub fn value(&self, ps: f32) -> f32 {
+        match *self {
+            PsSurrogate::Identity => ps,
+            PsSurrogate::ClipSte => ps.clamp(-1.0, 1.0),
+            PsSurrogate::HardTanh { alpha } => (alpha * ps).clamp(-1.0, 1.0),
+            PsSurrogate::Tanh { alpha } => (alpha * ps).tanh(),
+        }
+    }
+
+    /// Surrogate derivative `d value / d ps` at `ps`.
+    #[inline]
+    pub fn grad(&self, ps: f32) -> f32 {
+        match *self {
+            PsSurrogate::Identity => 1.0,
+            PsSurrogate::ClipSte => {
+                if ps.abs() <= 1.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            PsSurrogate::HardTanh { alpha } => {
+                if (alpha * ps).abs() <= 1.0 {
+                    alpha
+                } else {
+                    0.0
+                }
+            }
+            PsSurrogate::Tanh { alpha } => {
+                let t = (alpha * ps).tanh();
+                alpha * (1.0 - t * t)
+            }
+        }
+    }
+
+    /// Vectorized [`PsSurrogate::grad`] over one PS column slice.
+    pub fn grad_slice(&self, ps: &[f32], out: &mut [f32]) {
+        for (o, &p) in out.iter_mut().zip(ps) {
+            *o = self.grad(p);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -313,6 +422,10 @@ impl PsConvert for IdealAdcConv {
         out.copy_from_slice(ps);
     }
 
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::Identity
+    }
+
     fn cost_key(&self) -> PsProcessing {
         PsProcessing::AdcFullPrecision { share: 16 }
     }
@@ -342,6 +455,10 @@ impl PsConvert for QuantAdcConv {
         for (o, &p) in out.iter_mut().zip(ps) {
             *o = quant_midtread(p, levels);
         }
+    }
+
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::ClipSte
     }
 
     fn cost_key(&self) -> PsProcessing {
@@ -386,6 +503,10 @@ impl PsConvert for SparseAdcConv {
         }
     }
 
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::ClipSte
+    }
+
     fn cost_key(&self) -> PsProcessing {
         PsProcessing::AdcSparse { share: 16 }
     }
@@ -411,6 +532,13 @@ impl PsConvert for SenseAmpConv {
         for (o, &p) in out.iter_mut().zip(ps) {
             *o = if p >= 0.0 { 1.0 } else { -1.0 };
         }
+    }
+
+    /// 1b-SA trains as `clip(α·ps)` (the hardtanh STE of `sign`); the
+    /// unit struct carries no α, so the paper's fitted [`DEFAULT_ALPHA`]
+    /// supplies the linear-region gain.
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::HardTanh { alpha: DEFAULT_ALPHA }
     }
 
     fn cost_key(&self) -> PsProcessing {
@@ -464,6 +592,10 @@ impl PsConvert for ExpectedMtjConv {
                 cache.memo_at(pi, || (self.alpha * (pi as f32 * ps_scale)).tanh().to_bits());
             *o = f32::from_bits(bits);
         }
+    }
+
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::Tanh { alpha: self.alpha }
     }
 
     fn cost_key(&self) -> PsProcessing {
@@ -541,6 +673,12 @@ impl PsConvert for StochasticMtjConv {
 
     fn samples(&self) -> u32 {
         self.n_samples
+    }
+
+    /// Sampling averages out in expectation: the backward is the Eq. 1
+    /// tanh surrogate regardless of the read count (§3.3).
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::Tanh { alpha: self.alpha }
     }
 
     fn cost_key(&self) -> PsProcessing {
@@ -690,10 +828,21 @@ impl PsConvert for InhomogeneousMtjConv {
         );
     }
 
+    /// Every (stream, slice) group's expected output is the same
+    /// normalized `tanh(α·ps)` mean — the schedule changes variance, not
+    /// expectation — so one tanh surrogate serves the whole grid; the
+    /// per-slice schedule still reaches the backward through the
+    /// `(stream, w_slice)` coordinates of [`PsConvert::grad_slice_at`].
+    fn surrogate(&self) -> PsSurrogate {
+        PsSurrogate::Tanh { alpha: self.alpha }
+    }
+
+    /// Exact fractional energy accounting: the per-(stream, slice) read
+    /// counts average to `mean_samples()`, charged as millisamples so
+    /// inhomogeneous energy is exact instead of mean-rounded.
     fn cost_key(&self) -> PsProcessing {
-        PsProcessing::StochasticMtj {
-            samples: (self.mean_samples().round() as u32).max(1),
-        }
+        let ms = (self.mean_samples() * 1000.0).round() as u32;
+        PsProcessing::StochasticMtjFrac { millisamples: ms.max(1) }
     }
 
     fn label(&self) -> String {
@@ -1251,9 +1400,81 @@ mod tests {
             StochasticMtjConv { alpha: 4.0, n_samples: 5 }.cost_key(),
             PsProcessing::StochasticMtj { samples: 5 }
         );
-        match InhomogeneousMtjConv::new(4.0, 1, 3, &cfg).cost_key() {
-            PsProcessing::StochasticMtj { samples } => assert!((1..=4).contains(&samples)),
-            other => panic!("inhomo cost key {other:?}"),
+        // inhomo charges its exact fractional mean: I=4 streams, J=1
+        // slice, reads 1,2,3,4 -> mean 2.5 -> 2500 millisamples
+        assert_eq!(
+            InhomogeneousMtjConv::new(4.0, 1, 3, &cfg).cost_key(),
+            PsProcessing::StochasticMtjFrac { millisamples: 2500 }
+        );
+    }
+
+    #[test]
+    fn surrogates_match_transfer_curves() {
+        // derivative conventions of §3.3 (mirrored by gen_grad_golden.py)
+        assert_eq!(IdealAdcConv.surrogate(), PsSurrogate::Identity);
+        assert_eq!(QuantAdcConv { bits: 6 }.surrogate(), PsSurrogate::ClipSte);
+        assert_eq!(SparseAdcConv { bits: 4 }.surrogate(), PsSurrogate::ClipSte);
+        assert_eq!(
+            SenseAmpConv.surrogate(),
+            PsSurrogate::HardTanh { alpha: DEFAULT_ALPHA }
+        );
+        assert_eq!(
+            ExpectedMtjConv { alpha: 3.0 }.surrogate(),
+            PsSurrogate::Tanh { alpha: 3.0 }
+        );
+        assert_eq!(
+            StochasticMtjConv { alpha: 2.0, n_samples: 5 }.surrogate(),
+            PsSurrogate::Tanh { alpha: 2.0 }
+        );
+        assert_eq!(
+            InhomogeneousMtjConv::new(2.5, 1, 3, &cfg()).surrogate(),
+            PsSurrogate::Tanh { alpha: 2.5 }
+        );
+        // grad values at a few probe points
+        let s = PsSurrogate::Tanh { alpha: 4.0 };
+        let t = (4.0f32 * 0.1).tanh();
+        assert_eq!(s.grad(0.1), 4.0 * (1.0 - t * t));
+        assert_eq!(PsSurrogate::Identity.grad(7.0), 1.0);
+        assert_eq!(PsSurrogate::ClipSte.grad(0.9), 1.0);
+        assert_eq!(PsSurrogate::ClipSte.grad(1.1), 0.0);
+        let h = PsSurrogate::HardTanh { alpha: 4.0 };
+        assert_eq!(h.grad(0.2), 4.0);
+        assert_eq!(h.grad(0.3), 0.0); // |4*0.3| > 1
+    }
+
+    #[test]
+    fn grad_slice_default_applies_surrogate_elementwise() {
+        let c = StochasticMtjConv { alpha: 4.0, n_samples: 3 };
+        let ps = [0.0f32, 0.2, -0.6, 1.0];
+        let mut out = [0.0f32; 4];
+        c.grad_slice_at(1, 0, &ps, &mut out);
+        for (o, &p) in out.iter().zip(&ps) {
+            assert_eq!(*o, c.surrogate().grad(p));
         }
+        // unknown/custom converters fall back to the default tanh
+        struct Frob;
+        impl PsConvert for Frob {
+            fn convert_slice(
+                &self,
+                ps: &[f32],
+                out: &mut [f32],
+                _cb: u32,
+                _cs: u32,
+                _rng: &CounterRng,
+            ) {
+                out.copy_from_slice(ps);
+            }
+            fn cost_key(&self) -> PsProcessing {
+                PsProcessing::SenseAmp
+            }
+            fn label(&self) -> String {
+                "frob".into()
+            }
+        }
+        assert_eq!(
+            Frob.surrogate(),
+            PsSurrogate::Tanh { alpha: DEFAULT_ALPHA },
+            "default surrogate keeps registry extensions trainable"
+        );
     }
 }

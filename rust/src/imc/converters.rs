@@ -20,7 +20,8 @@
 //!   (training-time surrogate; also the variance-free reference).
 
 use super::convert::{
-    ExpectedMtjConv, IdealAdcConv, PsConvert, QuantAdcConv, SenseAmpConv, StochasticMtjConv,
+    ExpectedMtjConv, IdealAdcConv, PsConvert, PsSurrogate, QuantAdcConv, SenseAmpConv,
+    StochasticMtjConv,
 };
 use crate::arch::components::PsProcessing;
 use crate::stats::rng::CounterRng;
@@ -143,6 +144,18 @@ impl PsConvert for PsConverter {
 
     fn samples(&self) -> u32 {
         PsConverter::samples(self)
+    }
+
+    fn surrogate(&self) -> PsSurrogate {
+        match *self {
+            PsConverter::IdealAdc => IdealAdcConv.surrogate(),
+            PsConverter::QuantAdc { bits } => QuantAdcConv { bits }.surrogate(),
+            PsConverter::SenseAmp => SenseAmpConv.surrogate(),
+            PsConverter::ExpectedMtj { alpha } => ExpectedMtjConv { alpha }.surrogate(),
+            PsConverter::StochasticMtj { alpha, n_samples } => {
+                StochasticMtjConv { alpha, n_samples }.surrogate()
+            }
+        }
     }
 
     fn cost_key(&self) -> PsProcessing {

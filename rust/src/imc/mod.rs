@@ -35,8 +35,8 @@ pub mod quant;
 
 pub use convert::{
     default_registry, ConverterRegistry, ExpectedMtjConv, IdealAdcConv, InhomogeneousMtjConv,
-    PsConvert, PsConverterSpec, PsIntCache, QuantAdcConv, SenseAmpConv, SparseAdcConv,
-    StochasticMtjConv,
+    PsConvert, PsConverterSpec, PsIntCache, PsSurrogate, QuantAdcConv, SenseAmpConv,
+    SparseAdcConv, StochasticMtjConv,
 };
 pub use converters::PsConverter;
 pub use mvm::{

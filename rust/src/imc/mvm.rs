@@ -241,12 +241,18 @@ impl StoxMvm {
         seed: u32,
     ) -> Vec<f32> {
         match &self.planes {
-            WeightPlanes::I8(planes) => self.run_range_int(planes, a, b0, b1, conv, seed),
+            WeightPlanes::I8(planes) => {
+                self.run_range_int(planes, a, b0, b1, conv, seed, None)
+            }
             WeightPlanes::F32(planes) => self.run_range_ref(planes, a, b0, b1, conv, seed),
         }
     }
 
-    /// Integer digit-plane kernel over batch rows [b0, b1).
+    /// Integer digit-plane kernel over batch rows [b0, b1).  `capture`,
+    /// when present, must hold `batch · K · I · J · N` f32 and receives
+    /// every normalized per-slice PS in the canonical `[b][k][i][j][col]`
+    /// layout of [`StoxMvm::collect_ps`] — same pass, same bits.
+    #[allow(clippy::too_many_arguments)]
     fn run_range_int<C: PsConvert + ?Sized>(
         &self,
         planes: &[i8],
@@ -255,6 +261,7 @@ impl StoxMvm {
         b1: usize,
         conv: &C,
         seed: u32,
+        mut capture: Option<&mut [f32]>,
     ) -> Vec<f32> {
         let batch = b1 - b0;
         debug_assert!(a.len() >= b1 * self.m);
@@ -266,6 +273,7 @@ impl StoxMvm {
         let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
         let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
         let norm = self.out_norm(conv.samples());
+        let group = cfg.n_streams() * cfg.n_slices() * self.n;
 
         let mut out = vec![0.0f32; batch * self.n];
         let mut scratch = IntScratch::new(self);
@@ -274,7 +282,13 @@ impl StoxMvm {
                 let row0 = k * cfg.r_arr;
                 let rows = (self.m - row0).min(cfg.r_arr);
                 self.decompose_stripe(a, b, row0, rows, &mut scratch);
-                self.run_stripe_int(planes, rows, b, k, conv, &rng, &sa, &sw, norm, &mut scratch);
+                let cap = capture.as_deref_mut().map(|buf| {
+                    let g0 = ((b - b0) * self.n_arrs + k) * group;
+                    &mut buf[g0..g0 + group]
+                });
+                self.run_stripe_int(
+                    planes, rows, b, k, conv, &rng, &sa, &sw, norm, &mut scratch, cap,
+                );
                 let orow = &mut out[(b - b0) * self.n..(b - b0 + 1) * self.n];
                 // fold the (j, i) terms in exactly the sequential order
                 for terms in scratch.contrib.chunks_exact(self.n) {
@@ -327,7 +341,9 @@ impl StoxMvm {
                 let row0 = k * cfg.r_arr;
                 let rows = (self.m - row0).min(cfg.r_arr);
                 self.decompose_stripe(a, b, row0, rows, scratch);
-                self.run_stripe_int(planes, rows, b, k, conv, &rng, &sa, &sw, norm, scratch);
+                self.run_stripe_int(
+                    planes, rows, b, k, conv, &rng, &sa, &sw, norm, scratch, None,
+                );
                 scratch.contrib.clone()
             },
         );
@@ -376,6 +392,10 @@ impl StoxMvm {
     /// stream i) accumulate the column slice in i32, convert it through
     /// the integer entry point, and write the scaled terms into
     /// `scratch.contrib` ([j][i][c] — the sequential fold order).
+    /// `ps_out`, when present, receives this group's normalized PS at
+    /// offset `(i·J + j)·n` — the `[i][j][col]` block of the canonical
+    /// `collect_ps` capture layout, bit-identical to the probe
+    /// (`ps_int·inv_r`, the integer kernel's exactness contract).
     #[allow(clippy::too_many_arguments)]
     fn run_stripe_int<C: PsConvert + ?Sized>(
         &self,
@@ -389,6 +409,7 @@ impl StoxMvm {
         sw: &[f32],
         norm: f32,
         scratch: &mut IntScratch,
+        mut ps_out: Option<&mut [f32]>,
     ) {
         let cfg = &self.cfg;
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
@@ -399,6 +420,12 @@ impl StoxMvm {
             let w_pl = &planes[self.plane_range(k, j)];
             for i in 0..i_n {
                 accumulate_int(w_pl, xd, rows, i_n, i, n, ps_int);
+                if let Some(cap) = ps_out.as_deref_mut() {
+                    let dst = &mut cap[(i * j_n + j) * n..(i * j_n + j + 1) * n];
+                    for (d, &p) in dst.iter_mut().zip(ps_int.iter()) {
+                        *d = p as f32 * inv_r;
+                    }
+                }
                 // canonical counter layout shared with python (frozen
                 // contract): base(c) = (((b·K + k)·N + c)·I + i)·J + j, so
                 // the whole column slice is (base(0), stride I·J) —
@@ -416,6 +443,49 @@ impl StoxMvm {
                 }
             }
         }
+    }
+
+    /// Sequential forward **plus per-slice PS capture** — the training
+    /// tape's hook (`train/`): returns the converted outputs of
+    /// [`StoxMvm::run_sequential`] bit-for-bit, together with every
+    /// normalized array-level partial sum in the canonical
+    /// `[b][k][i][j][col]` order of [`StoxMvm::collect_ps`].  The §3.3
+    /// surrogate backward is evaluated at exactly these PS values, so the
+    /// capture shares the forward's single accumulation pass on the
+    /// integer kernel (reference-layout crossbars fall back to a second
+    /// probe pass with identical bits).
+    pub fn run_capture<C: PsConvert + ?Sized>(
+        &self,
+        a: &[f32],
+        batch: usize,
+        conv: &C,
+        seed: u32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        match &self.planes {
+            WeightPlanes::I8(planes) => self.run_capture_int(planes, a, batch, conv, seed),
+            WeightPlanes::F32(_) => (
+                self.run_sequential(a, batch, conv, seed),
+                self.collect_ps(a, batch),
+            ),
+        }
+    }
+
+    /// Integer-kernel body of [`StoxMvm::run_capture`]: exactly
+    /// [`StoxMvm::run_range`]'s sequential driver with the capture buffer
+    /// threaded through — one code path, so the bit-identity contract
+    /// cannot drift.
+    fn run_capture_int<C: PsConvert + ?Sized>(
+        &self,
+        planes: &[i8],
+        a: &[f32],
+        batch: usize,
+        conv: &C,
+        seed: u32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let group = self.cfg.n_streams() * self.cfg.n_slices() * self.n;
+        let mut ps_all = vec![0.0f32; batch * self.n_arrs * group];
+        let out = self.run_range_int(planes, a, 0, batch, conv, seed, Some(&mut ps_all));
+        (out, ps_all)
     }
 
     /// Retained f32 reference kernel over batch rows [b0, b1) — the
@@ -858,7 +928,9 @@ impl StoxMvm {
                 let row0 = k * cfg.r_arr;
                 let rows = (self.m - row0).min(cfg.r_arr);
                 acts.gather_stripe(kw, stride, pad, bi, oy, ox, row0, rows, &mut scratch.xd);
-                self.run_stripe_int(planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch);
+                self.run_stripe_int(
+                    planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch, None,
+                );
                 let orow = &mut out[(p - p0) * self.n..(p - p0 + 1) * self.n];
                 for terms in scratch.contrib.chunks_exact(self.n) {
                     for (o, &v) in orow.iter_mut().zip(terms) {
@@ -1198,6 +1270,41 @@ mod tests {
                     let par = mvm.run_ksplit(&a, batch, &conv, 9, threads);
                     assert_eq!(par, seq, "{conv:?} batch {batch} threads {threads}");
                 }
+            }
+        }
+    }
+
+    /// The training capture hook is the sequential forward plus the
+    /// Fig. 4 probe, bit for bit — for the integer kernel, the reference
+    /// fallback, and significance-aware converters.
+    #[test]
+    fn run_capture_matches_forward_and_probe() {
+        use super::super::convert::{InhomogeneousMtjConv, PsConverterSpec};
+        let (b, m, n) = (2usize, 150usize, 7usize);
+        let a = rand_vec(b * m, 31);
+        let w = rand_vec(m * n, 32);
+        let cfg = StoxConfig { r_arr: 64, w_slice_bits: 2, ..Default::default() };
+        let inhomo = InhomogeneousMtjConv::new(4.0, 1, 3, &cfg);
+        let stox: PsConverterSpec = "stox:alpha=4,samples=2".parse().unwrap();
+        let stox = stox.build(&cfg).unwrap();
+        for (label, mvm) in [
+            ("integer", StoxMvm::program(&w, m, n, cfg).unwrap()),
+            ("reference", StoxMvm::program_reference(&w, m, n, cfg).unwrap()),
+        ] {
+            for (cname, conv) in
+                [("stox", stox.as_ref()), ("inhomo", &inhomo as &dyn PsConvert)]
+            {
+                let (out, ps) = mvm.run_capture(&a, b, conv, 13);
+                assert_eq!(
+                    out,
+                    mvm.run_sequential(&a, b, conv, 13),
+                    "{label}/{cname}: forward must be unchanged"
+                );
+                assert_eq!(
+                    ps,
+                    mvm.collect_ps(&a, b),
+                    "{label}/{cname}: capture must equal the probe"
+                );
             }
         }
     }

@@ -23,6 +23,11 @@
 //! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` produced by the
 //!   python AOT path and executes them on the request path.
 //! * [`stats`] — RNG, histograms, percentile sketches, Monte-Carlo driver.
+//! * [`train`] — PS-quantization-aware training (§3.3): reverse-mode
+//!   backprop over the stochastic digit-plane forward (STE quantizers,
+//!   per-slice PS capture, the converters' tanh surrogates), SGD with
+//!   momentum, and checkpoint export that round-trips through the
+//!   manifest + `ConverterRegistry` path.
 
 pub mod arch;
 pub mod coordinator;
@@ -31,6 +36,7 @@ pub mod imc;
 pub mod model;
 pub mod runtime;
 pub mod stats;
+pub mod train;
 pub mod util;
 
 /// Crate-wide result type.

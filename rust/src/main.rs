@@ -14,6 +14,10 @@
 //! * `fig9a`/`fig9b` — hardware-efficiency rollups;
 //! * `accuracy`    — native crossbar-model accuracy on the test set
 //!                   (`--converter` runs any registered PS-converter spec);
+//! * `train`       — PS-quantization-aware training (§3.3): hardware-exact
+//!                   stochastic forward, tanh-surrogate backward, SGD;
+//!                   exports a manifest-format checkpoint that reloads
+//!                   through the registry with no converter override;
 //! * `sweep`       — registry-driven accuracy × energy Pareto sweep: every
 //!                   registered converter spec (plus MTJ sample-length and
 //!                   ADC bit-width grids) evaluated for task accuracy and
@@ -56,6 +60,14 @@ commands:
   fig9a
   fig9b
   accuracy     [--images N] [--batch B] [--converter SPEC]
+  train        [--out DIR] [--steps N] [--batch B] [--lr L] [--momentum M]
+               [--weight-decay W] [--seed S] [--const-lr] [--log-every N]
+               [--precision TAG] [--converter SPEC]
+               (PS-quantization-aware training over the artifacts'
+                testset.bin: exact stochastic forward, Eq. 5 surrogate
+                backward; bit-reproducible per --seed; exports DIR as a
+                manifest-format checkpoint whose mode is the trained
+                converter spec, reloadable with no --converter override)
   sweep        [--images N] [--seed S] [--samples GRID] [--bits GRID]
                [--precision TAGS] [--specs A;B;..]
                [--workload resnet20|resnet18|resnet50]
@@ -113,6 +125,7 @@ fn main() -> anyhow::Result<()> {
             args.usize("batch", 8),
             args.get("converter").map(|s| s.to_string()),
         ),
+        Some("train") => train_cmd(&artifacts, &args),
         Some("sweep") => sweep(&artifacts, &args),
         Some("converters") => converters(),
         Some("tables") => tables(&PathBuf::from(
@@ -469,6 +482,76 @@ fn accuracy(
     {
         println!("python-side checkpoint accuracy (manifest): {:.2}%", 100.0 * pyacc);
     }
+    Ok(())
+}
+
+/// PS-quantization-aware training (§3.3) over the artifacts' committed
+/// test-set file: hardware-exact stochastic forward with per-slice PS
+/// capture, tanh-surrogate backward, SGD with momentum under
+/// deterministic seeded batch sampling.  Exports a manifest-format
+/// checkpoint whose `mode` is the trained converter spec, then reloads
+/// it through `NativeModel::load_with_config` (registry path, no
+/// override) and reports its accuracy — the round-trip the CI
+/// `train-smoke` job asserts.
+fn train_cmd(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    use stox_net::train::{export_checkpoint, TrainConfig, Trainer};
+
+    let manifest = Manifest::load(artifacts)?;
+    let store = WeightStore::load(&manifest)?;
+    let test = TestSet::load(&manifest)?;
+    let cfg = match args.get("precision") {
+        Some(tag) => manifest.spec.precision_config(tag)?,
+        None => manifest.spec.stox_config(),
+    };
+    let conv_override = match args.get("converter") {
+        Some(s) => Some(PsConverterSpec::from_mode(s, cfg.alpha, cfg.n_samples)?),
+        None => None,
+    };
+    let hp = TrainConfig {
+        steps: args.usize("steps", 100),
+        batch: args.usize("batch", 4),
+        lr: args.f32("lr", 0.05),
+        momentum: args.f32("momentum", 0.9),
+        weight_decay: args.f32("weight-decay", 5e-4),
+        seed: args.u32("seed", 0),
+        cosine_lr: !args.flag("const-lr"),
+        log_every: args.usize("log-every", 10),
+    };
+    let mut trainer = Trainer::new(&manifest, &store, cfg, conv_override.as_ref(), hp)?;
+    println!(
+        "training {} ({} steps, batch {}, lr {}, seed {}) with body converter '{}'",
+        manifest.spec.name,
+        trainer.hp.steps,
+        trainer.hp.batch,
+        trainer.hp.lr,
+        trainer.hp.seed,
+        trainer.body_mode(),
+    );
+    let t0 = std::time::Instant::now();
+    let record = trainer.train(&test.images, &test.labels, test.n)?;
+    println!(
+        "trained {} steps in {:.1}s: loss {:.4} -> {:.4}",
+        record.steps,
+        t0.elapsed().as_secs_f64(),
+        record.losses.first().copied().unwrap_or(f32::NAN),
+        record.final_loss,
+    );
+
+    let out = PathBuf::from(args.string("out", "train-out"));
+    export_checkpoint(&trainer, &manifest, &record, &out)?;
+    // round-trip: reload through the registry with no override anywhere
+    let m2 = Manifest::load(&out)?;
+    let s2 = WeightStore::load(&m2)?;
+    let model = NativeModel::load(&m2, &s2)?;
+    let t2 = TestSet::load(&m2)?;
+    let acc = model.accuracy(&t2.images, &t2.labels, t2.n, 8, 0);
+    println!(
+        "exported {} (mode '{}'); reloaded checkpoint scores {:.2}% on the {} committed images",
+        out.display(),
+        m2.spec.stox.mode,
+        100.0 * acc,
+        t2.n
+    );
     Ok(())
 }
 

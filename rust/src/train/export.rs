@@ -1,0 +1,189 @@
+//! Checkpoint export in the existing manifest format: the trained
+//! tensors are written back in the *loaded manifest's tensor order*
+//! (same jax-keystr names, same shapes), the spec's `stox` block is
+//! rewritten to the trained hardware config with `mode` set to the
+//! canonical trained converter spec, and the test set rides along — so
+//! [`crate::model::NativeModel::load_with_config`] (and `Manifest::load`
+//! before it) round-trips the export through the `ConverterRegistry`
+//! with no `--converter` override anywhere.
+//!
+//! The artifact is fully deterministic: no timestamps, loss floats
+//! serialized through the canonical JSON writer — two runs with the same
+//! seed produce byte-identical `manifest.json` + `weights.bin` (the CI
+//! `train-smoke` job diffs exactly that).
+
+use super::trainer::{TrainRecord, Trainer};
+use crate::model::weights::Manifest;
+use crate::util::json::Json;
+use std::path::Path;
+
+fn layers_json(manifest: &Manifest) -> Json {
+    Json::Arr(
+        manifest
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::Str(l.name.clone())),
+                    ("kh", Json::Num(l.kh as f64)),
+                    ("kw", Json::Num(l.kw as f64)),
+                    ("cin", Json::Num(l.cin as f64)),
+                    ("cout", Json::Num(l.cout as f64)),
+                    ("h_out", Json::Num(l.h_out as f64)),
+                    ("w_out", Json::Num(l.w_out as f64)),
+                    ("stride", Json::Num(l.stride as f64)),
+                    ("stochastic", Json::Bool(l.stochastic)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write `manifest.json`, `weights.bin` and a copy of the test set into
+/// `dir` — a checkpoint directory loadable by `Manifest::load` +
+/// `WeightStore::load` + `TestSet::load`.
+pub fn export_checkpoint(
+    trainer: &Trainer,
+    manifest: &Manifest,
+    record: &TrainRecord,
+    dir: &Path,
+) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let named = trainer.named_tensors();
+    let lookup = |name: &str| -> crate::Result<&[f32]> {
+        named
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .ok_or_else(|| anyhow::anyhow!("export: trainer has no tensor '{name}'"))
+    };
+
+    // weights.bin in the loaded manifest's tensor order
+    let mut blob: Vec<u8> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut offset = 0usize;
+    for t in &manifest.weights.tensors {
+        let data = lookup(&t.name)?;
+        anyhow::ensure!(
+            data.len() == t.numel,
+            "export: tensor '{}' has {} elements, manifest says {}",
+            t.name,
+            data.len(),
+            t.numel
+        );
+        for v in data {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        entries.push(Json::obj(vec![
+            ("name", Json::Str(t.name.clone())),
+            (
+                "shape",
+                Json::Arr(t.shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("offset", Json::Num(offset as f64)),
+            ("numel", Json::Num(t.numel as f64)),
+        ]));
+        offset += t.numel;
+    }
+    std::fs::write(dir.join("weights.bin"), &blob)?;
+
+    // test set rides along so the export is self-contained
+    let ts = &manifest.testset;
+    std::fs::copy(manifest.dir.join(&ts.file), dir.join(&ts.file))?;
+
+    let spec = &manifest.spec;
+    let cfg = trainer.cfg;
+    let stox = Json::obj(vec![
+        ("a_bits", Json::Num(cfg.a_bits as f64)),
+        ("w_bits", Json::Num(cfg.w_bits as f64)),
+        ("a_stream_bits", Json::Num(cfg.a_stream_bits as f64)),
+        ("w_slice_bits", Json::Num(cfg.w_slice_bits as f64)),
+        ("r_arr", Json::Num(cfg.r_arr as f64)),
+        ("n_samples", Json::Num(cfg.n_samples as f64)),
+        ("alpha", Json::Num(cfg.alpha as f64)),
+        // the round-trip hinge: the trained converter spec, resolved by
+        // the registry at load time with no CLI override
+        ("mode", Json::Str(trainer.body_mode())),
+    ]);
+    // the first layer's trained converter spec, recorded explicitly so a
+    // QF checkpoint whose conv1 trained under a distinct mode (or read
+    // count) reloads with exactly that converter — `first_mode()` is the
+    // canonical full spec string, read-count parameters included
+    let first_layer_mode = if spec.first_layer == "qf" {
+        Json::Str(trainer.first_mode())
+    } else {
+        Json::Null
+    };
+    // per-layer sampling overrides were in effect only when no
+    // `--converter` override replaced them — re-export them verbatim then
+    let layer_samples = match (&spec.layer_samples, trainer.converter_overridden()) {
+        (Some(ls), false) => Json::Arr(
+            ls.iter()
+                .map(|(li, s)| {
+                    Json::Arr(vec![Json::Num(*li as f64), Json::Num(*s as f64)])
+                })
+                .collect(),
+        ),
+        _ => Json::Null,
+    };
+    let spec_json = Json::obj(vec![
+        ("name", Json::Str(format!("{}-trained", spec.name))),
+        ("num_classes", Json::Num(spec.num_classes as f64)),
+        ("in_channels", Json::Num(spec.in_channels as f64)),
+        ("image_size", Json::Num(spec.image_size as f64)),
+        ("base_width", Json::Num(spec.base_width as f64)),
+        ("width_mult", Json::Num(spec.width_mult)),
+        ("blocks_per_stage", Json::Num(spec.blocks_per_stage as f64)),
+        ("stox", stox),
+        ("first_layer", Json::Str(spec.first_layer.clone())),
+        ("first_layer_samples", Json::Num(spec.first_layer_samples as f64)),
+        ("first_layer_mode", first_layer_mode),
+        ("layer_samples", layer_samples),
+    ]);
+
+    // loss curve subsampled to <= 100 points, like train.py records
+    let stride = (record.losses.len() / 100).max(1);
+    let curve: Vec<Json> = record
+        .losses
+        .iter()
+        .step_by(stride)
+        .map(|&l| Json::Num(l as f64))
+        .collect();
+    let record_json = Json::obj(vec![
+        ("note", Json::Str("stox-cli train export".into())),
+        ("seed", Json::Num(record.seed as f64)),
+        ("steps", Json::Num(record.steps as f64)),
+        ("final_loss", Json::Num(record.final_loss as f64)),
+        ("trained_with", Json::Str(record.body_spec.clone())),
+        ("loss_curve", Json::Arr(curve)),
+    ]);
+
+    let manifest_json = Json::obj(vec![
+        ("spec", spec_json),
+        ("checkpoint_record", record_json),
+        ("layers", layers_json(manifest)),
+        ("models", Json::Arr(Vec::new())),
+        (
+            "weights",
+            Json::obj(vec![
+                ("file", Json::Str("weights.bin".into())),
+                ("tensors", Json::Arr(entries)),
+                ("total_f32", Json::Num(offset as f64)),
+            ]),
+        ),
+        (
+            "testset",
+            Json::obj(vec![
+                ("file", Json::Str(ts.file.clone())),
+                ("dataset", Json::Str(ts.dataset.clone())),
+                ("n", Json::Num(ts.n as f64)),
+                (
+                    "image_shape",
+                    Json::Arr(ts.image_shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest_json.to_string())?;
+    Ok(())
+}

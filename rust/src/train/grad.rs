@@ -1,0 +1,599 @@
+//! Layer-level backward math of the §3.3 training reduction.
+//!
+//! # The digit-STE VJP of one crossbar MVM
+//!
+//! The expected forward of one layer is
+//!
+//! ```text
+//! out[b,c] = Σ_{k,i,j} (sa_i·sw_j / (lev·K)) · T(ps[b,k,i,j,c])
+//! ps[b,k,i,j,c] = (1/r_arr) Σ_r x_i(a_q[b,r]) · t_j(w_q[r,c])
+//! ```
+//!
+//! with `T` the converter's surrogate transfer curve
+//! ([`crate::imc::PsSurrogate`]), `sa_i = 2^{i·As}`, `sw_j = 2^{j·Ws}`,
+//! `lev = La·Lw`, `La = 2^Ab − 1`, `Lw = 2^Wb − 1`.  The signed digits
+//! obey the exact recombination identity `Σ_i sa_i·x_i = La·a_q`; the
+//! straight-through convention allocates the slope across digits
+//! proportionally to significance, which (uniquely) gives every stream
+//! the *same* slope `∂x_i/∂a_q = 2^As − 1` (and `∂t_j/∂w_q = 2^Ws − 1`):
+//! the allocation weights `sa_i / Σ_i' sa_i'` cancel the per-digit scale
+//! and the total reproduces the identity's `La`.  With `D = T'` evaluated
+//! at the *captured* per-slice PS, the VJP collapses to
+//!
+//! ```text
+//! ∂L/∂a_q[b,r∈k] = (2^As−1)/(lev·K·r_arr) · Σ_c g[b,c] ·
+//!                  Σ_j t_j[r,c] · (Σ_i sa_i·sw_j·D[b,k,i,j,c])
+//! ∂L/∂w_q[r∈k,c] = (2^Ws−1)/(lev·K·r_arr) · Σ_b g[b,c] ·
+//!                  Σ_i x_i[b,r] · (Σ_j sa_i·sw_j·D[b,k,i,j,c])
+//! ```
+//!
+//! which reduces exactly to the paper's collapsed Eq. 5 surrogate
+//! (`(1/K)·T(α·a_q@w_q/r_arr)` with STE quantizers) whenever the
+//! per-slice gains are uniform — e.g. the ideal readout, or the tanh
+//! family in its linear region — and generalizes it with per-slice
+//! saturation awareness otherwise.  `python/compile/gen_grad_golden.py`
+//! implements the same equations in numpy; `rust/tests/grad_equiv.rs`
+//! pins both sides within 1e-5.
+
+use crate::imc::{quant, PsConvert, StoxConfig};
+
+/// Gradients of one crossbar MVM: wrt the im2col patches (before the
+/// caller's clip STE) and wrt the *normalized* weights (before the
+/// caller's `1/scale` chain through weight normalization).
+pub struct MatmulGrads {
+    /// ∂L/∂patches, `[batch × M]`.
+    pub d_patches: Vec<f32>,
+    /// ∂L/∂w_normalized, `[M × N]`.
+    pub d_w: Vec<f32>,
+}
+
+/// Backward of one crossbar-mapped MVM under the §3.3 surrogate.
+///
+/// * `patches` — the activations fed forward (`[batch × m]`; values are
+///   quantizer-clamped on the forward, so pre- or post-clip values give
+///   identical digits);
+/// * `wn` — normalized weights (`[m × n]`, in `[-1, 1]`);
+/// * `ps` — the captured normalized per-slice PS in the canonical
+///   `[b][k][i][j][col]` layout of [`crate::imc::StoxMvm::run_capture`];
+/// * `g` — upstream `∂L/∂out`, `[batch × n]`.
+///
+/// The converter's [`PsConvert::grad_slice_at`] supplies the per-slice
+/// surrogate derivative, so every registry converter — including ones
+/// with significance-aware schedules — trains through the same path.
+#[allow(clippy::too_many_arguments)]
+pub fn stox_matmul_backward(
+    patches: &[f32],
+    wn: &[f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    cfg: &StoxConfig,
+    conv: &dyn PsConvert,
+    ps: &[f32],
+    g: &[f32],
+) -> MatmulGrads {
+    let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
+    let k_n = cfg.n_arrs(m);
+    debug_assert_eq!(patches.len(), batch * m);
+    debug_assert_eq!(wn.len(), m * n);
+    debug_assert_eq!(g.len(), batch * n);
+    debug_assert_eq!(ps.len(), batch * k_n * i_n * j_n * n);
+
+    let la = ((1u64 << cfg.a_bits) - 1) as f32;
+    let lw = ((1u64 << cfg.w_bits) - 1) as f32;
+    let lev = la * lw;
+    // digit-STE slopes (module doc): uniform across streams/slices
+    let slope_a = ((1u64 << cfg.a_stream_bits) - 1) as f32;
+    let slope_w = ((1u64 << cfg.w_slice_bits) - 1) as f32;
+    let denom = lev * k_n as f32 * cfg.r_arr as f32;
+    let ca = slope_a / denom;
+    let cw = slope_w / denom;
+    let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
+    let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
+
+    // weight-slice digits, recomputed once from wn: [r][c][j]
+    let mut tdig = vec![0i32; m * n * j_n];
+    let mut dj = vec![0i32; j_n];
+    for r in 0..m {
+        for c in 0..n {
+            let u = quant::quantize_unit(wn[r * n + c], cfg.w_bits);
+            quant::signed_digits(u, cfg.w_bits, cfg.w_slice_bits, &mut dj);
+            for (j, &d) in dj.iter().enumerate() {
+                tdig[(r * n + c) * j_n + j] = d;
+            }
+        }
+    }
+
+    let mut d_patches = vec![0.0f32; batch * m];
+    let mut d_w = vec![0.0f32; m * n];
+    let mut dslice = vec![0.0f32; n];
+    // significance-weighted surrogate gains of one (b, k) group:
+    // aw[j][c] = Σ_i sa_i·sw_j·D,  ww[i][c] = Σ_j sa_i·sw_j·D
+    let mut aw = vec![0.0f32; j_n * n];
+    let mut ww = vec![0.0f32; i_n * n];
+    let mut di = vec![0i32; i_n];
+
+    for b in 0..batch {
+        for k in 0..k_n {
+            let row0 = k * cfg.r_arr;
+            let rows = (m - row0).min(cfg.r_arr);
+            aw.iter_mut().for_each(|v| *v = 0.0);
+            ww.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..i_n {
+                for j in 0..j_n {
+                    let off = (((b * k_n + k) * i_n + i) * j_n + j) * n;
+                    conv.grad_slice_at(i, j, &ps[off..off + n], &mut dslice);
+                    let s = sa[i] * sw[j];
+                    for (c, &d) in dslice.iter().enumerate() {
+                        let v = s * d;
+                        aw[j * n + c] += v;
+                        ww[i * n + c] += v;
+                    }
+                }
+            }
+            for rr in 0..rows {
+                let r = row0 + rr;
+                // ∂L/∂patches[b, r]
+                let mut acc = 0.0f32;
+                for c in 0..n {
+                    let gc = g[b * n + c];
+                    if gc == 0.0 {
+                        continue;
+                    }
+                    let mut t = 0.0f32;
+                    for j in 0..j_n {
+                        t += aw[j * n + c] * tdig[(r * n + c) * j_n + j] as f32;
+                    }
+                    acc += gc * t;
+                }
+                d_patches[b * m + r] = ca * acc;
+                // ∂L/∂wn[r, c]
+                let u = quant::quantize_unit(patches[b * m + r], cfg.a_bits);
+                quant::signed_digits(u, cfg.a_bits, cfg.a_stream_bits, &mut di);
+                for c in 0..n {
+                    let gc = g[b * n + c];
+                    if gc == 0.0 {
+                        continue;
+                    }
+                    let mut x = 0.0f32;
+                    for i in 0..i_n {
+                        x += ww[i * n + c] * di[i] as f32;
+                    }
+                    d_w[r * n + c] += cw * gc * x;
+                }
+            }
+        }
+    }
+    MatmulGrads { d_patches, d_w }
+}
+
+/// Straight-through clip: zero the gradient wherever the forward input
+/// fell outside `[-1, 1]` (the `act_clip` + quantizer STE of Eq. 5; the
+/// boundary is inclusive, matching `jnp.clip`'s VJP).
+pub fn apply_clip_ste(d_x: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(d_x.len(), x.len());
+    for (d, &v) in d_x.iter_mut().zip(x) {
+        if v.abs() > 1.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Adjoint of [`crate::imc::im2col`]: scatter patch gradients back onto
+/// the input image (`+=` over overlapping taps; out-of-bounds taps drop).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_backward(
+    d_patches: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let pad = (kh - 1) / 2;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w_ + 2 * pad - kw) / stride + 1;
+    let m = kh * kw * c;
+    debug_assert_eq!(d_patches.len(), b * ho * wo * m);
+    let mut dx = vec![0.0f32; b * h * w_ * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let src0 = ((bi * ho + oy) * wo + ox) * m;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w_ as isize {
+                            continue;
+                        }
+                        let dst0 = ((bi * h + iy as usize) * w_ + ix as usize) * c;
+                        let src = src0 + (ky * kw + kx) * c;
+                        for ci in 0..c {
+                            dx[dst0 + ci] += d_patches[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Backward of the full-precision first-layer conv
+/// ([`crate::model::infer::fp_conv2d`]): plain linear adjoints.
+#[allow(clippy::too_many_arguments)]
+pub fn fp_conv2d_backward(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    cin: usize,
+    weights: &[f32], // [kh,kw,cin,cout]
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    g: &[f32], // [b,ho,wo,cout]
+) -> (Vec<f32>, Vec<f32>) {
+    let pad = (kh - 1) / 2;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w_ + 2 * pad - kw) / stride + 1;
+    debug_assert_eq!(g.len(), b * ho * wo * cout);
+    let mut dx = vec![0.0f32; b * h * w_ * cin];
+    let mut dw = vec![0.0f32; kh * kw * cin * cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let gr = &g[((bi * ho + oy) * wo + ox) * cout..][..cout];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w_ as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w_ + ix as usize) * cin;
+                        for ci in 0..cin {
+                            let wbase = ((ky * kw + kx) * cin + ci) * cout;
+                            let xv = x[src + ci];
+                            let mut acc = 0.0f32;
+                            for (co, &gv) in gr.iter().enumerate() {
+                                acc += gv * weights[wbase + co];
+                                dw[wbase + co] += gv * xv;
+                            }
+                            dx[src + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw)
+}
+
+/// Saved context of one train-mode BatchNorm application.
+pub struct BnTape {
+    /// Normalized activations `(x − µ)·inv_std`.
+    pub xhat: Vec<f32>,
+    /// Per-channel `1/√(var + 1e-5)`.
+    pub inv_std: Vec<f32>,
+    /// Elements per channel (the normalization count N).
+    pub count: usize,
+}
+
+/// Train-mode BatchNorm: normalize by batch statistics, update running
+/// stats with momentum (stop-gradient, like `stox_layers.batch_norm`).
+pub fn bn_forward_train(
+    x: &[f32],
+    channels: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    running_mean: &mut [f32],
+    running_var: &mut [f32],
+    momentum: f32,
+) -> (Vec<f32>, BnTape) {
+    let count = x.len() / channels;
+    let mut mean = vec![0.0f64; channels];
+    for (i, &v) in x.iter().enumerate() {
+        mean[i % channels] += v as f64;
+    }
+    for mu in mean.iter_mut() {
+        *mu /= count as f64;
+    }
+    let mut var = vec![0.0f64; channels];
+    for (i, &v) in x.iter().enumerate() {
+        let d = v as f64 - mean[i % channels];
+        var[i % channels] += d * d;
+    }
+    for vv in var.iter_mut() {
+        *vv /= count as f64;
+    }
+    let inv_std: Vec<f32> =
+        var.iter().map(|&v| 1.0 / ((v as f32) + 1e-5).sqrt()).collect();
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut y = vec![0.0f32; x.len()];
+    for (i, &v) in x.iter().enumerate() {
+        let c = i % channels;
+        let hn = (v - mean[c] as f32) * inv_std[c];
+        xhat[i] = hn;
+        y[i] = hn * gamma[c] + beta[c];
+    }
+    for c in 0..channels {
+        running_mean[c] = momentum * running_mean[c] + (1.0 - momentum) * mean[c] as f32;
+        running_var[c] = momentum * running_var[c] + (1.0 - momentum) * var[c] as f32;
+    }
+    (y, BnTape { xhat, inv_std, count })
+}
+
+/// Standard train-mode BatchNorm backward (running stats are
+/// stop-gradient): returns `(∂L/∂x, ∂L/∂γ, ∂L/∂β)`.
+pub fn bn_backward(
+    tape: &BnTape,
+    gamma: &[f32],
+    gy: &[f32],
+    channels: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let count = tape.count as f32;
+    let mut dbeta = vec![0.0f32; channels];
+    let mut dgamma = vec![0.0f32; channels];
+    for (i, &gv) in gy.iter().enumerate() {
+        let c = i % channels;
+        dbeta[c] += gv;
+        dgamma[c] += gv * tape.xhat[i];
+    }
+    let mut gx = vec![0.0f32; gy.len()];
+    for (i, &gv) in gy.iter().enumerate() {
+        let c = i % channels;
+        gx[i] = gamma[c] * tape.inv_std[c] / count
+            * (count * gv - dbeta[c] - tape.xhat[i] * dgamma[c]);
+    }
+    (gx, dgamma, dbeta)
+}
+
+/// Softmax cross-entropy head: mean loss over the batch and its exact
+/// gradient `(softmax − onehot)/batch`.
+pub fn softmax_ce(
+    logits: &[f32],
+    labels: &[i32],
+    batch: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), batch * classes);
+    let mut dlogits = vec![0.0f32; batch * classes];
+    let mut loss = 0.0f64;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let label = labels[bi] as usize;
+        loss += (denom.ln() - (row[label] - mx)) as f64;
+        for c in 0..classes {
+            let p = (row[c] - mx).exp() / denom;
+            dlogits[bi * classes + c] =
+                (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+        }
+    }
+    ((loss / batch as f64) as f32, dlogits)
+}
+
+/// SGD with momentum and weight decay, the `train.py` update:
+/// `v ← µ·v + g + wd·p`, `p ← p − lr·v`.
+pub fn sgd_update(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    debug_assert_eq!(p.len(), v.len());
+    debug_assert_eq!(p.len(), g.len());
+    for ((pi, vi), &gi) in p.iter_mut().zip(v.iter_mut()).zip(g) {
+        let vn = momentum * *vi + gi + weight_decay * *pi;
+        *vi = vn;
+        *pi -= lr * vn;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imc::{im2col, PsConverterSpec, StoxConfig, StoxMvm};
+    use crate::stats::rng::CounterRng;
+
+    fn rand_vec(n: usize, seed: u32, lo: f32, hi: f32) -> Vec<f32> {
+        let rng = CounterRng::new(seed);
+        (0..n).map(|i| rng.uniform_in(i as u32, lo, hi)).collect()
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    /// <im2col(x), P> == <x, im2col_backward(P)> — exact adjointness.
+    #[test]
+    fn im2col_backward_is_adjoint() {
+        let (b, h, w, c) = (2usize, 5usize, 4usize, 3usize);
+        for (kh, stride) in [(3usize, 1usize), (3, 2), (1, 1)] {
+            let x = rand_vec(b * h * w * c, 1, -1.0, 1.0);
+            let (px, ho, wo) = im2col(&x, b, h, w, c, kh, kh, stride);
+            let p = rand_vec(b * ho * wo * kh * kh * c, 2, -1.0, 1.0);
+            let dx = im2col_backward(&p, b, h, w, c, kh, kh, stride);
+            let lhs = dot(&px, &p);
+            let rhs = dot(&x, &dx);
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "kh {kh} stride {stride}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    /// fp conv backward matches central finite differences of the conv.
+    #[test]
+    fn fp_conv_backward_matches_finite_difference() {
+        use crate::model::infer::fp_conv2d;
+        let (b, h, w, cin, cout) = (1usize, 4usize, 4usize, 2usize, 3usize);
+        let x = rand_vec(b * h * w * cin, 3, -1.0, 1.0);
+        let wt = rand_vec(3 * 3 * cin * cout, 4, -0.5, 0.5);
+        let (out, ho, wo) = fp_conv2d(&x, b, h, w, cin, &wt, 3, 3, cout, 1);
+        let g = rand_vec(out.len(), 5, -1.0, 1.0);
+        let (dx, dw) = fp_conv2d_backward(&x, b, h, w, cin, &wt, 3, 3, cout, 1, &g);
+        let _ = (ho, wo);
+        let eps = 1e-3f32;
+        let loss = |xv: &[f32], wv: &[f32]| -> f64 {
+            let (o, _, _) = fp_conv2d(xv, b, h, w, cin, wv, 3, 3, cout, 1);
+            dot(&o, &g)
+        };
+        for idx in [0usize, 7, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (loss(&xp, &wt) - loss(&xm, &wt)) / (2.0 * eps as f64);
+            assert!((fd - dx[idx] as f64).abs() < 1e-2, "dx[{idx}]: {fd} vs {}", dx[idx]);
+        }
+        for idx in [0usize, 11, wt.len() - 1] {
+            let mut wp = wt.clone();
+            wp[idx] += eps;
+            let mut wm = wt.clone();
+            wm[idx] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((fd - dw[idx] as f64).abs() < 1e-2, "dw[{idx}]: {fd} vs {}", dw[idx]);
+        }
+    }
+
+    /// BN backward matches finite differences of the train-mode forward
+    /// (batch statistics included in the derivative).
+    #[test]
+    fn bn_backward_matches_finite_difference() {
+        let channels = 3usize;
+        let x = rand_vec(4 * channels, 6, -2.0, 2.0);
+        let gamma = rand_vec(channels, 7, 0.5, 1.5);
+        let beta = rand_vec(channels, 8, -0.5, 0.5);
+        let g = rand_vec(x.len(), 9, -1.0, 1.0);
+        let fwd = |xv: &[f32]| -> f64 {
+            let mut rm = vec![0.0f32; channels];
+            let mut rv = vec![1.0f32; channels];
+            let (y, _) = bn_forward_train(xv, channels, &gamma, &beta, &mut rm, &mut rv, 0.9);
+            dot(&y, &g)
+        };
+        let mut rm = vec![0.0f32; channels];
+        let mut rv = vec![1.0f32; channels];
+        let (_, tape) =
+            bn_forward_train(&x, channels, &gamma, &beta, &mut rm, &mut rv, 0.9);
+        let (gx, dgamma, dbeta) = bn_backward(&tape, &gamma, &g, channels);
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (fwd(&xp) - fwd(&xm)) / (2.0 * eps as f64);
+            assert!((fd - gx[idx] as f64).abs() < 1e-2, "gx[{idx}]: {fd} vs {}", gx[idx]);
+        }
+        // dgamma/dbeta by construction: Σ g·xhat and Σ g per channel
+        for c in 0..channels {
+            let want_beta: f32 =
+                g.iter().enumerate().filter(|(i, _)| i % channels == c).map(|(_, &v)| v).sum();
+            assert!((dbeta[c] - want_beta).abs() < 1e-4);
+        }
+        assert_eq!(dgamma.len(), channels);
+        // running stats moved toward the batch stats
+        assert!(rm.iter().any(|&v| v != 0.0));
+    }
+
+    /// Softmax-CE: gradient rows sum to zero, loss drops along -grad.
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero_and_descends() {
+        let (batch, classes) = (3usize, 5usize);
+        let logits = rand_vec(batch * classes, 10, -2.0, 2.0);
+        let labels = vec![0i32, 3, 4];
+        let (loss, dl) = softmax_ce(&logits, &labels, batch, classes);
+        assert!(loss > 0.0);
+        for bi in 0..batch {
+            let s: f32 = dl[bi * classes..(bi + 1) * classes].iter().sum();
+            assert!(s.abs() < 1e-5, "row {bi} sums to {s}");
+        }
+        let stepped: Vec<f32> =
+            logits.iter().zip(&dl).map(|(&l, &d)| l - 0.1 * d).collect();
+        let (loss2, _) = softmax_ce(&stepped, &labels, batch, classes);
+        assert!(loss2 < loss, "{loss2} !< {loss}");
+    }
+
+    /// For the ideal converter the digit-STE VJP is the exact gradient of
+    /// the collapsed linear forward `a_q@w_q/(K·r)` — check against finite
+    /// differences of the *hardware* forward at interior (non-boundary)
+    /// points, where quantizer staircases average out over the FD window.
+    #[test]
+    fn ideal_backward_matches_collapsed_linear_chain() {
+        let (batch, m, n) = (2usize, 40usize, 5usize);
+        let cfg = StoxConfig {
+            a_bits: 8,
+            w_bits: 8,
+            w_slice_bits: 2,
+            r_arr: 32,
+            ..Default::default()
+        };
+        let a = rand_vec(batch * m, 11, -0.9, 0.9);
+        let w = rand_vec(m * n, 12, -0.9, 0.9);
+        let g = rand_vec(batch * n, 13, -1.0, 1.0);
+        let spec: PsConverterSpec = "ideal".parse().unwrap();
+        let conv = spec.build(&cfg).unwrap();
+        let mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        let (_, ps) = mvm.run_capture(&a, batch, conv.as_ref(), 0);
+        let grads =
+            stox_matmul_backward(&a, &w, batch, m, n, &cfg, conv.as_ref(), &ps, &g);
+        // exact collapsed gradient: d out[b,c]/d a[b,r] = w_q[r,c]/(K·r_arr)
+        let k_n = cfg.n_arrs(m) as f32;
+        for (idx, (&got, &av)) in grads.d_patches.iter().zip(&a).enumerate() {
+            let b = idx / m;
+            let r = idx % m;
+            let mut want = 0.0f32;
+            for c in 0..n {
+                let u = quant::quantize_unit(w[r * n + c], cfg.w_bits);
+                let wq = quant::dequantize_unit(u, cfg.w_bits);
+                want += g[b * n + c] * wq / (k_n * cfg.r_arr as f32);
+            }
+            let _ = av;
+            assert!(
+                (got - want).abs() < 1e-5,
+                "d_a[{idx}] {got} vs collapsed {want}"
+            );
+        }
+        assert_eq!(grads.d_w.len(), m * n);
+    }
+
+    /// Clip STE zeroes exactly the out-of-range coordinates.
+    #[test]
+    fn clip_ste_masks_out_of_range() {
+        let x = [0.5f32, -1.0, 1.0, 1.5, -2.0];
+        let mut d = [1.0f32; 5];
+        apply_clip_ste(&mut d, &x);
+        assert_eq!(d, [1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    /// SGD update follows the python convention exactly.
+    #[test]
+    fn sgd_matches_python_update_rule() {
+        let mut p = vec![1.0f32, -2.0];
+        let mut v = vec![0.5f32, 0.0];
+        let g = vec![0.1f32, -0.2];
+        sgd_update(&mut p, &mut v, &g, 0.1, 0.9, 0.01);
+        // v = 0.9*0.5 + 0.1 + 0.01*1 = 0.56; p = 1 - 0.1*0.56
+        assert!((v[0] - 0.56).abs() < 1e-6);
+        assert!((p[0] - (1.0 - 0.056)).abs() < 1e-6);
+        assert!((v[1] - (-0.2 - 0.02)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,78 @@
+//! PS-quantization-aware training (§3.3): reverse-mode backprop over the
+//! stochastic digit-plane forward path.
+//!
+//! The paper's accuracy story rests on *training through* the stochastic
+//! PS conversion: the forward pass is the exact hardware model of
+//! Algorithm 1 (quantize → bit-slice/stream → per-subarray partial sums →
+//! stochastic conversion → shift-and-add), while the backward pass treats
+//! the converter as its expected `tanh(α·ps)` transfer curve (Eq. 5's
+//! straight-through reduction).  This module closes the loop natively:
+//!
+//! * [`grad`] — the layer-level backward math: the digit-STE VJP of one
+//!   crossbar MVM ([`grad::stox_matmul_backward`], evaluated at the
+//!   per-slice PS captured by [`crate::imc::StoxMvm::run_capture`] and
+//!   routed through the converter's [`crate::imc::PsConvert::grad_slice_at`]
+//!   hook), im2col scatter, train-mode BatchNorm, the clip STE, and the
+//!   softmax cross-entropy head;
+//! * [`trainer`] — the tape: a [`trainer::Trainer`] mirrors the
+//!   `NativeModel` layer stack with raw (unquantized) parameters, runs
+//!   the hardware-exact forward recording per-layer context, walks it in
+//!   reverse, and applies SGD with momentum + weight decay under
+//!   deterministic seeded batch sampling over the committed `testset.bin`
+//!   format;
+//! * [`export`] — checkpoint export in the existing manifest format, so
+//!   [`crate::model::NativeModel::load_with_config`] round-trips the
+//!   trained weights through the `ConverterRegistry` with no `--converter`
+//!   override (the manifest's `mode` string carries the trained spec).
+//!
+//! Everything is bit-reproducible per `(seed, hyperparameters)`: batch
+//! sampling uses the shared counter RNG, the forward uses the frozen
+//! per-(step, layer) seed derivation, and no wall-clock state enters the
+//! exported artifact.  `python/compile/gen_grad_golden.py` mirrors the
+//! gradient conventions op-for-op; `rust/tests/grad_equiv.rs` pins the
+//! two sides within 1e-5.
+
+pub mod export;
+pub mod grad;
+pub mod trainer;
+
+pub use export::export_checkpoint;
+pub use trainer::{TrainRecord, Trainer};
+
+/// Hyperparameters of one training run (mirrors `python/compile/train.py`'s
+/// `TrainHP` conventions: SGD update `v ← µ·v + g + wd·p`, `p ← p − lr·v`,
+/// cosine learning-rate decay, fresh sampling seeds every step).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Optimizer steps.
+    pub steps: usize,
+    /// Images per step (sampled with replacement, counter-RNG keyed).
+    pub batch: usize,
+    /// Peak learning rate.
+    pub lr: f32,
+    /// SGD momentum µ.
+    pub momentum: f32,
+    /// L2 weight decay folded into the velocity update.
+    pub weight_decay: f32,
+    /// Master seed: batch sampling, per-step MTJ sampling streams.
+    pub seed: u32,
+    /// Cosine-decay the learning rate over `steps` (else constant).
+    pub cosine_lr: bool,
+    /// Print a progress line every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 100,
+            batch: 4,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            seed: 0,
+            cosine_lr: true,
+            log_every: 0,
+        }
+    }
+}

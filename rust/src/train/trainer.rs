@@ -1,0 +1,719 @@
+//! The training tape: hardware-exact forward with per-layer context
+//! capture, reverse walk, SGD — over the same layer stack as
+//! [`crate::model::NativeModel`], but holding *raw* (unquantized,
+//! unnormalized) parameters that the optimizer updates.
+//!
+//! Forward per stochastic conv layer (train mode): normalize weights
+//! (per-tensor max-abs, stop-gradient scale), program the crossbar
+//! ([`StoxMvm::program`] — weights change every step, so programming is
+//! per-step by construction), im2col, and run the layer's *actual*
+//! registry converter with fresh per-(step, layer) sampling seeds while
+//! capturing every per-slice PS ([`StoxMvm::run_capture`]).  Backward
+//! evaluates the converter's surrogate at exactly those PS values
+//! ([`grad::stox_matmul_backward`]) and chains through train-mode BN,
+//! the residual shortcuts, global pooling and the FC head.  Parameters
+//! update as soon as their layer's backward completes — no later layer's
+//! backward reads an earlier layer's parameters, so this is equivalent
+//! to the all-grads-then-update convention of `python/compile/train.py`.
+
+use super::grad::{
+    self, apply_clip_ste, bn_backward, bn_forward_train, fp_conv2d_backward, im2col_backward,
+    sgd_update, softmax_ce, BnTape,
+};
+use super::TrainConfig;
+use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
+use crate::model::infer::{fp_conv2d, layer_seed};
+use crate::model::weights::{Manifest, WeightStore};
+use crate::stats::rng::CounterRng;
+
+/// One trainable conv layer (crossbar-mapped, or the full-precision HPF
+/// first layer) with its SGD velocity and built converter.
+pub struct ConvParam {
+    /// Raw weights `[kh, kw, cin, cout]`, updated in place.
+    pub w: Vec<f32>,
+    vel: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    layer_idx: usize,
+    /// false → full-precision (HPF) first layer.
+    stochastic: bool,
+    spec: PsConverterSpec,
+    converter: Box<dyn PsConvert>,
+}
+
+/// Trainable BatchNorm affine + running statistics.
+pub struct BnParam {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    vgamma: Vec<f32>,
+    vbeta: Vec<f32>,
+}
+
+/// Saved forward context of one conv layer.
+struct ConvTape {
+    /// Layer input (pre-clip), NHWC.
+    x: Vec<f32>,
+    h: usize,
+    w: usize,
+    /// im2col patches fed to the crossbar (empty for the FP first layer).
+    patches: Vec<f32>,
+    /// Captured normalized per-slice PS (`run_capture` layout).
+    ps: Vec<f32>,
+    /// Normalized weights programmed this step (empty for FP).
+    wn: Vec<f32>,
+    /// Stop-gradient normalization scale (max|w| + 1e-8).
+    scale: f32,
+    ho: usize,
+    wo: usize,
+}
+
+/// Saved forward context of one residual block.
+struct BlockTape {
+    tc1: ConvTape,
+    tb1: BnTape,
+    tc2: ConvTape,
+    tb2: BnTape,
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    stride: usize,
+    cout: usize,
+}
+
+/// Deterministic loss trajectory and provenance of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainRecord {
+    /// Per-step training loss (bit-reproducible for a given seed).
+    pub losses: Vec<f32>,
+    /// Mean loss of the final `min(steps, 5)` steps.
+    pub final_loss: f32,
+    pub steps: usize,
+    pub seed: u32,
+    /// Canonical converter spec the stochastic body trained with.
+    pub body_spec: String,
+}
+
+/// PS-quantization-aware trainer over a loaded checkpoint.
+pub struct Trainer {
+    pub cfg: StoxConfig,
+    pub hp: TrainConfig,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub first_qf: bool,
+    pub conv1: ConvParam,
+    pub bn1: BnParam,
+    /// blocks\[stage\]\[block\] = (conv1, bn1, conv2, bn2, stride)
+    pub blocks: Vec<Vec<(ConvParam, BnParam, ConvParam, BnParam, usize)>>,
+    pub fc_w: Vec<f32>,
+    pub fc_b: Vec<f32>,
+    pub w3: usize,
+    vfc_w: Vec<f32>,
+    vfc_b: Vec<f32>,
+    body_spec: PsConverterSpec,
+    overridden: bool,
+}
+
+impl Trainer {
+    /// Initialize from a loaded checkpoint (same pytree paths as
+    /// `NativeModel::load_with_config`), at hardware config `cfg` and —
+    /// when `converter_override` is set — with every stochastic layer's
+    /// converter swapped to that spec (what the exported manifest then
+    /// carries as its trained `mode`).
+    pub fn new(
+        manifest: &Manifest,
+        store: &WeightStore,
+        cfg: StoxConfig,
+        converter_override: Option<&PsConverterSpec>,
+        hp: TrainConfig,
+    ) -> crate::Result<Self> {
+        cfg.validate()?;
+        let spec = &manifest.spec;
+        let first_qf = spec.first_layer == "qf";
+        let body_spec = match converter_override {
+            Some(s) => s.clone(),
+            None => PsConverterSpec::from_mode(&spec.stox.mode, cfg.alpha, cfg.n_samples)?,
+        };
+        let samples_for = |layer_idx: usize| -> u32 {
+            if layer_idx == 0 {
+                return spec.first_layer_samples;
+            }
+            if let Some(ls) = &spec.layer_samples {
+                for (li, s) in ls {
+                    if *li == layer_idx {
+                        return *s;
+                    }
+                }
+            }
+            cfg.n_samples
+        };
+        let mk_conv = |w: &[f32],
+                       shape: &[usize],
+                       stride: usize,
+                       layer_idx: usize,
+                       stochastic: bool,
+                       mode: &str|
+         -> crate::Result<ConvParam> {
+            let layer_spec = if stochastic {
+                match converter_override {
+                    Some(s) => s.clone(),
+                    None => {
+                        PsConverterSpec::from_mode(mode, cfg.alpha, samples_for(layer_idx))?
+                    }
+                }
+            } else {
+                PsConverterSpec::IdealAdc
+            };
+            let converter = layer_spec.build(&cfg)?;
+            Ok(ConvParam {
+                w: w.to_vec(),
+                vel: vec![0.0; w.len()],
+                kh: shape[0],
+                kw: shape[1],
+                cin: shape[2],
+                cout: shape[3],
+                stride,
+                layer_idx,
+                stochastic,
+                spec: layer_spec,
+                converter,
+            })
+        };
+        let bn = |prefix: &str| -> crate::Result<BnParam> {
+            let (_, gamma) = store.param(&format!("{prefix}['gamma']"))?;
+            let (_, beta) = store.param(&format!("{prefix}['beta']"))?;
+            let (_, mean) = store.state(&format!("{prefix}['mean']"))?;
+            let (_, var) = store.state(&format!("{prefix}['var']"))?;
+            Ok(BnParam {
+                gamma: gamma.to_vec(),
+                beta: beta.to_vec(),
+                mean: mean.to_vec(),
+                var: var.to_vec(),
+                vgamma: vec![0.0; gamma.len()],
+                vbeta: vec![0.0; beta.len()],
+            })
+        };
+
+        let (c1_shape, c1_data) = store.param("['conv1']")?;
+        let first_mode = spec
+            .first_layer_mode
+            .clone()
+            .unwrap_or_else(|| spec.stox.mode.clone());
+        let conv1 = mk_conv(c1_data, c1_shape, 1, 0, first_qf, &first_mode)?;
+        let bn1 = bn("['bn1']")?;
+
+        let mut layer_idx = 1usize;
+        let mut blocks = Vec::new();
+        for s in 0..3 {
+            let mut stage = Vec::new();
+            for b in 0..spec.blocks_per_stage {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let p = format!("['stages'][{s}][{b}]");
+                let (sh1, w1) = store.param(&format!("{p}['conv1']"))?;
+                let c1 = mk_conv(w1, sh1, stride, layer_idx, true, &spec.stox.mode)?;
+                layer_idx += 1;
+                let b1 = bn(&format!("{p}['bn1']"))?;
+                let (sh2, w2) = store.param(&format!("{p}['conv2']"))?;
+                let c2 = mk_conv(w2, sh2, 1, layer_idx, true, &spec.stox.mode)?;
+                layer_idx += 1;
+                let b2 = bn(&format!("{p}['bn2']"))?;
+                stage.push((c1, b1, c2, b2, stride));
+            }
+            blocks.push(stage);
+        }
+
+        let (fcw_shape, fcw) = store.param("['fc_w']")?;
+        let (_, fcb) = store.param("['fc_b']")?;
+        Ok(Self {
+            cfg,
+            hp,
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+            in_channels: spec.in_channels,
+            first_qf,
+            conv1,
+            bn1,
+            blocks,
+            vfc_w: vec![0.0; fcw.len()],
+            vfc_b: vec![0.0; fcb.len()],
+            fc_w: fcw.to_vec(),
+            fc_b: fcb.to_vec(),
+            w3: fcw_shape[0],
+            body_spec,
+            overridden: converter_override.is_some(),
+        })
+    }
+
+    /// Whether a `--converter` override replaced every stochastic layer's
+    /// converter (in which case the checkpoint's per-layer sampling
+    /// overrides were not in effect and must not be re-exported).
+    pub fn converter_overridden(&self) -> bool {
+        self.overridden
+    }
+
+    /// Canonical spec string of the trained stochastic body — the `mode`
+    /// the exported manifest carries.
+    pub fn body_mode(&self) -> String {
+        self.body_spec.to_string()
+    }
+
+    /// Spec string of the first layer ("ideal" for HPF models).
+    pub fn first_mode(&self) -> String {
+        self.conv1.spec.to_string()
+    }
+
+    /// (jax-keystr name → tensor view) of every trained tensor — the
+    /// export vocabulary, mirroring the loader paths exactly.
+    pub fn named_tensors(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![
+            ("['params']['conv1']".into(), self.conv1.w.as_slice()),
+            ("['params']['bn1']['gamma']".into(), self.bn1.gamma.as_slice()),
+            ("['params']['bn1']['beta']".into(), self.bn1.beta.as_slice()),
+        ];
+        for (s, stage) in self.blocks.iter().enumerate() {
+            for (b, (c1, b1, c2, b2, _)) in stage.iter().enumerate() {
+                let p = format!("['params']['stages'][{s}][{b}]");
+                out.push((format!("{p}['conv1']"), c1.w.as_slice()));
+                out.push((format!("{p}['bn1']['gamma']"), b1.gamma.as_slice()));
+                out.push((format!("{p}['bn1']['beta']"), b1.beta.as_slice()));
+                out.push((format!("{p}['conv2']"), c2.w.as_slice()));
+                out.push((format!("{p}['bn2']['gamma']"), b2.gamma.as_slice()));
+                out.push((format!("{p}['bn2']['beta']"), b2.beta.as_slice()));
+            }
+        }
+        out.push(("['params']['fc_w']".into(), self.fc_w.as_slice()));
+        out.push(("['params']['fc_b']".into(), self.fc_b.as_slice()));
+        out.push(("['states']['bn1']['mean']".into(), self.bn1.mean.as_slice()));
+        out.push(("['states']['bn1']['var']".into(), self.bn1.var.as_slice()));
+        for (s, stage) in self.blocks.iter().enumerate() {
+            for (b, (_, b1, _, b2, _)) in stage.iter().enumerate() {
+                let p = format!("['states']['stages'][{s}][{b}]");
+                out.push((format!("{p}['bn1']['mean']"), b1.mean.as_slice()));
+                out.push((format!("{p}['bn1']['var']"), b1.var.as_slice()));
+                out.push((format!("{p}['bn2']['mean']"), b2.mean.as_slice()));
+                out.push((format!("{p}['bn2']['var']"), b2.var.as_slice()));
+            }
+        }
+        out
+    }
+
+    fn conv_forward(
+        op: &ConvParam,
+        cfg: &StoxConfig,
+        x: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        step_seed: u32,
+    ) -> crate::Result<(Vec<f32>, ConvTape)> {
+        if !op.stochastic {
+            let (out, ho, wo) =
+                fp_conv2d(x, b, h, w, op.cin, &op.w, op.kh, op.kw, op.cout, op.stride);
+            return Ok((
+                out,
+                ConvTape {
+                    x: x.to_vec(),
+                    h,
+                    w,
+                    patches: Vec::new(),
+                    ps: Vec::new(),
+                    wn: Vec::new(),
+                    scale: 1.0,
+                    ho,
+                    wo,
+                },
+            ));
+        }
+        let scale = op.w.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-8;
+        let wn: Vec<f32> = op.w.iter().map(|v| v / scale).collect();
+        // quantize_unit clamps, so im2col of the raw input produces the
+        // same digits as the clipped copy (the NativeModel parity note)
+        let (patches, ho, wo) = im2col(x, b, h, w, op.cin, op.kh, op.kw, op.stride);
+        let m = op.kh * op.kw * op.cin;
+        let mvm = StoxMvm::program(&wn, m, op.cout, *cfg)?;
+        let seed = layer_seed(step_seed, op.layer_idx as u32);
+        let (out, ps) =
+            mvm.run_capture(&patches, b * ho * wo, op.converter.as_ref(), seed);
+        Ok((out, ConvTape { x: x.to_vec(), h, w, patches, ps, wn, scale, ho, wo }))
+    }
+
+    /// Backward of one conv layer; returns (∂L/∂input, raw weight grad).
+    fn conv_backward(
+        op: &ConvParam,
+        cfg: &StoxConfig,
+        tape: &ConvTape,
+        g: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let b = tape.x.len() / (tape.h * tape.w * op.cin);
+        if !op.stochastic {
+            return fp_conv2d_backward(
+                &tape.x, b, tape.h, tape.w, op.cin, &op.w, op.kh, op.kw, op.cout,
+                op.stride, g,
+            );
+        }
+        let m = op.kh * op.kw * op.cin;
+        let grads = grad::stox_matmul_backward(
+            &tape.patches,
+            &tape.wn,
+            b * tape.ho * tape.wo,
+            m,
+            op.cout,
+            cfg,
+            op.converter.as_ref(),
+            &tape.ps,
+            g,
+        );
+        let mut dx = im2col_backward(
+            &grads.d_patches, b, tape.h, tape.w, op.cin, op.kh, op.kw, op.stride,
+        );
+        // act_clip + quantizer STE on the layer input
+        apply_clip_ste(&mut dx, &tape.x);
+        // chain through w_n = w / stop_grad(scale)
+        let inv = 1.0 / tape.scale;
+        let dw: Vec<f32> = grads.d_w.iter().map(|v| v * inv).collect();
+        (dx, dw)
+    }
+
+    /// One SGD step on a batch (NHWC images in [-1,1], integer labels);
+    /// returns (loss, batch accuracy).
+    pub fn step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        it: usize,
+        lr: f32,
+    ) -> crate::Result<(f32, f64)> {
+        let step_seed = self.hp.seed.wrapping_add(it as u32);
+        let cfg = self.cfg;
+        let bn_momentum = 0.9f32;
+        let (mom, wd) = (self.hp.momentum, self.hp.weight_decay);
+
+        // ---------------- forward ----------------
+        let (h0, t_conv1) = Self::conv_forward(
+            &self.conv1, &cfg, x, batch, self.image_size, self.image_size, step_seed,
+        )?;
+        let c1out = self.conv1.cout;
+        let (mut h, t_bn1) = bn_forward_train(
+            &h0,
+            c1out,
+            &self.bn1.gamma,
+            &self.bn1.beta,
+            &mut self.bn1.mean,
+            &mut self.bn1.var,
+            bn_momentum,
+        );
+        let mut hh = t_conv1.ho;
+        let mut ww = t_conv1.wo;
+        let mut c = c1out;
+
+        let mut tapes: Vec<Vec<BlockTape>> = Vec::new();
+        for si in 0..self.blocks.len() {
+            let mut stage_tapes = Vec::new();
+            for bi in 0..self.blocks[si].len() {
+                let stride = self.blocks[si][bi].4;
+                let cout = self.blocks[si][bi].0.cout;
+                let shortcut = shortcut_fwd(&h, batch, hh, ww, c, cout, stride);
+                let (o1, tc1) =
+                    Self::conv_forward(&self.blocks[si][bi].0, &cfg, &h, batch, hh, ww, step_seed)?;
+                let blk = &mut self.blocks[si][bi];
+                let (o1b, tb1) = bn_forward_train(
+                    &o1,
+                    cout,
+                    &blk.1.gamma,
+                    &blk.1.beta,
+                    &mut blk.1.mean,
+                    &mut blk.1.var,
+                    bn_momentum,
+                );
+                let (h1, w1) = (tc1.ho, tc1.wo);
+                let (o2, tc2) = Self::conv_forward(
+                    &self.blocks[si][bi].2, &cfg, &o1b, batch, h1, w1, step_seed,
+                )?;
+                let blk = &mut self.blocks[si][bi];
+                let (mut o2b, tb2) = bn_forward_train(
+                    &o2,
+                    cout,
+                    &blk.3.gamma,
+                    &blk.3.beta,
+                    &mut blk.3.mean,
+                    &mut blk.3.var,
+                    bn_momentum,
+                );
+                for (o, s) in o2b.iter_mut().zip(&shortcut) {
+                    *o += s;
+                }
+                let (h2, w2) = (tc2.ho, tc2.wo);
+                stage_tapes.push(BlockTape {
+                    tc1,
+                    tb1,
+                    tc2,
+                    tb2,
+                    in_h: hh,
+                    in_w: ww,
+                    in_c: c,
+                    stride,
+                    cout,
+                });
+                h = o2b;
+                hh = h2;
+                ww = w2;
+                c = cout;
+            }
+            tapes.push(stage_tapes);
+        }
+
+        // global average pool + FC
+        let hw = (hh * ww) as f32;
+        let classes = self.num_classes;
+        let mut pooled = vec![0.0f32; batch * c];
+        for bi in 0..batch {
+            for p in 0..hh * ww {
+                for ch in 0..c {
+                    pooled[bi * c + ch] += h[(bi * hh * ww + p) * c + ch];
+                }
+            }
+        }
+        for v in pooled.iter_mut() {
+            *v /= hw;
+        }
+        let mut logits = vec![0.0f32; batch * classes];
+        for bi in 0..batch {
+            for k in 0..classes {
+                let mut acc = self.fc_b[k];
+                for ch in 0..self.w3 {
+                    acc += pooled[bi * c + ch] * self.fc_w[ch * classes + k];
+                }
+                logits[bi * classes + k] = acc;
+            }
+        }
+        let (loss, dlogits) = softmax_ce(&logits, y, batch, classes);
+        let mut correct = 0usize;
+        for bi in 0..batch {
+            let row = &logits[bi * classes..(bi + 1) * classes];
+            let mut pred = 0usize;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[pred] {
+                    pred = k;
+                }
+            }
+            if pred as i32 == y[bi] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / batch as f64;
+
+        // ---------------- backward + in-place SGD ----------------
+        let mut d_fc_w = vec![0.0f32; self.fc_w.len()];
+        let mut d_fc_b = vec![0.0f32; classes];
+        let mut d_pooled = vec![0.0f32; batch * c];
+        for bi in 0..batch {
+            for k in 0..classes {
+                let gv = dlogits[bi * classes + k];
+                d_fc_b[k] += gv;
+                for ch in 0..self.w3 {
+                    d_fc_w[ch * classes + k] += pooled[bi * c + ch] * gv;
+                    d_pooled[bi * c + ch] += self.fc_w[ch * classes + k] * gv;
+                }
+            }
+        }
+        let mut gh = vec![0.0f32; h.len()];
+        for bi in 0..batch {
+            for p in 0..hh * ww {
+                for ch in 0..c {
+                    gh[(bi * hh * ww + p) * c + ch] = d_pooled[bi * c + ch] / hw;
+                }
+            }
+        }
+        sgd_update(&mut self.fc_w, &mut self.vfc_w, &d_fc_w, lr, mom, wd);
+        sgd_update(&mut self.fc_b, &mut self.vfc_b, &d_fc_b, lr, mom, wd);
+
+        for si in (0..self.blocks.len()).rev() {
+            for bi in (0..self.blocks[si].len()).rev() {
+                let sv = &tapes[si][bi];
+                let g_short =
+                    shortcut_bwd(&gh, batch, sv.in_h, sv.in_w, sv.in_c, sv.cout, sv.stride);
+                let blk = &self.blocks[si][bi];
+                let (g_o2, dg2, db2) = bn_backward(&sv.tb2, &blk.3.gamma, &gh, sv.cout);
+                let (g_mid, dw2) = Self::conv_backward(&blk.2, &cfg, &sv.tc2, &g_o2);
+                let (g_o1, dg1, db1) = bn_backward(&sv.tb1, &blk.1.gamma, &g_mid, sv.cout);
+                let (mut g_in, dw1) = Self::conv_backward(&blk.0, &cfg, &sv.tc1, &g_o1);
+                for (gi, gs) in g_in.iter_mut().zip(&g_short) {
+                    *gi += gs;
+                }
+                let blk = &mut self.blocks[si][bi];
+                sgd_update(&mut blk.0.w, &mut blk.0.vel, &dw1, lr, mom, wd);
+                sgd_update(&mut blk.1.gamma, &mut blk.1.vgamma, &dg1, lr, mom, wd);
+                sgd_update(&mut blk.1.beta, &mut blk.1.vbeta, &db1, lr, mom, wd);
+                sgd_update(&mut blk.2.w, &mut blk.2.vel, &dw2, lr, mom, wd);
+                sgd_update(&mut blk.3.gamma, &mut blk.3.vgamma, &dg2, lr, mom, wd);
+                sgd_update(&mut blk.3.beta, &mut blk.3.vbeta, &db2, lr, mom, wd);
+                gh = g_in;
+            }
+        }
+
+        let (g_h0, dg, db) = bn_backward(&t_bn1, &self.bn1.gamma, &gh, c1out);
+        let (_, dw) = Self::conv_backward(&self.conv1, &cfg, &t_conv1, &g_h0);
+        sgd_update(&mut self.conv1.w, &mut self.conv1.vel, &dw, lr, mom, wd);
+        sgd_update(&mut self.bn1.gamma, &mut self.bn1.vgamma, &dg, lr, mom, wd);
+        sgd_update(&mut self.bn1.beta, &mut self.bn1.vbeta, &db, lr, mom, wd);
+
+        Ok((loss, acc))
+    }
+
+    /// Cosine-decayed (or constant) learning rate of step `it`.
+    pub fn lr_at(&self, it: usize) -> f32 {
+        if self.hp.cosine_lr {
+            (self.hp.lr as f64
+                * 0.5
+                * (1.0 + (std::f64::consts::PI * it as f64 / self.hp.steps as f64).cos()))
+                as f32
+        } else {
+            self.hp.lr
+        }
+    }
+
+    /// Run the configured number of steps over a `testset.bin`-format
+    /// labeled set (`images`: `[n × H·W·C]` NHWC in [-1,1]).  Batches are
+    /// sampled with replacement from a dedicated counter-RNG stream, so
+    /// the whole trajectory is a pure function of `(data, hp)`.
+    pub fn train(
+        &mut self,
+        images: &[f32],
+        labels: &[i32],
+        n: usize,
+    ) -> crate::Result<TrainRecord> {
+        anyhow::ensure!(n > 0, "empty training set");
+        anyhow::ensure!(self.hp.batch > 0 && self.hp.steps > 0, "steps/batch >= 1");
+        let img_sz = self.image_size * self.image_size * self.in_channels;
+        anyhow::ensure!(images.len() >= n * img_sz, "image buffer too small");
+        anyhow::ensure!(labels.len() >= n, "label buffer too small");
+        let mut losses = Vec::with_capacity(self.hp.steps);
+        for it in 0..self.hp.steps {
+            let idx = batch_indices(self.hp.seed, it, self.hp.batch, n);
+            let mut xb = Vec::with_capacity(self.hp.batch * img_sz);
+            let mut yb = Vec::with_capacity(self.hp.batch);
+            for &i in &idx {
+                xb.extend_from_slice(&images[i * img_sz..(i + 1) * img_sz]);
+                yb.push(labels[i]);
+            }
+            let lr = self.lr_at(it);
+            let (loss, bacc) = self.step(&xb, &yb, self.hp.batch, it, lr)?;
+            losses.push(loss);
+            if self.hp.log_every > 0
+                && (it % self.hp.log_every == 0 || it + 1 == self.hp.steps)
+            {
+                println!("  step {it:4} lr {lr:.4} loss {loss:.4} batch-acc {bacc:.3}");
+            }
+        }
+        let tail = losses.len().min(5);
+        let final_loss = losses[losses.len() - tail..].iter().sum::<f32>() / tail as f32;
+        Ok(TrainRecord {
+            losses,
+            final_loss,
+            steps: self.hp.steps,
+            seed: self.hp.seed,
+            body_spec: self.body_mode(),
+        })
+    }
+}
+
+/// Parameter-free ResNet shortcut (strided subsample + zero channel pad),
+/// mirroring `model::infer`'s forward.
+fn shortcut_fwd(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h / stride;
+    let wo = w / stride;
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let src = ((bi * h + y * stride) * w + xx * stride) * cin;
+                let dst = ((bi * ho + y) * wo + xx) * cout;
+                out[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`shortcut_fwd`].
+fn shortcut_bwd(
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h / stride;
+    let wo = w / stride;
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    for bi in 0..b {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let src = ((bi * h + y * stride) * w + xx * stride) * cin;
+                let dst = ((bi * ho + y) * wo + xx) * cout;
+                for ci in 0..cin {
+                    dx[src + ci] += g[dst + ci];
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Deterministic with-replacement batch sampling over the committed
+/// `testset.bin` format: index `s` of step `it` draws
+/// `draw24(it·batch + s) mod n` from a dedicated counter stream
+/// (mirrored by `python/compile/train_fixture.py`).
+pub fn batch_indices(seed: u32, it: usize, batch: usize, n: usize) -> Vec<usize> {
+    let rng = CounterRng::new(seed ^ 0x0DA7_A5E1);
+    (0..batch)
+        .map(|s| (rng.draw24((it * batch + s) as u32) as usize) % n)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shortcut_backward_is_adjoint() {
+        let rng = CounterRng::new(5);
+        let (b, h, w, cin, cout, stride) = (2usize, 4usize, 4usize, 3usize, 5usize, 2usize);
+        let x: Vec<f32> =
+            (0..b * h * w * cin).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect();
+        let s = shortcut_fwd(&x, b, h, w, cin, cout, stride);
+        let g: Vec<f32> = (0..s.len())
+            .map(|i| rng.uniform_in((10_000 + i) as u32, -1.0, 1.0))
+            .collect();
+        let dx = shortcut_bwd(&g, b, h, w, cin, cout, stride);
+        let lhs: f64 = s.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn batch_indices_deterministic_and_in_range() {
+        let a = batch_indices(7, 3, 4, 8);
+        let b = batch_indices(7, 3, 4, 8);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&i| i < 8));
+        assert_ne!(batch_indices(7, 4, 4, 8), a, "steps draw fresh indices");
+        assert_ne!(batch_indices(8, 3, 4, 8), a, "seed changes the draw");
+    }
+}

@@ -1,0 +1,188 @@
+//! Gradient equivalence (ISSUE 5): the Rust digit-STE backward
+//! (`train::grad::stox_matmul_backward`) must match the numpy reference
+//! goldens (`python/compile/gen_grad_golden.py` →
+//! `rust/tests/data/grad_golden.json`) within 1e-5 for every converter
+//! with a defined surrogate, and the surrogate derivatives must match
+//! finite differences of their transfer curves.
+//!
+//! Golden inputs are derived from each case's seed through the shared
+//! counter RNG — bit-identically on both sides — so the file stores only
+//! the expected gradients.  Forward PS captures are exact digit-domain
+//! values (integers scaled by a power of two), hence also bit-identical;
+//! the only cross-language slack is last-ulp libm `tanh` inside the
+//! smooth surrogates, far below the 1e-5 tolerance.
+
+use std::path::PathBuf;
+use stox_net::imc::{PsConverterSpec, PsSurrogate, StoxConfig, StoxMvm};
+use stox_net::stats::rng::CounterRng;
+use stox_net::train::grad::{apply_clip_ste, stox_matmul_backward};
+use stox_net::util::json::Json;
+use stox_net::util::prop;
+
+fn golden() -> Json {
+    let p =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/grad_golden.json");
+    Json::parse(&std::fs::read_to_string(&p).expect("grad_golden.json present"))
+        .expect("grad_golden.json parses")
+}
+
+fn cfg_of(j: &Json) -> StoxConfig {
+    StoxConfig {
+        a_bits: j.get("a_bits").unwrap().as_u32().unwrap(),
+        w_bits: j.get("w_bits").unwrap().as_u32().unwrap(),
+        a_stream_bits: j.get("a_stream_bits").unwrap().as_u32().unwrap(),
+        w_slice_bits: j.get("w_slice_bits").unwrap().as_u32().unwrap(),
+        r_arr: j.get("r_arr").unwrap().as_usize().unwrap(),
+        ..Default::default()
+    }
+}
+
+/// Consecutive `uniform_in(-1, 1)` blocks from one counter stream —
+/// the golden generator's `derive_inputs`, bit for bit.
+fn derive(seed: u32, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let rng = CounterRng::new(seed);
+    let mut base = 0u32;
+    sizes
+        .iter()
+        .map(|&sz| {
+            let v = (0..sz)
+                .map(|i| rng.uniform_in(base + i as u32, -1.0, 1.0))
+                .collect();
+            base += sz as u32;
+            v
+        })
+        .collect()
+}
+
+fn nums(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn check_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-5,
+            "{what}[{i}]: rust {g} vs numpy {w} (|diff| {})",
+            (g - w).abs()
+        );
+    }
+}
+
+#[test]
+fn backward_matches_numpy_goldens() {
+    let g = golden();
+    let cases = g.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 12, "golden must cover every surrogate family");
+    let mut seen_specs = std::collections::BTreeSet::new();
+    for case in cases {
+        let name = case.get("name").unwrap().as_str().unwrap();
+        let kind = case.get("kind").unwrap().as_str().unwrap();
+        let cfg = cfg_of(case.get("cfg").unwrap());
+        let spec_str = case.get("spec").unwrap().as_str().unwrap();
+        seen_specs.insert(spec_str.split(':').next().unwrap().to_string());
+        let spec: PsConverterSpec = spec_str.parse().unwrap();
+        let conv = spec.build(&cfg).unwrap();
+        let b = case.get("batch").unwrap().as_usize().unwrap();
+        let m = case.get("m").unwrap().as_usize().unwrap();
+        let n = case.get("n").unwrap().as_usize().unwrap();
+        let seed = case.get("seed").unwrap().as_u32().unwrap();
+        if kind == "single" {
+            let parts = derive(seed, &[b * m, m * n, b * n]);
+            let (a, w, up) = (&parts[0], &parts[1], &parts[2]);
+            let mvm = StoxMvm::program(w, m, n, cfg).unwrap();
+            // backward depends only on the captured PS, not the draws
+            let (_, ps) = mvm.run_capture(a, b, conv.as_ref(), 0);
+            let grads =
+                stox_matmul_backward(a, w, b, m, n, &cfg, conv.as_ref(), &ps, up);
+            let mut d_a = grads.d_patches;
+            apply_clip_ste(&mut d_a, a);
+            check_close(&d_a, &nums(case.get("d_a").unwrap()), &format!("{name}.d_a"));
+            check_close(&grads.d_w, &nums(case.get("d_w").unwrap()), &format!("{name}.d_w"));
+        } else {
+            let h = case.get("hidden").unwrap().as_usize().unwrap();
+            let parts = derive(seed, &[b * m, m * h, h * n, b * n]);
+            let (a0, w1, w2, up) = (&parts[0], &parts[1], &parts[2], &parts[3]);
+            let mvm1 = StoxMvm::program(w1, m, h, cfg).unwrap();
+            let (out1, ps1) = mvm1.run_capture(a0, b, conv.as_ref(), 0);
+            let x1: Vec<f32> = out1.iter().map(|v| v.clamp(-1.0, 1.0)).collect();
+            let mvm2 = StoxMvm::program(w2, h, n, cfg).unwrap();
+            let (_, ps2) = mvm2.run_capture(&x1, b, conv.as_ref(), 0);
+            let g2 =
+                stox_matmul_backward(&x1, w2, b, h, n, &cfg, conv.as_ref(), &ps2, up);
+            let mut d_x1 = g2.d_patches;
+            apply_clip_ste(&mut d_x1, &out1);
+            let g1 =
+                stox_matmul_backward(a0, w1, b, m, h, &cfg, conv.as_ref(), &ps1, &d_x1);
+            let mut d_a0 = g1.d_patches;
+            apply_clip_ste(&mut d_a0, a0);
+            check_close(&d_a0, &nums(case.get("d_a").unwrap()), &format!("{name}.d_a"));
+            check_close(&g1.d_w, &nums(case.get("d_w1").unwrap()), &format!("{name}.d_w1"));
+            check_close(&g2.d_w, &nums(case.get("d_w2").unwrap()), &format!("{name}.d_w2"));
+        }
+    }
+    // every surrogate family is pinned
+    for want in ["ideal", "quant", "sparse", "sa", "expected", "stox", "inhomo"] {
+        assert!(seen_specs.contains(want), "golden missing converter '{want}'");
+    }
+}
+
+/// Finite-difference proptest on the surrogate path: `PsSurrogate::grad`
+/// is the derivative of `PsSurrogate::value` away from the piecewise
+/// kinks, for every variant and a range of slopes.
+#[test]
+fn surrogate_gradients_match_finite_differences() {
+    prop::check("surrogate fd", 300, |g| {
+        let alpha = g.f32_in(0.5, 8.0);
+        let s = match g.usize_in(0, 3) {
+            0 => PsSurrogate::Identity,
+            1 => PsSurrogate::ClipSte,
+            2 => PsSurrogate::HardTanh { alpha },
+            _ => PsSurrogate::Tanh { alpha },
+        };
+        let ps = g.f32_in(-1.2, 1.2);
+        let near = |x: f32, k: f32| (x.abs() - k).abs() < 2e-2;
+        match s {
+            PsSurrogate::ClipSte if near(ps, 1.0) => return Ok(()),
+            PsSurrogate::HardTanh { alpha } if near(alpha * ps, 1.0) => return Ok(()),
+            _ => {}
+        }
+        let eps = 1e-3f64;
+        let f = |x: f64| s.value(x as f32) as f64;
+        let fd = (f(ps as f64 + eps) - f(ps as f64 - eps)) / (2.0 * eps);
+        let an = s.grad(ps) as f64;
+        if (fd - an).abs() > 1e-2 * an.abs().max(1.0) {
+            return Err(format!("{s:?} at ps {ps}: fd {fd} vs grad {an}"));
+        }
+        Ok(())
+    });
+}
+
+/// The backward is a VJP: exactly linear in the upstream gradient.
+/// Scaling by a power of two is exact in f32, so the check is bitwise.
+#[test]
+fn backward_is_exactly_linear_in_upstream_gradient() {
+    let cfg = StoxConfig { r_arr: 32, ..StoxConfig::default() };
+    let (b, m, n) = (2usize, 40usize, 5usize);
+    let parts = derive(9001, &[b * m, m * n, b * n]);
+    let (a, w, up) = (&parts[0], &parts[1], &parts[2]);
+    for spec_str in ["expected:alpha=4", "sa", "inhomo:alpha=4,base=1,extra=3"] {
+        let spec: PsConverterSpec = spec_str.parse().unwrap();
+        let conv = spec.build(&cfg).unwrap();
+        let mvm = StoxMvm::program(w, m, n, cfg).unwrap();
+        let (_, ps) = mvm.run_capture(a, b, conv.as_ref(), 0);
+        let g1 = stox_matmul_backward(a, w, b, m, n, &cfg, conv.as_ref(), &ps, up);
+        let up2: Vec<f32> = up.iter().map(|v| v * 2.0).collect();
+        let g2 = stox_matmul_backward(a, w, b, m, n, &cfg, conv.as_ref(), &ps, &up2);
+        for (x1, x2) in g1.d_patches.iter().zip(&g2.d_patches) {
+            assert_eq!(x1 * 2.0, *x2, "{spec_str}: d_a linearity");
+        }
+        for (x1, x2) in g1.d_w.iter().zip(&g2.d_w) {
+            assert_eq!(x1 * 2.0, *x2, "{spec_str}: d_w linearity");
+        }
+    }
+}

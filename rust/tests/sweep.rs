@@ -358,10 +358,11 @@ fn single_tag_sweep_is_one_row_of_the_matrix() {
 /// and latency are monotone non-decreasing in both weight and activation
 /// bits (1-bit slices so every width divides).
 ///
-/// `inhomo` is deliberately excluded: its cost key is the *mean-rounded*
-/// per-(stream, slice) read count, which falls as the significance grid
-/// refines, so its pipeline beat can legitimately shrink when weight bits
-/// grow (the exact-fractional-samples ROADMAP follow-up).
+/// `inhomo` is deliberately excluded: its cost key is the (now exact,
+/// fractional — `PsProcessing::StochasticMtjFrac`) *mean* per-(stream,
+/// slice) read count, which falls as the significance grid refines, so
+/// its pipeline beat can legitimately shrink when weight bits grow —
+/// monotonicity in precision is not a property of that converter.
 #[test]
 fn energy_latency_monotone_in_precision_bits() {
     let layers = zoo::resnet20_cifar();
