@@ -11,6 +11,7 @@ use stox_net::coordinator::server::{submit_all, Executor, ServeConfig, Server};
 use stox_net::coordinator::TileScheduler;
 use stox_net::imc::StoxConfig;
 use stox_net::model::zoo;
+use stox_net::serve::{ReplicaConfig, ReplicaServer};
 use stox_net::util::bench;
 
 struct NoopExec;
@@ -90,4 +91,39 @@ fn main() {
             bench::black_box(replies.len());
         },
     );
+
+    println!("\n== replica tier (noop executor) ==");
+    for replicas in [1usize, 2, 4] {
+        bench::bench(
+            &format!("replica-server/{replicas}x 1k requests end-to-end"),
+            Duration::from_millis(100),
+            Duration::from_secs(2),
+            || {
+                let server = ReplicaServer::new(
+                    (0..replicas).map(|_| NoopExec).collect(),
+                    ReplicaConfig {
+                        replicas,
+                        batcher: BatcherConfig {
+                            target_batch: 8,
+                            max_wait: Duration::from_micros(200),
+                        },
+                        seed: 0,
+                        // deep enough that the 1k burst never sheds
+                        queue_depth: 4096,
+                        deadline: None,
+                        slo: Duration::from_millis(50),
+                    },
+                );
+                let (tx, rx) = mpsc::channel();
+                let client = std::thread::spawn(move || {
+                    let r = submit_all(&tx, (0..1000).map(|_| vec![0.0f32; 16]));
+                    drop(tx);
+                    r
+                });
+                server.run(rx);
+                let replies = client.join().unwrap();
+                bench::black_box(replies.len());
+            },
+        );
+    }
 }

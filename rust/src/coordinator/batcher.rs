@@ -198,4 +198,75 @@ mod tests {
         assert_eq!(batch.reason, FlushReason::Drain);
         assert_eq!(batch.items.len(), 1);
     }
+
+    /// A deadline cut with interleaved pushes keeps FIFO order: requests
+    /// pushed at different times (including one arriving *after* the
+    /// oldest request's deadline already passed) flush oldest-first in
+    /// push order, never reordered by arrival jitter.
+    #[test]
+    fn deadline_flush_keeps_fifo_order_with_interleaved_pushes() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let now = t0();
+        let a = b.push("a", now);
+        let c = b.push("b", now + Duration::from_millis(2));
+        // "c" arrives after "a" has already exceeded its deadline
+        let e = b.push("c", now + Duration::from_millis(6));
+        let batch = b.try_flush(now + Duration::from_millis(7)).unwrap();
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        let ids: Vec<u64> = batch.items.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![a, c, e], "deadline cut is oldest-first FIFO");
+        assert!(b.is_empty());
+    }
+
+    /// When the queue exceeds the target at a deadline check, the Size cut
+    /// wins and the remainder keeps its own (younger) deadline: a fresh
+    /// request left behind must not flush until its own max_wait passes.
+    #[test]
+    fn size_cut_takes_priority_and_remainder_keeps_own_deadline() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 2,
+            max_wait: Duration::from_millis(5),
+        });
+        let now = t0();
+        b.push(0, now);
+        b.push(1, now);
+        b.push(2, now + Duration::from_millis(6));
+        let first = b.try_flush(now + Duration::from_millis(6)).unwrap();
+        assert_eq!(first.reason, FlushReason::Size);
+        assert_eq!(first.items.len(), 2);
+        // the interleaved push is younger than max_wait: no flush yet
+        assert!(b.try_flush(now + Duration::from_millis(7)).is_none());
+        let second = b.try_flush(now + Duration::from_millis(12)).unwrap();
+        assert_eq!(second.reason, FlushReason::Deadline);
+        assert_eq!(second.items[0].id, 2);
+    }
+
+    /// Shutdown drains the whole backlog as `Drain` batches of at most
+    /// `target_batch`, in FIFO order, then reports empty — the contract
+    /// the server (and the replica tier) rely on when the request channel
+    /// closes.
+    #[test]
+    fn shutdown_drain_empties_backlog_in_target_sized_batches() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = t0();
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        let mut seen = Vec::new();
+        let mut sizes = Vec::new();
+        while let Some(batch) = b.drain_all() {
+            assert_eq!(batch.reason, FlushReason::Drain);
+            sizes.push(batch.items.len());
+            seen.extend(batch.items.iter().map(|p| p.payload));
+        }
+        assert_eq!(sizes, vec![2, 2, 1]);
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert!(b.is_empty() && b.drain_all().is_none());
+    }
 }

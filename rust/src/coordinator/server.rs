@@ -75,6 +75,23 @@ pub trait Executor {
     fn max_batch(&self) -> usize;
 }
 
+/// Pad a non-variant batch of `batch` images up to `target` rows by
+/// replicating the last image (the padding contract documented on the
+/// batcher).  Callers truncate the logits back to `batch` rows; per-row
+/// stochastic draws are keyed by row index, so the real rows are
+/// unaffected by what rides in the pad slots.
+pub fn replicate_pad(images: &[f32], batch: usize, target: usize, elems: usize) -> Vec<f32> {
+    assert!(batch >= 1 && batch <= target, "pad {batch} -> {target}");
+    assert_eq!(images.len(), batch * elems);
+    let mut padded = Vec::with_capacity(target * elems);
+    padded.extend_from_slice(images);
+    let last = &images[(batch - 1) * elems..batch * elems];
+    for _ in batch..target {
+        padded.extend_from_slice(last);
+    }
+    padded
+}
+
 /// PJRT-backed executor (the production path).
 pub struct PjrtExecutor {
     pub engine: Engine,
@@ -93,9 +110,8 @@ impl Executor for PjrtExecutor {
             return handle.infer(images, seed);
         }
         if hb > batch {
-            // pad with zero images, truncate the logits
-            let mut padded = images.to_vec();
-            padded.resize(hb * self.image_elems, 0.0);
+            // pad by replication to the compiled variant, truncate logits
+            let padded = replicate_pad(images, batch, hb, self.image_elems);
             let out = handle.infer(&padded, seed)?;
             return Ok(out[..batch * self.classes].to_vec());
         }
@@ -144,7 +160,11 @@ impl Executor for NativeExecutor {
     }
 
     fn max_batch(&self) -> usize {
-        8
+        // the native model chunks internally per forward pass, so the
+        // configured `BatcherConfig::target_batch` is the only cap —
+        // returning usize::MAX lets `Server::run`'s min() pass it through
+        // (a hardcoded 8 here used to silently clamp `--target-batch`)
+        usize::MAX
     }
 }
 
@@ -379,6 +399,84 @@ mod tests {
         let e = MockExec { classes: 2, elems: 3 };
         let out = e.execute(&vec![0.0; 7 * 3], 7, 0).unwrap();
         assert_eq!(out.len(), 14);
+    }
+
+    /// Replication padding at non-variant batch sizes: real rows are
+    /// copied verbatim, pad rows replicate the last image, and a batch
+    /// already at the variant size is returned unchanged.
+    #[test]
+    fn replicate_pad_non_variant_sizes() {
+        // 3 images of 2 elems → variant 4: pad row repeats image 2
+        let imgs = [0.0, 0.1, 1.0, 1.1, 2.0, 2.1];
+        let p = replicate_pad(&imgs, 3, 4, 2);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..6], &imgs);
+        assert_eq!(&p[6..], &[2.0, 2.1]);
+
+        // 5 → 8: three pad rows, all replicas of image 4
+        let imgs: Vec<f32> = (0..5 * 3).map(|i| i as f32).collect();
+        let p = replicate_pad(&imgs, 5, 8, 3);
+        assert_eq!(p.len(), 24);
+        assert_eq!(&p[..15], &imgs[..]);
+        for r in 5..8 {
+            assert_eq!(&p[r * 3..(r + 1) * 3], &imgs[12..15]);
+        }
+
+        // already at the variant size: identity
+        let p = replicate_pad(&imgs, 5, 5, 3);
+        assert_eq!(p, imgs);
+    }
+
+    /// Executor with no preferred batch cap (the NativeExecutor shape
+    /// after the max_batch fix): `--target-batch` above the old hardcoded
+    /// 8 must take effect end-to-end.
+    struct UncappedExec;
+
+    impl Executor for UncappedExec {
+        fn execute(&self, _images: &[f32], batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+            Ok(vec![0.0; batch * 10])
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+    }
+
+    /// Regression (ISSUE 6 satellite): `NativeExecutor::max_batch()` used
+    /// to hardcode 8, so a `target_batch` of 16 was silently clamped and
+    /// no batch ever exceeded 8 requests.  With an uncapped executor, 32
+    /// pre-queued requests must flush as full batches of 16.
+    #[test]
+    fn target_batch_above_eight_takes_effect() {
+        let server = Server::new(
+            Box::new(UncappedExec),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 16,
+                    max_wait: Duration::from_secs(10),
+                },
+                seed: 0,
+                max_retries: 0,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // pre-queue all 32 requests before the server starts so the size
+        // trigger (not the deadline) cuts every batch
+        let replies = submit_all(&tx, (0..32).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for r in replies {
+            let rep = r.recv().unwrap();
+            assert_eq!(rep.batch, 16, "batches must reach the configured 16");
+        }
+        let m = server.metrics.lock().unwrap().report();
+        assert_eq!(m.requests, 32);
+        assert_eq!(m.batches, 2, "32 requests at target 16 → 2 batches");
     }
 
     struct FailingExec;

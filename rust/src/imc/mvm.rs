@@ -853,6 +853,44 @@ impl StoxMvm {
         conv: &C,
         seed: u32,
     ) -> (Vec<f32>, usize, usize) {
+        let (out, _, ho, wo) =
+            self.run_conv_digits_impl(acts, kh, kw, stride, conv, seed, false);
+        (out, ho, wo)
+    }
+
+    /// Fused digit-domain convolution **plus per-slice PS capture** — the
+    /// training tape's fast-conv hook: bit-identical outputs *and* capture
+    /// to `im2col` + [`StoxMvm::run_capture`] over `batch = patches`
+    /// (pinned by `fused_conv_capture_matches_im2col_capture`), without
+    /// materializing the patch matrix or re-decomposing any pixel
+    /// kh·kw times.  The capture is the canonical `[p][k][i][j][col]`
+    /// layout of [`StoxMvm::collect_ps`] with the patch index in the
+    /// batch-row slot.
+    pub fn run_conv_digits_capture<C: PsConvert + ?Sized>(
+        &self,
+        acts: &ActivationDigits<'_>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        conv: &C,
+        seed: u32,
+    ) -> (Vec<f32>, Vec<f32>, usize, usize) {
+        let (out, ps, ho, wo) =
+            self.run_conv_digits_impl(acts, kh, kw, stride, conv, seed, true);
+        (out, ps.expect("capture requested"), ho, wo)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_conv_digits_impl<C: PsConvert + ?Sized>(
+        &self,
+        acts: &ActivationDigits<'_>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        conv: &C,
+        seed: u32,
+        want_capture: bool,
+    ) -> (Vec<f32>, Option<Vec<f32>>, usize, usize) {
         assert_eq!(self.m, kh * kw * acts.c, "conv geometry mismatch");
         assert_eq!(acts.i_n, self.cfg.n_streams(), "activation digit width mismatch");
         let WeightPlanes::I8(planes) = &self.planes else {
@@ -862,6 +900,7 @@ impl StoxMvm {
         let ho = (acts.h + 2 * pad - kh) / stride + 1;
         let wo = (acts.w + 2 * pad - kw) / stride + 1;
         let patches = acts.b * ho * wo;
+        let group = self.cfg.n_streams() * self.cfg.n_slices() * self.n;
 
         let threads = crate::util::pool::default_threads();
         if threads > 1 && patches >= 2 * threads {
@@ -874,25 +913,67 @@ impl StoxMvm {
                 |scratch, ci| {
                     let p0 = ci * chunk;
                     let p1 = ((ci + 1) * chunk).min(patches);
-                    self.conv_digits_range(
-                        planes, acts, kw, stride, pad, ho, wo, p0, p1, conv, seed, scratch,
-                    )
+                    // chunks cover disjoint contiguous patch ranges, so
+                    // per-chunk capture buffers concatenate (in chunk
+                    // order) into the canonical [p][k][i][j][col] layout
+                    let mut ps = want_capture
+                        .then(|| vec![0.0f32; (p1 - p0) * self.n_arrs * group]);
+                    let out = self.conv_digits_range(
+                        planes,
+                        acts,
+                        kw,
+                        stride,
+                        pad,
+                        ho,
+                        wo,
+                        p0,
+                        p1,
+                        conv,
+                        seed,
+                        scratch,
+                        ps.as_deref_mut(),
+                    );
+                    (out, ps)
                 },
             );
             let mut out = Vec::with_capacity(patches * self.n);
-            for p in parts {
-                out.extend(p);
+            let mut ps_all = want_capture
+                .then(|| Vec::with_capacity(patches * self.n_arrs * group));
+            for (o, ps) in parts {
+                out.extend(o);
+                if let (Some(all), Some(part)) = (ps_all.as_mut(), ps) {
+                    all.extend(part);
+                }
             }
-            return (out, ho, wo);
+            return (out, ps_all, ho, wo);
         }
         let mut scratch = IntScratch::new(self);
+        let mut ps_all =
+            want_capture.then(|| vec![0.0f32; patches * self.n_arrs * group]);
         let out = self.conv_digits_range(
-            planes, acts, kw, stride, pad, ho, wo, 0, patches, conv, seed, &mut scratch,
+            planes,
+            acts,
+            kw,
+            stride,
+            pad,
+            ho,
+            wo,
+            0,
+            patches,
+            conv,
+            seed,
+            &mut scratch,
+            ps_all.as_deref_mut(),
         );
-        (out, ho, wo)
+        (out, ps_all, ho, wo)
     }
 
-    /// Fused conv kernel over patch rows [p0, p1).
+    /// Fused conv kernel over patch rows [p0, p1).  `capture`, when
+    /// present, must hold `(p1 − p0) · K · I · J · N` f32 and receives
+    /// every normalized per-slice PS of the range in the canonical
+    /// `[p][k][i][j][col]` layout — the patch index plays the batch-row
+    /// role, exactly as `im2col` + [`StoxMvm::run_capture`] over
+    /// `batch = patches` lays it out (and keys its RNG counters).
     #[allow(clippy::too_many_arguments)]
     fn conv_digits_range<C: PsConvert + ?Sized>(
         &self,
@@ -908,6 +989,7 @@ impl StoxMvm {
         conv: &C,
         seed: u32,
         scratch: &mut IntScratch,
+        mut capture: Option<&mut [f32]>,
     ) -> Vec<f32> {
         let mut out = vec![0.0f32; (p1 - p0) * self.n];
         if self.n == 0 || p1 == p0 {
@@ -918,6 +1000,7 @@ impl StoxMvm {
         let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
         let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
         let norm = self.out_norm(conv.samples());
+        let group = cfg.n_streams() * cfg.n_slices() * self.n;
 
         for p in p0..p1 {
             let bi = p / (ho * wo);
@@ -928,8 +1011,12 @@ impl StoxMvm {
                 let row0 = k * cfg.r_arr;
                 let rows = (self.m - row0).min(cfg.r_arr);
                 acts.gather_stripe(kw, stride, pad, bi, oy, ox, row0, rows, &mut scratch.xd);
+                let cap = capture.as_deref_mut().map(|buf| {
+                    let g0 = ((p - p0) * self.n_arrs + k) * group;
+                    &mut buf[g0..g0 + group]
+                });
                 self.run_stripe_int(
-                    planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch, None,
+                    planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch, cap,
                 );
                 let orow = &mut out[(p - p0) * self.n..(p - p0 + 1) * self.n];
                 for terms in scratch.contrib.chunks_exact(self.n) {
@@ -1328,6 +1415,37 @@ mod tests {
             let (got, ho2, wo2) = mvm.run_conv_digits(&acts, 3, 3, stride, &conv, 31);
             assert_eq!((ho, wo), (ho2, wo2));
             assert_eq!(got, want, "r_arr {r_arr} stride {stride}");
+        }
+    }
+
+    /// The fused-conv capture (ISSUE 6 carried follow-up) == im2col +
+    /// `run_capture` over `batch = patches`, bit for bit on both outputs
+    /// and captured PS — across subarray splits, strides, and batch sizes
+    /// large enough to exercise the parallel chunked path.
+    #[test]
+    fn fused_conv_capture_matches_im2col_capture() {
+        let (h, w, cin, cout) = (6usize, 5usize, 3usize, 7usize);
+        let wts = rand_vec(3 * 3 * cin * cout, 36);
+        for (b, r_arr, stride) in [(1usize, 16usize, 1usize), (2, 8, 2), (4, 64, 1)] {
+            let x = rand_vec(b * h * w * cin, 35);
+            let cfg = StoxConfig { r_arr, w_slice_bits: 1, ..Default::default() };
+            let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+            let mvm = StoxMvm::program(&wts, 3 * 3 * cin, cout, cfg).unwrap();
+
+            let (patches, ho, wo) = im2col(&x, b, h, w, cin, 3, 3, stride);
+            let (want_out, want_ps) =
+                mvm.run_capture(&patches, b * ho * wo, &conv, 41);
+
+            let mut arena = ConvArena::new();
+            let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
+            let (out, ps, ho2, wo2) =
+                mvm.run_conv_digits_capture(&acts, 3, 3, stride, &conv, 41);
+            assert_eq!((ho, wo), (ho2, wo2));
+            assert_eq!(out, want_out, "b {b} r_arr {r_arr} stride {stride}: out");
+            assert_eq!(ps, want_ps, "b {b} r_arr {r_arr} stride {stride}: ps");
+            // the plain fused path is untouched by the capture plumbing
+            let (plain, _, _) = mvm.run_conv_digits(&acts, 3, 3, stride, &conv, 41);
+            assert_eq!(plain, out, "capture must not perturb the forward");
         }
     }
 }

@@ -22,6 +22,10 @@
 //!   tile scheduler, metrics.
 //! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` produced by the
 //!   python AOT path and executes them on the request path.
+//! * [`serve`] — sharded replica serving tier: N replicas over one set of
+//!   programmed crossbars (`Arc` seam), admission control, continuous
+//!   batching with work stealing, SLO metrics, and the Poisson load
+//!   generator behind `BENCH_serving.json`.
 //! * [`stats`] — RNG, histograms, percentile sketches, Monte-Carlo driver.
 //! * [`train`] — PS-quantization-aware training (§3.3): reverse-mode
 //!   backprop over the stochastic digit-plane forward (STE quantizers,
@@ -35,6 +39,7 @@ pub mod device;
 pub mod imc;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod train;
 pub mod util;

@@ -5,6 +5,14 @@
 //! * `serve`       — run the serving engine over the exported test set
 //!                   (PJRT artifacts on the request path) and report
 //!                   accuracy + latency/throughput + simulated IMC cost;
+//!                   `--replicas N` (with `--native`) runs the sharded
+//!                   replica tier instead: N replicas over one set of
+//!                   programmed crossbars, admission control, work
+//!                   stealing, SLO metrics as JSON;
+//! * `loadgen`     — closed-loop Poisson load generator: sweeps offered
+//!                   arrival rates to saturation against the replica tier
+//!                   and emits the throughput–latency curve as
+//!                   `BENCH_serving.json`;
 //! * `device-sim`  — Fig. 2 / Table 1: LLG switching curve, tanh fit,
 //!                   converter energy/latency/area;
 //! * `table2`      — the component cost table;
@@ -42,6 +50,7 @@ use stox_net::imc::{PsConvert, PsConverterSpec, StoxConfig};
 use stox_net::model::weights::TestSet;
 use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
 use stox_net::runtime::Engine;
+use stox_net::serve::{run_sweep, LoadGenConfig, ReplicaConfig, ReplicaServer};
 use stox_net::stats::Histogram;
 use stox_net::util::cli::Args;
 use stox_net::util::json::Json;
@@ -52,6 +61,15 @@ commands:
   serve        [--requests N] [--batch B] [--max-wait-ms MS] [--native]
                [--converter SPEC]   (SPEC: name[:k=v,..], e.g. stox:samples=4,
                                      sparse:bits=4, inhomo:base=1,extra=3)
+               [--replicas N] [--queue-depth N] [--deadline-ms MS] [--slo-ms MS]
+               (--replicas > 1 runs the sharded replica tier — requires
+                --native; prints the per-shard/aggregate SLO metrics JSON)
+  loadgen      [--replicas N] [--start-rps R] [--growth G] [--steps N]
+               [--requests-per-rate N] [--sat-frac F] [--target-batch B]
+               [--max-wait-ms MS] [--queue-depth N] [--deadline-ms MS]
+               [--slo-ms MS] [--seed S] [--pace-seed S] [--converter SPEC]
+               (Poisson arrivals swept to saturation against the replica
+                tier; writes BENCH_serving.json to STOX_BENCH_DIR)
   device-sim   [--points N] [--trials N]
   table2
   fig4         [--images N]
@@ -86,14 +104,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
     let artifacts = PathBuf::from(args.string("artifacts", "artifacts"));
     match args.subcommand.as_deref() {
-        Some("serve") => serve(
-            &artifacts,
-            args.usize("requests", 512),
-            args.usize("batch", 8),
-            args.u64("max-wait-ms", 5),
-            args.flag("native"),
-            args.get("converter").map(|s| s.to_string()),
-        ),
+        Some("serve") => serve(&artifacts, &args),
+        Some("loadgen") => loadgen_cmd(&artifacts, &args),
         Some("device-sim") => device_sim(
             args.usize("points", 21),
             args.u32("trials", 200),
@@ -139,14 +151,13 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn serve(
-    artifacts: &PathBuf,
-    requests: usize,
-    batch: usize,
-    max_wait_ms: u64,
-    native: bool,
-    converter: Option<String>,
-) -> anyhow::Result<()> {
+fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let requests = args.usize("requests", 512);
+    let batch = args.usize("batch", 8);
+    let max_wait_ms = args.u64("max-wait-ms", 5);
+    let native = args.flag("native");
+    let converter = args.get("converter").map(|s| s.to_string());
+    let replicas = args.usize("replicas", 1);
     let manifest = Manifest::load(artifacts)?;
     let test = TestSet::load(&manifest)?;
     let spec = &manifest.spec;
@@ -175,6 +186,80 @@ fn serve(
         spec.first_layer_spec()?
     };
 
+    // serving design point: energy accounting derived from the converter
+    // specs actually running (PsConvert::cost_key)
+    let design = DesignConfig::from_specs(stox_cfg, &body_spec, &first_spec)?;
+    let sched =
+        TileScheduler::new(&ComponentCosts::default(), design, &manifest.layers);
+    println!(
+        "simulated IMC: {:.2} nJ/inference, {:.1} µs/inference, {:.0} inf/s bound",
+        sched.energy_per_inference_pj() / 1e3,
+        sched.single_latency_ns() / 1e3,
+        sched.throughput_bound_per_s(),
+    );
+
+    // --replicas > 1 runs the sharded replica tier: N replicas over one
+    // set of programmed crossbars, central batch formation (bit-identical
+    // to the single-server loop), admission control + SLO metrics
+    if replicas > 1 {
+        anyhow::ensure!(
+            native,
+            "--replicas requires --native (PJRT handles are not Send across shard threads)"
+        );
+        let store = WeightStore::load(&manifest)?;
+        let mut model = NativeModel::load(&manifest, &store)?;
+        if converter.is_some() {
+            model = model.with_converter_spec(&body_spec)?;
+            println!("native converter override: {body_spec}");
+        }
+        let cfg = ReplicaConfig {
+            replicas,
+            batcher: BatcherConfig {
+                target_batch: batch,
+                max_wait: std::time::Duration::from_millis(max_wait_ms),
+            },
+            seed: 0,
+            queue_depth: args.usize("queue-depth", 1024),
+            deadline: args
+                .get("deadline-ms")
+                .map(|_| std::time::Duration::from_millis(args.u64("deadline-ms", 0))),
+            slo: std::time::Duration::from_millis(args.u64("slo-ms", 50)),
+        };
+        let rserver = ReplicaServer::from_native(&model, cfg);
+        let n = requests.min(test.n);
+        let images: Vec<Vec<f32>> = (0..n).map(|i| test.image(i).to_vec()).collect();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, images.into_iter());
+            drop(tx);
+            replies
+        });
+        rserver.run(rx);
+        let replies = client.join().unwrap();
+        let (mut correct, mut served, mut shed) = (0usize, 0usize, 0usize);
+        for (i, r) in replies.into_iter().enumerate() {
+            let rep = r.recv()?;
+            match &rep.result {
+                Ok(logits) => {
+                    served += 1;
+                    if argmax(logits) as i32 == test.labels[i] {
+                        correct += 1;
+                    }
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        println!(
+            "accuracy: {}/{} served = {:.2}% ({} shed by admission/deadline)",
+            correct,
+            served,
+            100.0 * correct as f64 / served.max(1) as f64,
+            shed
+        );
+        println!("{}", rserver.metrics.to_json().to_string());
+        return Ok(());
+    }
+
     let executor: Box<dyn Executor> = if native {
         let store = WeightStore::load(&manifest)?;
         let mut model = NativeModel::load(&manifest, &store)?;
@@ -192,18 +277,6 @@ fn serve(
             image_elems: elems,
         })
     };
-
-    // serving design point: energy accounting derived from the converter
-    // specs actually running (PsConvert::cost_key)
-    let design = DesignConfig::from_specs(stox_cfg, &body_spec, &first_spec)?;
-    let sched =
-        TileScheduler::new(&ComponentCosts::default(), design, &manifest.layers);
-    println!(
-        "simulated IMC: {:.2} nJ/inference, {:.1} µs/inference, {:.0} inf/s bound",
-        sched.energy_per_inference_pj() / 1e3,
-        sched.single_latency_ns() / 1e3,
-        sched.throughput_bound_per_s(),
-    );
 
     let server = Server::new(
         executor,
@@ -249,6 +322,79 @@ fn serve(
     Ok(())
 }
 
+/// Closed-loop Poisson load generator against the sharded replica tier:
+/// sweeps offered arrival rates (geometric growth) to saturation and
+/// writes the throughput–latency curve as `BENCH_serving.json` (the same
+/// artifact format the perf benches emit; `STOX_BENCH_DIR` redirects it).
+fn loadgen_cmd(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let store = WeightStore::load(&manifest)?;
+    let test = TestSet::load(&manifest)?;
+    let mut model = NativeModel::load(&manifest, &store)?;
+    if let Some(c) = args.get("converter") {
+        let spec = PsConverterSpec::from_mode(
+            c,
+            manifest.spec.stox.alpha,
+            manifest.spec.stox.n_samples,
+        )?;
+        println!("converter override: {spec}");
+        model = model.with_converter_spec(&spec)?;
+    }
+    let cfg = ReplicaConfig {
+        replicas: args.usize("replicas", 2),
+        batcher: BatcherConfig {
+            target_batch: args.usize("target-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)),
+        },
+        seed: args.u32("seed", 0),
+        queue_depth: args.usize("queue-depth", 1024),
+        deadline: args
+            .get("deadline-ms")
+            .map(|_| std::time::Duration::from_millis(args.u64("deadline-ms", 0))),
+        slo: std::time::Duration::from_millis(args.u64("slo-ms", 50)),
+    };
+    let lg = LoadGenConfig {
+        start_rps: args.f64("start-rps", 64.0),
+        growth: args.f64("growth", 2.0),
+        steps: args.usize("steps", 6),
+        requests_per_step: args.usize("requests-per-rate", 64),
+        saturation_frac: args.f64("sat-frac", 0.9),
+        seed: args.u32("pace-seed", 7),
+    };
+    println!(
+        "loadgen: {} replicas, target batch {}, queue depth {}, SLO {} ms; \
+         sweeping from {:.0} rps x{:.1} up to {} steps",
+        cfg.replicas,
+        cfg.batcher.target_batch,
+        cfg.queue_depth,
+        cfg.slo.as_millis(),
+        lg.start_rps,
+        lg.growth,
+        lg.steps,
+    );
+    let images: Vec<Vec<f32>> = (0..test.n).map(|i| test.image(i).to_vec()).collect();
+    let (points, suite) = run_sweep(&model, &cfg, &images, &lg);
+    let knee = points.iter().map(|p| p.achieved_rps).fold(0.0f64, f64::max);
+    println!(
+        "\n{:>12} {:>12} {:>10} {:>10} {:>10} {:>8} {:>9}",
+        "offered", "achieved", "p50 µs", "p99 µs", "p999 µs", "slo", "rejected"
+    );
+    for p in &points {
+        println!(
+            "{:>12.1} {:>12.1} {:>10.0} {:>10.0} {:>10.0} {:>8.3} {:>9}",
+            p.offered_rps,
+            p.achieved_rps,
+            p.p50_us,
+            p.p99_us,
+            p.p999_us,
+            p.slo_attainment,
+            p.rejected
+        );
+    }
+    println!("saturation throughput: {knee:.1} req/s over {} rate points", points.len());
+    suite.write_json()?;
+    Ok(())
+}
 
 fn device_sim(points: usize, trials: u32) -> anyhow::Result<()> {
     let mtj = SotMtj::default();

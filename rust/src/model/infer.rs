@@ -557,6 +557,17 @@ impl NativeModel {
         })
     }
 
+    /// A replica view of this model for the serving tier: shares the
+    /// programmed crossbars (pointer-equal `Arc`s, no re-quantization or
+    /// re-programming) and keeps the converter spec — program once, serve
+    /// everywhere.  Each replica is independently `Send`, so N shards can
+    /// execute batches concurrently against one programming pass;
+    /// `forward` is deterministic per `(images, batch, seed)`, so which
+    /// replica runs a batch never changes its logits.
+    pub fn replica_view(&self) -> Self {
+        self.clone_shallow()
+    }
+
     /// Number of conv layers (perturbation targets).
     pub fn n_conv_layers(&self) -> usize {
         1 + self.blocks.iter().map(|s| s.len() * 2).sum::<usize>()

@@ -1,0 +1,207 @@
+//! Closed-loop load generator with open-loop Poisson arrivals.
+//!
+//! Each rate point submits `requests_per_step` requests on a Poisson
+//! arrival schedule (inter-arrival `−ln(1−u)/λ`, drawn from the
+//! deterministic counter RNG so a sweep is reproducible), waits for every
+//! reply (closed loop), and reads the throughput/latency/SLO columns off
+//! the replica server's [`crate::serve::ServeMetrics`].  The sweep
+//! doubles the offered
+//! rate until saturation — achieved throughput falling below
+//! `saturation_frac ×` offered, or admission control shedding load — and
+//! serializes the curve as `BENCH_serving.json` through
+//! [`crate::util::bench::BenchSuite`] (per-case timing columns plus the
+//! serving extras; schema in README §Serving).
+
+use super::replica::{ReplicaConfig, ReplicaServer};
+use crate::coordinator::server::submit_all;
+use crate::model::NativeModel;
+use crate::stats::rng::CounterRng;
+use crate::util::bench::{BenchResult, BenchSuite};
+use crate::util::json::Json;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// First offered arrival rate (requests/s).
+    pub start_rps: f64,
+    /// Rate multiplier between sweep steps.
+    pub growth: f64,
+    /// Maximum number of rate points.
+    pub steps: usize,
+    /// Requests submitted per rate point.
+    pub requests_per_step: usize,
+    /// Saturation cut: stop once achieved < `saturation_frac` × offered.
+    pub saturation_frac: f64,
+    /// Pacing seed (rate point `i` paces with `seed + i`).
+    pub seed: u32,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            start_rps: 64.0,
+            growth: 2.0,
+            steps: 6,
+            requests_per_step: 64,
+            saturation_frac: 0.9,
+            seed: 7,
+        }
+    }
+}
+
+/// One point of the throughput–latency curve.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    pub offered_rps: f64,
+    /// Successfully served requests / wall-clock of the whole point.
+    pub achieved_rps: f64,
+    pub requests: usize,
+    pub ok: u64,
+    pub rejected: u64,
+    pub deadline_exceeded: u64,
+    pub mean_us: f64,
+    pub min_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub slo_attainment: f64,
+}
+
+fn pct_or_zero(v: f32) -> f64 {
+    if v.is_finite() { v as f64 } else { 0.0 }
+}
+
+/// Run one rate point against a fresh replica server over `model`.
+///
+/// `images` are cycled to fill `n` requests.  The pacing schedule is
+/// absolute (each request has a precomputed send time), so a slow server
+/// does not throttle the offered load — the open-loop half of the
+/// harness; the closed-loop half waits for every reply before returning.
+pub fn run_rate(
+    model: &NativeModel,
+    cfg: &ReplicaConfig,
+    images: &[Vec<f32>],
+    rate: f64,
+    n: usize,
+    pace_seed: u32,
+) -> RatePoint {
+    assert!(rate > 0.0 && n > 0 && !images.is_empty());
+    let server = ReplicaServer::from_native(model, cfg.clone());
+    let (tx, rx) = mpsc::channel();
+    let imgs: Vec<Vec<f32>> = (0..n).map(|i| images[i % images.len()].clone()).collect();
+    let t_start = Instant::now();
+    let client = std::thread::spawn(move || {
+        let rng = CounterRng::new(pace_seed);
+        let t0 = Instant::now();
+        let mut sched = Duration::ZERO;
+        let mut replies = Vec::with_capacity(n);
+        for (i, image) in imgs.into_iter().enumerate() {
+            let u = rng.uniform(i as u32).min(0.999_999);
+            sched += Duration::from_secs_f64((-(1.0 - u as f64).ln()) / rate);
+            if let Some(rem) = sched.checked_sub(t0.elapsed()) {
+                std::thread::sleep(rem);
+            }
+            replies.extend(submit_all(&tx, std::iter::once(image)));
+        }
+        drop(tx);
+        replies
+    });
+    server.run(rx);
+    let replies = client.join().unwrap();
+
+    let mut ok = 0u64;
+    for r in replies {
+        let rep = r.recv().expect("reply delivered, never dropped");
+        if rep.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t_start.elapsed().as_secs_f64().max(1e-9);
+    let m = &server.metrics;
+    RatePoint {
+        offered_rps: rate,
+        achieved_rps: ok as f64 / wall,
+        requests: n,
+        ok,
+        rejected: m.rejected(),
+        deadline_exceeded: m.deadline_exceeded(),
+        mean_us: m.mean_latency_us(),
+        min_us: m.min_latency_us(),
+        p50_us: pct_or_zero(m.latency_percentile_us(50.0)),
+        p95_us: pct_or_zero(m.latency_percentile_us(95.0)),
+        p99_us: pct_or_zero(m.latency_percentile_us(99.0)),
+        p999_us: pct_or_zero(m.latency_percentile_us(99.9)),
+        slo_attainment: m.slo_attainment(),
+    }
+}
+
+/// Sweep offered rates to saturation; returns the curve and the
+/// `BENCH_serving` suite (call
+/// [`BenchSuite::write_json`]/[`BenchSuite::write_json_to`] to emit the
+/// artifact).
+pub fn run_sweep(
+    model: &NativeModel,
+    cfg: &ReplicaConfig,
+    images: &[Vec<f32>],
+    lg: &LoadGenConfig,
+) -> (Vec<RatePoint>, BenchSuite) {
+    let mut suite = BenchSuite::new("serving");
+    let mut points: Vec<RatePoint> = Vec::new();
+    let mut rate = lg.start_rps;
+    for step in 0..lg.steps {
+        let p = run_rate(
+            model,
+            cfg,
+            images,
+            rate,
+            lg.requests_per_step,
+            lg.seed.wrapping_add(step as u32),
+        );
+        println!(
+            "loadgen: offered {:>8.1} rps → achieved {:>8.1} rps  p99 {:>8.0} µs  \
+             slo {:.3}  rejected {}",
+            p.offered_rps, p.achieved_rps, p.p99_us, p.slo_attainment, p.rejected
+        );
+        suite.record_with(rate_point_result(&p), rate_point_extras(&p, cfg.replicas));
+        let saturated = p.rejected > 0
+            || p.deadline_exceeded > 0
+            || p.achieved_rps < lg.saturation_frac * p.offered_rps;
+        points.push(p);
+        if saturated {
+            break;
+        }
+        rate *= lg.growth;
+    }
+    (points, suite)
+}
+
+fn us(v: f64) -> Duration {
+    Duration::from_secs_f64(v.max(0.0) * 1e-6)
+}
+
+fn rate_point_result(p: &RatePoint) -> BenchResult {
+    BenchResult {
+        name: format!("rate-{:.0}rps", p.offered_rps),
+        iters: p.requests,
+        mean: us(p.mean_us),
+        p50: us(p.p50_us),
+        p95: us(p.p95_us),
+        min: us(p.min_us),
+    }
+}
+
+fn rate_point_extras(p: &RatePoint, replicas: usize) -> Vec<(String, Json)> {
+    vec![
+        ("replicas".into(), Json::Num(replicas as f64)),
+        ("offered_rps".into(), Json::Num(p.offered_rps)),
+        ("achieved_rps".into(), Json::Num(p.achieved_rps)),
+        ("ok".into(), Json::Num(p.ok as f64)),
+        ("rejected".into(), Json::Num(p.rejected as f64)),
+        ("deadline_exceeded".into(), Json::Num(p.deadline_exceeded as f64)),
+        ("p99_us".into(), Json::Num(p.p99_us)),
+        ("p999_us".into(), Json::Num(p.p999_us)),
+        ("slo_attainment".into(), Json::Num(p.slo_attainment)),
+    ]
+}

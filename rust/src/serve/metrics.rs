@@ -1,0 +1,342 @@
+//! Per-shard + aggregate serving metrics: latency percentiles through
+//! p999, batch occupancy, work-stealing counters, and SLO attainment —
+//! exported as JSON (the `BENCH_serving.json` sidecar schema documented in
+//! README §Serving).
+//!
+//! Unlike the single-server [`crate::coordinator::Metrics`], every counter
+//! here is shard-addressable: the dispatcher records admission decisions
+//! (rejected / deadline-exceeded) and each shard worker records the
+//! batches it executed — including ones it *stole* from a sibling's
+//! backlog — so the JSON report shows both the aggregate curve and how
+//! evenly the replicas shared the load.
+
+use crate::stats::Histogram;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Counters and latency distribution of one replica shard.
+#[derive(Debug)]
+pub struct ShardStats {
+    /// request latency (enqueue → reply), microseconds
+    latency_us: Histogram,
+    batch_occupancy: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    /// batches this shard executed that were dispatched to a sibling
+    pub stolen_batches: u64,
+    /// batches whose executor returned `Err` (every member got the error
+    /// reply; see the [`crate::coordinator::server::Reply`] contract)
+    pub error_batches: u64,
+    min_us: f32,
+}
+
+impl ShardStats {
+    fn new() -> Self {
+        Self {
+            // 0..10 s at 500 µs resolution: fine enough for p999 at the
+            // latencies the native executor produces
+            latency_us: Histogram::new(0.0, 10_000_000.0, 20_000),
+            batch_occupancy: Histogram::new(0.0, 256.0, 256),
+            requests: 0,
+            batches: 0,
+            stolen_batches: 0,
+            error_batches: 0,
+            min_us: f32::INFINITY,
+        }
+    }
+
+    fn record(&mut self, batch: usize, latencies: &[Duration], stolen: bool) {
+        self.requests += batch as u64;
+        self.batches += 1;
+        if stolen {
+            self.stolen_batches += 1;
+        }
+        self.batch_occupancy.add(batch as f32);
+        for l in latencies {
+            let us = l.as_secs_f64() * 1e6;
+            self.latency_us.add(us as f32);
+            self.min_us = self.min_us.min(us as f32);
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_occupancy.mean()
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> f32 {
+        self.latency_us.percentile(p)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        self.latency_us.mean()
+    }
+
+    /// Smallest observed request latency (µs); 0 when nothing recorded.
+    pub fn min_latency_us(&self) -> f64 {
+        if self.min_us.is_finite() {
+            self.min_us as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate + per-shard serving metrics with SLO attainment.
+///
+/// Shared (`Arc`) between the dispatcher and every shard worker; the
+/// aggregate `total` is updated alongside each shard so percentile
+/// queries never need to merge histograms.
+pub struct ServeMetrics {
+    started: Instant,
+    slo: Duration,
+    shards: Vec<Mutex<ShardStats>>,
+    total: Mutex<ShardStats>,
+    rejected: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    slo_ok: AtomicU64,
+    slo_miss: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new(replicas: usize, slo: Duration) -> Self {
+        Self {
+            started: Instant::now(),
+            slo,
+            shards: (0..replicas).map(|_| Mutex::new(ShardStats::new())).collect(),
+            total: Mutex::new(ShardStats::new()),
+            rejected: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            slo_ok: AtomicU64::new(0),
+            slo_miss: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a successfully executed batch on `shard`: per-request
+    /// latencies feed the percentile histograms and the SLO attainment
+    /// counters (latency ≤ SLO target → ok, else miss).
+    pub fn record_batch(&self, shard: usize, batch: usize, latencies: &[Duration], stolen: bool) {
+        self.shards[shard].lock().unwrap().record(batch, latencies, stolen);
+        self.total.lock().unwrap().record(batch, latencies, stolen);
+        for l in latencies {
+            if *l <= self.slo {
+                self.slo_ok.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.slo_miss.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record a batch whose executor failed (error replies were sent).
+    pub fn record_error_batch(&self, shard: usize) {
+        self.shards[shard].lock().unwrap().error_batches += 1;
+        self.total.lock().unwrap().error_batches += 1;
+    }
+
+    /// Admission control turned a request away at the queue head.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued request aged past its deadline before execution.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests that executed successfully (across all shards).
+    pub fn requests(&self) -> u64 {
+        self.total.lock().unwrap().requests
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.total.lock().unwrap().batches
+    }
+
+    pub fn stolen_batches(&self) -> u64 {
+        self.total.lock().unwrap().stolen_batches
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    pub fn slo_ok(&self) -> u64 {
+        self.slo_ok.load(Ordering::Relaxed)
+    }
+
+    pub fn slo_miss(&self) -> u64 {
+        self.slo_miss.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of executed requests that met the SLO (1.0 when none ran).
+    pub fn slo_attainment(&self) -> f64 {
+        let ok = self.slo_ok() as f64;
+        let miss = self.slo_miss() as f64;
+        if ok + miss == 0.0 {
+            1.0
+        } else {
+            ok / (ok + miss)
+        }
+    }
+
+    /// Executed requests per second of server lifetime.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.requests() as f64 / secs
+        }
+    }
+
+    /// Aggregate request-latency percentile in microseconds (NaN before
+    /// any request completes — the histogram contract).
+    pub fn latency_percentile_us(&self, p: f64) -> f32 {
+        self.total.lock().unwrap().latency_percentile_us(p)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        self.total.lock().unwrap().mean_latency_us()
+    }
+
+    pub fn min_latency_us(&self) -> f64 {
+        self.total.lock().unwrap().min_latency_us()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.total.lock().unwrap().mean_batch()
+    }
+
+    /// The JSON report (schema in README §Serving): aggregate counters,
+    /// p50/p99/p999 latency, SLO attainment, and one object per shard.
+    pub fn to_json(&self) -> Json {
+        let pct = |p: f64| -> Json {
+            let v = self.latency_percentile_us(p);
+            if v.is_finite() {
+                Json::Num(v as f64)
+            } else {
+                Json::Null
+            }
+        };
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let s = s.lock().unwrap();
+                let p99 = s.latency_percentile_us(99.0);
+                Json::obj(vec![
+                    ("shard", Json::Num(i as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("batches", Json::Num(s.batches as f64)),
+                    ("stolen_batches", Json::Num(s.stolen_batches as f64)),
+                    ("error_batches", Json::Num(s.error_batches as f64)),
+                    ("mean_batch", Json::Num(s.mean_batch())),
+                    (
+                        "p99_us",
+                        if p99.is_finite() {
+                            Json::Num(p99 as f64)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas() as f64)),
+            ("requests", Json::Num(self.requests() as f64)),
+            ("batches", Json::Num(self.batches() as f64)),
+            ("stolen_batches", Json::Num(self.stolen_batches() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded() as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("mean_batch", Json::Num(self.mean_batch())),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.mean_latency_us())),
+                    ("p50", pct(50.0)),
+                    ("p99", pct(99.0)),
+                    ("p999", pct(99.9)),
+                ]),
+            ),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("target_us", Json::Num(self.slo.as_secs_f64() * 1e6)),
+                    ("ok", Json::Num(self.slo_ok() as f64)),
+                    ("miss", Json::Num(self.slo_miss() as f64)),
+                    ("attainment", Json::Num(self.slo_attainment())),
+                ]),
+            ),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_shard_and_aggregate_counters() {
+        let m = ServeMetrics::new(2, Duration::from_millis(10));
+        m.record_batch(0, 2, &[Duration::from_millis(1), Duration::from_millis(2)], false);
+        m.record_batch(1, 1, &[Duration::from_millis(50)], true);
+        m.record_rejected();
+        m.record_deadline_exceeded();
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.stolen_batches(), 1);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.deadline_exceeded(), 1);
+        // SLO at 10 ms: two under, one (50 ms) over
+        assert_eq!(m.slo_ok(), 2);
+        assert_eq!(m.slo_miss(), 1);
+        assert!((m.slo_attainment() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(m.latency_percentile_us(99.9) > 1_000.0);
+        assert!(m.min_latency_us() >= 500.0);
+    }
+
+    #[test]
+    fn json_schema_fields_present() {
+        let m = ServeMetrics::new(2, Duration::from_millis(5));
+        m.record_batch(0, 1, &[Duration::from_millis(1)], false);
+        let j = m.to_json();
+        assert_eq!(j.get("replicas").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("requests").and_then(|v| v.as_usize()), Some(1));
+        let lat = j.get("latency_us").unwrap();
+        assert!(lat.get("p50").and_then(|v| v.as_f64()).is_some());
+        assert!(lat.get("p999").and_then(|v| v.as_f64()).is_some());
+        let slo = j.get("slo").unwrap();
+        assert_eq!(slo.get("ok").and_then(|v| v.as_usize()), Some(1));
+        assert!(slo.get("attainment").and_then(|v| v.as_f64()).unwrap() > 0.99);
+        let shards = j.get("shards").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("requests").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(shards[1].get("requests").and_then(|v| v.as_usize()), Some(0));
+        // roundtrip through the serializer
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("replicas").and_then(|v| v.as_usize()), Some(2));
+    }
+
+    #[test]
+    fn empty_metrics_report_null_percentiles() {
+        let m = ServeMetrics::new(1, Duration::from_millis(5));
+        assert!(m.latency_percentile_us(50.0).is_nan());
+        let j = m.to_json();
+        assert_eq!(j.get("latency_us").unwrap().get("p50"), Some(&Json::Null));
+        assert_eq!(m.slo_attainment(), 1.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Sharded replica serving tier.
+//!
+//! Supersedes the single-threaded [`crate::coordinator::Server`] loop for
+//! deployment-shaped workloads: N model replicas share one set of
+//! programmed crossbars through the `Arc` seam
+//! ([`crate::model::NativeModel::replica_view`] — program once, serve
+//! everywhere), a single admission-controlled request queue feeds a
+//! continuous batcher, and formed batches fan out across replica shards
+//! with work stealing so an idle shard drains a slow sibling's backlog.
+//!
+//! Determinism contract: batches are formed centrally (FIFO order) and
+//! seeded by sequence number, so for the same request stream, seed, and
+//! batcher config the tier is **bit-identical** to the single `Server` —
+//! regardless of replica count or which shard executed which batch
+//! (pinned by `replica_tier_matches_single_server_bit_for_bit`).
+//!
+//! Layout:
+//! - [`replica`] — [`ReplicaServer`]: shard workers, admission control
+//!   (bounded outstanding depth → explicit [`REJECTED`] replies),
+//!   per-request deadlines ([`DEADLINE_EXCEEDED`]), work stealing.
+//! - [`metrics`] — [`ServeMetrics`]: per-shard + aggregate counters,
+//!   p50/p99/p999 latency, SLO attainment, JSON export.
+//! - [`loadgen`] — Poisson-arrival closed-loop harness sweeping offered
+//!   rates to saturation; emits `BENCH_serving.json`.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod replica;
+
+pub use loadgen::{run_rate, run_sweep, LoadGenConfig, RatePoint};
+pub use metrics::ServeMetrics;
+pub use replica::{ReplicaConfig, ReplicaServer, DEADLINE_EXCEEDED, REJECTED};

@@ -1,0 +1,588 @@
+//! The sharded replica server: N executors over one programming pass,
+//! continuous batching, admission control, and work stealing.
+//!
+//! Supersedes the single-[`crate::coordinator::Server`] run loop for
+//! native-executor serving.  One dispatcher thread (the caller of
+//! [`ReplicaServer::run`]) owns the request channel and the
+//! [`DynamicBatcher`]; formed batches are stamped with sequence-ordered
+//! seeds and placed round-robin onto per-shard work queues, where replica
+//! workers execute them — stealing from the longest sibling backlog when
+//! their own queue runs dry.
+//!
+//! # Bit-identity with the single server
+//!
+//! Batch *formation* is centralized and FIFO, and batch `seq` executes
+//! with seed `cfg.seed.wrapping_add(seq)` (`seq` counting from 1) —
+//! exactly the `seed.wrapping_add(1)`-per-batch discipline of
+//! [`crate::coordinator::Server::run`].  Which shard executes a batch
+//! never enters the computation: replicas share the programmed crossbars
+//! ([`crate::model::NativeModel::replica_view`]) and the native forward is
+//! deterministic per `(images, batch, seed)`.  N-replica serving is
+//! therefore bit-identical to the single server for the same requests and
+//! seed (pinned by `rust/tests/serve.rs`), while execution parallelizes
+//! across shards.
+//!
+//! # Admission control and deadlines
+//!
+//! The queue is bounded: at most [`ReplicaConfig::queue_depth`] requests
+//! may be outstanding (queued or executing); requests beyond that receive
+//! an immediate `Err(`[`REJECTED`]`)` reply instead of queueing without
+//! bound.  With a [`ReplicaConfig::deadline`], requests that age past it
+//! before execution are dropped from their batch at dispatch time with an
+//! `Err(`[`DEADLINE_EXCEEDED`]`)` reply.  Either way the reply channel is
+//! never dropped — the fail-loud contract of
+//! [`crate::coordinator::server::Reply`] extends to the replica tier.
+
+use super::metrics::ServeMetrics;
+use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, Pending};
+use crate::coordinator::server::{Executor, NativeExecutor, Reply, Request};
+use crate::model::NativeModel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reply error message for requests turned away by admission control.
+pub const REJECTED: &str = "rejected: admission queue full";
+
+/// Reply error message for requests that aged past their deadline while
+/// queued.
+pub const DEADLINE_EXCEEDED: &str = "deadline exceeded before execution";
+
+#[derive(Clone)]
+pub struct ReplicaConfig {
+    /// Number of replica shards (executors).
+    pub replicas: usize,
+    pub batcher: BatcherConfig,
+    /// Base seed; batch `seq` executes with `seed.wrapping_add(seq)`.
+    pub seed: u32,
+    /// Admission bound: max requests outstanding (queued + executing).
+    pub queue_depth: usize,
+    /// Per-request deadline, checked at batch dispatch; `None` disables.
+    pub deadline: Option<Duration>,
+    /// SLO latency target for the attainment counters.
+    pub slo: Duration,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 2,
+            batcher: BatcherConfig::default(),
+            seed: 0,
+            queue_depth: 1024,
+            deadline: None,
+            slo: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A formed batch awaiting execution on some shard.
+struct Job {
+    seed: u32,
+    items: Vec<Pending<Request>>,
+    /// shard the dispatcher assigned it to (executed elsewhere ⇒ stolen)
+    home: usize,
+}
+
+/// One shard's work queue (Mutex + Condvar; std-only, no tokio).
+struct ShardQueue {
+    q: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+impl ShardQueue {
+    fn new() -> Self {
+        Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, job: Job) {
+        self.q.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+}
+
+/// N-replica serving tier over any `Executor + Sync` (one executor per
+/// shard; use [`ReplicaServer::from_native`] to shard a [`NativeModel`]
+/// through its `Arc`-shared programming pass).
+pub struct ReplicaServer<E: Executor + Sync> {
+    shards: Vec<E>,
+    cfg: ReplicaConfig,
+    pub metrics: Arc<ServeMetrics>,
+}
+
+impl ReplicaServer<NativeExecutor> {
+    /// Shard a native model into `cfg.replicas` replica views sharing the
+    /// programmed crossbars — program once, serve everywhere.
+    pub fn from_native(model: &NativeModel, cfg: ReplicaConfig) -> Self {
+        let shards = (0..cfg.replicas.max(1))
+            .map(|_| NativeExecutor { model: model.replica_view() })
+            .collect();
+        Self::new(shards, cfg)
+    }
+}
+
+impl<E: Executor + Sync> ReplicaServer<E> {
+    /// One executor per shard; `cfg.replicas` is overridden by
+    /// `shards.len()`.
+    pub fn new(shards: Vec<E>, mut cfg: ReplicaConfig) -> Self {
+        assert!(!shards.is_empty(), "at least one replica shard");
+        cfg.replicas = shards.len();
+        let metrics = Arc::new(ServeMetrics::new(shards.len(), cfg.slo));
+        Self { shards, cfg, metrics }
+    }
+
+    pub fn config(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    /// Run loop: consume requests until the channel closes, then drain
+    /// the batcher and wait for every shard to finish its backlog.
+    ///
+    /// The dispatcher runs on the calling thread; shard workers run on
+    /// scoped threads, so `run` returns only after every admitted request
+    /// has received its reply.
+    pub fn run(&self, rx: mpsc::Receiver<Request>) {
+        let queues: Vec<ShardQueue> = (0..self.shards.len()).map(|_| ShardQueue::new()).collect();
+        let done = AtomicBool::new(false);
+        let outstanding = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for (si, exec) in self.shards.iter().enumerate() {
+                let queues = &queues;
+                let done = &done;
+                let outstanding = &outstanding;
+                let metrics = &self.metrics;
+                scope.spawn(move || {
+                    shard_worker(si, exec, queues, done, outstanding, metrics)
+                });
+            }
+            self.dispatch_loop(rx, &queues, &outstanding);
+            done.store(true, Ordering::SeqCst);
+            for q in &queues {
+                q.cv.notify_all();
+            }
+        });
+    }
+
+    /// Central batch formation — the single-server run loop, minus
+    /// execution: admitted requests accumulate in the batcher; formed
+    /// batches get the next sequence seed and go to a shard queue.
+    fn dispatch_loop(
+        &self,
+        rx: mpsc::Receiver<Request>,
+        queues: &[ShardQueue],
+        outstanding: &AtomicUsize,
+    ) {
+        let mut batcher = DynamicBatcher::new(BatcherConfig {
+            target_batch: self.cfg.batcher.target_batch.min(self.shards[0].max_batch()),
+            ..self.cfg.batcher
+        });
+        let mut seq: u32 = 0;
+        let mut rr = 0usize;
+        let mut closed = false;
+        while !closed {
+            let now = Instant::now();
+            if let Some(batch) = batcher.try_flush(now) {
+                seq = seq.wrapping_add(1);
+                self.dispatch(batch, self.cfg.seed.wrapping_add(seq), queues, &mut rr, outstanding);
+                continue;
+            }
+            let wait = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(wait) {
+                Ok(req) => {
+                    if outstanding.load(Ordering::SeqCst) >= self.cfg.queue_depth {
+                        // bounded queue: explicit rejection, never an
+                        // unbounded backlog or a dropped reply channel
+                        self.metrics.record_rejected();
+                        let _ = req.reply.send(Reply {
+                            result: Err(REJECTED.to_string()),
+                            latency: Duration::ZERO,
+                            batch: 0,
+                        });
+                    } else {
+                        outstanding.fetch_add(1, Ordering::SeqCst);
+                        batcher.push(req, Instant::now());
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+            }
+        }
+        while let Some(batch) = batcher.drain_all() {
+            seq = seq.wrapping_add(1);
+            self.dispatch(batch, self.cfg.seed.wrapping_add(seq), queues, &mut rr, outstanding);
+        }
+    }
+
+    /// Expire overdue requests, then queue the remainder round-robin.
+    fn dispatch(
+        &self,
+        batch: Batch<Request>,
+        seed: u32,
+        queues: &[ShardQueue],
+        rr: &mut usize,
+        outstanding: &AtomicUsize,
+    ) {
+        let mut items = batch.items;
+        if let Some(dl) = self.cfg.deadline {
+            let now = Instant::now();
+            let (live, dead): (Vec<_>, Vec<_>) = items
+                .into_iter()
+                .partition(|p| now.duration_since(p.enqueued) <= dl);
+            for p in dead {
+                self.metrics.record_deadline_exceeded();
+                let _ = p.payload.reply.send(Reply {
+                    result: Err(DEADLINE_EXCEEDED.to_string()),
+                    latency: now.duration_since(p.enqueued),
+                    batch: 0,
+                });
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+            items = live;
+        }
+        if items.is_empty() {
+            return;
+        }
+        let shard = *rr % queues.len();
+        *rr += 1;
+        queues[shard].push(Job { seed, items, home: shard });
+    }
+}
+
+/// Shard worker: drain own queue, steal from the longest sibling backlog
+/// when dry, exit once the dispatcher is done and every queue is empty.
+fn shard_worker<E: Executor>(
+    si: usize,
+    exec: &E,
+    queues: &[ShardQueue],
+    done: &AtomicBool,
+    outstanding: &AtomicUsize,
+    metrics: &ServeMetrics,
+) {
+    loop {
+        let job = queues[si].q.lock().unwrap().pop_front();
+        let job = match job {
+            Some(j) => Some(j),
+            None => steal(si, queues),
+        };
+        match job {
+            Some(job) => execute_job(si, exec, job, outstanding, metrics),
+            None => {
+                if done.load(Ordering::SeqCst)
+                    && queues.iter().all(|q| q.q.lock().unwrap().is_empty())
+                {
+                    return;
+                }
+                let guard = queues[si].q.lock().unwrap();
+                let _unused = queues[si].cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            }
+        }
+    }
+}
+
+/// Steal the newest job from the sibling with the longest backlog.
+fn steal(si: usize, queues: &[ShardQueue]) -> Option<Job> {
+    let mut best: Option<(usize, usize)> = None;
+    for (qi, q) in queues.iter().enumerate() {
+        if qi == si {
+            continue;
+        }
+        let len = q.q.lock().unwrap().len();
+        if len > 0 && best.map(|(_, bl)| len > bl).unwrap_or(true) {
+            best = Some((qi, len));
+        }
+    }
+    let (qi, _) = best?;
+    queues[qi].q.lock().unwrap().pop_back()
+}
+
+/// Execute one batch and reply to every member (the fail-loud contract:
+/// `Ok` logits or the executor's error, never a dropped channel).
+fn execute_job<E: Executor>(
+    si: usize,
+    exec: &E,
+    job: Job,
+    outstanding: &AtomicUsize,
+    metrics: &ServeMetrics,
+) {
+    let n = job.items.len();
+    let classes = exec.classes();
+    let stolen = job.home != si;
+    let mut images = Vec::with_capacity(n * exec.image_elems());
+    for p in &job.items {
+        images.extend_from_slice(&p.payload.image);
+    }
+    let t0 = Instant::now();
+    match exec.execute(&images, n, job.seed) {
+        Ok(logits) => {
+            let now = Instant::now();
+            let mut latencies = Vec::with_capacity(n);
+            for (i, p) in job.items.into_iter().enumerate() {
+                let lat = now.duration_since(p.enqueued);
+                latencies.push(lat);
+                let _ = p.payload.reply.send(Reply {
+                    result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
+                    latency: now.duration_since(t0),
+                    batch: n,
+                });
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+            metrics.record_batch(si, n, &latencies, stolen);
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            eprintln!("shard {si} executor error: {msg}");
+            let now = Instant::now();
+            for p in job.items {
+                let _ = p.payload.reply.send(Reply {
+                    result: Err(msg.clone()),
+                    latency: now.duration_since(t0),
+                    batch: n,
+                });
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+            metrics.record_error_batch(si);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{submit_all, ServeConfig, Server};
+
+    /// Mock whose output depends on (batch, seed) — any divergence in
+    /// batch formation or seed sequencing between the single server and
+    /// the replica tier shows up as a value mismatch.
+    struct SeededExec;
+
+    impl Executor for SeededExec {
+        fn execute(&self, _images: &[f32], batch: usize, seed: u32) -> crate::Result<Vec<f32>> {
+            Ok((0..batch * 10)
+                .map(|i| seed as f32 * 1000.0 + batch as f32 * 100.0 + i as f32)
+                .collect())
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+    }
+
+    /// Executor that sleeps per batch — drives backlog for the admission
+    /// and stealing tests.
+    struct SlowExec(Duration);
+
+    impl Executor for SlowExec {
+        fn execute(&self, _images: &[f32], batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+            std::thread::sleep(self.0);
+            Ok(vec![0.0; batch * 10])
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+    }
+
+    fn cfg(target: usize, depth: usize) -> ReplicaConfig {
+        ReplicaConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                target_batch: target,
+                max_wait: Duration::from_millis(1),
+            },
+            seed: 5,
+            queue_depth: depth,
+            deadline: None,
+            slo: Duration::from_secs(1),
+        }
+    }
+
+    /// Pre-queued requests produce identical replies from the single
+    /// server and the 3-replica tier: same batch composition, same seed
+    /// sequence, regardless of which shard executed which batch.
+    #[test]
+    fn replica_tier_matches_single_server_bit_for_bit() {
+        let n = 10usize; // 3 size-cut batches + 1 drain batch at target 3
+        let serve = |replies: Vec<mpsc::Receiver<Reply>>| -> Vec<Vec<f32>> {
+            replies
+                .into_iter()
+                .map(|r| r.recv().unwrap().result.unwrap())
+                .collect()
+        };
+
+        let single = Server::new(
+            Box::new(SeededExec),
+            ServeConfig {
+                batcher: BatcherConfig {
+                    target_batch: 3,
+                    max_wait: Duration::from_secs(10),
+                },
+                seed: 5,
+                max_retries: 0,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let want_rx = submit_all(&tx, (0..n).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        single.run(rx);
+        let want = serve(want_rx);
+
+        let replica = ReplicaServer::new(
+            vec![SeededExec, SeededExec, SeededExec],
+            ReplicaConfig {
+                batcher: BatcherConfig {
+                    target_batch: 3,
+                    max_wait: Duration::from_secs(10),
+                },
+                seed: 5,
+                ..cfg(3, 1024)
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let got_rx = submit_all(&tx, (0..n).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        replica.run(rx);
+        let got = serve(got_rx);
+
+        assert_eq!(got, want, "replica tier must be bit-identical");
+        assert_eq!(replica.metrics.requests(), n as u64);
+        assert_eq!(replica.metrics.batches(), 4, "3 size cuts + 1 drain");
+    }
+
+    /// Admission control: with a slow executor and a shallow queue, the
+    /// overflow gets explicit `Err(REJECTED)` replies — the client always
+    /// receives a reply, never a dropped channel.
+    #[test]
+    fn admission_control_rejects_overflow_with_explicit_replies() {
+        let server = ReplicaServer::new(
+            vec![SlowExec(Duration::from_millis(20)), SlowExec(Duration::from_millis(20))],
+            cfg(1, 4),
+        );
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..32).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        let mut ok = 0u64;
+        let mut rejected = 0u64;
+        for r in replies {
+            let rep = r.recv().expect("reply delivered, never dropped");
+            match rep.result {
+                Ok(logits) => {
+                    assert_eq!(logits.len(), 10);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert_eq!(e, REJECTED);
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(ok + rejected, 32);
+        assert!(rejected > 0, "shallow queue must shed load");
+        assert!(ok >= 4, "admitted requests are served");
+        assert_eq!(server.metrics.rejected(), rejected);
+        assert_eq!(server.metrics.requests(), ok);
+    }
+
+    /// Deadline enforcement: requests older than the deadline at dispatch
+    /// get `Err(DEADLINE_EXCEEDED)` and are counted, not executed.
+    #[test]
+    fn overdue_requests_get_deadline_exceeded_replies() {
+        let server = ReplicaServer::new(
+            vec![SeededExec, SeededExec],
+            ReplicaConfig {
+                batcher: BatcherConfig {
+                    target_batch: 8,
+                    // the flush deadline is far beyond the request deadline
+                    max_wait: Duration::from_millis(60),
+                },
+                deadline: Some(Duration::from_millis(10)),
+                ..cfg(8, 1024)
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // the client keeps the channel open past the flush deadline so the
+        // batch is cut by max_wait (60 ms) — well past the 10 ms request
+        // deadline — rather than by an immediate shutdown drain
+        let client = std::thread::spawn(move || {
+            let replies = submit_all(&tx, (0..3).map(|_| vec![0.0f32; 4]));
+            std::thread::sleep(Duration::from_millis(120));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        for r in replies {
+            let rep = r.recv().expect("reply delivered");
+            assert_eq!(rep.result.unwrap_err(), DEADLINE_EXCEEDED);
+        }
+        assert_eq!(server.metrics.deadline_exceeded(), 3);
+        assert_eq!(server.metrics.requests(), 0);
+    }
+
+    /// Work stealing: a fast shard drains a slow sibling's backlog —
+    /// stolen batches are counted and every request still gets `Ok`.
+    #[test]
+    fn idle_shard_steals_from_slow_sibling_backlog() {
+        let server = ReplicaServer::new(
+            vec![SlowExec(Duration::from_millis(25)), SlowExec(Duration::from_millis(0))],
+            cfg(1, 1024),
+        );
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..16).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for r in replies {
+            assert!(r.recv().unwrap().result.is_ok());
+        }
+        assert_eq!(server.metrics.requests(), 16);
+        assert!(
+            server.metrics.stolen_batches() > 0,
+            "the fast shard must have stolen from the slow shard's queue"
+        );
+    }
+
+    /// A failing shard executor fails its batch loudly (every member gets
+    /// the error reply) without wedging the run loop.
+    struct FailingExec;
+
+    impl Executor for FailingExec {
+        fn execute(&self, _i: &[f32], _b: usize, _s: u32) -> crate::Result<Vec<f32>> {
+            Err(anyhow::anyhow!("injected shard failure"))
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+    }
+
+    #[test]
+    fn failing_shard_replies_error_to_every_member() {
+        let server = ReplicaServer::new(vec![FailingExec, FailingExec], cfg(4, 1024));
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..8).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for r in replies {
+            let rep = r.recv().expect("reply delivered, not abandoned");
+            assert!(rep.result.unwrap_err().contains("injected shard failure"));
+        }
+        assert!(server.metrics.requests() == 0);
+        assert!(server.metrics.to_json().get("shards").is_some());
+    }
+}

@@ -21,7 +21,9 @@ use super::grad::{
     sgd_update, softmax_ce, BnTape,
 };
 use super::TrainConfig;
-use crate::imc::{im2col, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
+use crate::imc::{
+    decompose_activations, im2col, ConvArena, PsConvert, PsConverterSpec, StoxConfig, StoxMvm,
+};
 use crate::model::infer::{fp_conv2d, layer_seed};
 use crate::model::weights::{Manifest, WeightStore};
 use crate::stats::rng::CounterRng;
@@ -337,8 +339,26 @@ impl Trainer {
         let m = op.kh * op.kw * op.cin;
         let mvm = StoxMvm::program(&wn, m, op.cout, *cfg)?;
         let seed = layer_seed(step_seed, op.layer_idx as u32);
-        let (out, ps) =
-            mvm.run_capture(&patches, b * ho * wo, op.converter.as_ref(), seed);
+        // fused digit-domain forward + capture when the integer kernel is
+        // in play (bit-identical to im2col + run_capture, pinned in
+        // mvm.rs and below); the im2col patches stay on the tape either
+        // way — the backward consumes them
+        let (out, ps) = if mvm.is_integer_kernel() {
+            let mut arena = ConvArena::new();
+            let acts = decompose_activations(&mut arena, x, b, h, w, op.cin, cfg);
+            let (out, ps, cho, cwo) = mvm.run_conv_digits_capture(
+                &acts,
+                op.kh,
+                op.kw,
+                op.stride,
+                op.converter.as_ref(),
+                seed,
+            );
+            debug_assert_eq!((cho, cwo), (ho, wo));
+            (out, ps)
+        } else {
+            mvm.run_capture(&patches, b * ho * wo, op.converter.as_ref(), seed)
+        };
         Ok((out, ConvTape { x: x.to_vec(), h, w, patches, ps, wn, scale, ho, wo }))
     }
 
@@ -715,5 +735,50 @@ mod tests {
         assert!(a.iter().all(|&i| i < 8));
         assert_ne!(batch_indices(7, 4, 4, 8), a, "steps draw fresh indices");
         assert_ne!(batch_indices(8, 3, 4, 8), a, "seed changes the draw");
+    }
+
+    /// The training forward now rides the fused digit-domain conv (ISSUE 6
+    /// carried follow-up): its activations and captured PS must be
+    /// bit-identical to the legacy im2col + `run_capture` tape, and the
+    /// im2col patches must still be on the tape for the backward.
+    #[test]
+    fn conv_forward_fused_matches_im2col_capture_tape() {
+        let (b, h, w, cin, cout) = (2usize, 5usize, 4usize, 3usize, 6usize);
+        let rng = CounterRng::new(77);
+        let x: Vec<f32> =
+            (0..b * h * w * cin).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect();
+        let wts: Vec<f32> = (0..3 * 3 * cin * cout)
+            .map(|i| rng.uniform_in((50_000 + i) as u32, -0.5, 0.5))
+            .collect();
+        let cfg = StoxConfig { r_arr: 16, w_slice_bits: 1, ..Default::default() };
+        let spec: PsConverterSpec = "stox:alpha=4,samples=2".parse().unwrap();
+        let op = ConvParam {
+            w: wts.clone(),
+            vel: vec![0.0; wts.len()],
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride: 1,
+            layer_idx: 1,
+            stochastic: true,
+            spec: spec.clone(),
+            converter: spec.build(&cfg).unwrap(),
+        };
+        let (out, tape) = Trainer::conv_forward(&op, &cfg, &x, b, h, w, 9).unwrap();
+
+        // legacy tape: im2col + run_capture at the same layer seed
+        let scale = wts.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-8;
+        let wn: Vec<f32> = wts.iter().map(|v| v / scale).collect();
+        let (patches, ho, wo) = im2col(&x, b, h, w, cin, 3, 3, 1);
+        let mvm = StoxMvm::program(&wn, 3 * 3 * cin, cout, cfg).unwrap();
+        assert!(mvm.is_integer_kernel(), "fixture must exercise the fused path");
+        let seed = layer_seed(9, 1);
+        let (want, want_ps) =
+            mvm.run_capture(&patches, b * ho * wo, op.converter.as_ref(), seed);
+        assert_eq!(out, want, "fused training forward != legacy capture");
+        assert_eq!(tape.ps, want_ps, "fused capture != legacy capture");
+        assert_eq!(tape.patches, patches, "im2col patches stay on the tape");
+        assert_eq!((tape.ho, tape.wo), (ho, wo));
     }
 }

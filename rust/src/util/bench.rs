@@ -84,11 +84,14 @@ pub fn black_box<T>(x: T) -> T {
 pub struct BenchSuite {
     name: String,
     results: Vec<BenchResult>,
+    /// per-case extra fields merged into the case object (the serving
+    /// sweep's offered/achieved-rps and SLO metadata ride here)
+    extras: Vec<Vec<(String, Json)>>,
 }
 
 impl BenchSuite {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), results: Vec::new() }
+        Self { name: name.to_string(), results: Vec::new(), extras: Vec::new() }
     }
 
     /// Run and record a case with the default windows (see [`quick`]);
@@ -101,7 +104,16 @@ impl BenchSuite {
     /// Record an externally measured case (custom windows); returns its
     /// index into [`BenchSuite::median_ns`].
     pub fn record(&mut self, r: BenchResult) -> usize {
+        self.record_with(r, Vec::new())
+    }
+
+    /// Record a case carrying extra per-case JSON fields (e.g. the
+    /// serving sweep's `offered_rps`/`achieved_rps`/SLO columns); the
+    /// extras are merged into the case object after the standard timing
+    /// fields, so a case cannot lose `median_ns` et al. to a collision.
+    pub fn record_with(&mut self, r: BenchResult, extras: Vec<(String, Json)>) -> usize {
         self.results.push(r);
+        self.extras.push(extras);
         self.results.len() - 1
     }
 
@@ -114,15 +126,19 @@ impl BenchSuite {
         let cases: Vec<Json> = self
             .results
             .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("name", Json::Str(r.name.clone())),
-                    ("iters", Json::Num(r.iters as f64)),
-                    ("median_ns", Json::Num(r.p50.as_nanos() as f64)),
-                    ("mean_ns", Json::Num(r.mean.as_nanos() as f64)),
-                    ("p95_ns", Json::Num(r.p95.as_nanos() as f64)),
-                    ("min_ns", Json::Num(r.min.as_nanos() as f64)),
-                ])
+            .zip(&self.extras)
+            .map(|(r, extras)| {
+                let mut m: std::collections::BTreeMap<String, Json> = extras
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                m.insert("name".into(), Json::Str(r.name.clone()));
+                m.insert("iters".into(), Json::Num(r.iters as f64));
+                m.insert("median_ns".into(), Json::Num(r.p50.as_nanos() as f64));
+                m.insert("mean_ns".into(), Json::Num(r.mean.as_nanos() as f64));
+                m.insert("p95_ns".into(), Json::Num(r.p95.as_nanos() as f64));
+                m.insert("min_ns".into(), Json::Num(r.min.as_nanos() as f64));
+                Json::Obj(m)
             })
             .collect();
         Json::obj(vec![
@@ -178,6 +194,33 @@ mod tests {
             Some("noop-case")
         );
         assert!(cases[0].get("median_ns").and_then(|m| m.as_f64()).is_some());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn record_with_merges_extras_without_clobbering_timing_fields() {
+        let dir = std::env::temp_dir().join("stox_bench_extras_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut suite = BenchSuite::new("unittest_extras");
+        let r = bench(
+            "rate-100",
+            Duration::from_millis(2),
+            Duration::from_millis(10),
+            || {},
+        );
+        suite.record_with(
+            r,
+            vec![
+                ("offered_rps".into(), Json::Num(100.0)),
+                ("median_ns".into(), Json::Num(-1.0)), // must not clobber
+            ],
+        );
+        let path = suite.write_json_to(&dir).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let case = &j.get("cases").and_then(|c| c.as_arr()).unwrap()[0];
+        assert_eq!(case.get("offered_rps").and_then(|v| v.as_f64()), Some(100.0));
+        let med = case.get("median_ns").and_then(|v| v.as_f64()).unwrap();
+        assert!(med >= 0.0, "timing field wins over a colliding extra");
         let _ = std::fs::remove_file(path);
     }
 

@@ -1,0 +1,249 @@
+//! Integration pins for the sharded replica serving tier (ISSUE 6) over
+//! the committed tiny checkpoint fixture (`rust/tests/data/tiny_inhomo/`):
+//!
+//! * N-replica serving is **bit-identical** to the single-threaded
+//!   [`Server`] loop for the same request stream, seed, and batcher
+//!   config — central batch formation + sequence-numbered seeds make the
+//!   replica count and shard assignment invisible to the logits;
+//! * the Poisson load generator produces a rate curve whose SLO counters
+//!   are populated and whose `BENCH_serving.json` artifact round-trips
+//!   through the JSON parser with the documented schema.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+use stox_net::coordinator::server::{submit_all, NativeExecutor, ServeConfig, Server};
+use stox_net::coordinator::BatcherConfig;
+use stox_net::model::weights::TestSet;
+use stox_net::model::{Manifest, NativeModel, WeightStore};
+use stox_net::serve::{run_sweep, LoadGenConfig, ReplicaConfig, ReplicaServer};
+use stox_net::util::json::Json;
+
+fn fixture() -> (Manifest, WeightStore, TestSet) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/tiny_inhomo");
+    let m = Manifest::load(dir).expect("tiny_inhomo fixture present");
+    let store = WeightStore::load(&m).unwrap();
+    let test = TestSet::load(&m).unwrap();
+    (m, store, test)
+}
+
+fn fixture_images(test: &TestSet, n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| test.image(i % test.n).to_vec()).collect()
+}
+
+/// Collect the logits of every reply in submission order, panicking on
+/// any shed (rejected / deadline-exceeded) request — these runs are
+/// sized so nothing is shed.
+fn run_replica_tier(
+    model: &NativeModel,
+    cfg: ReplicaConfig,
+    images: Vec<Vec<f32>>,
+) -> (Vec<Vec<f32>>, ReplicaServer<NativeExecutor>) {
+    let server = ReplicaServer::from_native(model, cfg);
+    let (tx, rx) = mpsc::channel();
+    let rxs = submit_all(&tx, images.into_iter());
+    drop(tx);
+    server.run(rx);
+    let logits = rxs
+        .into_iter()
+        .map(|r| r.recv().unwrap().result.expect("request not shed"))
+        .collect();
+    (logits, server)
+}
+
+/// The tentpole determinism pin: for the same pre-queued request stream,
+/// seed, and batcher config, the N-replica tier returns bit-identical
+/// logits to the single-`Server` coordinator — sharding and work
+/// stealing never touch the numerics.
+#[test]
+fn replica_tier_bit_identical_to_single_server() {
+    let (m, store, test) = fixture();
+    let batcher = BatcherConfig {
+        target_batch: 3,
+        // pre-queued requests flush by size/drain, never by deadline
+        max_wait: Duration::from_secs(10),
+    };
+    let images = fixture_images(&test, test.n);
+
+    // single-threaded reference
+    let single = Server::new(
+        Box::new(NativeExecutor { model: NativeModel::load(&m, &store).unwrap() }),
+        ServeConfig { batcher, seed: 5, max_retries: 0 },
+    );
+    let (tx, rx) = mpsc::channel();
+    let rxs = submit_all(&tx, images.clone().into_iter());
+    drop(tx);
+    single.run(rx);
+    let reference: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|r| r.recv().unwrap().result.unwrap())
+        .collect();
+
+    for replicas in [1usize, 3] {
+        let model = NativeModel::load(&m, &store).unwrap();
+        let cfg = ReplicaConfig {
+            replicas,
+            batcher,
+            seed: 5,
+            queue_depth: 1024,
+            deadline: None,
+            slo: Duration::from_secs(1),
+        };
+        let (logits, server) = run_replica_tier(&model, cfg, images.clone());
+        assert_eq!(
+            logits, reference,
+            "{replicas}-replica tier diverged from the single server"
+        );
+        assert_eq!(server.metrics.requests(), test.n as u64);
+        // 8 fixture images at target 3 → batches of 3, 3, 2
+        assert_eq!(server.metrics.batches(), 3);
+        assert_eq!(server.metrics.rejected(), 0);
+        assert_eq!(server.metrics.deadline_exceeded(), 0);
+    }
+}
+
+/// The replica tier's JSON report over a real model run: aggregate
+/// counters match, every shard object is present, and the per-shard
+/// request counts sum to the aggregate.
+#[test]
+fn replica_metrics_json_is_consistent_with_run() {
+    let (m, store, test) = fixture();
+    let model = NativeModel::load(&m, &store).unwrap();
+    let cfg = ReplicaConfig {
+        replicas: 2,
+        batcher: BatcherConfig { target_batch: 4, max_wait: Duration::from_secs(10) },
+        seed: 0,
+        queue_depth: 1024,
+        deadline: None,
+        slo: Duration::from_secs(5),
+    };
+    let (logits, server) = run_replica_tier(&model, cfg, fixture_images(&test, test.n));
+    assert_eq!(logits.len(), test.n);
+
+    let j = server.metrics.to_json();
+    assert_eq!(j.get("replicas").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(j.get("requests").and_then(|v| v.as_usize()), Some(test.n));
+    let shards = j.get("shards").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(shards.len(), 2);
+    let shard_sum: usize = shards
+        .iter()
+        .map(|s| s.get("requests").and_then(|v| v.as_usize()).unwrap())
+        .sum();
+    assert_eq!(shard_sum, test.n, "per-shard requests must sum to aggregate");
+    // generous SLO (5 s) on the tiny model: everything attains
+    let slo = j.get("slo").unwrap();
+    assert_eq!(slo.get("ok").and_then(|v| v.as_usize()), Some(test.n));
+    assert_eq!(slo.get("attainment").and_then(|v| v.as_f64()), Some(1.0));
+    assert!(j.get("latency_us").unwrap().get("p999").and_then(|v| v.as_f64()).is_some());
+}
+
+/// The load generator sweeps offered rates, every submitted request is
+/// accounted for (served + shed), SLO counters populate, and the
+/// `BENCH_serving.json` artifact round-trips with offered/achieved-rps
+/// extras merged next to the timing fields.
+#[test]
+fn loadgen_sweep_curve_and_artifact() {
+    let (m, store, test) = fixture();
+    let model = NativeModel::load(&m, &store).unwrap();
+    let cfg = ReplicaConfig {
+        replicas: 2,
+        batcher: BatcherConfig { target_batch: 4, max_wait: Duration::from_millis(2) },
+        seed: 0,
+        queue_depth: 1024,
+        deadline: None,
+        // generous SLO: the pin is that counters populate, not the value
+        slo: Duration::from_secs(5),
+    };
+    let lg = LoadGenConfig {
+        start_rps: 40.0,
+        growth: 2.0,
+        steps: 3,
+        requests_per_step: 16,
+        // never cut early on a loaded CI machine — run all 3 points
+        saturation_frac: 0.0,
+        seed: 7,
+    };
+    let images = fixture_images(&test, test.n);
+    let (points, suite) = run_sweep(&model, &cfg, &images, &lg);
+
+    assert_eq!(points.len(), 3, "sat-frac 0 runs every rate point");
+    assert!(
+        points.windows(2).all(|w| w[1].offered_rps > w[0].offered_rps),
+        "offered rates grow monotonically"
+    );
+    for p in &points {
+        assert_eq!(
+            p.ok + p.rejected + p.deadline_exceeded,
+            p.requests as u64,
+            "every request is served or explicitly shed at {} rps",
+            p.offered_rps
+        );
+        assert!(p.ok > 0, "some requests served at {} rps", p.offered_rps);
+        assert!(p.achieved_rps > 0.0);
+        // populated SLO counters: attainment reflects served requests
+        assert!((0.0..=1.0).contains(&p.slo_attainment));
+        // percentiles are monotone in p (bin-interpolated, so min can sit
+        // anywhere inside p50's bin — only the ordering is pinned)
+        assert!(p.p50_us <= p.p99_us && p.p99_us <= p.p999_us);
+        assert!(p.min_us >= 0.0 && p.mean_us > 0.0);
+    }
+
+    let dir = std::env::temp_dir().join("stox_serve_loadgen_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = suite.write_json_to(&dir).unwrap();
+    assert!(path.ends_with("BENCH_serving.json"));
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("serving"));
+    let cases = j.get("cases").and_then(|c| c.as_arr()).unwrap();
+    assert_eq!(cases.len(), points.len());
+    for (case, p) in cases.iter().zip(&points) {
+        assert_eq!(
+            case.get("offered_rps").and_then(|v| v.as_f64()),
+            Some(p.offered_rps)
+        );
+        assert!(case.get("achieved_rps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(case.get("median_ns").and_then(|v| v.as_f64()).is_some());
+        assert!(case.get("slo_attainment").and_then(|v| v.as_f64()).is_some());
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+/// Admission control against the real model: a queue depth of 1 under a
+/// pre-queued burst sheds load with explicit rejection replies — the
+/// client always hears back, and served + rejected accounts for the
+/// whole burst.
+#[test]
+fn admission_control_sheds_with_explicit_replies_on_fixture() {
+    let (m, store, test) = fixture();
+    let model = NativeModel::load(&m, &store).unwrap();
+    let server = ReplicaServer::from_native(
+        &model,
+        ReplicaConfig {
+            replicas: 2,
+            batcher: BatcherConfig { target_batch: 1, max_wait: Duration::from_millis(1) },
+            seed: 0,
+            queue_depth: 1,
+            deadline: None,
+            slo: Duration::from_secs(1),
+        },
+    );
+    let n = 24usize;
+    let (tx, rx) = mpsc::channel();
+    let rxs = submit_all(&tx, fixture_images(&test, n).into_iter());
+    drop(tx);
+    server.run(rx);
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for r in rxs {
+        match r.recv().expect("reply always delivered").result {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                assert_eq!(e, stox_net::serve::REJECTED);
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(ok + rejected, n as u64);
+    assert!(rejected > 0, "depth-1 queue under a 24-request burst must shed");
+    assert_eq!(server.metrics.rejected(), rejected);
+    assert_eq!(server.metrics.requests(), ok);
+}
