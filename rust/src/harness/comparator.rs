@@ -1,0 +1,483 @@
+//! Expectation matching: the scenario `expect:` block against the
+//! executor's actual-output document.
+//!
+//! Every check addresses a `/`-separated [`path`](lookup) into the actual
+//! document and names a match mode:
+//!
+//! | mode        | semantics                                                        |
+//! |-------------|------------------------------------------------------------------|
+//! | `exact`     | byte-for-byte JSON equality (bit-pins)                           |
+//! | `tolerance` | recursive numeric compare, `|a−e| ≤ atol + rtol·|e|`             |
+//! | `subset`    | every field of the expected value exists and matches in actual   |
+//! | `ordering`  | the values at `paths` are strictly sorted per `direction`        |
+//! | `monotonic` | an array (optionally projected through `key`) is sorted          |
+//! | `range`     | a number lies inside the inclusive `[min, max]` interval         |
+//!
+//! The expected value comes from an inline `value:` or from a `golden:`
+//! file next to the scenario.  Golden files are canonical JSON (sorted
+//! keys, the byte-stable [`Json`] writer); a missing golden — or any
+//! golden under `UPDATE_SCENARIOS=1` / `--update` — is *blessed* from the
+//! actual output, mirroring the `sweep_golden.json` bless idiom, so CI
+//! can regenerate and re-verify the whole suite in one run.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One structured mismatch: where in the actual document, and what went
+/// wrong — the unit both the terminal table and `scenarios_report.json`
+/// render.
+#[derive(Debug, Clone)]
+pub struct Diff {
+    /// `/`-separated location inside the actual output document.
+    pub path: String,
+    /// Human-readable expected-vs-actual description.
+    pub detail: String,
+}
+
+impl Diff {
+    fn new(path: impl Into<String>, detail: impl Into<String>) -> Self {
+        Diff { path: path.into(), detail: detail.into() }
+    }
+
+    /// The diff as a JSON object (for the machine-readable report).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::Str(self.path.clone())),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Outcome of one scenario's expectation block.
+#[derive(Debug, Default)]
+pub struct CheckOutcome {
+    /// All mismatches, in check order (empty == pass).
+    pub diffs: Vec<Diff>,
+    /// Golden files (re)written this run, relative to the scenario dir.
+    pub blessed: Vec<String>,
+}
+
+/// Resolve a `/`-separated path inside a document.  Each segment is an
+/// object key, or an index when the current node is an array — keys
+/// themselves (converter specs, matrix cells like `4w4a4bs|ideal`) never
+/// contain `/`.
+pub fn lookup<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = doc;
+    for seg in path.split('/') {
+        cur = match cur {
+            Json::Arr(v) => v.get(seg.parse::<usize>().ok()?)?,
+            other => other.get(seg)?,
+        };
+    }
+    Some(cur)
+}
+
+/// Run every check of an `expect:` list against `actual`.  `scenario_dir`
+/// anchors `golden:` references; `update` forces re-blessing them.
+pub fn run_checks(
+    actual: &Json,
+    checks: &[Json],
+    scenario_dir: &Path,
+    update: bool,
+) -> crate::Result<CheckOutcome> {
+    let mut out = CheckOutcome::default();
+    for (idx, check) in checks.iter().enumerate() {
+        let mode = check.get("mode").and_then(|m| m.as_str()).unwrap_or("exact");
+        match mode {
+            "ordering" => check_ordering(actual, check, idx, &mut out.diffs)?,
+            "monotonic" => check_monotonic(actual, check, idx, &mut out.diffs)?,
+            "range" => check_range(actual, check, idx, &mut out.diffs)?,
+            "exact" | "tolerance" | "subset" => {
+                check_valued(actual, check, idx, mode, scenario_dir, update, &mut out)?
+            }
+            other => anyhow::bail!("check #{idx}: unknown match mode '{other}'"),
+        }
+    }
+    Ok(out)
+}
+
+fn req_path<'a>(check: &'a Json, idx: usize) -> crate::Result<&'a str> {
+    check
+        .get("path")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| anyhow::anyhow!("check #{idx}: missing 'path'"))
+}
+
+fn resolve<'a>(
+    actual: &'a Json,
+    path: &str,
+    idx: usize,
+    diffs: &mut Vec<Diff>,
+) -> Option<&'a Json> {
+    match lookup(actual, path) {
+        Some(v) => Some(v),
+        None => {
+            diffs.push(Diff::new(
+                path,
+                format!("check #{idx}: path not present in the actual output"),
+            ));
+            None
+        }
+    }
+}
+
+fn check_valued(
+    actual: &Json,
+    check: &Json,
+    idx: usize,
+    mode: &str,
+    scenario_dir: &Path,
+    update: bool,
+    out: &mut CheckOutcome,
+) -> crate::Result<()> {
+    let path = req_path(check, idx)?;
+    let Some(got) = resolve(actual, path, idx, &mut out.diffs) else {
+        return Ok(());
+    };
+    let expected = match check.get("golden").and_then(|g| g.as_str()) {
+        Some(file) => {
+            let gp = scenario_dir.join(file);
+            if update || !gp.exists() {
+                if let Some(parent) = gp.parent() {
+                    let _ = std::fs::create_dir_all(parent);
+                }
+                std::fs::write(&gp, got.to_string()).map_err(|e| {
+                    anyhow::anyhow!("check #{idx}: cannot bless {}: {e}", gp.display())
+                })?;
+                out.blessed.push(file.to_string());
+                return Ok(());
+            }
+            let text = std::fs::read_to_string(&gp)?;
+            Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("check #{idx}: golden {file} unparsable: {e}"))?
+        }
+        None => check
+            .get("value")
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("check #{idx}: needs 'value' or 'golden'"))?,
+    };
+    let atol = check.get("atol").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let rtol = check.get("rtol").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let before = out.diffs.len();
+    match mode {
+        "exact" => {
+            if *got != expected {
+                out.diffs.push(Diff::new(
+                    path,
+                    format!(
+                        "check #{idx}: expected {} got {}",
+                        clip(&expected.to_string()),
+                        clip(&got.to_string())
+                    ),
+                ));
+            }
+        }
+        "tolerance" => compare_tree(got, &expected, atol, rtol, false, path, idx, &mut out.diffs),
+        "subset" => compare_tree(got, &expected, atol, rtol, true, path, idx, &mut out.diffs),
+        _ => unreachable!("valued mode"),
+    }
+    // keep failure reports readable: one check caps its diff fan-out
+    if out.diffs.len() > before + 8 {
+        let dropped = out.diffs.len() - before - 8;
+        out.diffs.truncate(before + 8);
+        out.diffs.push(Diff::new(path, format!("check #{idx}: … {dropped} more mismatches")));
+    }
+    Ok(())
+}
+
+/// Recursive structural compare.  `subset` relaxes objects (expected keys
+/// only); arrays always compare by position and full length — artifact
+/// rows are ordered, so a length change is a real diff.
+#[allow(clippy::too_many_arguments)]
+fn compare_tree(
+    got: &Json,
+    want: &Json,
+    atol: f64,
+    rtol: f64,
+    subset: bool,
+    path: &str,
+    idx: usize,
+    diffs: &mut Vec<Diff>,
+) {
+    match (got, want) {
+        (Json::Num(a), Json::Num(e)) => {
+            if !((a - e).abs() <= atol + rtol * e.abs()) {
+                diffs.push(Diff::new(
+                    path,
+                    format!("check #{idx}: |{a} - {e}| > atol {atol} + rtol {rtol}·|{e}|"),
+                ));
+            }
+        }
+        (Json::Obj(a), Json::Obj(e)) => {
+            for (k, ev) in e {
+                let sub = format!("{path}/{k}");
+                match a.get(k) {
+                    Some(av) => compare_tree(av, ev, atol, rtol, subset, &sub, idx, diffs),
+                    None => diffs.push(Diff::new(sub, format!("check #{idx}: key missing"))),
+                }
+            }
+            if !subset {
+                for k in a.keys().filter(|k| !e.contains_key(*k)) {
+                    diffs.push(Diff::new(
+                        format!("{path}/{k}"),
+                        format!("check #{idx}: unexpected key"),
+                    ));
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(e)) => {
+            if a.len() != e.len() {
+                diffs.push(Diff::new(
+                    path,
+                    format!("check #{idx}: length {} != expected {}", a.len(), e.len()),
+                ));
+                return;
+            }
+            for (i, (av, ev)) in a.iter().zip(e).enumerate() {
+                compare_tree(av, ev, atol, rtol, subset, &format!("{path}/{i}"), idx, diffs);
+            }
+        }
+        (a, e) if a == e => {}
+        (a, e) => diffs.push(Diff::new(
+            path,
+            format!("check #{idx}: expected {} got {}", clip(&e.to_string()), clip(&a.to_string())),
+        )),
+    }
+}
+
+fn check_ordering(
+    actual: &Json,
+    check: &Json,
+    idx: usize,
+    diffs: &mut Vec<Diff>,
+) -> crate::Result<()> {
+    let paths = check
+        .get("paths")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("check #{idx}: ordering needs 'paths'"))?;
+    let ascending = direction(check, idx)?;
+    let mut vals: Vec<(String, f64)> = Vec::new();
+    for p in paths {
+        let p = p
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("check #{idx}: ordering path not a string"))?;
+        let Some(v) = resolve(actual, p, idx, diffs) else { return Ok(()) };
+        let Some(n) = v.as_f64() else {
+            diffs.push(Diff::new(p, format!("check #{idx}: not a number")));
+            return Ok(());
+        };
+        vals.push((p.to_string(), n));
+    }
+    for w in vals.windows(2) {
+        let ok = if ascending { w[0].1 < w[1].1 } else { w[0].1 > w[1].1 };
+        if !ok {
+            diffs.push(Diff::new(
+                w[1].0.clone(),
+                format!(
+                    "check #{idx}: ordering violated — {} = {} vs {} = {} ({})",
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1,
+                    if ascending { "ascending" } else { "descending" }
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn check_monotonic(
+    actual: &Json,
+    check: &Json,
+    idx: usize,
+    diffs: &mut Vec<Diff>,
+) -> crate::Result<()> {
+    let path = req_path(check, idx)?;
+    let ascending = direction(check, idx)?;
+    let strict = check.get("strict").and_then(|v| v.as_bool()).unwrap_or(false);
+    let key = check.get("key").and_then(|v| v.as_str());
+    let Some(node) = resolve(actual, path, idx, diffs) else { return Ok(()) };
+    let Some(arr) = node.as_arr() else {
+        diffs.push(Diff::new(path, format!("check #{idx}: not an array")));
+        return Ok(());
+    };
+    let mut vals = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let v = match key {
+            Some(k) => item.get(k),
+            None => Some(item),
+        };
+        match v.and_then(|v| v.as_f64()) {
+            Some(n) => vals.push(n),
+            None => {
+                diffs.push(Diff::new(
+                    format!("{path}/{i}"),
+                    format!("check #{idx}: element not a number"),
+                ));
+                return Ok(());
+            }
+        }
+    }
+    for (i, w) in vals.windows(2).enumerate() {
+        let ok = match (ascending, strict) {
+            (true, true) => w[0] < w[1],
+            (true, false) => w[0] <= w[1],
+            (false, true) => w[0] > w[1],
+            (false, false) => w[0] >= w[1],
+        };
+        if !ok {
+            diffs.push(Diff::new(
+                format!("{path}/{}", i + 1),
+                format!("check #{idx}: monotonicity violated — {} then {}", w[0], w[1]),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn check_range(
+    actual: &Json,
+    check: &Json,
+    idx: usize,
+    diffs: &mut Vec<Diff>,
+) -> crate::Result<()> {
+    let path = req_path(check, idx)?;
+    let Some(node) = resolve(actual, path, idx, diffs) else { return Ok(()) };
+    let Some(n) = node.as_f64() else {
+        diffs.push(Diff::new(path, format!("check #{idx}: not a number")));
+        return Ok(());
+    };
+    if let Some(min) = check.get("min").and_then(|v| v.as_f64()) {
+        if n < min {
+            diffs.push(Diff::new(path, format!("check #{idx}: {n} < min {min}")));
+        }
+    }
+    if let Some(max) = check.get("max").and_then(|v| v.as_f64()) {
+        if n > max {
+            diffs.push(Diff::new(path, format!("check #{idx}: {n} > max {max}")));
+        }
+    }
+    anyhow::ensure!(
+        check.get("min").is_some() || check.get("max").is_some(),
+        "check #{idx}: range needs 'min' and/or 'max'"
+    );
+    Ok(())
+}
+
+fn direction(check: &Json, idx: usize) -> crate::Result<bool> {
+    match check.get("direction").and_then(|d| d.as_str()).unwrap_or("ascending") {
+        "ascending" => Ok(true),
+        "descending" => Ok(false),
+        d => anyhow::bail!("check #{idx}: bad direction '{d}' (ascending|descending)"),
+    }
+}
+
+fn clip(s: &str) -> String {
+    const MAX: usize = 160;
+    if s.len() <= MAX {
+        return s.to_string();
+    }
+    let mut cut = MAX;
+    while !s.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    format!("{}… ({} bytes)", &s[..cut], s.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        Json::parse(
+            r#"{"acc": 0.875, "flags": {"det": true, "extra": 1},
+                "curve": [{"edp": 1.0}, {"edp": 2.5}, {"edp": 2.5}],
+                "cells": {"a": {"edp": 3.0}, "b": {"edp": 7.0}}}"#,
+        )
+        .unwrap()
+    }
+
+    fn checks(yaml_like_json: &str) -> Vec<Json> {
+        Json::parse(yaml_like_json).unwrap().as_arr().unwrap().to_vec()
+    }
+
+    #[test]
+    fn lookup_paths() {
+        let d = doc();
+        assert_eq!(lookup(&d, "curve/1/edp").unwrap().as_f64(), Some(2.5));
+        assert_eq!(lookup(&d, "cells/b/edp").unwrap().as_f64(), Some(7.0));
+        assert!(lookup(&d, "cells/missing/edp").is_none());
+    }
+
+    #[test]
+    fn exact_tolerance_subset() {
+        let d = doc();
+        let cs = checks(
+            r#"[{"path": "acc", "mode": "exact", "value": 0.875},
+                {"path": "acc", "mode": "tolerance", "value": 0.9, "atol": 0.05},
+                {"path": "flags", "mode": "subset", "value": {"det": true}}]"#,
+        );
+        let out = run_checks(&d, &cs, std::path::Path::new("."), false).unwrap();
+        assert!(out.diffs.is_empty(), "{:?}", out.diffs);
+
+        let bad = checks(
+            r#"[{"path": "acc", "mode": "tolerance", "value": 0.9, "atol": 0.01},
+                {"path": "flags", "mode": "subset", "value": {"det": false}},
+                {"path": "flags", "mode": "exact", "value": {"det": true}}]"#,
+        );
+        let out = run_checks(&d, &bad, std::path::Path::new("."), false).unwrap();
+        assert_eq!(out.diffs.len(), 3, "{:?}", out.diffs);
+    }
+
+    #[test]
+    fn ordering_monotonic_range() {
+        let d = doc();
+        let cs = checks(
+            r#"[{"mode": "ordering", "paths": ["cells/a/edp", "cells/b/edp"], "direction": "ascending"},
+                {"mode": "monotonic", "path": "curve", "key": "edp", "direction": "ascending"},
+                {"mode": "range", "path": "acc", "min": 0.5, "max": 1.0}]"#,
+        );
+        let out = run_checks(&d, &cs, std::path::Path::new("."), false).unwrap();
+        assert!(out.diffs.is_empty(), "{:?}", out.diffs);
+
+        let bad = checks(
+            r#"[{"mode": "ordering", "paths": ["cells/b/edp", "cells/a/edp"]},
+                {"mode": "monotonic", "path": "curve", "key": "edp", "strict": true},
+                {"mode": "range", "path": "acc", "min": 0.9}]"#,
+        );
+        let out = run_checks(&d, &bad, std::path::Path::new("."), false).unwrap();
+        assert_eq!(out.diffs.len(), 3, "{:?}", out.diffs);
+    }
+
+    #[test]
+    fn golden_bless_then_verify_then_diff() {
+        let d = doc();
+        let dir = std::env::temp_dir().join(format!("stox_cmp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cs = checks(r#"[{"path": "cells", "mode": "exact", "golden": "cells.golden.json"}]"#);
+
+        let out = run_checks(&d, &cs, &dir, false).unwrap();
+        assert_eq!(out.blessed, vec!["cells.golden.json"]);
+        assert!(out.diffs.is_empty());
+
+        let out = run_checks(&d, &cs, &dir, false).unwrap();
+        assert!(out.blessed.is_empty() && out.diffs.is_empty(), "re-run verifies");
+
+        std::fs::write(dir.join("cells.golden.json"), r#"{"a":{"edp":3},"b":{"edp":8}}"#).unwrap();
+        let out = run_checks(&d, &cs, &dir, false).unwrap();
+        assert_eq!(out.diffs.len(), 1, "perturbed golden must diff");
+
+        let out = run_checks(&d, &cs, &dir, true).unwrap();
+        assert_eq!(out.blessed.len(), 1, "update re-blesses");
+        let out = run_checks(&d, &cs, &dir, false).unwrap();
+        assert!(out.diffs.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_mode_is_an_error() {
+        let cs = checks(r#"[{"path": "acc", "mode": "fuzzy", "value": 1}]"#);
+        assert!(run_checks(&doc(), &cs, std::path::Path::new("."), false).is_err());
+    }
+}

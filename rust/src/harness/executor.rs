@@ -1,0 +1,569 @@
+//! Scenario execution: each `stage:` maps onto the crate's in-process
+//! entry points — no subprocesses, so scenarios are as fast and as
+//! deterministic as the unit tests they replace.
+//!
+//! | stage      | entry points                                                     |
+//! |------------|------------------------------------------------------------------|
+//! | `infer`    | [`NativeModel::load_with_config`] + converter/precision overrides |
+//! | `sweep`    | [`run_matrix_sweep`] over [`GoldenWorkload`]s                     |
+//! | `train`    | [`Trainer`] twice per seed + [`export_checkpoint`] round-trip     |
+//! | `serve`    | [`ReplicaServer`] (and the single [`Server`] as reference)        |
+//! | `nonideal` | [`NonidealCrossbar`] RMS-error ablation vs the ideal MVM          |
+//! | `parse`    | [`PsConverterSpec::from_mode`] / [`StoxConfig::from_tag`]         |
+//!
+//! The output of a stage is one [`Json`] document whose fields the
+//! scenario's `expect:` block addresses by `/`-path; timing-dependent
+//! quantities (wall-clock latency, shard assignment under stealing) are
+//! deliberately *not* folded into pinnable scalars — scenarios pin the
+//! deterministic contract (logits, counters, orderings) and leave the
+//! rest to `subset`/`range` checks.
+
+use crate::arch::sweep::{parse_precision_tags, run_matrix_sweep, GoldenWorkload};
+use crate::coordinator::server::{submit_all, Executor, NativeExecutor, Reply, ServeConfig, Server};
+use crate::coordinator::BatcherConfig;
+use crate::imc::{Nonideality, NonidealCrossbar, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
+use crate::model::weights::TestSet;
+use crate::model::{zoo, Manifest, NativeModel, WeightStore};
+use crate::serve::{ReplicaConfig, ReplicaServer};
+use crate::stats::rng::CounterRng;
+use crate::train::{export_checkpoint, TrainConfig, Trainer};
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Run the scenario's stage and return the actual-output document.
+///
+/// An `Err` is a *stage* failure (bad config, parse error, …): the
+/// runner matches it against the scenario's `expect_error:` string, so
+/// negative-path scenarios pin exact error messages.
+pub fn run_stage(scenario: &Json) -> crate::Result<Json> {
+    let stage = scenario
+        .get("stage")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("scenario missing 'stage'"))?;
+    let empty = Json::obj(vec![]);
+    let cfg = scenario.get("config").unwrap_or(&empty);
+    match stage {
+        "infer" => stage_infer(cfg),
+        "sweep" => stage_sweep(cfg),
+        "train" => stage_train(cfg),
+        "serve" => stage_serve(cfg),
+        "nonideal" => stage_nonideal(cfg),
+        "parse" => stage_parse(cfg),
+        other => anyhow::bail!(
+            "unknown stage '{other}' (infer|sweep|train|serve|nonideal|parse)"
+        ),
+    }
+}
+
+/// Resolve a committed fixture by name: `rust/tests/data/<name>` relative
+/// to the working directory, falling back to the compile-time crate root
+/// so the harness works both from `cargo test` and from an installed
+/// `stox-cli` run elsewhere in the checkout.
+pub fn fixture_dir(name: &str) -> PathBuf {
+    let rel = PathBuf::from("rust/tests/data").join(name);
+    if rel.join("manifest.json").exists() {
+        return rel;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data").join(name)
+}
+
+// ---------- config accessors ----------
+
+fn s<'a>(cfg: &'a Json, key: &str) -> Option<&'a str> {
+    cfg.get(key).and_then(|v| v.as_str())
+}
+
+fn n_usize(cfg: &Json, key: &str, default: usize) -> usize {
+    cfg.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+}
+
+fn n_u32(cfg: &Json, key: &str, default: u32) -> u32 {
+    cfg.get(key).and_then(|v| v.as_u32()).unwrap_or(default)
+}
+
+fn n_f32(cfg: &Json, key: &str, default: f32) -> f32 {
+    cfg.get(key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(default)
+}
+
+fn flag(cfg: &Json, key: &str, default: bool) -> bool {
+    cfg.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+}
+
+fn load_fixture(cfg: &Json) -> crate::Result<(Manifest, WeightStore, TestSet)> {
+    let name = s(cfg, "fixture").unwrap_or("tiny_inhomo");
+    let m = Manifest::load(fixture_dir(name))?;
+    let store = WeightStore::load(&m)?;
+    let test = TestSet::load(&m)?;
+    Ok((m, store, test))
+}
+
+fn hw_config(cfg: &Json, m: &Manifest) -> crate::Result<StoxConfig> {
+    match s(cfg, "precision") {
+        Some(tag) => m.spec.precision_config(tag),
+        None => Ok(m.spec.stox_config()),
+    }
+}
+
+fn f32s_to_json(v: &[f32]) -> Json {
+    // f32 → f64 is exact, and the JSON writer round-trips f64, so these
+    // arrays bit-pin the logits when used with `exact` golden checks
+    Json::Arr(v.iter().map(|&x| Json::Num(f64::from(x))).collect())
+}
+
+// ---------- infer ----------
+
+fn stage_infer(cfg: &Json) -> crate::Result<Json> {
+    let (m, store, test) = load_fixture(cfg)?;
+    let hw = hw_config(cfg, &m)?;
+    let mut model = NativeModel::load_with_config(&m, &store, hw)?;
+    let mut converter = Json::Null;
+    if let Some(c) = s(cfg, "converter") {
+        let spec = PsConverterSpec::from_mode(c, hw.alpha, hw.n_samples)?;
+        converter = Json::Str(spec.to_string());
+        model = model.with_converter_spec(&spec)?;
+    }
+    let seed = n_u32(cfg, "seed", 7);
+    let batch = n_usize(cfg, "batch", 8);
+    let n = test.n;
+    let img_sz = model.image_size * model.image_size * model.in_channels;
+    let classes = model.num_classes;
+
+    let accuracy = model.accuracy(&test.images, &test.labels, n, batch, seed);
+    let l1 = model.forward(&test.images[..n * img_sz], n, seed);
+    let l2 = model.forward(&test.images[..n * img_sz], n, seed);
+    let l3 = model.forward(&test.images[..n * img_sz], n, seed.wrapping_add(1));
+
+    // logit margin of the labeled class per image — the trained-fixture
+    // ordering claims (margins strictly positive, trained ≫ random-init)
+    let mut margins = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &l1[i * classes..(i + 1) * classes];
+        let lab = test.labels[i] as usize;
+        let best_other = row
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| *k != lab)
+            .map(|(_, &v)| v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        margins.push(row[lab] - best_other);
+    }
+    let min_margin = margins.iter().copied().fold(f32::INFINITY, f32::min);
+
+    let mut out = vec![
+        ("fixture", Json::Str(s(cfg, "fixture").unwrap_or("tiny_inhomo").to_string())),
+        ("tag", Json::Str(hw.tag())),
+        ("converter", converter),
+        ("classes", Json::Num(classes as f64)),
+        ("images", Json::Num(n as f64)),
+        ("accuracy", Json::Num(accuracy)),
+        ("deterministic", Json::Bool(l1 == l2)),
+        ("seed_invariant", Json::Bool(l1 == l3)),
+        ("logits0", f32s_to_json(&l1[..classes])),
+        ("margins", f32s_to_json(&margins)),
+        ("min_margin", Json::Num(f64::from(min_margin))),
+    ];
+
+    // trained-vs-random ordering: score a reference fixture with its own
+    // manifest config on the same images/seed and report the gap
+    if let Some(rf) = s(cfg, "ref_fixture") {
+        let rm = Manifest::load(fixture_dir(rf))?;
+        let rstore = WeightStore::load(&rm)?;
+        let rtest = TestSet::load(&rm)?;
+        let rmodel = NativeModel::load(&rm, &rstore)?;
+        let racc = rmodel.accuracy(&rtest.images, &rtest.labels, rtest.n, batch, seed);
+        out.push(("ref_accuracy", Json::Num(racc)));
+        out.push(("accuracy_gap", Json::Num(accuracy - racc)));
+    }
+    Ok(Json::obj(out))
+}
+
+// ---------- sweep ----------
+
+fn default_sweep_specs() -> Vec<PsConverterSpec> {
+    [
+        "ideal",
+        "quant:bits=8",
+        "sparse:bits=4",
+        "sa",
+        "expected:alpha=4",
+        "stox:alpha=4,samples=1",
+        "stox:alpha=4,samples=4",
+        "inhomo:alpha=4,base=1,extra=3",
+    ]
+    .iter()
+    .map(|s| s.parse().expect("builtin specs parse"))
+    .collect()
+}
+
+fn stage_sweep(cfg: &Json) -> crate::Result<Json> {
+    let inputs = n_usize(cfg, "inputs", 48);
+    let seed = n_u32(cfg, "seed", 2024);
+    let tags = s(cfg, "precision").unwrap_or("4w4a4bs,8w8a4bs");
+    let base = StoxConfig::default();
+    let tag_cfgs = parse_precision_tags(tags, &base)?;
+    let specs: Vec<PsConverterSpec> = match cfg.get("specs").and_then(|v| v.as_arr()) {
+        Some(list) => list
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("sweep spec not a string"))
+                    .and_then(|t| t.parse::<PsConverterSpec>())
+            })
+            .collect::<crate::Result<_>>()?,
+        None => default_sweep_specs(),
+    };
+    let workloads: Vec<GoldenWorkload> = tag_cfgs
+        .iter()
+        .map(|c| GoldenWorkload::new(*c, inputs, seed))
+        .collect::<crate::Result<_>>()?;
+    let grid: Vec<(StoxConfig, Vec<PsConverterSpec>)> =
+        tag_cfgs.iter().map(|c| (*c, specs.clone())).collect();
+    let layers = zoo::resnet20_cifar();
+    let run = |threads: usize| {
+        run_matrix_sweep(&grid, &layers, "resnet20_cifar", seed, threads, |ti, spec| {
+            Ok(workloads[ti].accuracy(spec.build(workloads[ti].cfg())?.as_ref()))
+        })
+    };
+    let r = run(1)?;
+    let json = r.to_json();
+    let thread_invariant = if flag(cfg, "check_threads", true) {
+        run(2)?.to_json().to_string() == json.to_string()
+    } else {
+        true
+    };
+
+    // flatten to `tag|spec` cells so checks address matrix cells directly
+    let cells = Json::Obj(
+        r.points
+            .iter()
+            .map(|p| {
+                (
+                    format!("{}|{}", p.tag, p.spec),
+                    Json::obj(vec![
+                        ("label", Json::Str(p.label.clone())),
+                        ("accuracy", Json::Num(p.accuracy)),
+                        ("energy_pj", Json::Num(p.energy_pj)),
+                        ("latency_ns", Json::Num(p.latency_ns)),
+                        ("area_um2", Json::Num(p.area_um2)),
+                        ("edp_pj_ns", Json::Num(p.edp_pj_ns)),
+                        ("conversions", Json::Num(p.conversions as f64)),
+                        ("xbars", Json::Num(p.xbars as f64)),
+                        ("on_front", Json::Bool(p.on_front)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let csv = r.to_csv();
+    Ok(Json::obj(vec![
+        ("workload", Json::Str(r.workload.clone())),
+        ("seed", Json::Num(seed as f64)),
+        ("points", Json::Num(r.points.len() as f64)),
+        ("front_size", Json::Num(r.front().len() as f64)),
+        ("thread_invariant", Json::Bool(thread_invariant)),
+        ("cells", cells),
+        ("csv_header", Json::Str(csv.lines().next().unwrap_or("").to_string())),
+        ("csv_rows", Json::Num(csv.lines().count().saturating_sub(1) as f64)),
+        ("table_has_front", Json::Bool(r.render_table().contains("pareto front"))),
+        ("result", json),
+    ]))
+}
+
+// ---------- train ----------
+
+fn stage_train(cfg: &Json) -> crate::Result<Json> {
+    let (m, store, test) = load_fixture(cfg)?;
+    let hw = hw_config(cfg, &m)?;
+    let conv_override = match s(cfg, "converter") {
+        Some(c) => Some(PsConverterSpec::from_mode(c, hw.alpha, hw.n_samples)?),
+        None => None,
+    };
+    let tc = TrainConfig {
+        steps: n_usize(cfg, "steps", 20),
+        batch: n_usize(cfg, "batch", 4),
+        lr: n_f32(cfg, "lr", 0.05),
+        momentum: n_f32(cfg, "momentum", 0.9),
+        weight_decay: n_f32(cfg, "weight_decay", 5e-4),
+        seed: n_u32(cfg, "seed", 7),
+        cosine_lr: flag(cfg, "cosine_lr", true),
+        log_every: 0, // 0 = silent; scenarios run quiet
+    };
+    let run = || -> crate::Result<(Trainer, crate::train::TrainRecord)> {
+        let mut t = Trainer::new(&m, &store, hw, conv_override.as_ref(), tc.clone())?;
+        let rec = t.train(&test.images, &test.labels, test.n)?;
+        Ok((t, rec))
+    };
+    let (trainer, rec) = run()?;
+    let (_, rec2) = run()?;
+    let reproducible = rec.losses == rec2.losses && rec.final_loss == rec2.final_loss;
+
+    let k = 5.min(rec.losses.len());
+    let head: f32 = rec.losses[..k].iter().sum::<f32>() / k as f32;
+    let tail: f32 = rec.losses[rec.losses.len() - k..].iter().sum::<f32>() / k as f32;
+
+    // export → reload round-trip through the registry (no override)
+    let out_dir = std::env::temp_dir().join(format!(
+        "stox_scenario_train_{}_{}",
+        std::process::id(),
+        tc.seed
+    ));
+    export_checkpoint(&trainer, &m, &rec, &out_dir)?;
+    let m2 = Manifest::load(&out_dir)?;
+    let s2 = WeightStore::load(&m2)?;
+    let reloaded = NativeModel::load(&m2, &s2)?;
+    let t2 = TestSet::load(&m2)?;
+    let racc = reloaded.accuracy(&t2.images, &t2.labels, t2.n, 8, 0);
+    let export_mode = m2.spec.stox.mode.clone();
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    Ok(Json::obj(vec![
+        ("steps", Json::Num(rec.steps as f64)),
+        ("seed", Json::Num(rec.seed as f64)),
+        ("body_mode", Json::Str(rec.body_spec.clone())),
+        ("export_mode", Json::Str(export_mode)),
+        ("reproducible", Json::Bool(reproducible)),
+        ("loss_first", Json::Num(f64::from(rec.losses[0]))),
+        ("loss_final", Json::Num(f64::from(rec.final_loss))),
+        ("loss_ratio", Json::Num(f64::from(tail / head))),
+        ("loss_decreased", Json::Bool(tail < 0.85 * head)),
+        ("reloaded_accuracy", Json::Num(racc)),
+    ]))
+}
+
+// ---------- serve ----------
+
+/// An executor that always fails — the retry-exhaustion scenario's shard,
+/// mirroring the transient-error mock in `coordinator::server` tests.
+struct FailingExec {
+    classes: usize,
+    elems: usize,
+}
+
+impl Executor for FailingExec {
+    fn execute(&self, _images: &[f32], _batch: usize, _seed: u32) -> crate::Result<Vec<f32>> {
+        Err(anyhow::anyhow!("injected executor failure"))
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+fn collect_replies(
+    rxs: Vec<mpsc::Receiver<Reply>>,
+) -> crate::Result<Vec<Result<Vec<f32>, String>>> {
+    rxs.into_iter()
+        .map(|r| Ok(r.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))?.result))
+        .collect()
+}
+
+fn error_kinds(replies: &[Result<Vec<f32>, String>]) -> Json {
+    let mut kinds: Vec<&String> = replies.iter().filter_map(|r| r.as_ref().err()).collect();
+    kinds.sort();
+    kinds.dedup();
+    Json::Arr(kinds.into_iter().map(|k| Json::Str(k.clone())).collect())
+}
+
+fn stage_serve(cfg: &Json) -> crate::Result<Json> {
+    if s(cfg, "mode") == Some("failing") {
+        return stage_serve_failing(cfg);
+    }
+    let (m, store, test) = load_fixture(cfg)?;
+    let model = NativeModel::load(&m, &store)?;
+    let requests = n_usize(cfg, "requests", test.n);
+    let batcher = BatcherConfig {
+        target_batch: n_usize(cfg, "target_batch", 4),
+        max_wait: Duration::from_millis(u64::from(n_u32(cfg, "max_wait_ms", 10_000))),
+    };
+    let seed = n_u32(cfg, "seed", 5);
+    let queue_depth = n_usize(cfg, "queue_depth", 1024);
+    let deadline = cfg
+        .get("deadline_ms")
+        .and_then(|v| v.as_f64())
+        .map(|ms| Duration::from_millis(ms as u64));
+    let rcfg = ReplicaConfig {
+        replicas: n_usize(cfg, "replicas", 2),
+        batcher,
+        seed,
+        queue_depth,
+        deadline,
+        slo: Duration::from_millis(u64::from(n_u32(cfg, "slo_ms", 5_000))),
+    };
+    let images: Vec<Vec<f32>> =
+        (0..requests).map(|i| test.image(i % test.n).to_vec()).collect();
+
+    let server = ReplicaServer::from_native(&model, rcfg);
+    let (tx, rx) = mpsc::channel();
+    let rxs = submit_all(&tx, images.clone().into_iter());
+    drop(tx);
+    server.run(rx);
+    let replies = collect_replies(rxs)?;
+
+    let ok = replies.iter().filter(|r| r.is_ok()).count();
+    let rejected = replies
+        .iter()
+        .filter(|r| r.as_ref().err().map(|e| e == crate::serve::REJECTED) == Some(true))
+        .count();
+    let deadline_exceeded = replies
+        .iter()
+        .filter(|r| {
+            r.as_ref().err().map(|e| e == crate::serve::DEADLINE_EXCEEDED) == Some(true)
+        })
+        .count();
+
+    // bit-identity vs the single-Server loop is only defined when nothing
+    // can be shed — skip the reference run otherwise
+    let compare_default = deadline.is_none() && queue_depth >= requests;
+    let matches_single = if flag(cfg, "compare_single", compare_default) {
+        let single = Server::new(
+            Box::new(NativeExecutor { model: model.replica_view() }),
+            ServeConfig { batcher, seed, max_retries: 0 },
+        );
+        let (tx, rx) = mpsc::channel();
+        let rxs = submit_all(&tx, images.into_iter());
+        drop(tx);
+        single.run(rx);
+        let reference = collect_replies(rxs)?;
+        Json::Bool(replies == reference)
+    } else {
+        Json::Null
+    };
+
+    let metrics = server.metrics.to_json();
+    let shard_requests_sum: f64 = metrics
+        .get("shards")
+        .and_then(|s| s.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|s| s.get("requests").and_then(|v| v.as_f64()))
+                .sum()
+        })
+        .unwrap_or(f64::NAN);
+
+    Ok(Json::obj(vec![
+        ("requests_submitted", Json::Num(requests as f64)),
+        ("ok", Json::Num(ok as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("deadline_exceeded", Json::Num(deadline_exceeded as f64)),
+        (
+            "accounted",
+            Json::Bool(ok + rejected + deadline_exceeded == requests),
+        ),
+        ("error_kinds", error_kinds(&replies)),
+        ("matches_single_server", matches_single),
+        ("batches", Json::Num(server.metrics.batches() as f64)),
+        ("shard_requests_sum", Json::Num(shard_requests_sum)),
+        ("metrics", metrics),
+    ]))
+}
+
+fn stage_serve_failing(cfg: &Json) -> crate::Result<Json> {
+    let requests = n_usize(cfg, "requests", 4);
+    let max_retries = n_u32(cfg, "max_retries", 2);
+    let exec = FailingExec { classes: 4, elems: 4 };
+    let server = Server::new(
+        Box::new(exec),
+        ServeConfig {
+            batcher: BatcherConfig {
+                target_batch: n_usize(cfg, "target_batch", requests),
+                max_wait: Duration::from_millis(5),
+            },
+            seed: 0,
+            max_retries,
+        },
+    );
+    let (tx, rx) = mpsc::channel();
+    let rxs = submit_all(&tx, (0..requests).map(|_| vec![0.0f32; 4]));
+    drop(tx);
+    server.run(rx);
+    let replies = collect_replies(rxs)?;
+    let ok = replies.iter().filter(|r| r.is_ok()).count();
+    let retries = server.metrics.lock().unwrap().retries;
+    Ok(Json::obj(vec![
+        ("requests_submitted", Json::Num(requests as f64)),
+        ("ok", Json::Num(ok as f64)),
+        ("errors", Json::Num((replies.len() - ok) as f64)),
+        ("error_kinds", error_kinds(&replies)),
+        ("retries", Json::Num(retries as f64)),
+    ]))
+}
+
+// ---------- nonideal ----------
+
+fn stage_nonideal(cfg: &Json) -> crate::Result<Json> {
+    let seeds = n_u32(cfg, "seeds", 4);
+    let (b, m, n) = (4usize, 576usize, 64usize);
+    let rng = CounterRng::new(3);
+    let a: Vec<f32> = (0..b * m).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect();
+    let w: Vec<f32> =
+        (0..m * n).map(|i| rng.uniform_in((b * m + i) as u32, -1.0, 1.0)).collect();
+    let hw = StoxConfig::default();
+    let build = |spec: &str| -> crate::Result<Box<dyn PsConvert>> {
+        PsConverterSpec::from_mode(spec, hw.alpha, hw.n_samples)?.build(&hw)
+    };
+    let ideal = StoxMvm::program(&w, m, n, hw)?.run(&a, b, build("expected")?.as_ref(), 0);
+    let rms = |xb: &NonidealCrossbar, conv: &dyn PsConvert| -> f64 {
+        let mut acc = 0.0f64;
+        for seed in 0..seeds {
+            let o = xb.run(&a, b, conv, seed);
+            acc += o
+                .iter()
+                .zip(&ideal)
+                .map(|(g, t)| f64::from(g - t).powi(2))
+                .sum::<f64>()
+                / o.len() as f64;
+        }
+        (acc / f64::from(seeds)).sqrt()
+    };
+    let severities = [
+        ("ideal", Nonideality::default()),
+        ("sigma_g_10", Nonideality { sigma_g: 0.10, ..Default::default() }),
+        ("sigma_g_25", Nonideality { sigma_g: 0.25, ..Default::default() }),
+        ("ir_drop_10", Nonideality { ir_drop: 0.10, ..Default::default() }),
+        ("read_noise_5", Nonideality { sigma_read: 0.05, ..Default::default() }),
+        ("combined", Nonideality { sigma_g: 0.10, ir_drop: 0.05, sigma_read: 0.03 }),
+    ];
+    let conv_sa = build("sa")?;
+    let conv_m1 = build("stox:samples=1")?;
+    let conv_m4 = build("stox:samples=4")?;
+    let mut cases = Vec::new();
+    for (name, sev) in severities {
+        let xb = NonidealCrossbar::program(&w, m, n, hw, sev, 11)?;
+        cases.push((
+            name,
+            Json::obj(vec![
+                ("sa", Json::Num(rms(&xb, conv_sa.as_ref()))),
+                ("m1", Json::Num(rms(&xb, conv_m1.as_ref()))),
+                ("m4", Json::Num(rms(&xb, conv_m4.as_ref()))),
+            ]),
+        ));
+    }
+    Ok(Json::obj(vec![
+        ("seeds", Json::Num(f64::from(seeds))),
+        ("cases", Json::obj(cases)),
+    ]))
+}
+
+// ---------- parse ----------
+
+fn stage_parse(cfg: &Json) -> crate::Result<Json> {
+    let mut out = vec![("ok", Json::Bool(true))];
+    if let Some(c) = s(cfg, "converter") {
+        let spec = PsConverterSpec::from_mode(c, 4.0, 1)?;
+        let built = spec.build(&StoxConfig::default())?;
+        out.push(("spec", Json::Str(spec.to_string())));
+        out.push(("label", Json::Str(built.label())));
+    }
+    if let Some(tag) = s(cfg, "precision") {
+        let hw = StoxConfig::from_tag(tag, &StoxConfig::default())?;
+        out.push(("tag", Json::Str(hw.tag())));
+    }
+    Ok(Json::obj(out))
+}

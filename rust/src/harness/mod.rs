@@ -1,0 +1,251 @@
+//! Declarative scenario harness: the YAML-driven end-to-end suite behind
+//! `stox-cli test --suite scenarios/` (ROADMAP direction 5).
+//!
+//! A scenario file declares a fixture + pipeline stage + expectations:
+//!
+//! ```yaml
+//! stage: infer                 # infer | sweep | train | serve | nonideal | parse
+//! config:
+//!   fixture: tiny_inhomo       # rust/tests/data/<name>
+//!   converter: stox:alpha=4,samples=1
+//!   precision: 4w4a4bs
+//!   seed: 7
+//! expect:
+//!   - path: accuracy           # '/'-separated path into the stage output
+//!     mode: range              # exact | tolerance | subset | ordering | monotonic | range
+//!     min: 0.5
+//!   - path: logits0
+//!     mode: exact
+//!     golden: infer_stox.golden.json   # bless-on-missing / UPDATE_SCENARIOS=1
+//! ```
+//!
+//! Negative-path scenarios pin exact error strings instead:
+//!
+//! ```yaml
+//! stage: parse
+//! config:
+//!   converter: warp:x=1
+//! expect_error: "no PS converter registered for mode 'warp' (known: ...)"
+//! ```
+//!
+//! The pipeline is parser ([`parse_yaml`]) → executor ([`run_stage`], all
+//! in-process entry points) → comparator ([`run_checks`], structured
+//! [`Diff`]s, golden bless) → reporter ([`SuiteReport`], summary table +
+//! `scenarios_report.json`).  On failure the actual stage output is
+//! written next to the scenario as `<name>.actual.json` and removed again
+//! on the next passing run.
+
+pub mod comparator;
+pub mod executor;
+pub mod parser;
+pub mod reporter;
+
+pub use comparator::{lookup, run_checks, CheckOutcome, Diff};
+pub use executor::{fixture_dir, run_stage};
+pub use parser::{parse_yaml, to_yaml};
+pub use reporter::{ScenarioResult, Status, SuiteReport};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Suite-level knobs (CLI flags of `stox-cli test`).
+#[derive(Debug, Default)]
+pub struct SuiteOptions {
+    /// Only run scenarios whose file stem contains this substring.
+    pub filter: Option<String>,
+    /// Re-bless every golden the suite compares (also enabled by the
+    /// `UPDATE_SCENARIOS=1` environment variable).
+    pub update: bool,
+}
+
+/// Run a single scenario file.  `update` re-blesses its goldens.
+///
+/// Returns `Err` only for harness-level problems (unreadable file,
+/// malformed YAML, malformed check); a scenario whose *stage* errors or
+/// whose checks mismatch yields a [`Status::Fail`] result instead.
+pub fn run_scenario(path: &Path, update: bool) -> crate::Result<ScenarioResult> {
+    let start = Instant::now();
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("scenario")
+        .to_string();
+    let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let doc = parse_yaml(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+    let mut diffs = Vec::new();
+    let mut blessed = Vec::new();
+    let mut actual_doc: Option<Json> = None;
+    let expect_error = doc.get("expect_error").and_then(|v| v.as_str());
+
+    match run_stage(&doc) {
+        Err(e) => {
+            let got = e.to_string();
+            match expect_error {
+                Some(want) if want == got => {}
+                Some(want) => diffs.push(Diff {
+                    path: "expect_error".into(),
+                    detail: format!("expected error {want:?}, got {got:?}"),
+                }),
+                None => diffs.push(Diff {
+                    path: "stage".into(),
+                    detail: format!("stage failed: {got}"),
+                }),
+            }
+        }
+        Ok(actual) => {
+            if let Some(want) = expect_error {
+                diffs.push(Diff {
+                    path: "expect_error".into(),
+                    detail: format!("expected error {want:?}, but the stage succeeded"),
+                });
+            } else {
+                let checks =
+                    doc.get("expect").and_then(|v| v.as_arr()).cloned().unwrap_or_default();
+                let outcome = run_checks(&actual, &checks, &dir, update)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                diffs = outcome.diffs;
+                blessed = outcome.blessed;
+            }
+            actual_doc = Some(actual);
+        }
+    }
+
+    let status = if !diffs.is_empty() {
+        Status::Fail
+    } else if !blessed.is_empty() {
+        Status::Blessed
+    } else {
+        Status::Pass
+    };
+
+    // failure snapshot next to the scenario; cleared on the next pass
+    let snap = dir.join(format!("{name}.actual.json"));
+    if status == Status::Fail {
+        if let Some(a) = &actual_doc {
+            let _ = std::fs::write(&snap, a.to_string());
+        }
+    } else {
+        let _ = std::fs::remove_file(&snap);
+    }
+
+    Ok(ScenarioResult {
+        name,
+        file: path.display().to_string(),
+        status,
+        diffs,
+        blessed,
+        millis: start.elapsed().as_millis(),
+    })
+}
+
+/// Run every `*.yaml` scenario under `dir` (sorted by filename) and
+/// aggregate the results.  Never early-exits on a failing scenario — the
+/// report carries all failures so CI shows the full picture.
+pub fn run_suite(dir: &Path, opts: &SuiteOptions) -> crate::Result<SuiteReport> {
+    let update = opts.update
+        || std::env::var("UPDATE_SCENARIOS").map(|v| v == "1").unwrap_or(false);
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read suite dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("yaml"))
+        .collect();
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no *.yaml scenarios in {}", dir.display());
+
+    let mut report = SuiteReport::default();
+    for f in files {
+        if let Some(filter) = &opts.filter {
+            let stem = f.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            if !stem.contains(filter.as_str()) {
+                continue;
+            }
+        }
+        report.results.push(run_scenario(&f, update)?);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_suite(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("stox_suite_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parse_stage_scenario_passes_and_negative_path_pins_error() {
+        let dir = tmp_suite("basic");
+        std::fs::write(
+            dir.join("a_parse_ok.yaml"),
+            "stage: parse\nconfig:\n  converter: stox:alpha=4,samples=2\nexpect:\n  - path: spec\n    mode: exact\n    value: stox:alpha=4,samples=2\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("b_parse_err.yaml"),
+            "stage: parse\nconfig:\n  converter: warp\nexpect_error: \"no PS converter registered for mode 'warp' (known: ideal, quant, sparse, sa, expected, stox, inhomo)\"\n",
+        )
+        .unwrap();
+        let rep = run_suite(&dir, &SuiteOptions::default()).unwrap();
+        assert_eq!(rep.results.len(), 2);
+        assert!(rep.ok(), "{}", rep.render_table());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failing_scenario_writes_snapshot_then_pass_removes_it() {
+        let dir = tmp_suite("snap");
+        let file = dir.join("c_fail.yaml");
+        std::fs::write(
+            &file,
+            "stage: parse\nconfig:\n  precision: 8w8a4bs\nexpect:\n  - path: tag\n    mode: exact\n    value: 4w4a4bs\n",
+        )
+        .unwrap();
+        let r = run_scenario(&file, false).unwrap();
+        assert_eq!(r.status, Status::Fail);
+        assert!(!r.diffs.is_empty());
+        let snap = dir.join("c_fail.actual.json");
+        assert!(snap.exists(), "failure snapshot written");
+        let got = Json::parse(&std::fs::read_to_string(&snap).unwrap()).unwrap();
+        assert_eq!(got.get("tag").and_then(|v| v.as_str()), Some("8w8a4bs"));
+
+        std::fs::write(
+            &file,
+            "stage: parse\nconfig:\n  precision: 8w8a4bs\nexpect:\n  - path: tag\n    mode: exact\n    value: 8w8a4bs\n",
+        )
+        .unwrap();
+        let r = run_scenario(&file, false).unwrap();
+        assert_eq!(r.status, Status::Pass);
+        assert!(!snap.exists(), "snapshot cleared on pass");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unexpected_stage_error_and_filter() {
+        let dir = tmp_suite("filter");
+        std::fs::write(dir.join("x_bad.yaml"), "stage: parse\nconfig:\n  converter: nope\n")
+            .unwrap();
+        std::fs::write(
+            dir.join("y_ok.yaml"),
+            "stage: parse\nconfig:\n  precision: 4w4a4bs\nexpect:\n  - path: ok\n    value: true\n",
+        )
+        .unwrap();
+        let all = run_suite(&dir, &SuiteOptions::default()).unwrap();
+        assert_eq!(all.failed(), 1, "unexpected stage error is a failure");
+        let only_ok = run_suite(
+            &dir,
+            &SuiteOptions { filter: Some("y_".into()), update: false },
+        )
+        .unwrap();
+        assert_eq!(only_ok.results.len(), 1);
+        assert!(only_ok.ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,438 @@
+//! YAML-subset parser and writer for scenario files.
+//!
+//! Scenario files are plain-text YAML restricted to the subset the suite
+//! actually needs, parsed straight into [`Json`] so the comparator,
+//! reporter, and golden files all share one value model:
+//!
+//! * block mappings — `key: value` and `key:` followed by an indented
+//!   block (two-space indentation, tabs rejected);
+//! * block sequences — `- item`, including `- key: value` items that
+//!   open a mapping on the dash line;
+//! * scalars — `null`/`~`, `true`/`false`, finite numbers, bare strings
+//!   (converter specs like `stox:alpha=4,samples=1` stay strings because
+//!   their `:` is not followed by a space), `"…"` with JSON escapes, and
+//!   `'…'` with `''` as the quote escape;
+//! * flow values — anything starting with `[` or `{` is handed to the
+//!   JSON parser verbatim (so `value: [1, 2, 3]` works);
+//! * `#` comments (start of line or preceded by whitespace) and blank
+//!   lines.
+//!
+//! [`to_yaml`] is the inverse: it serializes any `Json` tree back into
+//! this subset (sorted keys, two-space indent), and the round-trip
+//! `parse_yaml(to_yaml(j)) == j` is property-tested in
+//! `rust/tests/scenarios.rs`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct Line {
+    indent: usize,
+    text: String,
+    num: usize,
+}
+
+/// Parse a scenario document into [`Json`].
+///
+/// Errors carry the 1-based line number of the offending construct.
+pub fn parse_yaml(text: &str) -> crate::Result<Json> {
+    let mut lines: Vec<Line> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let stripped = strip_comment(raw);
+        if stripped.trim().is_empty() {
+            continue;
+        }
+        let body = stripped.trim_end();
+        let indent = body.len() - body.trim_start().len();
+        anyhow::ensure!(
+            !body[..indent].contains('\t'),
+            "line {}: tab indentation is not supported",
+            idx + 1
+        );
+        lines.push(Line {
+            indent,
+            text: body.trim_start().to_string(),
+            num: idx + 1,
+        });
+    }
+    if lines.is_empty() {
+        return Ok(Json::Null);
+    }
+    let mut pos = 0usize;
+    let top = lines[0].indent;
+    let v = if !is_seq_item(&lines[0].text) && split_entry(&lines[0].text).is_none() {
+        // a bare top-level scalar document
+        let s = parse_scalar(&lines[0].text, lines[0].num)?;
+        pos = 1;
+        s
+    } else {
+        parse_block(&mut lines, &mut pos, top)?
+    };
+    anyhow::ensure!(
+        pos == lines.len(),
+        "line {}: content outside the document structure",
+        lines[pos].num
+    );
+    Ok(v)
+}
+
+/// Serialize a [`Json`] tree into the scenario YAML subset: sorted keys
+/// (inherited from the `BTreeMap` object model), two-space indents,
+/// strings quoted only when a bare token would be misread.
+pub fn to_yaml(j: &Json) -> String {
+    let mut out = String::new();
+    match j {
+        Json::Obj(m) if !m.is_empty() => write_map(m, 0, &mut out),
+        Json::Arr(v) if !v.is_empty() => write_seq(v, 0, &mut out),
+        other => {
+            out.push_str(&scalar_token(other));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ---------- reading ----------
+
+fn strip_comment(raw: &str) -> &str {
+    let bytes = raw.as_bytes();
+    let (mut in_s, mut in_d) = (false, false);
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_d => in_s = !in_s,
+            b'"' if !in_s => in_d = !in_d,
+            b'#' if !in_s && !in_d => {
+                if i == 0 || bytes[i - 1].is_ascii_whitespace() {
+                    return &raw[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    raw
+}
+
+fn is_seq_item(text: &str) -> bool {
+    text == "-" || text.starts_with("- ")
+}
+
+/// Split a mapping entry at the first `:` that ends the line or is
+/// followed by a space — so converter specs (`stox:alpha=4`) and URLs on
+/// the value side never split.
+fn split_entry(text: &str) -> Option<(&str, &str)> {
+    let bytes = text.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b':' && (i + 1 == bytes.len() || bytes[i + 1] == b' ') {
+            let key = text[..i].trim();
+            if key.is_empty() || key.starts_with('"') || key.starts_with('\'') {
+                return None;
+            }
+            let val = if i + 1 == bytes.len() { "" } else { text[i + 2..].trim() };
+            return Some((key, val));
+        }
+    }
+    None
+}
+
+fn parse_block(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> crate::Result<Json> {
+    if is_seq_item(&lines[*pos].text) {
+        parse_seq(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_seq(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> crate::Result<Json> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let (text, num) = (lines[*pos].text.clone(), lines[*pos].num);
+        if !is_seq_item(&text) {
+            break;
+        }
+        let rest = text[1..].trim_start().to_string();
+        if rest.is_empty() {
+            // `-` alone: the item is the indented block that follows
+            *pos += 1;
+            anyhow::ensure!(
+                *pos < lines.len() && lines[*pos].indent > indent,
+                "line {num}: empty sequence item"
+            );
+            let inner = lines[*pos].indent;
+            items.push(parse_block(lines, pos, inner)?);
+        } else if split_entry(&rest).is_some() {
+            // `- key: …`: the dash opens a mapping whose first entry sits
+            // on the dash line; reinterpret it at the post-dash column
+            let offset = text.len() - rest.len();
+            lines[*pos].indent = indent + offset;
+            lines[*pos].text = rest;
+            let inner = indent + offset;
+            items.push(parse_map(lines, pos, inner)?);
+        } else {
+            items.push(parse_scalar(&rest, num)?);
+            *pos += 1;
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn parse_map(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> crate::Result<Json> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let (text, num) = (lines[*pos].text.clone(), lines[*pos].num);
+        if is_seq_item(&text) {
+            break;
+        }
+        let Some((key, val)) = split_entry(&text) else {
+            anyhow::bail!("line {num}: expected 'key: value'");
+        };
+        anyhow::ensure!(
+            !map.contains_key(key),
+            "line {num}: duplicate key '{key}'"
+        );
+        *pos += 1;
+        let value = if val.is_empty() {
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let inner = lines[*pos].indent;
+                parse_block(lines, pos, inner)?
+            } else {
+                Json::Null
+            }
+        } else {
+            parse_scalar(val, num)?
+        };
+        map.insert(key.to_string(), value);
+    }
+    Ok(Json::Obj(map))
+}
+
+fn parse_scalar(tok: &str, num: usize) -> crate::Result<Json> {
+    match tok {
+        "null" | "~" => return Ok(Json::Null),
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    let first = tok.as_bytes()[0];
+    if first == b'"' || first == b'[' || first == b'{' {
+        return Json::parse(tok)
+            .map_err(|e| anyhow::anyhow!("line {num}: bad flow value {tok:?}: {e}"));
+    }
+    if first == b'\'' {
+        anyhow::ensure!(
+            tok.len() >= 2 && tok.ends_with('\''),
+            "line {num}: unterminated single-quoted string"
+        );
+        return Ok(Json::Str(tok[1..tok.len() - 1].replace("''", "'")));
+    }
+    if matches!(first, b'0'..=b'9' | b'-' | b'+' | b'.') {
+        if let Ok(n) = tok.parse::<f64>() {
+            if n.is_finite() {
+                return Ok(Json::Num(n));
+            }
+        }
+    }
+    Ok(Json::Str(tok.to_string()))
+}
+
+// ---------- writing ----------
+
+fn write_map(m: &BTreeMap<String, Json>, indent: usize, out: &mut String) {
+    for (k, v) in m {
+        let _ = write!(out, "{:indent$}{}:", "", key_token(k));
+        match v {
+            Json::Obj(inner) if !inner.is_empty() => {
+                out.push('\n');
+                write_map(inner, indent + 2, out);
+            }
+            Json::Arr(inner) if !inner.is_empty() => {
+                out.push('\n');
+                write_seq(inner, indent + 2, out);
+            }
+            other => {
+                let _ = writeln!(out, " {}", scalar_token(other));
+            }
+        }
+    }
+}
+
+fn write_seq(v: &[Json], indent: usize, out: &mut String) {
+    for item in v {
+        match item {
+            Json::Obj(inner) if !inner.is_empty() => {
+                let _ = writeln!(out, "{:indent$}-", "");
+                write_map(inner, indent + 2, out);
+            }
+            Json::Arr(inner) if !inner.is_empty() => {
+                let _ = writeln!(out, "{:indent$}-", "");
+                write_seq(inner, indent + 2, out);
+            }
+            other => {
+                let _ = writeln!(out, "{:indent$}- {}", "", scalar_token(other));
+            }
+        }
+    }
+}
+
+fn key_token(k: &str) -> String {
+    // parser keys are bare; the writer only emits keys the parser can
+    // read back (scenario field names and artifact keys satisfy this)
+    debug_assert!(
+        split_entry(&format!("{k}:")).is_some(),
+        "unwritable mapping key {k:?}"
+    );
+    k.to_string()
+}
+
+fn scalar_token(j: &Json) -> String {
+    match j {
+        Json::Str(s) => {
+            if needs_quotes(s) {
+                Json::Str(s.clone()).to_string()
+            } else {
+                s.clone()
+            }
+        }
+        // empty containers have no block form in this subset — flow JSON
+        Json::Obj(m) if m.is_empty() => "{}".to_string(),
+        Json::Arr(v) if v.is_empty() => "[]".to_string(),
+        other => other.to_string(),
+    }
+}
+
+fn needs_quotes(s: &str) -> bool {
+    if s.is_empty() || s != s.trim() {
+        return true;
+    }
+    if matches!(s, "null" | "~" | "true" | "false") {
+        return true;
+    }
+    let first = s.as_bytes()[0];
+    if matches!(
+        first,
+        b'"' | b'\'' | b'[' | b'{' | b'#' | b'&' | b'*' | b'!' | b'|' | b'>' | b'%' | b'@'
+    ) {
+        return true;
+    }
+    if s == "-" || s.starts_with("- ") {
+        return true;
+    }
+    // would be re-read as a number
+    if matches!(first, b'0'..=b'9' | b'-' | b'+' | b'.')
+        && s.parse::<f64>().map(|n| n.is_finite()).unwrap_or(false)
+    {
+        return true;
+    }
+    // a `: ` or trailing `:` would be re-read as a mapping entry;
+    // control characters and comment markers need escaping
+    s.ends_with(':')
+        || s.contains(": ")
+        || s.contains(" #")
+        || s.chars().any(|c| (c as u32) < 0x20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scenario_shape() {
+        let doc = "\
+# a comment
+name: infer_stox_4w4a4bs
+stage: infer
+config:
+  fixture: tiny_inhomo
+  converter: stox:alpha=4,samples=1
+  seed: 7
+expect:
+  - path: accuracy
+    mode: range
+    min: 0.25
+  - path: deterministic
+    mode: exact
+    value: true
+";
+        let j = parse_yaml(doc).unwrap();
+        assert_eq!(j.at(&["name"]).unwrap().as_str(), Some("infer_stox_4w4a4bs"));
+        assert_eq!(
+            j.at(&["config", "converter"]).unwrap().as_str(),
+            Some("stox:alpha=4,samples=1"),
+            "converter specs must stay strings"
+        );
+        assert_eq!(j.at(&["config", "seed"]).unwrap().as_f64(), Some(7.0));
+        let expect = j.get("expect").unwrap().as_arr().unwrap();
+        assert_eq!(expect.len(), 2);
+        assert_eq!(expect[0].get("min").unwrap().as_f64(), Some(0.25));
+        assert_eq!(expect[1].get("value").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn scalars_and_flow() {
+        let j = parse_yaml(
+            "a: null\nb: ~\nc: true\nd: -1.5e2\ne: [1, 2, \"x\"]\nf: 'it''s'\ng: \"q: v\"\n",
+        )
+        .unwrap();
+        assert!(j.get("a").unwrap().is_null());
+        assert!(j.get("b").unwrap().is_null());
+        assert_eq!(j.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("d").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(j.get("e").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("f").unwrap().as_str(), Some("it's"));
+        assert_eq!(j.get("g").unwrap().as_str(), Some("q: v"));
+    }
+
+    #[test]
+    fn nested_sequences_and_dash_blocks() {
+        let doc = "\
+grid:
+  -
+    - 1
+    - 2
+  -
+    - 3
+checks:
+  - mode: ordering
+    paths:
+      - a/b
+      - a/c
+";
+        let j = parse_yaml(doc).unwrap();
+        let g = j.get("grid").unwrap().as_arr().unwrap();
+        assert_eq!(g[0].as_arr().unwrap().len(), 2);
+        assert_eq!(g[1].as_arr().unwrap()[0].as_f64(), Some(3.0));
+        let paths = j.at(&["checks"]).unwrap().as_arr().unwrap()[0]
+            .get("paths")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(paths[1].as_str(), Some("a/c"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_yaml("a:\n\tb: 1\n").is_err(), "tabs rejected");
+        assert!(parse_yaml("a: 1\na: 2\n").is_err(), "duplicate keys rejected");
+        assert!(parse_yaml("key 'no colon'\nx: 1\n").is_err());
+        assert!(parse_yaml("e: [1, 2\n").is_err(), "bad flow rejected");
+    }
+
+    #[test]
+    fn roundtrips_a_nested_tree() {
+        let doc = "\
+name: t
+config:
+  specs:
+    - ideal
+    - stox:alpha=4,samples=1
+  empty: {}
+  none: null
+  quoted: \"4w4a4bs\"
+";
+        let j = parse_yaml(doc).unwrap();
+        let j2 = parse_yaml(&to_yaml(&j)).unwrap();
+        assert_eq!(j, j2);
+        // a quoted number-like string survives the round trip as a string
+        assert_eq!(j2.at(&["config", "quoted"]).unwrap().as_str(), Some("4w4a4bs"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Suite reporting: the human-readable summary table printed by
+//! `stox-cli test` and the machine-readable `scenarios_report.json`
+//! artifact CI uploads.
+
+use super::comparator::Diff;
+use crate::util::json::Json;
+
+/// Outcome of one scenario run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Every check matched.
+    Pass,
+    /// One or more goldens were (re)written this run — checks matched
+    /// afterwards, but the run is not evidence until re-verified.
+    Blessed,
+    /// At least one check mismatched, or the stage errored unexpectedly.
+    Fail,
+}
+
+impl Status {
+    fn as_str(self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Blessed => "blessed",
+            Status::Fail => "FAIL",
+        }
+    }
+}
+
+/// Result of one scenario file.
+#[derive(Debug)]
+pub struct ScenarioResult {
+    /// Scenario name (file stem).
+    pub name: String,
+    /// Path of the scenario file, as given to the runner.
+    pub file: String,
+    /// Pass / blessed / fail.
+    pub status: Status,
+    /// Structured mismatches (empty on pass).
+    pub diffs: Vec<Diff>,
+    /// Golden files written this run (bless-on-missing or `--update`).
+    pub blessed: Vec<String>,
+    /// Wall-clock milliseconds the stage + checks took.
+    pub millis: u128,
+}
+
+/// Aggregated results of one `run_suite` invocation.
+#[derive(Debug, Default)]
+pub struct SuiteReport {
+    /// Per-scenario results, in execution (sorted-filename) order.
+    pub results: Vec<ScenarioResult>,
+}
+
+impl SuiteReport {
+    /// Number of scenarios that passed (including blessed ones).
+    pub fn passed(&self) -> usize {
+        self.results.iter().filter(|r| r.status != Status::Fail).count()
+    }
+
+    /// Number of scenarios that failed.
+    pub fn failed(&self) -> usize {
+        self.results.iter().filter(|r| r.status == Status::Fail).count()
+    }
+
+    /// Number of scenarios that wrote at least one golden this run.
+    pub fn blessed(&self) -> usize {
+        self.results.iter().filter(|r| r.status == Status::Blessed).count()
+    }
+
+    /// True when nothing failed.
+    pub fn ok(&self) -> bool {
+        self.failed() == 0
+    }
+
+    /// The per-suite summary table plus a one-line verdict.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {:<34} | {:<7} | {:>8} | diffs\n", "scenario", "status", "ms"));
+        s.push_str(&format!("|{:-<36}|{:-<9}|{:->10}|------\n", "", "", ""));
+        for r in &self.results {
+            let note = if r.status == Status::Fail {
+                r.diffs
+                    .first()
+                    .map(|d| format!("{}: {}", d.path, d.detail))
+                    .unwrap_or_default()
+            } else if !r.blessed.is_empty() {
+                format!("blessed {} golden(s)", r.blessed.len())
+            } else {
+                String::new()
+            };
+            s.push_str(&format!(
+                "| {:<34} | {:<7} | {:>8} | {}\n",
+                r.name,
+                r.status.as_str(),
+                r.millis,
+                note
+            ));
+        }
+        s.push_str(&format!(
+            "\n{} passed, {} failed, {} blessed, {} total\n",
+            self.passed(),
+            self.failed(),
+            self.blessed(),
+            self.results.len()
+        ));
+        s
+    }
+
+    /// Machine-readable report (`scenarios_report.json` schema):
+    /// `{passed, failed, blessed, total, scenarios: [{name, file, status,
+    /// millis, diffs: [{path, detail}], blessed: [..]}]}`.
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("file", Json::Str(r.file.clone())),
+                    ("status", Json::Str(r.status.as_str().to_string())),
+                    ("millis", Json::Num(r.millis as f64)),
+                    ("diffs", Json::Arr(r.diffs.iter().map(|d| d.to_json()).collect())),
+                    (
+                        "blessed",
+                        Json::Arr(r.blessed.iter().map(|b| Json::Str(b.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("passed", Json::Num(self.passed() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("blessed", Json::Num(self.blessed() as f64)),
+            ("total", Json::Num(self.results.len() as f64)),
+            ("scenarios", Json::Arr(scenarios)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(name: &str, status: Status, diffs: Vec<Diff>) -> ScenarioResult {
+        ScenarioResult {
+            name: name.into(),
+            file: format!("scenarios/{name}.yaml"),
+            status,
+            diffs,
+            blessed: vec![],
+            millis: 3,
+        }
+    }
+
+    #[test]
+    fn report_counts_and_table() {
+        let rep = SuiteReport {
+            results: vec![
+                fake("a", Status::Pass, vec![]),
+                fake(
+                    "b",
+                    Status::Fail,
+                    vec![Diff { path: "accuracy".into(), detail: "0.5 != 1".into() }],
+                ),
+                fake("c", Status::Blessed, vec![]),
+            ],
+        };
+        assert_eq!(rep.passed(), 2);
+        assert_eq!(rep.failed(), 1);
+        assert_eq!(rep.blessed(), 1);
+        assert!(!rep.ok());
+        let t = rep.render_table();
+        assert!(t.contains("FAIL"));
+        assert!(t.contains("accuracy: 0.5 != 1"));
+        assert!(t.contains("2 passed, 1 failed, 1 blessed, 3 total"));
+        let j = rep.to_json();
+        assert_eq!(j.get("failed").and_then(|v| v.as_usize()), Some(1));
+        let scen = j.get("scenarios").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(scen[1].get("status").and_then(|v| v.as_str()), Some("FAIL"));
+    }
+}

@@ -27,6 +27,10 @@
 //!   batching with work stealing, SLO metrics, and the Poisson load
 //!   generator behind `BENCH_serving.json`.
 //! * [`stats`] — RNG, histograms, percentile sketches, Monte-Carlo driver.
+//! * [`harness`] — declarative scenario harness (`stox-cli test`): YAML
+//!   scenarios drive the in-process infer/sweep/train/serve entry points
+//!   and compare against goldens with explicit match modes (exact /
+//!   tolerance / subset / ordering / monotonic / range).
 //! * [`train`] — PS-quantization-aware training (§3.3): reverse-mode
 //!   backprop over the stochastic digit-plane forward (STE quantizers,
 //!   per-slice PS capture, the converters' tanh surrogates), SGD with
@@ -36,6 +40,7 @@
 pub mod arch;
 pub mod coordinator;
 pub mod device;
+pub mod harness;
 pub mod imc;
 pub mod model;
 pub mod runtime;

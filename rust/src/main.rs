@@ -30,6 +30,9 @@
 //!                   registered converter spec (plus MTJ sample-length and
 //!                   ADC bit-width grids) evaluated for task accuracy and
 //!                   joined with the Fig. 9 cost rollup (JSON/CSV + table);
+//! * `test`        — run the declarative scenario suite (`scenarios/*.yaml`
+//!                   through `harness::run_suite`): summary table,
+//!                   `scenarios_report.json`, non-zero exit on mismatch;
 //! * `converters`  — list the PS-converter registry (the open PsConvert API);
 //! * `tables`      — pretty-print the python training sweeps (Tables 3/4,
 //!                   Fig. 7) from `python/results/*.json`.
@@ -96,6 +99,11 @@ commands:
                 scores checkpoint accuracy from --artifacts instead of the
                 built-in golden workload, loading + programming the weights
                 exactly once per precision tag)
+  test         [--suite DIR] [--filter SUBSTR] [--update] [--report PATH]
+               (run the declarative scenario suite — default DIR
+                scenarios/; --update (or UPDATE_SCENARIOS=1) re-blesses
+                goldens; writes PATH (default scenarios_report.json) and
+                exits non-zero if any scenario fails)
   converters   (list the registered PS-converter modes)
   tables       [--results DIR]
   nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise)";
@@ -139,6 +147,7 @@ fn main() -> anyhow::Result<()> {
         ),
         Some("train") => train_cmd(&artifacts, &args),
         Some("sweep") => sweep(&artifacts, &args),
+        Some("test") => test_cmd(&args),
         Some("converters") => converters(),
         Some("tables") => tables(&PathBuf::from(
             args.string("results", "python/results"),
@@ -717,6 +726,36 @@ fn converters() -> anyhow::Result<()> {
             built.label()
         );
     }
+    Ok(())
+}
+
+/// Run the declarative scenario suite (`harness::run_suite`): print the
+/// summary table, write the machine-readable report, exit non-zero on any
+/// failing scenario so CI gates on it.
+fn test_cmd(args: &Args) -> anyhow::Result<()> {
+    use stox_net::harness::{run_suite, SuiteOptions};
+    let suite = PathBuf::from(args.string("suite", "scenarios"));
+    let report_path = PathBuf::from(args.string("report", "scenarios_report.json"));
+    let opts = SuiteOptions {
+        filter: args.get("filter").map(|s| s.to_string()),
+        update: args.flag("update"),
+    };
+    let report = run_suite(&suite, &opts)?;
+    print!("{}", report.render_table());
+    std::fs::write(&report_path, report.to_json().to_string())?;
+    println!("report: {}", report_path.display());
+    if report.blessed() > 0 {
+        println!(
+            "{} scenario(s) blessed goldens this run — commit them and re-run to verify",
+            report.blessed()
+        );
+    }
+    anyhow::ensure!(
+        report.ok(),
+        "{} of {} scenarios failed (see table above and *.actual.json snapshots)",
+        report.failed(),
+        report.results.len()
+    );
     Ok(())
 }
 

@@ -2,7 +2,10 @@
 //! accuracy, plus PJRT ↔ native-crossbar cross-validation.
 //!
 //! These tests require `make artifacts`; they skip silently otherwise so
-//! `cargo test` stays green on a fresh checkout.
+//! `cargo test` stays green on a fresh checkout.  The committed-fixture
+//! inference pins (per-converter logits goldens, trained-margin checks)
+//! are NOT artifact-gated — they live in the declarative scenario suite
+//! and run here through [`infer_scenarios_pass_via_harness`].
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -25,6 +28,25 @@ fn argmax(v: &[f32]) -> usize {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap()
+}
+
+/// The converter × precision inference matrix over the committed
+/// `tiny_inhomo*` fixtures, driven by the declarative scenario harness
+/// (`scenarios/infer_*.yaml`) — the same in-process path as
+/// `stox-cli test --suite scenarios/ --filter infer_`.  Unlike the PJRT
+/// tests below this never skips: the fixtures are committed.  It is the
+/// only test in this binary touching the repo `scenarios/` dir (golden
+/// bless is not re-entrant).
+#[test]
+fn infer_scenarios_pass_via_harness() {
+    let suite = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let rep = stox_net::harness::run_suite(
+        &suite,
+        &stox_net::harness::SuiteOptions { filter: Some("infer_".into()), update: false },
+    )
+    .unwrap();
+    assert!(rep.results.len() >= 16, "expected the infer_* scenarios");
+    assert!(rep.ok(), "infer scenarios failed:\n{}", rep.render_table());
 }
 
 #[test]

@@ -1,0 +1,333 @@
+//! Scenario-harness integration (ISSUE 7): the committed `scenarios/`
+//! suite runs green in-process (the same entry point `stox-cli test`
+//! uses), covers the full converter × precision matrix, and the harness
+//! itself is property-tested — YAML round-trip, comparator match modes
+//! under generated perturbations, and the snapshot re-bless invariant.
+
+use std::path::PathBuf;
+use stox_net::harness::{parse_yaml, run_scenario, run_suite, to_yaml, Status, SuiteOptions};
+use stox_net::util::json::Json;
+use stox_net::util::prop;
+
+fn suite_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("stox_scen_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The acceptance criterion: every committed scenario passes (first run
+/// may bless missing goldens — that still counts as non-failing, and CI
+/// re-runs to verify), there are ≥15 of them, and together they cover
+/// all 7 registered converters at ≥2 precision tags.
+#[test]
+fn committed_suite_passes_and_covers_the_matrix() {
+    let rep = run_suite(&suite_dir(), &SuiteOptions::default()).unwrap();
+    assert!(rep.ok(), "committed scenarios must pass:\n{}", rep.render_table());
+    assert!(
+        rep.results.len() >= 15,
+        "suite must ship >= 15 scenarios, found {}",
+        rep.results.len()
+    );
+
+    let mut converters: Vec<String> = Vec::new();
+    let mut tags: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(suite_dir()).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().and_then(|x| x.to_str()) != Some("yaml") {
+            continue;
+        }
+        let doc = parse_yaml(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        if let Some(c) = doc.at(&["config", "converter"]).and_then(|v| v.as_str()) {
+            let mode = c.split(':').next().unwrap().to_string();
+            if !converters.contains(&mode) {
+                converters.push(mode);
+            }
+        }
+        if let Some(t) = doc.at(&["config", "precision"]).and_then(|v| v.as_str()) {
+            for tag in t.split(',') {
+                let tag = tag.trim().to_string();
+                if !tags.contains(&tag) {
+                    tags.push(tag);
+                }
+            }
+        }
+    }
+    for want in ["ideal", "quant", "sparse", "sa", "expected", "stox", "inhomo"] {
+        assert!(
+            converters.iter().any(|c| c == want),
+            "matrix coverage: converter '{want}' has no scenario (found {converters:?})"
+        );
+    }
+    assert!(
+        tags.len() >= 2,
+        "matrix coverage: need >= 2 precision tags, found {tags:?}"
+    );
+}
+
+/// Round-trip property: any tree the writer can emit parses back to the
+/// identical `Json` value — scenario files and blessed goldens share one
+/// value model with no lossy corner.
+#[test]
+fn yaml_roundtrip_property() {
+    const WORDS: &[&str] = &[
+        "ideal",
+        "stox:alpha=4,samples=1",
+        "4w4a4bs",
+        "pareto front",
+        "true",
+        "a/b/0/c",
+        "cells/4w4a4bs|ideal/edp_pj_ns",
+        "",
+        "it's",
+        "x #y",
+        "k: v",
+        "-1.5e2",
+    ];
+    fn gen_tree(g: &mut prop::Gen, depth: usize) -> Json {
+        match g.usize_in(0, if depth == 0 { 3 } else { 5 }) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(f64::from((g.f32_in(-1e4, 1e4) * 4.0).round() / 4.0)),
+            3 => Json::Str((*g.pick(WORDS)).to_string()),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_tree(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| {
+                        let key = format!("{}_{i}", g.pick(&["key", "path", "cfg", "v"]));
+                        (key, gen_tree(g, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("yaml round-trip", 200, |g| {
+        let tree = gen_tree(g, 3);
+        let text = to_yaml(&tree);
+        let back = parse_yaml(&text)
+            .map_err(|e| format!("reparse failed: {e}\n--- emitted ---\n{text}"))?;
+        if back != tree {
+            return Err(format!("round-trip mismatch\n--- emitted ---\n{text}"));
+        }
+        Ok(())
+    });
+}
+
+/// Comparator property: a tolerance check accepts any perturbation within
+/// its atol envelope and rejects one placed safely outside it; subset
+/// ignores extra actual keys; exact rejects any numeric change.
+#[test]
+fn comparator_modes_against_generated_perturbations() {
+    use stox_net::harness::run_checks;
+    let dir = tmp_dir("cmp_prop");
+    prop::check("match modes vs perturbations", 100, |g| {
+        let n = g.usize_in(1, 6);
+        let base: Vec<f64> =
+            (0..n).map(|_| f64::from((g.f32_in(-50.0, 50.0) * 8.0).round() / 8.0)).collect();
+        let atol = 1e-3;
+        let within = g.f32_in(-0.9, 0.9) as f64 * atol;
+        let outside = (2.0 + g.f32_in(0.0, 3.0)) as f64 * atol * if g.bool() { 1.0 } else { -1.0 };
+        let idx = g.usize_in(0, n - 1);
+
+        let doc = |vals: &[f64], extra: bool| {
+            let mut fields = vec![(
+                "xs",
+                Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect()),
+            )];
+            if extra {
+                fields.push(("unpinned", Json::Num(42.0)));
+            }
+            Json::obj(fields)
+        };
+        let expected = doc(&base, false);
+        let mut near = base.clone();
+        near[idx] += within;
+        let mut far = base.clone();
+        far[idx] += outside;
+
+        let check = |mode: &str, value: Json| {
+            Json::obj(vec![
+                ("path", Json::Str("xs".into())),
+                ("mode", Json::Str(mode.into())),
+                ("atol", Json::Num(atol)),
+                ("value", value),
+            ])
+        };
+        let tol_ok = run_checks(
+            &doc(&near, true),
+            &[check("tolerance", expected.get("xs").unwrap().clone())],
+            &dir,
+            false,
+        )
+        .unwrap();
+        if !tol_ok.diffs.is_empty() {
+            return Err(format!(
+                "tolerance rejected an in-envelope perturbation: {:?}",
+                tol_ok.diffs
+            ));
+        }
+        let tol_bad = run_checks(
+            &doc(&far, false),
+            &[check("tolerance", expected.get("xs").unwrap().clone())],
+            &dir,
+            false,
+        )
+        .unwrap();
+        if tol_bad.diffs.is_empty() {
+            return Err("tolerance accepted an out-of-envelope perturbation".into());
+        }
+        // subset: expected keys only — the extra actual key is ignored
+        let sub = run_checks(
+            &Json::obj(vec![("doc", doc(&near, true))]),
+            &[Json::obj(vec![
+                ("path", Json::Str("doc".into())),
+                ("mode", Json::Str("subset".into())),
+                ("atol", Json::Num(atol)),
+                ("value", expected.clone()),
+            ])],
+            &dir,
+            false,
+        )
+        .unwrap();
+        if !sub.diffs.is_empty() {
+            return Err(format!("subset flagged an extra unpinned key: {:?}", sub.diffs));
+        }
+        // exact rejects the same in-envelope change tolerance accepted
+        if within != 0.0 {
+            let exact = run_checks(
+                &doc(&near, false),
+                &[Json::obj(vec![
+                    ("path", Json::Str("xs".into())),
+                    ("mode", Json::Str("exact".into())),
+                    ("value", expected.get("xs").unwrap().clone()),
+                ])],
+                &dir,
+                false,
+            )
+            .unwrap();
+            if exact.diffs.is_empty() {
+                return Err("exact accepted a perturbed value".into());
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The bless-flow invariant: a fresh golden blesses on first run, the
+/// re-run passes byte-stably, a corrupted golden fails with a structured
+/// diff, and `update` re-blesses back to green.
+#[test]
+fn snapshot_rebless_then_rerun_passes() {
+    let dir = tmp_dir("rebless");
+    let scenario = dir.join("parse_pin.yaml");
+    std::fs::write(
+        &scenario,
+        "stage: parse\nconfig:\n  converter: inhomo:base=1,extra=3\n  precision: 8w8a4bs\nexpect:\n  - path: spec\n    mode: exact\n    golden: spec.golden.json\n  - path: tag\n    value: 8w8a4bs\n",
+    )
+    .unwrap();
+
+    let r1 = run_scenario(&scenario, false).unwrap();
+    assert_eq!(r1.status, Status::Blessed, "first run blesses: {:?}", r1.diffs);
+    assert_eq!(r1.blessed, vec!["spec.golden.json".to_string()]);
+    let blessed_bytes = std::fs::read(dir.join("spec.golden.json")).unwrap();
+
+    let r2 = run_scenario(&scenario, false).unwrap();
+    assert_eq!(r2.status, Status::Pass, "re-run verifies: {:?}", r2.diffs);
+    assert_eq!(
+        std::fs::read(dir.join("spec.golden.json")).unwrap(),
+        blessed_bytes,
+        "verify run must not rewrite the golden"
+    );
+
+    std::fs::write(dir.join("spec.golden.json"), "\"inhomo:alpha=9,base=1,extra=3\"").unwrap();
+    let r3 = run_scenario(&scenario, false).unwrap();
+    assert_eq!(r3.status, Status::Fail);
+    assert!(r3.diffs[0].path == "spec", "diff anchors the path: {:?}", r3.diffs);
+    assert!(dir.join("parse_pin.actual.json").exists(), "failure snapshot written");
+
+    let r4 = run_scenario(&scenario, true).unwrap();
+    assert_eq!(r4.status, Status::Blessed, "update re-blesses");
+    let r5 = run_scenario(&scenario, false).unwrap();
+    assert_eq!(r5.status, Status::Pass, "re-blessed suite is green again");
+    assert!(!dir.join("parse_pin.actual.json").exists(), "snapshot cleared on pass");
+    assert_eq!(
+        std::fs::read(dir.join("spec.golden.json")).unwrap(),
+        blessed_bytes,
+        "re-bless reproduces the original bytes (byte-stable serialization)"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Ordering and monotonic predicates on generated data: a strictly
+/// sorted sequence passes ascending and fails descending; one injected
+/// inversion flips both verdicts.
+#[test]
+fn ordering_and_monotonic_properties() {
+    use stox_net::harness::run_checks;
+    let dir = tmp_dir("ord_prop");
+    prop::check("ordering/monotonic", 100, |g| {
+        let n = g.usize_in(3, 8);
+        let mut vals: Vec<f64> = Vec::with_capacity(n);
+        let mut acc = g.f32_in(-10.0, 10.0) as f64;
+        for _ in 0..n {
+            acc += 0.25 + g.f32_in(0.0, 2.0) as f64;
+            vals.push(acc);
+        }
+        let doc = Json::obj(vec![(
+            "seq",
+            Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect()),
+        )]);
+        let mono = |dirn: &str, strict: bool| {
+            Json::obj(vec![
+                ("path", Json::Str("seq".into())),
+                ("mode", Json::Str("monotonic".into())),
+                ("direction", Json::Str(dirn.into())),
+                ("strict", Json::Bool(strict)),
+            ])
+        };
+        let up = run_checks(&doc, &[mono("ascending", true)], &dir, false).unwrap();
+        if !up.diffs.is_empty() {
+            return Err(format!("ascending rejected a sorted sequence: {:?}", up.diffs));
+        }
+        let down = run_checks(&doc, &[mono("descending", false)], &dir, false).unwrap();
+        if down.diffs.is_empty() {
+            return Err("descending accepted a sorted sequence".into());
+        }
+        // inject an inversion
+        let k = g.usize_in(1, n - 1);
+        let mut broken = vals.clone();
+        broken[k] = broken[k - 1] - 1.0;
+        let bdoc = Json::obj(vec![(
+            "seq",
+            Json::Arr(broken.iter().map(|&v| Json::Num(v)).collect()),
+        )]);
+        let up2 = run_checks(&bdoc, &[mono("ascending", true)], &dir, false).unwrap();
+        if up2.diffs.is_empty() {
+            return Err("ascending accepted an inversion".into());
+        }
+        // ordering over explicit paths agrees with monotonic over the array
+        let paths: Vec<Json> =
+            (0..n).map(|i| Json::Str(format!("seq/{i}"))).collect();
+        let ord = run_checks(
+            &doc,
+            &[Json::obj(vec![
+                ("mode", Json::Str("ordering".into())),
+                ("direction", Json::Str("ascending".into())),
+                ("paths", Json::Arr(paths)),
+            ])],
+            &dir,
+            false,
+        )
+        .unwrap();
+        if !ord.diffs.is_empty() {
+            return Err(format!("path ordering rejected a sorted sequence: {:?}", ord.diffs));
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

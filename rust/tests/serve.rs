@@ -102,39 +102,23 @@ fn replica_tier_bit_identical_to_single_server() {
     }
 }
 
-/// The replica tier's JSON report over a real model run: aggregate
-/// counters match, every shard object is present, and the per-shard
-/// request counts sum to the aggregate.
+/// The serving-tier golden flows (metrics-JSON consistency, admission
+/// shedding with explicit replies, deadline shedding, retry exhaustion,
+/// replica-vs-single determinism) now live in the declarative scenario
+/// suite — `scenarios/serve_*.yaml`.  This thin shim keeps them under
+/// plain `cargo test -q` via the same in-process harness `stox-cli test`
+/// uses.  It is the only test in this binary touching the repo
+/// `scenarios/` dir (golden bless is not re-entrant).
 #[test]
-fn replica_metrics_json_is_consistent_with_run() {
-    let (m, store, test) = fixture();
-    let model = NativeModel::load(&m, &store).unwrap();
-    let cfg = ReplicaConfig {
-        replicas: 2,
-        batcher: BatcherConfig { target_batch: 4, max_wait: Duration::from_secs(10) },
-        seed: 0,
-        queue_depth: 1024,
-        deadline: None,
-        slo: Duration::from_secs(5),
-    };
-    let (logits, server) = run_replica_tier(&model, cfg, fixture_images(&test, test.n));
-    assert_eq!(logits.len(), test.n);
-
-    let j = server.metrics.to_json();
-    assert_eq!(j.get("replicas").and_then(|v| v.as_usize()), Some(2));
-    assert_eq!(j.get("requests").and_then(|v| v.as_usize()), Some(test.n));
-    let shards = j.get("shards").and_then(|s| s.as_arr()).unwrap();
-    assert_eq!(shards.len(), 2);
-    let shard_sum: usize = shards
-        .iter()
-        .map(|s| s.get("requests").and_then(|v| v.as_usize()).unwrap())
-        .sum();
-    assert_eq!(shard_sum, test.n, "per-shard requests must sum to aggregate");
-    // generous SLO (5 s) on the tiny model: everything attains
-    let slo = j.get("slo").unwrap();
-    assert_eq!(slo.get("ok").and_then(|v| v.as_usize()), Some(test.n));
-    assert_eq!(slo.get("attainment").and_then(|v| v.as_f64()), Some(1.0));
-    assert!(j.get("latency_us").unwrap().get("p999").and_then(|v| v.as_f64()).is_some());
+fn serve_scenarios_pass_via_harness() {
+    let suite = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let rep = stox_net::harness::run_suite(
+        &suite,
+        &stox_net::harness::SuiteOptions { filter: Some("serve_".into()), update: false },
+    )
+    .unwrap();
+    assert!(rep.results.len() >= 5, "expected the serve_* scenarios");
+    assert!(rep.ok(), "serve scenarios failed:\n{}", rep.render_table());
 }
 
 /// The load generator sweeps offered rates, every submitted request is
@@ -208,42 +192,3 @@ fn loadgen_sweep_curve_and_artifact() {
     let _ = std::fs::remove_file(path);
 }
 
-/// Admission control against the real model: a queue depth of 1 under a
-/// pre-queued burst sheds load with explicit rejection replies — the
-/// client always hears back, and served + rejected accounts for the
-/// whole burst.
-#[test]
-fn admission_control_sheds_with_explicit_replies_on_fixture() {
-    let (m, store, test) = fixture();
-    let model = NativeModel::load(&m, &store).unwrap();
-    let server = ReplicaServer::from_native(
-        &model,
-        ReplicaConfig {
-            replicas: 2,
-            batcher: BatcherConfig { target_batch: 1, max_wait: Duration::from_millis(1) },
-            seed: 0,
-            queue_depth: 1,
-            deadline: None,
-            slo: Duration::from_secs(1),
-        },
-    );
-    let n = 24usize;
-    let (tx, rx) = mpsc::channel();
-    let rxs = submit_all(&tx, fixture_images(&test, n).into_iter());
-    drop(tx);
-    server.run(rx);
-    let (mut ok, mut rejected) = (0u64, 0u64);
-    for r in rxs {
-        match r.recv().expect("reply always delivered").result {
-            Ok(_) => ok += 1,
-            Err(e) => {
-                assert_eq!(e, stox_net::serve::REJECTED);
-                rejected += 1;
-            }
-        }
-    }
-    assert_eq!(ok + rejected, n as u64);
-    assert!(rejected > 0, "depth-1 queue under a 24-request burst must shed");
-    assert_eq!(server.metrics.rejected(), rejected);
-    assert_eq!(server.metrics.requests(), ok);
-}
