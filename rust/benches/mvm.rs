@@ -13,9 +13,10 @@
 //! dispatch redesign — legacy per-element enum dispatch vs the
 //! slice-vectorized `PsConvert::convert_slice`.
 
+use stox_net::arch::components::PsProcessing;
 use stox_net::imc::{
-    decompose_activations, im2col, ConvArena, PsConvert, PsConverter, PsConverterSpec,
-    StoxConfig, StoxMvm,
+    decompose_activations, im2col, ConvArena, MacBackend, PsConvert, PsConverter,
+    PsConverterSpec, PsIntCache, StoxConfig, StoxMvm,
 };
 use stox_net::stats::rng::CounterRng;
 use stox_net::util::bench::{self, BenchSuite};
@@ -23,6 +24,63 @@ use stox_net::util::bench::{self, BenchSuite};
 fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
     let rng = CounterRng::new(seed);
     (0..n).map(|i| rng.uniform_in(i as u32, -1.0, 1.0)).collect()
+}
+
+/// Delegating wrapper that deliberately does NOT override
+/// `convert_batch`, so the trait's default per-slice loop runs — the
+/// "before" side of the batched-conversion comparison.
+struct PerSlice(Box<dyn PsConvert>);
+
+impl PsConvert for PerSlice {
+    fn convert_slice(
+        &self,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        self.0.convert_slice(ps, out, counter_base, counter_stride, rng);
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps: &[f32],
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+    ) {
+        self.0.convert_slice_at(stream, w_slice, ps, out, counter_base, counter_stride, rng);
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn convert_slice_int_at(
+        &self,
+        stream: usize,
+        w_slice: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        counter_base: u32,
+        counter_stride: u32,
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        self.0.convert_slice_int_at(
+            stream, w_slice, ps_int, ps_scale, out, counter_base, counter_stride, rng, cache,
+        );
+    }
+    fn samples(&self) -> u32 {
+        self.0.samples()
+    }
+    fn cost_key(&self) -> PsProcessing {
+        self.0.cost_key()
+    }
+    fn label(&self) -> String {
+        format!("{} [per-slice]", self.0.label())
+    }
 }
 
 fn main() {
@@ -71,6 +129,77 @@ fn main() {
     println!(
         "-> end-to-end median speedup (run() before vs after): {:.2}x\n",
         suite.median_ns(before_e2e) / suite.median_ns(after_e2e)
+    );
+
+    println!("== SIMD MAC backends (B={b}, M={m}, N={n}, MTJ x1, sequential) ==");
+    let mut scalar_ns = f64::NAN;
+    for backend in [
+        MacBackend::Scalar,
+        MacBackend::Avx2,
+        MacBackend::Neon,
+        MacBackend::Portable,
+    ] {
+        if !backend.available() {
+            println!("(backend '{}' unavailable in this build — skipped)", backend.label());
+            continue;
+        }
+        let mut mvm = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+        mvm.set_mac_backend(backend).unwrap();
+        let idx = suite.quick(&format!("mac/4w4a4bs MTJ x1 [{}]", backend.label()), || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(mvm.run_sequential(&a, b, mtj1.as_ref(), seed));
+        });
+        if backend == MacBackend::Scalar {
+            scalar_ns = suite.median_ns(idx);
+        } else {
+            println!(
+                "-> {} vs scalar: {:.2}x",
+                backend.label(),
+                scalar_ns / suite.median_ns(idx)
+            );
+        }
+    }
+
+    println!(
+        "\n== i16 accumulation tier (int_ps_bound {} <= 32767) ==",
+        StoxConfig::default().int_ps_bound()
+    );
+    let mut wide = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    wide.set_i16_tier(false).unwrap();
+    let mut narrow = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    narrow.set_i16_tier(true).unwrap();
+    let i32_case = suite.quick("mac/4w4a4bs MTJ x1 [i32 tier]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(wide.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    let i16_case = suite.quick("mac/4w4a4bs MTJ x1 [i16 tier]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(narrow.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    println!(
+        "-> i16 tier median speedup: {:.2}x\n",
+        suite.median_ns(i32_case) / suite.median_ns(i16_case)
+    );
+
+    println!("== batched PS conversion (convert_batch) before/after ==");
+    let per_slice = PerSlice(
+        "stox:samples=1"
+            .parse::<PsConverterSpec>()
+            .unwrap()
+            .build(&StoxConfig::default())
+            .unwrap(),
+    );
+    let before_conv = suite.quick("convert_batch/MTJ x1 [per-slice loop]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(post.run_sequential(&a, b, &per_slice, seed));
+    });
+    let after_conv = suite.quick("convert_batch/MTJ x1 [batched]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(post.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    println!(
+        "-> batched-conversion median speedup: {:.2}x\n",
+        suite.median_ns(before_conv) / suite.median_ns(after_conv)
     );
 
     println!("== stox MVM (B={b}, M={m}, N={n}) ==");

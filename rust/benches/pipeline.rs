@@ -75,6 +75,29 @@ fn main() {
             "-> fused-conv median speedup: {:.2}x",
             suite.median_ns(before) / suite.median_ns(after)
         );
+
+        // ----- layer-pipelined forward vs sequential whole-batch -----
+        let threads = stox_net::util::pool::default_threads();
+        println!("\n== native forward: layer pipeline vs sequential ({n} images, {threads} threads) ==");
+        let mut sequential = NativeModel::load(&m, &store).expect("model");
+        sequential.set_pipeline(false);
+        let seq_case = suite.quick("forward/tiny sequential whole-batch", || {
+            seed = seed.wrapping_add(1);
+            bench::black_box(sequential.forward(images, n, seed));
+        });
+        let pipelined = NativeModel::load(&m, &store).expect("model");
+        let pipe_case = suite.quick(
+            &format!("forward/tiny layer-pipelined [{threads} threads]"),
+            || {
+                seed = seed.wrapping_add(1);
+                bench::black_box(pipelined.forward(images, n, seed));
+            },
+        );
+        println!(
+            "-> layer-pipeline median speedup: {:.2}x (analytical bound {:.2}x)",
+            suite.median_ns(seq_case) / suite.median_ns(pipe_case),
+            stox_net::arch::pipeline::software_pipeline_speedup(n, threads)
+        );
     } else {
         println!("(tiny_inhomo fixture missing — skipping forward bench)");
     }

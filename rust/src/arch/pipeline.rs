@@ -8,6 +8,16 @@
 //! The beat period is the longest stage; the paper's point is that shared
 //! ADCs make stage 2 the bottleneck (share × t_adc) while per-column MTJs
 //! shrink it to samples × 2 ns.
+//!
+//! The **software realization** of the inter-layer pipeline lives in
+//! `model/infer.rs` (`NativeModel::forward`): batch images fan out to
+//! workers that each carry one image through every layer, so layer k of
+//! image i executes while layer k−1 of image i+1 is still running —
+//! exactly the tile-level overlap this model prices analytically.
+//! [`PipelineModel::pipelined_batch_latency_ns`] and
+//! [`software_pipeline_speedup`] bound that execution: each image's
+//! network pass is one pipeline "job", workers drain jobs greedily, and
+//! the makespan is `ceil(images / workers)` network latencies.
 
 use super::components::{ComponentCosts, PsProcessing};
 use super::mapper::MappedLayer;
@@ -72,6 +82,24 @@ impl PipelineModel {
             .sum()
     }
 
+    /// Makespan (ns) of `images` single-image network passes on the
+    /// software layer pipeline with `workers` worker threads — the
+    /// analytical bound on `NativeModel::forward`'s pipelined batch
+    /// execution.  Workers drain images greedily and every image costs
+    /// one latency-bound network pass, so the makespan is
+    /// `ceil(images / workers)` network latencies (image-parallel layer
+    /// overlap hides everything else).
+    pub fn pipelined_batch_latency_ns(
+        &self,
+        layers: &[MappedLayer],
+        ps_of: impl Fn(&MappedLayer) -> PsProcessing,
+        images: usize,
+        workers: usize,
+    ) -> f64 {
+        let t_net = self.network_latency_ns(layers, ps_of);
+        images.div_ceil(workers.max(1)) as f64 * t_net
+    }
+
     /// ASCII rendering of the Fig. 8 comparison for the CLI.
     pub fn render_fig8(&self, n_cols: usize, adc_share: usize, samples: u32) -> String {
         let adc = self.stages(
@@ -116,6 +144,17 @@ impl PipelineModel {
         ));
         out
     }
+}
+
+/// Ideal speedup of the software layer pipeline over the sequential
+/// whole-batch forward: `images / ceil(images / workers)` — linear while
+/// images divide evenly over workers, degrading on the ragged tail
+/// (e.g. 5 images on 4 workers still take 2 rounds).
+pub fn software_pipeline_speedup(images: usize, workers: usize) -> f64 {
+    if images == 0 {
+        return 1.0;
+    }
+    images as f64 / images.div_ceil(workers.max(1)) as f64
 }
 
 #[cfg(test)]
@@ -170,6 +209,39 @@ mod tests {
         let ps = PsProcessing::StochasticMtj { samples: 1 };
         let r = p.layer_latency_ns(&big, ps) / p.layer_latency_ns(&small, ps);
         assert!((r - 4.0).abs() < 0.1, "{r}");
+    }
+
+    #[test]
+    fn software_pipeline_speedup_bounds() {
+        // even split: linear in workers
+        assert_eq!(software_pipeline_speedup(8, 4), 4.0);
+        // ragged tail: 5 images on 4 workers take 2 rounds
+        assert_eq!(software_pipeline_speedup(5, 4), 2.5);
+        // degenerate shapes never exceed the work available
+        assert_eq!(software_pipeline_speedup(1, 16), 1.0);
+        assert_eq!(software_pipeline_speedup(7, 1), 1.0);
+        assert_eq!(software_pipeline_speedup(0, 4), 1.0);
+        assert_eq!(software_pipeline_speedup(3, 0), 1.0);
+    }
+
+    #[test]
+    fn pipelined_batch_latency_matches_round_count() {
+        let p = PipelineModel::default();
+        let cfg = StoxConfig::default();
+        let layers = [
+            map_layer(&LayerShape::conv("a", 3, 16, 16, 8, true), &cfg, 128),
+            map_layer(&LayerShape::conv("b", 3, 8, 8, 16, true), &cfg, 128),
+        ];
+        let ps = |_: &MappedLayer| PsProcessing::StochasticMtj { samples: 1 };
+        let t_net = p.network_latency_ns(&layers, ps);
+        // 8 images, 4 workers → 2 rounds of the network latency
+        assert_eq!(p.pipelined_batch_latency_ns(&layers, ps, 8, 4), 2.0 * t_net);
+        // one worker degenerates to the sequential batch
+        assert_eq!(p.pipelined_batch_latency_ns(&layers, ps, 3, 1), 3.0 * t_net);
+        // speedup identity: sequential / pipelined == software speedup
+        let seq = 5.0 * t_net;
+        let pipe = p.pipelined_batch_latency_ns(&layers, ps, 5, 4);
+        assert_eq!(seq / pipe, software_pipeline_speedup(5, 4));
     }
 
     #[test]

@@ -124,6 +124,9 @@ fn stage_infer(cfg: &Json) -> crate::Result<Json> {
         converter = Json::Str(spec.to_string());
         model = model.with_converter_spec(&spec)?;
     }
+    // `pipeline: false` forces the sequential whole-batch forward; the
+    // default exercises the layer-pipelined path wherever it is eligible
+    model.set_pipeline(flag(cfg, "pipeline", true));
     let seed = n_u32(cfg, "seed", 7);
     let batch = n_usize(cfg, "batch", 8);
     let n = test.n;
@@ -134,6 +137,14 @@ fn stage_infer(cfg: &Json) -> crate::Result<Json> {
     let l1 = model.forward(&test.images[..n * img_sz], n, seed);
     let l2 = model.forward(&test.images[..n * img_sz], n, seed);
     let l3 = model.forward(&test.images[..n * img_sz], n, seed.wrapping_add(1));
+
+    // the layer pipeline must not move a single sample relative to the
+    // sequential forward (absolute-index RNG counter contract)
+    let pipeline_was_on = flag(cfg, "pipeline", true);
+    model.set_pipeline(false);
+    let l_seq = model.forward(&test.images[..n * img_sz], n, seed);
+    model.set_pipeline(pipeline_was_on);
+    let pipeline_matches = l1 == l_seq;
 
     // logit margin of the labeled class per image — the trained-fixture
     // ordering claims (margins strictly positive, trained ≫ random-init)
@@ -160,6 +171,7 @@ fn stage_infer(cfg: &Json) -> crate::Result<Json> {
         ("accuracy", Json::Num(accuracy)),
         ("deterministic", Json::Bool(l1 == l2)),
         ("seed_invariant", Json::Bool(l1 == l3)),
+        ("pipeline_matches_sequential", Json::Bool(pipeline_matches)),
         ("logits0", f32s_to_json(&l1[..classes])),
         ("margins", f32s_to_json(&margins)),
         ("min_margin", Json::Num(f64::from(min_margin))),

@@ -97,6 +97,46 @@ pub trait PsConvert: Send + Sync {
         self.convert_slice_at(stream, w_slice, psn, out, counter_base, counter_stride, rng);
     }
 
+    /// Batched integer entry point: digitizes a whole `(batch, subarray)`
+    /// group — every `(stream i, w_slice j)` column slice of one stripe —
+    /// in a single converter call.  `coords[g] = (i, j, counter_base)` and
+    /// slice `g` occupies `ps_int[g·n .. (g+1)·n]` / `out[g·n .. (g+1)·n]`;
+    /// all slices share `counter_stride`.  The kernel accumulates the whole
+    /// group first and converts second, so stochastic converters pay one
+    /// dispatch (and one memo/threshold warm-up) per group instead of one
+    /// per slice.
+    ///
+    /// Implementations MUST be bit-identical to looping
+    /// [`PsConvert::convert_slice_int_at`] over the slices in `coords`
+    /// order — the default does exactly that, and the equivalence is
+    /// property-pinned in `tests/proptests.rs` for every registry builtin.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_batch(
+        &self,
+        coords: &[(usize, usize, u32)],
+        counter_stride: u32,
+        n: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        for (g, &(stream, w_slice, base)) in coords.iter().enumerate() {
+            self.convert_slice_int_at(
+                stream,
+                w_slice,
+                &ps_int[g * n..(g + 1) * n],
+                ps_scale,
+                &mut out[g * n..(g + 1) * n],
+                base,
+                counter_stride,
+                rng,
+                cache,
+            );
+        }
+    }
+
     /// Scalar convenience (tests, device-level probes): converts one PS.
     fn convert(&self, ps: f32, counter_base: u32, rng: &CounterRng) -> f32 {
         let mut out = [0.0f32; 1];
@@ -594,6 +634,33 @@ impl PsConvert for ExpectedMtjConv {
         }
     }
 
+    /// Batched fast path: one non-virtual loop over the group, sharing the
+    /// per-level value memo across all slices (coordinates are ignored —
+    /// the expected curve is significance-blind).
+    #[allow(clippy::too_many_arguments)]
+    fn convert_batch(
+        &self,
+        coords: &[(usize, usize, u32)],
+        _counter_stride: u32,
+        n: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        _rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        for g in 0..coords.len() {
+            for (o, &pi) in out[g * n..(g + 1) * n]
+                .iter_mut()
+                .zip(&ps_int[g * n..(g + 1) * n])
+            {
+                let bits =
+                    cache.memo_at(pi, || (self.alpha * (pi as f32 * ps_scale)).tanh().to_bits());
+                *o = f32::from_bits(bits);
+            }
+        }
+    }
+
     fn surrogate(&self) -> PsSurrogate {
         PsSurrogate::Tanh { alpha: self.alpha }
     }
@@ -669,6 +736,38 @@ impl PsConvert for StochasticMtjConv {
             rng,
             cache,
         );
+    }
+
+    /// Batched fast path: one non-virtual loop of the shared sampling core
+    /// over the group — same thresholds (one memo for all slices), same
+    /// counter blocks, same bits as the per-slice path.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_batch(
+        &self,
+        coords: &[(usize, usize, u32)],
+        counter_stride: u32,
+        n: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        for (g, &(_, _, base)) in coords.iter().enumerate() {
+            stochastic_slice_int(
+                self.alpha,
+                self.n_samples,
+                self.n_samples,
+                None,
+                &ps_int[g * n..(g + 1) * n],
+                ps_scale,
+                &mut out[g * n..(g + 1) * n],
+                base,
+                counter_stride,
+                rng,
+                cache,
+            );
+        }
     }
 
     fn samples(&self) -> u32 {
@@ -826,6 +925,40 @@ impl PsConvert for InhomogeneousMtjConv {
             rng,
             cache,
         );
+    }
+
+    /// Batched fast path: the significance schedule is applied per group
+    /// coordinate inside one non-virtual loop; the level→threshold memo is
+    /// shared across the whole group (read counts differ, thresholds
+    /// don't).
+    #[allow(clippy::too_many_arguments)]
+    fn convert_batch(
+        &self,
+        coords: &[(usize, usize, u32)],
+        counter_stride: u32,
+        n: usize,
+        ps_int: &[i32],
+        ps_scale: f32,
+        out: &mut [f32],
+        rng: &CounterRng,
+        cache: &mut PsIntCache,
+    ) {
+        for (g, &(stream, w_slice, base)) in coords.iter().enumerate() {
+            let ns = self.samples_at(stream, w_slice);
+            stochastic_slice_int(
+                self.alpha,
+                ns,
+                self.n_max(),
+                Some(1.0 / ns as f32),
+                &ps_int[g * n..(g + 1) * n],
+                ps_scale,
+                &mut out[g * n..(g + 1) * n],
+                base,
+                counter_stride,
+                rng,
+                cache,
+            );
+        }
     }
 
     /// Every (stream, slice) group's expected output is the same
@@ -1380,6 +1513,59 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    /// The batched entry point must be bit-identical to looping the
+    /// per-slice integer entry point in coords order — for every builtin
+    /// (the three MTJ overrides and the default loop alike), with memo
+    /// state evolving across the group.
+    #[test]
+    fn batch_entry_matches_per_slice_loop_for_every_builtin() {
+        let cfg = StoxConfig { w_slice_bits: 1, ..cfg() }; // I=4, J=4
+        let specs = [
+            "ideal",
+            "quant:bits=5",
+            "sparse:bits=4",
+            "sa",
+            "expected:alpha=3",
+            "stox:alpha=4,samples=3",
+            "inhomo:alpha=4,base=1,extra=3",
+        ];
+        let r = rng();
+        let n = 24usize;
+        // three (i, j) groups with the kernel's [j][i] interleaving and
+        // distinct counter bases, sharing one stride
+        let coords = [(0usize, 0usize, 500u32), (3, 2, 740), (1, 3, 980)];
+        let stride = 7u32;
+        let ps_int: Vec<i32> = (0..coords.len() * n).map(|i| ((i as i32 * 11) % 129) - 64).collect();
+        let scale = 1.0f32 / 64.0;
+        for s in specs {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let conv = spec.build(&cfg).unwrap();
+            let mut want = vec![0.0f32; ps_int.len()];
+            let mut c1 = PsIntCache::new();
+            c1.reset(64);
+            for (g, &(i, j, base)) in coords.iter().enumerate() {
+                conv.convert_slice_int_at(
+                    i,
+                    j,
+                    &ps_int[g * n..(g + 1) * n],
+                    scale,
+                    &mut want[g * n..(g + 1) * n],
+                    base,
+                    stride,
+                    &r,
+                    &mut c1,
+                );
+            }
+            let mut got = vec![0.0f32; ps_int.len()];
+            let mut c2 = PsIntCache::new();
+            c2.reset(64);
+            conv.convert_batch(&coords, stride, n, &ps_int, scale, &mut got, &r, &mut c2);
+            for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "{s} idx {idx}: {g} vs {w}");
             }
         }
     }

@@ -32,6 +32,7 @@ pub mod converters;
 pub mod mvm;
 pub mod nonideal;
 pub mod quant;
+pub mod simd;
 
 pub use convert::{
     default_registry, ConverterRegistry, ExpectedMtjConv, IdealAdcConv, InhomogeneousMtjConv,
@@ -44,3 +45,4 @@ pub use mvm::{
 };
 pub use nonideal::{Nonideality, NonidealCrossbar};
 pub use quant::StoxConfig;
+pub use simd::MacBackend;

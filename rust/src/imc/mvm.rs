@@ -31,6 +31,7 @@
 
 use super::convert::{PsConvert, PsIntCache};
 use super::quant::{self, StoxConfig};
+use super::simd::{self, MacBackend};
 use crate::stats::rng::CounterRng;
 
 /// Programmed weight-slice digit planes, flattened `[k][j][r][c]`
@@ -51,6 +52,12 @@ pub struct StoxMvm {
     pub n: usize,
     n_arrs: usize,
     planes: WeightPlanes,
+    /// SIMD MAC backend chosen at programming time ([`MacBackend::detect`];
+    /// `STOX_SIMD` overrides) — every backend is bit-identical to scalar.
+    backend: MacBackend,
+    /// `i16` accumulation tier active ([`StoxConfig::int16_kernel_ok`] at
+    /// programming time) — double lanes, bit-identical results.
+    i16_tier: bool,
 }
 
 /// Per-worker scratch of the integer kernel: activation digit stripe,
@@ -62,10 +69,14 @@ struct IntScratch {
     xd: Vec<i8>,
     /// one row's stream digits
     digits: Vec<i8>,
-    /// integer PS accumulator of one column slice
+    /// integer PS accumulator of one column slice (the probe path)
     ps_int: Vec<i32>,
-    /// converted column slice
-    cv: Vec<f32>,
+    /// integer PS accumulators of one whole (b, k) group, layout [j][i][c]
+    /// — filled for all slices first so one [`PsConvert::convert_batch`]
+    /// call digitizes the group
+    ps_group: Vec<i32>,
+    /// (stream, slice, counter base) of each group slice, [j][i] order
+    coords: Vec<(usize, usize, u32)>,
     /// converter-level memo ([`PsIntCache`])
     cache: PsIntCache,
     /// scaled conversion terms of one (b, k) group, layout [j][i][c] —
@@ -83,7 +94,8 @@ impl IntScratch {
             xd: vec![0; cfg.r_arr * i_n],
             digits: vec![0; i_n],
             ps_int: vec![0; mvm.n],
-            cv: vec![0.0; mvm.n],
+            ps_group: vec![0; j_n * i_n * mvm.n],
+            coords: Vec::with_capacity(j_n * i_n),
             cache,
             contrib: vec![0.0; j_n * i_n * mvm.n],
         }
@@ -149,7 +161,14 @@ impl StoxMvm {
         } else {
             WeightPlanes::F32(wd32)
         };
-        Ok(Self { cfg, m, n, n_arrs, planes })
+        // backend + accumulation tier are per-crossbar ("per-layer")
+        // decisions made once at programming time
+        let (backend, i16_tier) = if int_planes {
+            (MacBackend::detect(), cfg.int16_kernel_ok())
+        } else {
+            (MacBackend::Scalar, false)
+        };
+        Ok(Self { cfg, m, n, n_arrs, planes, backend, i16_tier })
     }
 
     pub fn n_arrs(&self) -> usize {
@@ -160,6 +179,57 @@ impl StoxMvm {
     /// (i8 planes) rather than the retained f32 reference kernel.
     pub fn is_integer_kernel(&self) -> bool {
         matches!(self.planes, WeightPlanes::I8(_))
+    }
+
+    /// The SIMD MAC backend this crossbar dispatches to (README §SIMD) —
+    /// the label benches record next to their before/after timings.
+    pub fn mac_backend(&self) -> MacBackend {
+        self.backend
+    }
+
+    /// Force a specific MAC backend (equivalence proptests, the
+    /// scalar-vs-SIMD bench cases).  Errors when the backend is not
+    /// available in this build/host; results are bit-identical either way.
+    pub fn set_mac_backend(&mut self, backend: MacBackend) -> crate::Result<()> {
+        anyhow::ensure!(
+            backend.available(),
+            "MAC backend '{}' is not available in this build/host",
+            backend.label()
+        );
+        self.backend = backend;
+        Ok(())
+    }
+
+    /// Whether the `i16` accumulation tier is active (selected per layer
+    /// at programming time when [`StoxConfig::int16_kernel_ok`] holds).
+    pub fn i16_tier(&self) -> bool {
+        self.i16_tier
+    }
+
+    /// Toggle the `i16` accumulation tier (the i32-vs-i16 bench cases and
+    /// equivalence proptests).  Errors when the config's PS bound does not
+    /// fit `i16` — forcing it on anyway could overflow.
+    pub fn set_i16_tier(&mut self, on: bool) -> crate::Result<()> {
+        anyhow::ensure!(
+            !on || self.cfg.int16_kernel_ok(),
+            "i16 tier needs int16_kernel_ok (int_ps_bound {} > {})",
+            self.cfg.int_ps_bound(),
+            i16::MAX
+        );
+        self.i16_tier = on;
+        Ok(())
+    }
+
+    /// Dispatch one column-slice MAC through the selected backend and
+    /// accumulation tier — bit-identical to [`simd::mac_i32_scalar`] on
+    /// every (backend, tier) pair.
+    fn mac(&self, w_pl: &[i8], xd: &[i8], rows: usize, stream: usize, ps: &mut [i32]) {
+        let i_n = self.cfg.n_streams();
+        if self.i16_tier {
+            simd::mac_i16(self.backend, w_pl, xd, rows, i_n, stream, self.n, ps);
+        } else {
+            simd::mac_i32(self.backend, w_pl, xd, rows, i_n, stream, self.n, ps);
+        }
     }
 
     /// Flat byte range of subarray `k`, slice `j` within the plane store.
@@ -415,11 +485,19 @@ impl StoxMvm {
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
         let n = self.n;
         let inv_r = 1.0 / cfg.r_arr as f32;
-        let IntScratch { xd, ps_int, cv, cache, contrib, .. } = scratch;
+        let IntScratch { xd, ps_group, coords, cache, contrib, .. } = scratch;
+        // phase 1 — accumulate every (j, i) slice of the group
+        coords.clear();
         for j in 0..j_n {
             let w_pl = &planes[self.plane_range(k, j)];
             for i in 0..i_n {
-                accumulate_int(w_pl, xd, rows, i_n, i, n, ps_int);
+                let g = j * i_n + i;
+                let ps_int = &mut ps_group[g * n..(g + 1) * n];
+                if self.i16_tier {
+                    simd::mac_i16(self.backend, w_pl, xd, rows, i_n, i, n, ps_int);
+                } else {
+                    simd::mac_i32(self.backend, w_pl, xd, rows, i_n, i, n, ps_int);
+                }
                 if let Some(cap) = ps_out.as_deref_mut() {
                     let dst = &mut cap[(i * j_n + j) * n..(i * j_n + j + 1) * n];
                     for (d, &p) in dst.iter_mut().zip(ps_int.iter()) {
@@ -434,12 +512,20 @@ impl StoxMvm {
                 let base0 = ((((b * self.n_arrs + k) * n) * i_n + i) as u32)
                     .wrapping_mul(j_n as u32)
                     .wrapping_add(j as u32);
-                let stride = (i_n * j_n) as u32;
-                conv.convert_slice_int_at(i, j, ps_int, inv_r, cv, base0, stride, rng, cache);
+                coords.push((i, j, base0));
+            }
+        }
+        // phase 2 — digitize the whole group in one converter call
+        // (threshold draws and PsIntCache lookups amortize across slices;
+        // bit-identical to per-slice conversion by the trait contract)
+        let stride = (i_n * j_n) as u32;
+        conv.convert_batch(coords, stride, n, ps_group, inv_r, contrib, rng, cache);
+        // phase 3 — apply the shift-and-add significance scales in place
+        for j in 0..j_n {
+            for i in 0..i_n {
                 let scale = sa[i] * sw[j] * norm;
-                let crow = &mut contrib[(j * i_n + i) * n..(j * i_n + i + 1) * n];
-                for (o, &v) in crow.iter_mut().zip(cv.iter()) {
-                    *o = v * scale;
+                for o in contrib[(j * i_n + i) * n..(j * i_n + i + 1) * n].iter_mut() {
+                    *o *= scale;
                 }
             }
         }
@@ -573,58 +659,6 @@ impl StoxMvm {
     }
 }
 
-/// Blocked i8×i8→i32 MAC of activation stream `stream` against one weight
-/// slice plane: `ps[c] = Σ_r xd[r][stream] · w_pl[r][c]`.  The column loop
-/// runs in fixed blocks of `MAC_BLK` i32 register accumulators so LLVM
-/// unrolls and vectorizes it; zero activation digits skip their row
-/// entirely (signed-digit decomposition makes in-range digits odd — the
-/// skip fires for structurally absent rows and custom sparse operands, and
-/// costs one predictable branch when dense).
-fn accumulate_int(
-    w_pl: &[i8],
-    xd: &[i8],
-    rows: usize,
-    i_n: usize,
-    stream: usize,
-    n: usize,
-    ps: &mut [i32],
-) {
-    const MAC_BLK: usize = 16;
-    let mut c0 = 0usize;
-    while c0 + MAC_BLK <= n {
-        let mut acc = [0i32; MAC_BLK];
-        for rr in 0..rows {
-            let x = xd[rr * i_n + stream];
-            if x == 0 {
-                continue;
-            }
-            let x = x as i32;
-            let w = &w_pl[rr * n + c0..rr * n + c0 + MAC_BLK];
-            for (a, &wv) in acc.iter_mut().zip(w) {
-                *a += x * wv as i32;
-            }
-        }
-        ps[c0..c0 + MAC_BLK].copy_from_slice(&acc);
-        c0 += MAC_BLK;
-    }
-    if c0 < n {
-        let rem = n - c0;
-        let mut acc = [0i32; MAC_BLK];
-        for rr in 0..rows {
-            let x = xd[rr * i_n + stream];
-            if x == 0 {
-                continue;
-            }
-            let x = x as i32;
-            let w = &w_pl[rr * n + c0..rr * n + c0 + rem];
-            for (a, &wv) in acc.iter_mut().zip(w) {
-                *a += x * wv as i32;
-            }
-        }
-        ps[c0..n].copy_from_slice(&acc[..rem]);
-    }
-}
-
 impl StoxMvm {
     /// Enumerate all normalized array-level partial sums for a batch
     /// (the Fig. 4 distribution probe).  Order: [b][k][i][j][col].
@@ -652,15 +686,7 @@ impl StoxMvm {
                 for i in 0..i_n {
                     for j in 0..j_n {
                         let w_pl = &planes[self.plane_range(k, j)];
-                        accumulate_int(
-                            w_pl,
-                            &scratch.xd,
-                            rows,
-                            i_n,
-                            i,
-                            self.n,
-                            &mut scratch.ps_int,
-                        );
+                        self.mac(w_pl, &scratch.xd, rows, i, &mut scratch.ps_int);
                         out.extend(scratch.ps_int.iter().map(|&p| p as f32 * inv_r));
                     }
                 }
@@ -928,6 +954,7 @@ impl StoxMvm {
                         wo,
                         p0,
                         p1,
+                        0,
                         conv,
                         seed,
                         scratch,
@@ -960,6 +987,7 @@ impl StoxMvm {
             wo,
             0,
             patches,
+            0,
             conv,
             seed,
             &mut scratch,
@@ -968,12 +996,51 @@ impl StoxMvm {
         (out, ps_all, ho, wo)
     }
 
+    /// Strictly sequential fused conv with an **absolute patch-counter
+    /// offset** — the layer-pipelined forward's per-image kernel.  The RNG
+    /// counter contract keys every draw by the absolute patch index (the
+    /// batch-row slot of the frozen layout), so running image `i` alone
+    /// with `patch_base = i · ho · wo` is bit-identical to its rows of the
+    /// whole-batch [`StoxMvm::run_conv_digits`] — that is what lets
+    /// `model/infer.rs` overlap layer k of image i with layer k−1 of image
+    /// i+1 without perturbing a single bit.  Never spawns worker threads
+    /// itself (the pipeline owns the parallelism).
+    pub fn run_conv_digits_offset<C: PsConvert + ?Sized>(
+        &self,
+        acts: &ActivationDigits<'_>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        conv: &C,
+        seed: u32,
+        patch_base: usize,
+    ) -> (Vec<f32>, usize, usize) {
+        assert_eq!(self.m, kh * kw * acts.c, "conv geometry mismatch");
+        assert_eq!(acts.i_n, self.cfg.n_streams(), "activation digit width mismatch");
+        let WeightPlanes::I8(planes) = &self.planes else {
+            panic!("run_conv_digits_offset requires the integer digit-plane kernel");
+        };
+        let pad = (kh - 1) / 2;
+        let ho = (acts.h + 2 * pad - kh) / stride + 1;
+        let wo = (acts.w + 2 * pad - kw) / stride + 1;
+        let patches = acts.b * ho * wo;
+        let mut scratch = IntScratch::new(self);
+        let out = self.conv_digits_range(
+            planes, acts, kw, stride, pad, ho, wo, 0, patches, patch_base, conv, seed,
+            &mut scratch, None,
+        );
+        (out, ho, wo)
+    }
+
     /// Fused conv kernel over patch rows [p0, p1).  `capture`, when
     /// present, must hold `(p1 − p0) · K · I · J · N` f32 and receives
     /// every normalized per-slice PS of the range in the canonical
     /// `[p][k][i][j][col]` layout — the patch index plays the batch-row
     /// role, exactly as `im2col` + [`StoxMvm::run_capture`] over
     /// `batch = patches` lays it out (and keys its RNG counters).
+    /// `counter_off` shifts only the RNG batch-row index (the pipelined
+    /// per-image path passes the image's absolute first-patch index);
+    /// geometry stays keyed by the local patch index.
     #[allow(clippy::too_many_arguments)]
     fn conv_digits_range<C: PsConvert + ?Sized>(
         &self,
@@ -986,6 +1053,7 @@ impl StoxMvm {
         wo: usize,
         p0: usize,
         p1: usize,
+        counter_off: usize,
         conv: &C,
         seed: u32,
         scratch: &mut IntScratch,
@@ -1016,7 +1084,7 @@ impl StoxMvm {
                     &mut buf[g0..g0 + group]
                 });
                 self.run_stripe_int(
-                    planes, rows, p, k, conv, &rng, &sa, &sw, norm, scratch, cap,
+                    planes, rows, counter_off + p, k, conv, &rng, &sa, &sw, norm, scratch, cap,
                 );
                 let orow = &mut out[(p - p0) * self.n..(p - p0 + 1) * self.n];
                 for terms in scratch.contrib.chunks_exact(self.n) {
@@ -1414,6 +1482,101 @@ mod tests {
             let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
             let (got, ho2, wo2) = mvm.run_conv_digits(&acts, 3, 3, stride, &conv, 31);
             assert_eq!((ho, wo), (ho2, wo2));
+            assert_eq!(got, want, "r_arr {r_arr} stride {stride}");
+        }
+    }
+
+    /// Every available MAC backend must reproduce the scalar reference
+    /// bit for bit, at the full kernel level (accumulation + conversion +
+    /// fold), stochastic converter included.
+    #[test]
+    fn forced_mac_backends_are_bit_identical() {
+        let (b, m, n) = (2usize, 150usize, 33usize); // n hits SIMD blocks + tail
+        let a = rand_vec(b * m, 41);
+        let w = rand_vec(m * n, 42);
+        for cfg in [StoxConfig::default(), cfg_small()] {
+            let mut mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+            assert!(mvm.is_integer_kernel());
+            mvm.set_mac_backend(MacBackend::Scalar).unwrap();
+            let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+            let want = mvm.run_sequential(&a, b, &conv, 17);
+            let want_ps = mvm.collect_ps(&a, b);
+            for backend in [
+                MacBackend::Avx2,
+                MacBackend::Neon,
+                MacBackend::Portable,
+            ] {
+                if !backend.available() {
+                    assert!(mvm.set_mac_backend(backend).is_err());
+                    continue;
+                }
+                mvm.set_mac_backend(backend).unwrap();
+                assert_eq!(mvm.mac_backend(), backend);
+                assert_eq!(
+                    mvm.run_sequential(&a, b, &conv, 17),
+                    want,
+                    "{} vs scalar ({})",
+                    backend.label(),
+                    cfg.tag()
+                );
+                assert_eq!(mvm.collect_ps(&a, b), want_ps, "{} probe", backend.label());
+            }
+        }
+    }
+
+    /// The i16 accumulation tier must be bit-identical to i32 whenever the
+    /// gate admits it, and refuse configs whose PS bound doesn't fit.
+    #[test]
+    fn i16_tier_matches_i32_and_gates() {
+        let (b, m, n) = (2usize, 150usize, 19usize);
+        let a = rand_vec(b * m, 43);
+        let w = rand_vec(m * n, 44);
+        let cfg = StoxConfig::default(); // 4w4a4bs: bound 3840 ≤ i16::MAX
+        assert!(cfg.int16_kernel_ok());
+        let mut mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        assert!(mvm.i16_tier(), "qualifying config selects the i16 tier");
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        let o16 = mvm.run_sequential(&a, b, &conv, 19);
+        let ps16 = mvm.collect_ps(&a, b);
+        mvm.set_i16_tier(false).unwrap();
+        assert_eq!(mvm.run_sequential(&a, b, &conv, 19), o16, "i16 == i32");
+        assert_eq!(mvm.collect_ps(&a, b), ps16, "i16 probe == i32 probe");
+        mvm.set_i16_tier(true).unwrap();
+        // a bound past i16::MAX must refuse the tier (and never self-select)
+        let wide = StoxConfig { a_stream_bits: 4, ..cfg };
+        assert!(wide.int_kernel_ok() && !wide.int16_kernel_ok());
+        let mut big = StoxMvm::program(&w, m, n, wide).unwrap();
+        assert!(!big.i16_tier());
+        assert!(big.set_i16_tier(true).is_err());
+    }
+
+    /// Per-image fused conv with absolute patch offsets — the pipelined
+    /// forward's kernel — concatenates to exactly the whole-batch fused
+    /// conv, bit for bit (the RNG counter contract is keyed by absolute
+    /// patch index, not by call granularity).
+    #[test]
+    fn offset_conv_per_image_matches_whole_batch() {
+        let (b, h, w, cin, cout) = (3usize, 6usize, 5usize, 3usize, 7usize);
+        let x = rand_vec(b * h * w * cin, 45);
+        let wts = rand_vec(3 * 3 * cin * cout, 46);
+        for (r_arr, stride) in [(16usize, 1usize), (8, 2)] {
+            let cfg = StoxConfig { r_arr, w_slice_bits: 1, ..Default::default() };
+            let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+            let mvm = StoxMvm::program(&wts, 3 * 3 * cin, cout, cfg).unwrap();
+            let mut arena = ConvArena::new();
+            let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
+            let (want, ho, wo) = mvm.run_conv_digits(&acts, 3, 3, stride, &conv, 51);
+            let mut got = Vec::with_capacity(want.len());
+            let mut img_arena = ConvArena::new();
+            for bi in 0..b {
+                let xi = &x[bi * h * w * cin..(bi + 1) * h * w * cin];
+                let ai = decompose_activations(&mut img_arena, xi, 1, h, w, cin, &cfg);
+                let (oi, ho2, wo2) = mvm.run_conv_digits_offset(
+                    &ai, 3, 3, stride, &conv, 51, bi * ho * wo,
+                );
+                assert_eq!((ho, wo), (ho2, wo2));
+                got.extend(oi);
+            }
             assert_eq!(got, want, "r_arr {r_arr} stride {stride}");
         }
     }

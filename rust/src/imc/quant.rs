@@ -139,6 +139,17 @@ impl StoxConfig {
     pub fn int_kernel_ok(&self) -> bool {
         self.a_stream_bits <= 7 && self.w_slice_bits <= 7 && self.int_ps_bound() <= 1 << 24
     }
+
+    /// Whether the `i16` accumulation tier applies on top of
+    /// [`StoxConfig::int_kernel_ok`]: every per-column partial sum —
+    /// including all intermediate prefix sums, since
+    /// [`StoxConfig::int_ps_bound`] bounds the sum of absolute products —
+    /// must fit an `i16` accumulator.  Doubles SIMD lanes over the `i32`
+    /// path with bit-identical results (integer addition is exact).  The
+    /// paper's baseline 4w4a4bs @ `r_arr = 256` qualifies (bound 3840).
+    pub fn int16_kernel_ok(&self) -> bool {
+        self.int_kernel_ok() && self.int_ps_bound() <= i16::MAX as u64
+    }
 }
 
 /// Quantize v ∈ [-1,1] to the integer code u ∈ [0, 2^bits - 1].
@@ -309,6 +320,18 @@ mod tests {
         assert!(huge.int_ps_bound() > 1 << 24);
         assert!(!huge.int_kernel_ok());
         assert_eq!(StoxConfig::default().int_ps_bound(), 3840); // 256 · 1 · 15
+    }
+
+    #[test]
+    fn int16_tier_gate() {
+        // baseline 4w4a4bs: bound 3840 ≤ 32767 — i16 tier applies
+        assert!(StoxConfig::default().int16_kernel_ok());
+        // 4-bit streams × 4-bit slices @ 256 rows: 256·15·15 = 57600 > 32767
+        let wide = StoxConfig { a_stream_bits: 4, ..Default::default() };
+        assert!(wide.int_kernel_ok() && !wide.int16_kernel_ok());
+        // i16 tier implies the integer kernel gate
+        let huge = StoxConfig { r_arr: 1 << 20, a_stream_bits: 4, ..Default::default() };
+        assert!(!huge.int16_kernel_ok());
     }
 
     #[test]

@@ -1,0 +1,696 @@
+//! Explicit-SIMD backends for the integer digit-plane MAC.
+//!
+//! [`mac_i32`]/[`mac_i16`] compute one column slice of Algorithm 1's
+//! partial sums, `ps[c] = Σ_r xd[r][stream] · w_pl[r][c]`, dispatching on
+//! a [`MacBackend`] chosen once at crossbar programming time:
+//!
+//! * **Scalar** — the pinned bit-exact reference (the PR-4 blocked i32
+//!   MAC, verbatim); always available and selected automatically when
+//!   nothing wider is.
+//! * **Avx2 / Neon** — `target_feature`-gated `std::arch` kernels behind
+//!   the default `simd` cargo feature (AVX2 is runtime-detected on
+//!   x86_64; NEON is baseline on aarch64).
+//! * **Portable** — nightly-only `std::simd` kernel behind the
+//!   `portable-simd` feature; preferred when compiled in.
+//!
+//! Every backend is **exact**: digit products and all `r_arr`-bounded
+//! prefix sums are integers, integer addition is associative, so lane
+//! reordering cannot change a single bit relative to the scalar kernel
+//! (`tests/proptests.rs` pins this across shapes, configs, and every
+//! registry converter).  The `i16` tier applies the same argument one
+//! width down: when [`StoxConfig::int16_kernel_ok`] holds, every prefix
+//! sum fits an `i16` accumulator — double the lanes per register — and
+//! the final widen-to-`i32` store is lossless.
+//!
+//! `STOX_SIMD` (`auto|scalar|avx2|neon|portable`) overrides the choice
+//! for perf runs; like `STOX_THREADS`, an unknown or unavailable value
+//! fails loudly rather than silently measuring the wrong kernel.
+//!
+//! [`StoxConfig::int16_kernel_ok`]: super::quant::StoxConfig::int16_kernel_ok
+
+/// One MAC backend of the integer digit-plane kernel.  All variants exist
+/// on every build so `STOX_SIMD` parsing and bench labels are uniform;
+/// [`MacBackend::available`] reports whether the current build *and* host
+/// can run one, and the dispatchers fall back to the bit-identical scalar
+/// kernel for variants compiled out of this binary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacBackend {
+    /// Pinned bit-exact reference (blocked i32 MAC).
+    Scalar,
+    /// `std::arch` x86_64 kernel (`#[target_feature(enable = "avx2")]`).
+    Avx2,
+    /// `std::arch` aarch64 kernel (NEON is baseline on aarch64).
+    Neon,
+    /// `std::simd` kernel (`portable-simd` feature, nightly-only).
+    Portable,
+}
+
+impl MacBackend {
+    /// Stable lowercase name — the `STOX_SIMD` vocabulary and the label
+    /// benches record next to their timings.
+    pub fn label(self) -> &'static str {
+        match self {
+            MacBackend::Scalar => "scalar",
+            MacBackend::Avx2 => "avx2",
+            MacBackend::Neon => "neon",
+            MacBackend::Portable => "portable",
+        }
+    }
+
+    /// Whether this backend can run on the current build + host.
+    pub fn available(self) -> bool {
+        match self {
+            MacBackend::Scalar => true,
+            MacBackend::Avx2 => avx2_available(),
+            MacBackend::Neon => cfg!(all(feature = "simd", target_arch = "aarch64")),
+            MacBackend::Portable => cfg!(feature = "portable-simd"),
+        }
+    }
+
+    /// The backend crossbar programming selects: the `STOX_SIMD` override
+    /// when set (panics on unknown values or unavailable backends — see
+    /// [`parse_stox_simd`]), else the widest available kernel.
+    pub fn detect() -> MacBackend {
+        if let Ok(v) = std::env::var("STOX_SIMD") {
+            if let Some(b) = parse_stox_simd(&v).unwrap() {
+                assert!(
+                    b.available(),
+                    "STOX_SIMD={} requested, but that backend is not available in this \
+                     build/host (cargo feature or CPU support missing)",
+                    b.label()
+                );
+                return b;
+            }
+        }
+        Self::auto()
+    }
+
+    fn auto() -> MacBackend {
+        if MacBackend::Portable.available() {
+            MacBackend::Portable
+        } else if MacBackend::Avx2.available() {
+            MacBackend::Avx2
+        } else if MacBackend::Neon.available() {
+            MacBackend::Neon
+        } else {
+            MacBackend::Scalar
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Parse a `STOX_SIMD` override: `auto` (or empty) means "no override",
+/// otherwise a [`MacBackend::label`].  Unknown values are an error
+/// carrying the offending value — perf runs must not quietly fall back
+/// and measure the wrong kernel.
+pub fn parse_stox_simd(v: &str) -> crate::Result<Option<MacBackend>> {
+    Ok(Some(match v.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => return Ok(None),
+        "scalar" => MacBackend::Scalar,
+        "avx2" => MacBackend::Avx2,
+        "neon" => MacBackend::Neon,
+        "portable" => MacBackend::Portable,
+        _ => anyhow::bail!(
+            "invalid STOX_SIMD value '{v}': expected auto|scalar|avx2|neon|portable"
+        ),
+    }))
+}
+
+// ---------------------------------------------------------------------
+// i32 tier
+// ---------------------------------------------------------------------
+
+/// Blocked i8×i8→i32 MAC of activation stream `stream` against one weight
+/// slice plane: `ps[c] = Σ_r xd[r·i_n + stream] · w_pl[r·n + c]` for
+/// `c < n`.  Exact on every backend (integer addition is associative);
+/// backends compiled out of this build run the scalar reference.
+#[allow(clippy::too_many_arguments)]
+pub fn mac_i32(
+    backend: MacBackend,
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    debug_assert!(w_pl.len() >= rows * n && ps.len() >= n);
+    match backend {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Avx2 is only selected when available() saw AVX2 support
+        MacBackend::Avx2 => unsafe { mac_i32_avx2(w_pl, xd, rows, i_n, stream, n, ps) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64
+        MacBackend::Neon => unsafe { mac_i32_neon(w_pl, xd, rows, i_n, stream, n, ps) },
+        #[cfg(feature = "portable-simd")]
+        MacBackend::Portable => mac_i32_portable(w_pl, xd, rows, i_n, stream, n, ps),
+        #[allow(unreachable_patterns)]
+        _ => mac_i32_scalar(w_pl, xd, rows, i_n, stream, n, ps),
+    }
+}
+
+/// The pinned scalar reference (PR-4 kernel, verbatim): fixed blocks of
+/// `MAC_BLK` i32 register accumulators so LLVM unrolls and vectorizes the
+/// column loop; zero activation digits skip their row entirely
+/// (signed-digit decomposition makes in-range digits odd — the skip fires
+/// for structurally absent rows and custom sparse operands, and costs one
+/// predictable branch when dense).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mac_i32_scalar(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    const MAC_BLK: usize = 16;
+    let mut c0 = 0usize;
+    while c0 + MAC_BLK <= n {
+        let mut acc = [0i32; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i32;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + MAC_BLK];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i32;
+            }
+        }
+        ps[c0..c0 + MAC_BLK].copy_from_slice(&acc);
+        c0 += MAC_BLK;
+    }
+    if c0 < n {
+        let rem = n - c0;
+        let mut acc = [0i32; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i32;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + rem];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i32;
+            }
+        }
+        ps[c0..n].copy_from_slice(&acc[..rem]);
+    }
+}
+
+/// AVX2 i32 kernel: 16 columns per iteration in two 8-lane `__m256i`
+/// accumulators; `i8` weights sign-extend through `_mm256_cvtepi8_epi32`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mac_i32_avx2(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let mut c0 = 0usize;
+    while c0 + 16 <= n {
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let xv = _mm256_set1_epi32(x as i32);
+            let w = _mm_loadu_si128(w_pl.as_ptr().add(rr * n + c0) as *const __m128i);
+            let wlo = _mm256_cvtepi8_epi32(w);
+            let whi = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(w));
+            acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(wlo, xv));
+            acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(whi, xv));
+        }
+        _mm256_storeu_si256(ps.as_mut_ptr().add(c0) as *mut __m256i, acc0);
+        _mm256_storeu_si256(ps.as_mut_ptr().add(c0 + 8) as *mut __m256i, acc1);
+        c0 += 16;
+    }
+    if c0 < n {
+        mac_i32_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// NEON i32 kernel: 16 columns per iteration in four 4-lane `int32x4_t`
+/// accumulators via the widening multiply-accumulate `vmlal_n_s16`.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mac_i32_neon(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::arch::aarch64::*;
+    let mut c0 = 0usize;
+    while c0 + 16 <= n {
+        let mut a0 = vdupq_n_s32(0);
+        let mut a1 = vdupq_n_s32(0);
+        let mut a2 = vdupq_n_s32(0);
+        let mut a3 = vdupq_n_s32(0);
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let w8 = vld1q_s8(w_pl.as_ptr().add(rr * n + c0));
+            let wlo = vmovl_s8(vget_low_s8(w8));
+            let whi = vmovl_s8(vget_high_s8(w8));
+            a0 = vmlal_n_s16(a0, vget_low_s16(wlo), x as i16);
+            a1 = vmlal_n_s16(a1, vget_high_s16(wlo), x as i16);
+            a2 = vmlal_n_s16(a2, vget_low_s16(whi), x as i16);
+            a3 = vmlal_n_s16(a3, vget_high_s16(whi), x as i16);
+        }
+        vst1q_s32(ps.as_mut_ptr().add(c0), a0);
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 4), a1);
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 8), a2);
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 12), a3);
+        c0 += 16;
+    }
+    if c0 < n {
+        mac_i32_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// `std::simd` i32 kernel (nightly): 16 lanes, `i8 → i32` lane cast.
+#[cfg(feature = "portable-simd")]
+#[allow(clippy::too_many_arguments)]
+fn mac_i32_portable(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::simd::prelude::*;
+    const L: usize = 16;
+    let mut c0 = 0usize;
+    while c0 + L <= n {
+        let mut acc = Simd::<i32, L>::splat(0);
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let w = Simd::<i8, L>::from_slice(&w_pl[rr * n + c0..rr * n + c0 + L]);
+            acc += w.cast::<i32>() * Simd::splat(x as i32);
+        }
+        acc.copy_to_slice(&mut ps[c0..c0 + L]);
+        c0 += L;
+    }
+    if c0 < n {
+        mac_i32_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// Scalar tail over columns [c0, n) — shared by every wide i32 kernel.
+#[cfg(any(feature = "simd", feature = "portable-simd"))]
+#[allow(clippy::too_many_arguments)]
+fn mac_i32_tail(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    c0: usize,
+    ps: &mut [i32],
+) {
+    for p in ps[c0..n].iter_mut() {
+        *p = 0;
+    }
+    for rr in 0..rows {
+        let x = xd[rr * i_n + stream];
+        if x == 0 {
+            continue;
+        }
+        let x = x as i32;
+        for (p, &wv) in ps[c0..n].iter_mut().zip(&w_pl[rr * n + c0..rr * n + n]) {
+            *p += x * wv as i32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// i16 tier
+// ---------------------------------------------------------------------
+
+/// The `i16` accumulation tier of [`mac_i32`]: identical contract and
+/// bit-identical results, but partial sums accumulate in `i16` (twice the
+/// lanes per register) and widen losslessly to `i32` on store.  **Callers
+/// must guarantee [`StoxConfig::int16_kernel_ok`]** — the worst-case
+/// column bound then caps every intermediate prefix sum at `i16::MAX`,
+/// so no accumulation step can overflow on any backend.
+///
+/// [`StoxConfig::int16_kernel_ok`]: super::quant::StoxConfig::int16_kernel_ok
+#[allow(clippy::too_many_arguments)]
+pub fn mac_i16(
+    backend: MacBackend,
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    debug_assert!(w_pl.len() >= rows * n && ps.len() >= n);
+    match backend {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Avx2 is only selected when available() saw AVX2 support
+        MacBackend::Avx2 => unsafe { mac_i16_avx2(w_pl, xd, rows, i_n, stream, n, ps) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64
+        MacBackend::Neon => unsafe { mac_i16_neon(w_pl, xd, rows, i_n, stream, n, ps) },
+        #[cfg(feature = "portable-simd")]
+        MacBackend::Portable => mac_i16_portable(w_pl, xd, rows, i_n, stream, n, ps),
+        #[allow(unreachable_patterns)]
+        _ => mac_i16_scalar(w_pl, xd, rows, i_n, stream, n, ps),
+    }
+}
+
+/// Scalar `i16` tier: the reference blocked MAC with `i16` accumulators
+/// (widened on store) — LLVM packs twice the lanes per vector register.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mac_i16_scalar(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    const MAC_BLK: usize = 32;
+    let mut c0 = 0usize;
+    while c0 + MAC_BLK <= n {
+        let mut acc = [0i16; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i16;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + MAC_BLK];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i16;
+            }
+        }
+        for (p, &a) in ps[c0..c0 + MAC_BLK].iter_mut().zip(&acc) {
+            *p = a as i32;
+        }
+        c0 += MAC_BLK;
+    }
+    if c0 < n {
+        let rem = n - c0;
+        let mut acc = [0i16; MAC_BLK];
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let x = x as i16;
+            let w = &w_pl[rr * n + c0..rr * n + c0 + rem];
+            for (a, &wv) in acc.iter_mut().zip(w) {
+                *a += x * wv as i16;
+            }
+        }
+        for (p, &a) in ps[c0..n].iter_mut().zip(&acc[..rem]) {
+            *p = a as i32;
+        }
+    }
+}
+
+/// AVX2 `i16` tier: 16 columns per 256-bit accumulator (vs 8 on the i32
+/// tier); digit products fit `i16` (`|x|·|w| ≤ 127·127`) and prefix sums
+/// are bounded by the caller's `int16_kernel_ok` guarantee.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mac_i16_avx2(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let mut c0 = 0usize;
+    while c0 + 16 <= n {
+        let mut acc = _mm256_setzero_si256();
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let xv = _mm256_set1_epi16(x as i16);
+            let w = _mm_loadu_si128(w_pl.as_ptr().add(rr * n + c0) as *const __m128i);
+            let w16 = _mm256_cvtepi8_epi16(w);
+            acc = _mm256_add_epi16(acc, _mm256_mullo_epi16(w16, xv));
+        }
+        let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(acc));
+        let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(acc));
+        _mm256_storeu_si256(ps.as_mut_ptr().add(c0) as *mut __m256i, lo);
+        _mm256_storeu_si256(ps.as_mut_ptr().add(c0 + 8) as *mut __m256i, hi);
+        c0 += 16;
+    }
+    if c0 < n {
+        mac_i16_scalar_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// NEON `i16` tier: 16 columns in two 8-lane `int16x8_t` accumulators via
+/// the non-widening `vmlaq_n_s16`, widened to i32 on store.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mac_i16_neon(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::arch::aarch64::*;
+    let mut c0 = 0usize;
+    while c0 + 16 <= n {
+        let mut a0 = vdupq_n_s16(0);
+        let mut a1 = vdupq_n_s16(0);
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let w8 = vld1q_s8(w_pl.as_ptr().add(rr * n + c0));
+            a0 = vmlaq_n_s16(a0, vmovl_s8(vget_low_s8(w8)), x as i16);
+            a1 = vmlaq_n_s16(a1, vmovl_s8(vget_high_s8(w8)), x as i16);
+        }
+        vst1q_s32(ps.as_mut_ptr().add(c0), vmovl_s16(vget_low_s16(a0)));
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 4), vmovl_s16(vget_high_s16(a0)));
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 8), vmovl_s16(vget_low_s16(a1)));
+        vst1q_s32(ps.as_mut_ptr().add(c0 + 12), vmovl_s16(vget_high_s16(a1)));
+        c0 += 16;
+    }
+    if c0 < n {
+        mac_i16_scalar_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// `std::simd` `i16` tier (nightly): 32 `i16` lanes, lossless lane cast
+/// to `i32` on store.
+#[cfg(feature = "portable-simd")]
+#[allow(clippy::too_many_arguments)]
+fn mac_i16_portable(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    ps: &mut [i32],
+) {
+    use std::simd::prelude::*;
+    const L: usize = 32;
+    let mut c0 = 0usize;
+    while c0 + L <= n {
+        let mut acc = Simd::<i16, L>::splat(0);
+        for rr in 0..rows {
+            let x = xd[rr * i_n + stream];
+            if x == 0 {
+                continue;
+            }
+            let w = Simd::<i8, L>::from_slice(&w_pl[rr * n + c0..rr * n + c0 + L]);
+            acc += w.cast::<i16>() * Simd::splat(x as i16);
+        }
+        acc.cast::<i32>().copy_to_slice(&mut ps[c0..c0 + L]);
+        c0 += L;
+    }
+    if c0 < n {
+        mac_i16_scalar_tail(w_pl, xd, rows, i_n, stream, n, c0, ps);
+    }
+}
+
+/// `i16`-accumulating scalar tail over columns [c0, n) — shared by the
+/// wide i16 kernels so the tier's arithmetic stays uniform.
+#[cfg(any(feature = "simd", feature = "portable-simd"))]
+#[allow(clippy::too_many_arguments)]
+fn mac_i16_scalar_tail(
+    w_pl: &[i8],
+    xd: &[i8],
+    rows: usize,
+    i_n: usize,
+    stream: usize,
+    n: usize,
+    c0: usize,
+    ps: &mut [i32],
+) {
+    let rem = n - c0;
+    let mut acc = vec![0i16; rem];
+    for rr in 0..rows {
+        let x = xd[rr * i_n + stream];
+        if x == 0 {
+            continue;
+        }
+        let x = x as i16;
+        for (a, &wv) in acc.iter_mut().zip(&w_pl[rr * n + c0..rr * n + n]) {
+            *a += x * wv as i16;
+        }
+    }
+    for (p, &a) in ps[c0..n].iter_mut().zip(&acc) {
+        *p = a as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random digits in [-hi, hi] with zeros mixed in.
+    fn digits(len: usize, seed: u32, hi: i32) -> Vec<i8> {
+        let mut s = seed.wrapping_mul(2_654_435_761).wrapping_add(12345);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+                let span = 2 * hi + 1;
+                (((s >> 16) as i32 % span) - hi) as i8
+            })
+            .collect()
+    }
+
+    fn backends() -> Vec<MacBackend> {
+        [MacBackend::Scalar, MacBackend::Avx2, MacBackend::Neon, MacBackend::Portable]
+            .into_iter()
+            .filter(|b| b.available())
+            .collect()
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_i32() {
+        for &(rows, i_n, n) in
+            &[(0usize, 1usize, 16usize), (1, 1, 1), (5, 4, 7), (64, 4, 16), (64, 2, 33), (17, 1, 64)]
+        {
+            let w = digits(rows.max(1) * n, 1, 15);
+            let xd = digits(rows.max(1) * i_n, 2, 15);
+            for stream in 0..i_n {
+                let mut want = vec![0i32; n];
+                mac_i32_scalar(&w, &xd, rows, i_n, stream, n, &mut want);
+                for b in backends() {
+                    let mut got = vec![-1i32; n];
+                    mac_i32(b, &w, &xd, rows, i_n, stream, n, &mut got);
+                    assert_eq!(got, want, "{} rows={rows} i_n={i_n} n={n}", b.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i16_tier_matches_i32_on_every_backend() {
+        // digit magnitudes ≤ 15, rows ≤ 64 → worst prefix sum 14400 < i16::MAX
+        for &(rows, i_n, n) in
+            &[(64usize, 4usize, 16usize), (64, 1, 33), (5, 2, 7), (0, 1, 40), (33, 4, 64)]
+        {
+            let w = digits(rows.max(1) * n, 3, 15);
+            let xd = digits(rows.max(1) * i_n, 4, 15);
+            for stream in 0..i_n {
+                let mut want = vec![0i32; n];
+                mac_i32_scalar(&w, &xd, rows, i_n, stream, n, &mut want);
+                for b in backends() {
+                    let mut got = vec![-1i32; n];
+                    mac_i16(b, &w, &xd, rows, i_n, stream, n, &mut got);
+                    assert_eq!(got, want, "i16/{} rows={rows} i_n={i_n} n={n}", b.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_digit_rows_are_skipped_consistently() {
+        let (rows, i_n, n) = (32usize, 2usize, 20usize);
+        let w = digits(rows * n, 5, 7);
+        let mut xd = digits(rows * i_n, 6, 7);
+        for r in (0..rows).step_by(3) {
+            xd[r * i_n] = 0;
+        }
+        let mut want = vec![0i32; n];
+        mac_i32_scalar(&w, &xd, rows, i_n, 0, n, &mut want);
+        for b in backends() {
+            let mut got = vec![0i32; n];
+            mac_i32(b, &w, &xd, rows, i_n, 0, n, &mut got);
+            assert_eq!(got, want, "{}", b.label());
+            mac_i16(b, &w, &xd, rows, i_n, 0, n, &mut got);
+            assert_eq!(got, want, "i16/{}", b.label());
+        }
+    }
+
+    #[test]
+    fn parse_stox_simd_vocabulary() {
+        assert_eq!(parse_stox_simd("auto").unwrap(), None);
+        assert_eq!(parse_stox_simd("").unwrap(), None);
+        assert_eq!(parse_stox_simd("scalar").unwrap(), Some(MacBackend::Scalar));
+        assert_eq!(parse_stox_simd(" AVX2 ").unwrap(), Some(MacBackend::Avx2));
+        assert_eq!(parse_stox_simd("neon").unwrap(), Some(MacBackend::Neon));
+        assert_eq!(parse_stox_simd("portable").unwrap(), Some(MacBackend::Portable));
+        let err = parse_stox_simd("sse9").unwrap_err().to_string();
+        assert!(err.contains("STOX_SIMD") && err.contains("sse9"), "{err}");
+    }
+
+    #[test]
+    fn detect_returns_an_available_backend() {
+        // pure availability invariants — detect() itself reads the env, so
+        // only sanity-check its result rather than mutating STOX_SIMD
+        assert!(MacBackend::Scalar.available());
+        let b = MacBackend::detect();
+        assert!(b.available(), "{}", b.label());
+        assert_eq!(parse_stox_simd(b.label()).unwrap(), Some(b));
+    }
+}

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 //! StoX-Net: stochastic processing of partial sums for efficient in-memory
 //! computing DNN accelerators — full-system reproduction.
 //!

@@ -97,6 +97,14 @@ pub struct NativeModel {
     /// default; [`NativeModel::set_fused_conv`] keeps the legacy im2col
     /// path reachable for A/B benchmarking (`benches/pipeline.rs`).
     use_fused_conv: bool,
+    /// Layer-pipelined batch execution (on by default): images fan out to
+    /// workers that each run *all* layers of their image, so layer k of
+    /// image i overlaps layer k−1 of image i+1 — the software realization
+    /// of the Fig. 8 inter-layer pipeline.  Bit-identical to the
+    /// sequential whole-batch forward (the RNG counter contract keys
+    /// every draw by absolute patch index); [`NativeModel::set_pipeline`]
+    /// keeps the sequential path reachable for A/B benchmarking.
+    use_pipeline: bool,
 }
 
 /// Mirrors `model._layer_seed`: independent stream per (step, layer).
@@ -267,6 +275,7 @@ impl NativeModel {
             w3: fcw_shape[0],
             ps_probe: None,
             use_fused_conv: true,
+            use_pipeline: true,
         })
     }
 
@@ -281,6 +290,7 @@ impl NativeModel {
         step_seed: u32,
         clip_input: bool,
         arena: &mut ConvArena,
+        img_base: Option<usize>,
     ) -> (Vec<f32>, usize, usize) {
         // Fused digit-domain path: each input pixel is quantized and
         // decomposed exactly once *before* patch extraction, the stripe
@@ -292,6 +302,25 @@ impl NativeModel {
             if self.use_fused_conv && mvm.is_integer_kernel() && self.ps_probe.is_none() {
                 let acts = decompose_activations(arena, x, b, h, w, op.cin, &mvm.cfg);
                 let seed = layer_seed(step_seed, op.layer_idx as u32);
+                if let Some(base) = img_base {
+                    // pipelined per-image execution: strictly sequential
+                    // kernel (the pipeline owns the worker threads) with
+                    // the image's absolute first-patch index as the RNG
+                    // counter offset — bit-identical to its rows of the
+                    // whole-batch call below
+                    let pad = (op.kh - 1) / 2;
+                    let ho = (h + 2 * pad - op.kh) / op.stride + 1;
+                    let wo = (w + 2 * pad - op.kw) / op.stride + 1;
+                    return mvm.run_conv_digits_offset(
+                        &acts,
+                        op.kh,
+                        op.kw,
+                        op.stride,
+                        op.converter.as_ref(),
+                        seed,
+                        base * ho * wo,
+                    );
+                }
                 return mvm.run_conv_digits(
                     &acts,
                     op.kh,
@@ -302,6 +331,11 @@ impl NativeModel {
                 );
             }
         }
+        // the pipeline gate (`pipeline_eligible`) only dispatches per-image
+        // work when every crossbar-mapped layer takes the fused path above,
+        // so a legacy-path layer here can only be the full-precision first
+        // layer — whose per-image rows are computed independently anyway
+        debug_assert!(img_base.is_none() || op.mvm.is_none());
         let xin: Vec<f32> = if clip_input {
             x.iter().map(|v| v.clamp(-1.0, 1.0)).collect()
         } else {
@@ -352,11 +386,77 @@ impl NativeModel {
         h.extend(ps);
     }
 
+    /// Whether the layer-pipelined batch forward can run: the per-image
+    /// offset kernel exists only on the fused digit-domain path, so every
+    /// crossbar-mapped layer must hold the integer kernel (the
+    /// full-precision first layer is fine — its rows are independent),
+    /// the fused path must be on, and no PS probe may be attached.
+    fn pipeline_eligible(&self) -> bool {
+        if !self.use_fused_conv || self.ps_probe.is_some() {
+            return false;
+        }
+        let ok = |op: &ConvOp| op.mvm.as_deref().is_none_or(StoxMvm::is_integer_kernel);
+        ok(&self.conv1)
+            && self
+                .blocks
+                .iter()
+                .all(|s| s.iter().all(|b| ok(&b.0) && ok(&b.2)))
+    }
+
+    /// Toggle the layer-pipelined batch forward (default on).  The
+    /// sequential whole-batch path stays bit-identical — this switch
+    /// exists for the before/after perf cases, the scenario pin, and as
+    /// an escape hatch.
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.use_pipeline = on;
+    }
+
     /// Forward a batch (NHWC in [-1,1]); returns logits [B × classes].
+    ///
+    /// With ≥ 2 images, ≥ 2 worker threads, and every layer on the fused
+    /// integer path, the batch runs **layer-pipelined**: each worker
+    /// carries one image through all layers (its own [`ConvArena`]), so
+    /// layer k of image i overlaps layer k−1 of image i+1.  Bit-identical
+    /// to the sequential whole-batch pass — the RNG counter contract keys
+    /// every stochastic draw by absolute patch index, which
+    /// [`StoxMvm::run_conv_digits_offset`] preserves per image.
     pub fn forward(&self, x: &[f32], batch: usize, step_seed: u32) -> Vec<f32> {
+        let threads = crate::util::pool::default_threads();
+        if self.use_pipeline && threads > 1 && batch >= 2 && self.pipeline_eligible() {
+            let img = self.image_size * self.image_size * self.in_channels;
+            debug_assert!(x.len() >= batch * img);
+            let parts = crate::util::pool::par_map_scratch(
+                batch,
+                threads,
+                ConvArena::new,
+                |arena, i| {
+                    self.forward_chunk(&x[i * img..(i + 1) * img], 1, Some(i), step_seed, arena)
+                },
+            );
+            let mut out = Vec::with_capacity(batch * self.num_classes);
+            for p in parts {
+                out.extend(p);
+            }
+            return out;
+        }
         // one digit-plane arena serves every layer of this pass (grown to
         // the largest layer, no per-layer patch/xin allocations)
         let mut arena = ConvArena::new();
+        self.forward_chunk(x, batch, None, step_seed, &mut arena)
+    }
+
+    /// One whole-network pass over `batch` images: the sequential forward
+    /// body (`img_base = None`) and the pipeline workers' per-image body
+    /// (`img_base = Some(absolute image index)`) are the *same* code, so
+    /// the bit-identity contract cannot drift between them.
+    fn forward_chunk(
+        &self,
+        x: &[f32],
+        batch: usize,
+        img_base: Option<usize>,
+        step_seed: u32,
+        arena: &mut ConvArena,
+    ) -> Vec<f32> {
         let (mut h, mut hh, mut ww) = self.run_conv(
             &self.conv1,
             x,
@@ -365,7 +465,8 @@ impl NativeModel {
             self.image_size,
             step_seed,
             self.first_qf, // python clips input only on the stox path
-            &mut arena,
+            arena,
+            img_base,
         );
         self.bn1.apply(&mut h, self.conv1.cout);
         let mut c = self.conv1.cout;
@@ -374,10 +475,10 @@ impl NativeModel {
             for (c1, b1, c2, b2, stride) in stage {
                 let shortcut = shortcut(&h, batch, hh, ww, c, c1.cout, *stride);
                 let (mut o1, h1, w1) =
-                    self.run_conv(c1, &h, batch, hh, ww, step_seed, true, &mut arena);
+                    self.run_conv(c1, &h, batch, hh, ww, step_seed, true, arena, img_base);
                 b1.apply(&mut o1, c1.cout);
                 let (mut o2, h2, w2) =
-                    self.run_conv(c2, &o1, batch, h1, w1, step_seed, true, &mut arena);
+                    self.run_conv(c2, &o1, batch, h1, w1, step_seed, true, arena, img_base);
                 b2.apply(&mut o2, c2.cout);
                 for (o, s) in o2.iter_mut().zip(&shortcut) {
                     *o += s;
@@ -597,6 +698,7 @@ impl NativeModel {
             w3: self.w3,
             ps_probe: None,
             use_fused_conv: self.use_fused_conv,
+            use_pipeline: self.use_pipeline,
         }
     }
 }

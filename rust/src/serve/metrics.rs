@@ -29,7 +29,7 @@ pub struct ShardStats {
     /// batches whose executor returned `Err` (every member got the error
     /// reply; see the [`crate::coordinator::server::Reply`] contract)
     pub error_batches: u64,
-    min_us: f32,
+    min_us: f64,
 }
 
 impl ShardStats {
@@ -38,12 +38,16 @@ impl ShardStats {
             // 0..10 s at 500 µs resolution: fine enough for p999 at the
             // latencies the native executor produces
             latency_us: Histogram::new(0.0, 10_000_000.0, 20_000),
-            batch_occupancy: Histogram::new(0.0, 256.0, 256),
+            // one bin per occupancy 0..=256: the range must extend past the
+            // largest legal batch (256) because Histogram's upper edge is
+            // exclusive — with `new(0, 256, 256)` a full 256-occupancy
+            // batch fell into `over` instead of the last bin
+            batch_occupancy: Histogram::new(0.0, 257.0, 257),
             requests: 0,
             batches: 0,
             stolen_batches: 0,
             error_batches: 0,
-            min_us: f32::INFINITY,
+            min_us: f64::INFINITY,
         }
     }
 
@@ -55,9 +59,11 @@ impl ShardStats {
         }
         self.batch_occupancy.add(batch as f32);
         for l in latencies {
+            // accumulate in f64 end-to-end: at µs scale an f32 cast
+            // quantizes to ~0.06 µs steps by 1 s and misreports min/p999
             let us = l.as_secs_f64() * 1e6;
-            self.latency_us.add(us as f32);
-            self.min_us = self.min_us.min(us as f32);
+            self.latency_us.add_f64(us);
+            self.min_us = self.min_us.min(us);
         }
     }
 
@@ -76,7 +82,7 @@ impl ShardStats {
     /// Smallest observed request latency (µs); 0 when nothing recorded.
     pub fn min_latency_us(&self) -> f64 {
         if self.min_us.is_finite() {
-            self.min_us as f64
+            self.min_us
         } else {
             0.0
         }
@@ -329,6 +335,28 @@ mod tests {
         let text = j.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("replicas").and_then(|v| v.as_usize()), Some(2));
+    }
+
+    #[test]
+    fn full_occupancy_batch_lands_in_last_bin_not_over() {
+        let m = ServeMetrics::new(1, Duration::from_millis(10));
+        let lat: Vec<Duration> = (0..256).map(|_| Duration::from_millis(1)).collect();
+        m.record_batch(0, 256, &lat, false);
+        let t = m.total.lock().unwrap();
+        assert_eq!(t.batch_occupancy.over, 0, "occupancy 256 must stay in range");
+        assert_eq!(t.batch_occupancy.bins()[256], 1, "one bin per occupancy 0..=256");
+        assert!((t.mean_batch() - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_latency_keeps_f64_precision() {
+        let m = ServeMetrics::new(1, Duration::from_millis(10));
+        // 1.234567891011 s = 1_234_567.891011 µs — not representable in f32
+        let d = Duration::from_nanos(1_234_567_891);
+        m.record_batch(0, 1, &[d], false);
+        let min = m.min_latency_us();
+        assert!((min - 1_234_567.891).abs() < 1e-3, "min={min}");
+        assert_ne!(min, min as f32 as f64, "f32 would have rounded this");
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //! seed (pinned by `rust/tests/serve.rs`), while execution parallelizes
 //! across shards.
 //!
+//! Batch *execution* additionally runs layer-pipelined on each shard:
+//! `NativeModel::forward` fans the batch's images out to workers that
+//! each carry one image through every layer (layer k of image i overlaps
+//! layer k−1 of image i+1).  The pipelined forward is bit-identical to
+//! the sequential one — the RNG counter contract keys every draw by
+//! absolute patch index — so it changes shard throughput, never replies
+//! (`replica_view` carries the pipeline switch, so a model with
+//! `set_pipeline(false)` serves sequentially on every shard).
+//!
 //! # Admission control and deadlines
 //!
 //! The queue is bounded: at most [`ReplicaConfig::queue_depth`] requests

@@ -47,6 +47,26 @@ impl Histogram {
         }
     }
 
+    /// [`Histogram::add`] with the range comparison and bin index computed
+    /// in `f64` — for µs-scale latency samples whose f32 rounding would
+    /// lose sub-µs precision over long runs.  Binning semantics are
+    /// unchanged: `[lo, hi)` in range, `x >= hi` counts as `over`.
+    pub fn add_f64(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.sum2 += x * x;
+        let (lo, hi) = (self.lo as f64, self.hi as f64);
+        if x < lo {
+            self.under += 1;
+        } else if x >= hi {
+            self.over += 1;
+        } else {
+            let t = (x - lo) / (hi - lo);
+            let idx = ((t * self.bins.len() as f64) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
     pub fn extend(&mut self, xs: impl IntoIterator<Item = f32>) {
         for x in xs {
             self.add(x);
@@ -170,6 +190,23 @@ mod tests {
         h.extend((0..100).map(|i| (i as f32 / 50.0) - 1.0 + 1e-4));
         let d: f64 = h.density().iter().sum();
         assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_f64_matches_add_binning_and_keeps_precision() {
+        let mut h32 = Histogram::new(0.0, 1.0, 10);
+        let mut h64 = Histogram::new(0.0, 1.0, 10);
+        for x in [0.05f64, 0.15, 0.95, -1.0, 2.0, 0.999999] {
+            h32.add(x as f32);
+            h64.add_f64(x);
+        }
+        assert_eq!(h32.bins(), h64.bins());
+        assert_eq!((h32.under, h32.over), (h64.under, h64.over));
+        // f64 moments keep precision a f32 cast would drop
+        let mut h = Histogram::new(0.0, 10_000_000.0, 10);
+        let x = 1_234_567.891_011_f64; // not representable in f32
+        h.add_f64(x);
+        assert_eq!(h.mean(), x);
     }
 
     #[test]

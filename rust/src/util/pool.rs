@@ -30,8 +30,15 @@ where
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
+    // Lock-free result placement: each index is claimed by exactly one
+    // worker (the `fetch_add` below hands every index out once), so the
+    // writes through `slots` are disjoint and the `thread::scope` join
+    // publishes them to the main thread.  No per-slot Mutex on the
+    // completion path — this fan-out is the inner loop of the software
+    // pipeline and the ksplit kernel.
+    struct Slots<T>(*mut Option<T>);
+    unsafe impl<T: Send> Sync for Slots<T> {}
+    let slots = Slots(out.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
@@ -42,7 +49,10 @@ where
                         break;
                     }
                     let v = f(&mut scratch, i);
-                    **slots[i].lock().unwrap() = Some(v);
+                    // SAFETY: i < n is in bounds and owned solely by this
+                    // worker; the scope join orders the write before the
+                    // main thread reads `out`.
+                    unsafe { *slots.0.add(i) = Some(v) };
                 }
             });
         }
@@ -50,14 +60,30 @@ where
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
+/// Parse a `STOX_THREADS` override: a non-negative integer, where `0`
+/// clamps to `1` (i.e. "no fan-out" — same as `STOX_THREADS=1`, kept so
+/// scripted sweeps can use 0 as their sequential leg).  Anything
+/// unparseable is an error carrying the offending value — perf runs must
+/// not quietly fall back to `available_parallelism` and measure the wrong
+/// thread count.
+pub fn parse_stox_threads(v: &str) -> crate::Result<usize> {
+    let n: usize = v.trim().parse().map_err(|_| {
+        anyhow::anyhow!(
+            "invalid STOX_THREADS value '{v}': expected a non-negative integer \
+             (0 and 1 both force the sequential paths)"
+        )
+    })?;
+    Ok(n.max(1))
+}
+
 /// Number of worker threads to default to (`STOX_THREADS` overrides;
-/// `STOX_THREADS=1` forces the sequential paths — used by the perf
-/// harness to measure fan-out gains).
+/// `STOX_THREADS=1` — or `0`, which clamps to 1 — forces the sequential
+/// paths, used by the perf harness to measure fan-out gains).
+///
+/// Panics on an unparseable `STOX_THREADS` (see [`parse_stox_threads`]).
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("STOX_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+        return parse_stox_threads(&v).unwrap();
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -114,6 +140,25 @@ mod tests {
             },
         );
         assert_eq!(v, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stox_threads_parses_and_clamps_zero() {
+        // pure parser — no env mutation (parallel tests read STOX_THREADS)
+        assert_eq!(parse_stox_threads("4").unwrap(), 4);
+        assert_eq!(parse_stox_threads(" 2 ").unwrap(), 2);
+        assert_eq!(parse_stox_threads("1").unwrap(), 1);
+        // 0 clamps to the sequential path rather than erroring
+        assert_eq!(parse_stox_threads("0").unwrap(), 1);
+    }
+
+    #[test]
+    fn stox_threads_fails_loudly_with_offending_value() {
+        for bad in ["", "four", "-1", "2.5", "0x8"] {
+            let err = parse_stox_threads(bad).unwrap_err().to_string();
+            assert!(err.contains("STOX_THREADS"), "{err}");
+            assert!(err.contains(bad), "error must carry the value: {err}");
+        }
     }
 
     #[test]

@@ -7,8 +7,8 @@ use stox_net::arch::energy::{evaluate_design, DesignConfig};
 use stox_net::arch::mapper::{map_layer, LayerShape};
 use stox_net::coordinator::batcher::{BatcherConfig, DynamicBatcher, FlushReason};
 use stox_net::imc::{
-    decompose_activations, stox_mvm, ConvArena, PsConvert, PsConverter, PsConverterSpec,
-    PsIntCache, QuantAdcConv, SparseAdcConv, StoxConfig, StoxMvm,
+    decompose_activations, stox_mvm, ConvArena, MacBackend, PsConvert, PsConverter,
+    PsConverterSpec, PsIntCache, QuantAdcConv, SparseAdcConv, StoxConfig, StoxMvm,
 };
 use stox_net::model::zoo;
 use stox_net::stats::rng::CounterRng;
@@ -272,6 +272,200 @@ fn prop_int_conversion_entry_matches_float_entry() {
             if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
                 return Err(format!("{spec} int entry diverged at ({i},{j})"));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Every SIMD MAC backend that is available in this build must be
+/// bit-identical to the pinned scalar reference kernel — random shapes,
+/// random configs, every registry converter.  Integer addition is exact
+/// and associative, so lane reordering must not change a single bit.
+#[test]
+fn prop_simd_mac_bit_identical_to_scalar() {
+    check("SIMD MAC == scalar MAC", 20, |g| {
+        let b = g.usize_in(1, 3);
+        let m = g.usize_in(1, 150);
+        let n = g.usize_in(1, 20);
+        let cfg = random_cfg(g);
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let seed = g.usize_in(0, 10_000) as u32;
+        let mut base = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        base.set_mac_backend(MacBackend::Scalar).map_err(|e| e.to_string())?;
+        let want = base.run_sequential(&a, b, conv.as_ref(), seed);
+        let want_ps = base.collect_ps(&a, b);
+        for backend in [MacBackend::Avx2, MacBackend::Neon, MacBackend::Portable] {
+            if !backend.available() {
+                continue;
+            }
+            let mut mvm = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+            mvm.set_mac_backend(backend).map_err(|e| e.to_string())?;
+            let got = mvm.run_sequential(&a, b, conv.as_ref(), seed);
+            if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!("{spec}: {} diverged from scalar", backend.label()));
+            }
+            let got_ps = mvm.collect_ps(&a, b);
+            if got_ps.iter().zip(&want_ps).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!("collect_ps diverged on {}", backend.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The i16 accumulation tier must be bit-identical to the i32 tier
+/// whenever the config's worst-case PS bound admits it (`int16_kernel_ok`)
+/// — the prefix sums never leave i16 range, so the narrower accumulator
+/// computes the exact same integers.
+#[test]
+fn prop_i16_tier_bit_identical_to_i32() {
+    check("i16 tier == i32 tier", 20, |g| {
+        let b = g.usize_in(1, 3);
+        let m = g.usize_in(1, 150);
+        let n = g.usize_in(1, 16);
+        let cfg = random_cfg(g);
+        if !cfg.int16_kernel_ok() {
+            return Ok(()); // gate: the tier may not be forced on
+        }
+        let a = g.vec_f32(b * m, -1.0, 1.0);
+        let w = g.vec_f32(m * n, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let seed = g.usize_in(0, 10_000) as u32;
+        let mut wide = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        wide.set_i16_tier(false).map_err(|e| e.to_string())?;
+        let mut narrow = StoxMvm::program(&w, m, n, cfg).map_err(|e| e.to_string())?;
+        narrow.set_i16_tier(true).map_err(|e| e.to_string())?;
+        let o32 = wide.run_sequential(&a, b, conv.as_ref(), seed);
+        let o16 = narrow.run_sequential(&a, b, conv.as_ref(), seed);
+        if o16.iter().zip(&o32).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("{spec} i16 tier diverged under {cfg:?}"));
+        }
+        let p32 = wide.collect_ps(&a, b);
+        let p16 = narrow.collect_ps(&a, b);
+        if p16.iter().zip(&p32).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("collect_ps i16 tier diverged under {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// `PsConvert::convert_batch` must be bit-identical to looping
+/// `convert_slice_int_at` over the coords in order — for every registry
+/// converter, including the three that override the default batch entry.
+#[test]
+fn prop_convert_batch_bit_identical_to_per_slice() {
+    check("convert_batch == per-slice loop", 25, |g| {
+        let cfg = random_cfg(g);
+        let n = g.usize_in(1, 48);
+        let n_slices = g.usize_in(1, 6);
+        let bound = g.usize_in(1, 4096);
+        let scale = 1.0f32 / bound as f32;
+        let stride = g.usize_in(1, 64) as u32;
+        let rng = CounterRng::new(g.usize_in(0, 1000) as u32);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let coords: Vec<(usize, usize, u32)> = (0..n_slices)
+            .map(|_| {
+                (
+                    g.usize_in(0, cfg.n_streams() - 1),
+                    g.usize_in(0, cfg.n_slices() - 1),
+                    g.usize_in(0, 1 << 20) as u32,
+                )
+            })
+            .collect();
+        let ps_int: Vec<i32> = (0..n_slices * n)
+            .map(|_| g.usize_in(0, 2 * bound) as i32 - bound as i32)
+            .collect();
+        let mut want = vec![0.0f32; n_slices * n];
+        let mut cache_a = PsIntCache::new();
+        cache_a.reset(bound);
+        for (gi, &(i, j, base)) in coords.iter().enumerate() {
+            conv.convert_slice_int_at(
+                i,
+                j,
+                &ps_int[gi * n..(gi + 1) * n],
+                scale,
+                &mut want[gi * n..(gi + 1) * n],
+                base,
+                stride,
+                &rng,
+                &mut cache_a,
+            );
+        }
+        let mut got = vec![0.0f32; n_slices * n];
+        let mut cache_b = PsIntCache::new();
+        cache_b.reset(bound);
+        conv.convert_batch(&coords, stride, n, &ps_int, scale, &mut got, &rng, &mut cache_b);
+        if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("{spec} convert_batch diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Per-image execution through `run_conv_digits_offset` (the layer
+/// pipeline's building block) must reproduce the whole-batch fused conv
+/// bit for bit: the RNG counter contract keys every draw by absolute
+/// patch index, so splitting the batch must not move a single sample.
+#[test]
+fn prop_offset_conv_per_image_matches_whole_batch() {
+    check("offset conv per image == whole batch", 12, |g| {
+        let (b, h, w) = (g.usize_in(2, 3), g.usize_in(3, 7), g.usize_in(3, 7));
+        let cin = g.usize_in(1, 4);
+        let cout = g.usize_in(1, 8);
+        let k = *g.pick(&[1usize, 3]);
+        let stride = g.usize_in(1, 2);
+        let cfg = StoxConfig {
+            r_arr: *g.pick(&[8usize, 16, 64]),
+            w_slice_bits: 1,
+            ..StoxConfig::default()
+        };
+        let x = g.vec_f32(b * h * w * cin, -1.5, 1.5);
+        let wts = g.vec_f32(k * k * cin * cout, -1.0, 1.0);
+        let spec: PsConverterSpec =
+            g.pick(&KERNEL_SPECS).parse().map_err(|e| format!("{e}"))?;
+        let conv = spec.build(&cfg).map_err(|e| e.to_string())?;
+        let seed = g.usize_in(0, 10_000) as u32;
+        let mvm = StoxMvm::program(&wts, k * k * cin, cout, cfg).map_err(|e| e.to_string())?;
+        let mut arena = ConvArena::new();
+        let acts = decompose_activations(&mut arena, &x, b, h, w, cin, &cfg);
+        let (want, ho, wo) = mvm.run_conv_digits(&acts, k, k, stride, conv.as_ref(), seed);
+        let img = h * w * cin;
+        let mut got = Vec::with_capacity(want.len());
+        for bi in 0..b {
+            let mut img_arena = ConvArena::new();
+            let ai = decompose_activations(
+                &mut img_arena,
+                &x[bi * img..(bi + 1) * img],
+                1,
+                h,
+                w,
+                cin,
+                &cfg,
+            );
+            let (part, ho2, wo2) = mvm.run_conv_digits_offset(
+                &ai,
+                k,
+                k,
+                stride,
+                conv.as_ref(),
+                seed,
+                bi * ho * wo,
+            );
+            if (ho, wo) != (ho2, wo2) {
+                return Err(format!("shape mismatch ({ho},{wo}) vs ({ho2},{wo2})"));
+            }
+            got.extend(part);
+        }
+        if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("{spec} offset conv diverged (k={k}, stride={stride})"));
         }
         Ok(())
     });
