@@ -11,7 +11,7 @@ use stox_net::coordinator::server::{submit_all, Executor, ServeConfig, Server};
 use stox_net::coordinator::TileScheduler;
 use stox_net::imc::StoxConfig;
 use stox_net::model::zoo;
-use stox_net::serve::{ReplicaConfig, ReplicaServer};
+use stox_net::serve::{ReplicaConfig, ReplicaServer, ResilienceConfig};
 use stox_net::util::bench;
 
 struct NoopExec;
@@ -93,37 +93,48 @@ fn main() {
     );
 
     println!("\n== replica tier (noop executor) ==");
-    for replicas in [1usize, 2, 4] {
-        bench::bench(
-            &format!("replica-server/{replicas}x 1k requests end-to-end"),
-            Duration::from_millis(100),
-            Duration::from_secs(2),
-            || {
-                let server = ReplicaServer::new(
-                    (0..replicas).map(|_| NoopExec).collect(),
-                    ReplicaConfig {
-                        replicas,
-                        batcher: BatcherConfig {
-                            target_batch: 8,
-                            max_wait: Duration::from_micros(200),
+    // resilience off = the PR-6 hot path; on = health tracking + fault
+    // checks on every batch (quantifies the self-healing overhead, which
+    // should be noise against even a noop executor)
+    for resilience in [false, true] {
+        for replicas in [1usize, 2, 4] {
+            let label = if resilience { "self-healing" } else { "baseline" };
+            bench::bench(
+                &format!("replica-server/{replicas}x 1k requests {label}"),
+                Duration::from_millis(100),
+                Duration::from_secs(2),
+                || {
+                    let server = ReplicaServer::new(
+                        (0..replicas).map(|_| NoopExec).collect(),
+                        ReplicaConfig {
+                            replicas,
+                            batcher: BatcherConfig {
+                                target_batch: 8,
+                                max_wait: Duration::from_micros(200),
+                            },
+                            seed: 0,
+                            // deep enough that the 1k burst never sheds
+                            queue_depth: 4096,
+                            deadline: None,
+                            slo: Duration::from_millis(50),
+                            steal: true,
+                            resilience: ResilienceConfig {
+                                enabled: resilience,
+                                ..Default::default()
+                            },
                         },
-                        seed: 0,
-                        // deep enough that the 1k burst never sheds
-                        queue_depth: 4096,
-                        deadline: None,
-                        slo: Duration::from_millis(50),
-                    },
-                );
-                let (tx, rx) = mpsc::channel();
-                let client = std::thread::spawn(move || {
-                    let r = submit_all(&tx, (0..1000).map(|_| vec![0.0f32; 16]));
-                    drop(tx);
-                    r
-                });
-                server.run(rx);
-                let replies = client.join().unwrap();
-                bench::black_box(replies.len());
-            },
-        );
+                    );
+                    let (tx, rx) = mpsc::channel();
+                    let client = std::thread::spawn(move || {
+                        let r = submit_all(&tx, (0..1000).map(|_| vec![0.0f32; 16]));
+                        drop(tx);
+                        r
+                    });
+                    server.run(rx);
+                    let replies = client.join().unwrap();
+                    bench::black_box(replies.len());
+                },
+            );
+        }
     }
 }

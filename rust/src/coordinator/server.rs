@@ -53,6 +53,12 @@ pub struct Reply {
     pub latency: Duration,
     /// Size of the batch this request was executed in.
     pub batch: usize,
+    /// `DEGRADED` flag: the replica tier served this request in brown-out
+    /// mode — on the short-sampling degraded converters — to shed cost
+    /// under overload.  The logits are real (not an error) but were
+    /// computed at reduced sampling fidelity; always `false` on the
+    /// single-server path.
+    pub degraded: bool,
 }
 
 impl Reply {
@@ -168,6 +174,46 @@ impl Executor for NativeExecutor {
     }
 }
 
+/// Typed rejection of a nonsensical serving configuration, raised by
+/// [`ServeConfig::validate`] / `ReplicaConfig::validate` at parse time —
+/// a zero queue depth or zero-replica tier would otherwise misbehave at
+/// runtime (reject every request, or panic deep in the dispatch loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `target_batch` of 0: no batch could ever form.
+    ZeroTargetBatch,
+    /// A replica tier with no shards.
+    ZeroReplicas,
+    /// `queue_depth` of 0: admission control would reject every request.
+    ZeroQueueDepth,
+    /// A deadline of zero (or negative, saturated to zero at parse):
+    /// every request would expire before execution.
+    ZeroDeadline,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroTargetBatch => {
+                write!(f, "invalid config: target_batch must be >= 1")
+            }
+            ConfigError::ZeroReplicas => {
+                write!(f, "invalid config: replicas must be >= 1")
+            }
+            ConfigError::ZeroQueueDepth => write!(
+                f,
+                "invalid config: queue_depth must be >= 1 (0 would reject every request)"
+            ),
+            ConfigError::ZeroDeadline => write!(
+                f,
+                "invalid config: deadline must be positive (every request would expire)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 #[derive(Clone)]
 pub struct ServeConfig {
     pub batcher: BatcherConfig,
@@ -186,6 +232,18 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { batcher: BatcherConfig::default(), seed: 0, max_retries: 0 }
+    }
+}
+
+impl ServeConfig {
+    /// Fail-loud validation, called by the CLI/harness right after
+    /// parsing (the constructor signature is unchanged — a literal can
+    /// still build any config, e.g. for tests probing edge behaviour).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.batcher.target_batch == 0 {
+            return Err(ConfigError::ZeroTargetBatch);
+        }
+        Ok(())
     }
 }
 
@@ -249,6 +307,7 @@ impl Server {
                             result: Err(msg.clone()),
                             latency: now.duration_since(t0),
                             batch: n,
+                            degraded: false,
                         });
                     }
                     return;
@@ -272,6 +331,7 @@ impl Server {
                 result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
                 latency: now.duration_since(t0),
                 batch: n,
+                degraded: false,
             });
         }
         self.metrics.lock().unwrap().record_batch(n, &latencies);
@@ -356,6 +416,17 @@ mod tests {
         fn max_batch(&self) -> usize {
             4
         }
+    }
+
+    #[test]
+    fn serve_config_validation_rejects_zero_target_batch() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.validate().is_ok(), "the default config is valid");
+        cfg.batcher.target_batch = 0;
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroTargetBatch));
+        // the typed error renders a parse-time-worthy message
+        let msg = ConfigError::ZeroTargetBatch.to_string();
+        assert!(msg.contains("target_batch"), "{msg}");
     }
 
     #[test]

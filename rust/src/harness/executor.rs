@@ -8,6 +8,7 @@
 //! | `sweep`    | [`run_matrix_sweep`] over [`GoldenWorkload`]s                     |
 //! | `train`    | [`Trainer`] twice per seed + [`export_checkpoint`] round-trip     |
 //! | `serve`    | [`ReplicaServer`] (and the single [`Server`] as reference)        |
+//! | `chaos`    | [`ReplicaServer`] under a [`FaultPlan`] vs a fault-free twin      |
 //! | `nonideal` | [`NonidealCrossbar`] RMS-error ablation vs the ideal MVM          |
 //! | `parse`    | [`PsConverterSpec::from_mode`] / [`StoxConfig::from_tag`]         |
 //!
@@ -24,7 +25,7 @@ use crate::coordinator::BatcherConfig;
 use crate::imc::{Nonideality, NonidealCrossbar, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
 use crate::model::weights::TestSet;
 use crate::model::{zoo, Manifest, NativeModel, WeightStore};
-use crate::serve::{ReplicaConfig, ReplicaServer};
+use crate::serve::{FaultPlan, ReplicaConfig, ReplicaServer, ResilienceConfig, ShardFaults};
 use crate::stats::rng::CounterRng;
 use crate::train::{export_checkpoint, TrainConfig, Trainer};
 use crate::util::json::Json;
@@ -49,10 +50,11 @@ pub fn run_stage(scenario: &Json) -> crate::Result<Json> {
         "sweep" => stage_sweep(cfg),
         "train" => stage_train(cfg),
         "serve" => stage_serve(cfg),
+        "chaos" => stage_chaos(cfg),
         "nonideal" => stage_nonideal(cfg),
         "parse" => stage_parse(cfg),
         other => anyhow::bail!(
-            "unknown stage '{other}' (infer|sweep|train|serve|nonideal|parse)"
+            "unknown stage '{other}' (infer|sweep|train|serve|chaos|nonideal|parse)"
         ),
     }
 }
@@ -407,6 +409,8 @@ fn stage_serve(cfg: &Json) -> crate::Result<Json> {
         queue_depth,
         deadline,
         slo: Duration::from_millis(u64::from(n_u32(cfg, "slo_ms", 5_000))),
+        steal: flag(cfg, "steal", true),
+        resilience: ResilienceConfig::default(),
     };
     let images: Vec<Vec<f32>> =
         (0..requests).map(|i| test.image(i % test.n).to_vec()).collect();
@@ -507,6 +511,168 @@ fn stage_serve_failing(cfg: &Json) -> crate::Result<Json> {
     ]))
 }
 
+// ---------- chaos ----------
+
+/// Collect every reply and verify the exactly-once contract.  The servers
+/// have finished by the time this runs, so a duplicate reply would
+/// already be buffered on its channel — `try_recv` after the first
+/// `recv` is a complete check, not a race.
+fn collect_once(rxs: Vec<mpsc::Receiver<Reply>>) -> crate::Result<(Vec<Reply>, bool)> {
+    let mut replies = Vec::with_capacity(rxs.len());
+    let mut exactly_once = true;
+    for rx in rxs {
+        replies.push(rx.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))?);
+        if rx.try_recv().is_ok() {
+            exactly_once = false;
+        }
+    }
+    Ok((replies, exactly_once))
+}
+
+/// Run the self-healing replica tier under a scenario-described
+/// [`FaultPlan`] and pin its invariants against a fault-free reference
+/// run (resilience off, no faults — the PR-6 serving path) over the same
+/// request stream: every request gets exactly one reply, the accounting
+/// partition is total, and — because requeued batches carry their
+/// original seed — every `Ok` reply is bit-identical to the fault-free
+/// tier's reply for the same request.
+///
+/// An optional `second_wave` submits that many extra requests ~60 ms
+/// after the initial burst, so reintegration scenarios can observe
+/// probes firing *after* an eviction instead of racing a pre-queued
+/// burst that dispatches entirely before the first failure lands.
+fn stage_chaos(cfg: &Json) -> crate::Result<Json> {
+    let (m, store, test) = load_fixture(cfg)?;
+    let model = NativeModel::load(&m, &store)?;
+    let requests = n_usize(cfg, "requests", 10);
+    let second_wave = n_usize(cfg, "second_wave", 0);
+    let total = requests + second_wave;
+    let replicas = n_usize(cfg, "replicas", 2);
+    let seed = n_u32(cfg, "seed", 5);
+    let brownout = flag(cfg, "brownout", false);
+    let rcfg = ReplicaConfig {
+        replicas,
+        batcher: BatcherConfig {
+            target_batch: n_usize(cfg, "target_batch", 2),
+            // burst-fed: batches are cut by size and the final drain,
+            // never by a wall-clock timeout
+            max_wait: Duration::from_secs(3600),
+        },
+        seed,
+        queue_depth: n_usize(cfg, "queue_depth", total.max(1)),
+        deadline: None,
+        slo: Duration::from_secs(5),
+        steal: flag(cfg, "steal", false),
+        resilience: ResilienceConfig {
+            enabled: true,
+            evict_consecutive: n_u32(cfg, "evict_consecutive", 2),
+            probe_interval: n_u32(cfg, "probe_interval", 0),
+            max_requeues: n_u32(cfg, "max_requeues", 3),
+            brownout_queue: if brownout { Some(0) } else { None },
+            ..Default::default()
+        },
+    };
+    rcfg.validate()?;
+
+    let mut plan = FaultPlan::uniform_transient(seed, replicas, n_f32(cfg, "severity", 0.0));
+    if let Some(cs) = cfg.get("crash_shard").and_then(|v| v.as_usize()) {
+        anyhow::ensure!(cs < replicas, "crash_shard {cs} out of range ({replicas} replicas)");
+        let f: &mut ShardFaults = &mut plan.shards[cs];
+        f.crash_at_batch = Some(n_usize(cfg, "crash_at", 0) as u64);
+        f.recover_at_batch =
+            cfg.get("recover_at").and_then(|v| v.as_usize()).map(|v| v as u64);
+    }
+    let fault_free = plan.is_disabled();
+
+    let images: Vec<Vec<f32>> = (0..total).map(|i| test.image(i % test.n).to_vec()).collect();
+    let submit = |server: &ReplicaServer<NativeExecutor>| -> crate::Result<(Vec<Reply>, bool)> {
+        let (tx, rx) = mpsc::channel();
+        let mut rxs = submit_all(&tx, images[..requests].iter().cloned());
+        let wave2 = if second_wave > 0 {
+            let tx2 = tx.clone();
+            let tail: Vec<Vec<f32>> = images[requests..].to_vec();
+            Some(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(60));
+                submit_all(&tx2, tail.into_iter())
+            }))
+        } else {
+            None
+        };
+        drop(tx);
+        server.run(rx);
+        if let Some(h) = wave2 {
+            rxs.extend(h.join().expect("wave-2 submitter panicked"));
+        }
+        collect_once(rxs)
+    };
+
+    let mut server = ReplicaServer::from_native(&model, rcfg.clone()).with_fault_plan(plan);
+    let degraded_model;
+    if brownout {
+        let spec = s(cfg, "brownout_spec").unwrap_or("stox:samples=1");
+        degraded_model = model.share_with_converter_spec(&spec.parse::<PsConverterSpec>()?)?;
+        server = server.with_degraded_native(&degraded_model);
+    }
+    let (replies, exactly_once) = submit(&server)?;
+
+    let is_err = |r: &Reply, kind: &str| r.result.as_ref().err().map(String::as_str) == Some(kind);
+    let ok = replies.iter().filter(|r| r.result.is_ok()).count();
+    let degraded_n = replies.iter().filter(|r| r.degraded).count();
+    let rejected = replies.iter().filter(|r| is_err(r, crate::serve::REJECTED)).count();
+    let deadline_exceeded =
+        replies.iter().filter(|r| is_err(r, crate::serve::DEADLINE_EXCEEDED)).count();
+    let errors = replies.len() - ok - rejected - deadline_exceeded;
+    let checksum: f64 = replies
+        .iter()
+        .filter_map(|r| r.result.as_ref().ok())
+        .map(|l| l.iter().map(|&v| f64::from(v)).sum::<f64>())
+        .sum();
+
+    // brown-out legs intentionally change the logits (short-sampling
+    // executors), so the bit-identity claims are only defined without it
+    let (matches_fault_free, ok_match) = if brownout {
+        (Json::Null, Json::Null)
+    } else {
+        let reference = ReplicaServer::from_native(
+            &model,
+            ReplicaConfig { resilience: ResilienceConfig::default(), ..rcfg },
+        );
+        let (refr, _) = submit(&reference)?;
+        let full = replies.len() == refr.len()
+            && replies
+                .iter()
+                .zip(&refr)
+                .all(|(a, b)| a.result == b.result && a.degraded == b.degraded);
+        let ok_only = replies.iter().zip(&refr).all(|(a, b)| match &a.result {
+            Ok(v) => b.result.as_ref().ok() == Some(v),
+            Err(_) => true,
+        });
+        (Json::Bool(full), Json::Bool(ok_only))
+    };
+
+    Ok(Json::obj(vec![
+        ("requests_submitted", Json::Num(total as f64)),
+        ("fault_free", Json::Bool(fault_free)),
+        ("ok", Json::Num(ok as f64)),
+        ("degraded", Json::Num(degraded_n as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("deadline_exceeded", Json::Num(deadline_exceeded as f64)),
+        (
+            "accounted",
+            Json::Bool(ok + errors + rejected + deadline_exceeded == total),
+        ),
+        ("exactly_once", Json::Bool(exactly_once)),
+        ("evicted", Json::Num(server.metrics.evicted() as f64)),
+        ("reintegrated", Json::Num(server.metrics.reintegrated() as f64)),
+        ("requeued", Json::Num(server.metrics.requeued() as f64)),
+        ("probes", Json::Num(server.metrics.probes() as f64)),
+        ("checksum", Json::Num(checksum)),
+        ("matches_fault_free", matches_fault_free),
+        ("ok_replies_match_fault_free", ok_match),
+    ]))
+}
+
 // ---------- nonideal ----------
 
 fn stage_nonideal(cfg: &Json) -> crate::Result<Json> {
@@ -540,7 +706,10 @@ fn stage_nonideal(cfg: &Json) -> crate::Result<Json> {
         ("sigma_g_25", Nonideality { sigma_g: 0.25, ..Default::default() }),
         ("ir_drop_10", Nonideality { ir_drop: 0.10, ..Default::default() }),
         ("read_noise_5", Nonideality { sigma_read: 0.05, ..Default::default() }),
-        ("combined", Nonideality { sigma_g: 0.10, ir_drop: 0.05, sigma_read: 0.03 }),
+        (
+            "combined",
+            Nonideality { sigma_g: 0.10, ir_drop: 0.05, sigma_read: 0.03, ..Default::default() },
+        ),
     ];
     let conv_sa = build("sa")?;
     let conv_m1 = build("stox:samples=1")?;
@@ -557,10 +726,46 @@ fn stage_nonideal(cfg: &Json) -> crate::Result<Json> {
             ]),
         ));
     }
-    Ok(Json::obj(vec![
+    let mut out = vec![
         ("seeds", Json::Num(f64::from(seeds))),
         ("cases", Json::obj(cases)),
-    ]))
+    ];
+
+    // hard-fault severity ladder: sweep one fault axis and report the
+    // RMS error per rung, for `monotonic`-mode degradation scenarios
+    if let Some(kind) = s(cfg, "ladder_kind") {
+        let sevs: Vec<f64> = match cfg.get("ladder_severities").and_then(|v| v.as_arr()) {
+            Some(a) => a.iter().filter_map(|x| x.as_f64()).collect(),
+            None => vec![0.0, 0.1, 0.3, 0.6],
+        };
+        let conv = build(s(cfg, "ladder_converter").unwrap_or("sa"))?;
+        let mut ladder = Vec::with_capacity(sevs.len());
+        for &sv in &sevs {
+            let xb = NonidealCrossbar::program(&w, m, n, hw, ladder_fault(kind, sv as f32)?, 11)?;
+            ladder.push(Json::obj(vec![
+                ("severity", Json::Num(sv)),
+                ("rms", Json::Num(rms(&xb, conv.as_ref()))),
+            ]));
+        }
+        out.push(("ladder", Json::Arr(ladder)));
+    }
+    Ok(Json::obj(out))
+}
+
+/// One rung of a hard-fault severity ladder: `kind` names the fault
+/// axis, `sv` its severity (fault density, or the drift coefficient
+/// evaluated at elapsed time 1).
+fn ladder_fault(kind: &str, sv: f32) -> crate::Result<Nonideality> {
+    Ok(match kind {
+        "stuck_zero" => Nonideality { stuck_zero: sv, ..Default::default() },
+        "stuck_one" => Nonideality { stuck_one: sv, ..Default::default() },
+        "stuck_mtj" => Nonideality { stuck_mtj: sv, ..Default::default() },
+        "drift" => Nonideality { drift: sv, drift_time: 1.0, ..Default::default() },
+        "dropout" => Nonideality { sample_dropout: sv, ..Default::default() },
+        other => anyhow::bail!(
+            "unknown ladder_kind '{other}' (stuck_zero|stuck_one|stuck_mtj|drift|dropout)"
+        ),
+    })
 }
 
 // ---------- parse ----------

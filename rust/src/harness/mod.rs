@@ -4,7 +4,7 @@
 //! A scenario file declares a fixture + pipeline stage + expectations:
 //!
 //! ```yaml
-//! stage: infer                 # infer | sweep | train | serve | nonideal | parse
+//! stage: infer                 # infer | sweep | train | serve | chaos | nonideal | parse
 //! config:
 //!   fixture: tiny_inhomo       # rust/tests/data/<name>
 //!   converter: stox:alpha=4,samples=1

@@ -2,8 +2,9 @@
 //! stochastic conversion must tolerate on real hardware (extension per
 //! DESIGN.md: the paper's future-work axis of robustness).
 //!
-//! Models (all applied to the *normalized* PS before conversion, matching
-//! how they perturb the column current):
+//! Two severity families:
+//!
+//! **Soft (parametric) errors** perturb the analog path continuously:
 //!
 //! * **conductance variation** — per-cell programming error, lognormal-ish
 //!   multiplicative spread σ_g on each weight digit; static per crossbar
@@ -12,7 +13,29 @@
 //!   row r sees its contribution scaled by `1 - ir_drop · r / R_arr`
 //!   (first-order PUMA-style model);
 //! * **read noise** — zero-mean Gaussian on each PS sample (thermal +
-//!   shot noise of the column), σ_read in normalized-PS units.
+//!   shot noise of the column), σ_read in normalized-PS units;
+//! * **conductance drift** — every programmed cell decays toward zero
+//!   over the elapsed "time" since programming:
+//!   `g ← g · exp(−drift · drift_time)` (retention-loss model).
+//!
+//! **Hard faults** break devices outright:
+//!
+//! * **stuck-at-zero / stuck-at-one cells** — a fraction of cells is
+//!   stuck open (digit reads 0) or shorted (digit reads the max slice
+//!   digit), regardless of what was programmed;
+//! * **stuck MTJ converters** — a fraction of per-(array, column)
+//!   output converters is pinned: every conversion on that column of
+//!   that array reads a constant ±1 (a dead sense path);
+//! * **sample dropout** — each conversion independently returns 0 with
+//!   probability `sample_dropout` (a dropped stochastic read).
+//!
+//! All fault membership is drawn at *programming* time from severity-keyed
+//! counter RNG streams, one stream per fault type, with the draw counter
+//! equal to the cell / converter index.  Because membership is the event
+//! `uniform(index) < severity`, the faulty set at a lower severity is a
+//! **subset** of the set at a higher severity on the same die
+//! (`prog_seed`) — severity ladders degrade monotonically instead of
+//! jumping between unrelated fault patterns.
 //!
 //! [`NonidealCrossbar`] wraps a programmed [`StoxMvm`] and perturbs its
 //! PS stream; because the stochastic MTJ converter already tolerates PS
@@ -33,6 +56,21 @@ pub struct Nonideality {
     pub ir_drop: f32,
     /// additive read noise per conversion (normalized-PS σ)
     pub sigma_read: f32,
+    /// fraction of cells stuck open — their digit reads 0
+    pub stuck_zero: f32,
+    /// fraction of cells stuck shorted — their digit reads the max
+    /// slice digit `(1 << w_slice_bits) − 1`
+    pub stuck_one: f32,
+    /// fraction of per-(array, column) MTJ output converters pinned to a
+    /// constant ±1 reading
+    pub stuck_mtj: f32,
+    /// conductance drift rate (relative decay per unit `drift_time`)
+    pub drift: f32,
+    /// elapsed "time" since programming, in drift units
+    pub drift_time: f32,
+    /// per-conversion probability that the stochastic read is dropped
+    /// (the conversion returns 0)
+    pub sample_dropout: f32,
 }
 
 impl Nonideality {
@@ -41,23 +79,38 @@ impl Nonideality {
     }
 }
 
+/// Programming-time RNG stream salts, one per independent fault type so a
+/// ladder over one severity never reshuffles another fault's membership.
+const GAIN_SALT: u32 = 0x5EED_CE11;
+const STUCK_ZERO_SALT: u32 = 0x5A00_0C11;
+const STUCK_ONE_SALT: u32 = 0x5A01_0C11;
+const STUCK_MTJ_SALT: u32 = 0x5A17_0C11;
+/// Run-time salt of the per-conversion dropout draw.
+const DROPOUT_SALT: u32 = 0x0D20_0007;
+
 /// A programmed crossbar with analog error models applied.
 pub struct NonidealCrossbar {
     /// programmed with the f32 reference plane layout
-    /// ([`StoxMvm::program_reference`]): the analog error models multiply
-    /// digits by f32 cell gains, so the integer planes would never be
-    /// executed here — storing f32 directly avoids a duplicate copy and
-    /// the run loop borrows the planes in place.
+    /// ([`StoxMvm::program_reference`]); kept for the ideal-path
+    /// comparison and the quantization metadata
     mvm: StoxMvm,
     nonideal: Nonideality,
-    /// static per-cell multiplicative error, same layout as the weight
-    /// digits; drawn once at programming (device-to-device variation)
-    cell_gain: Vec<Vec<Vec<f32>>>,
+    /// the *effective* weight digits the analog array actually realizes:
+    /// programmed digit × cell gain × drift attenuation, with stuck cells
+    /// overridden — precomputed once at programming time so the MVM hot
+    /// loop stays a plain multiply-accumulate.  At zero severity every
+    /// factor is exactly 1.0 (and no overrides fire), so these planes are
+    /// bit-identical to the programmed ones.
+    eff_planes: Vec<f32>,
+    /// per-(array, column) stuck-converter override: `Some(±1.0)` pins
+    /// every conversion of that column of that array
+    mtj_stuck: Vec<Option<f32>>,
 }
 
 impl NonidealCrossbar {
-    /// Program the crossbar and freeze its per-cell variation (seeded —
-    /// a different `prog_seed` is a different physical die).
+    /// Program the crossbar and freeze its per-cell variation and fault
+    /// pattern (seeded — a different `prog_seed` is a different physical
+    /// die).
     pub fn program(
         w: &[f32],
         m: usize,
@@ -67,26 +120,49 @@ impl NonidealCrossbar {
         prog_seed: u32,
     ) -> crate::Result<Self> {
         let mvm = StoxMvm::program_reference(w, m, n, cfg)?;
-        let rng = CounterRng::new(prog_seed ^ 0x5EED_CE11);
-        let n_arrs = mvm.n_arrs();
-        let n_slices = cfg.n_slices();
-        let mut cell_gain = Vec::with_capacity(n_arrs);
-        let mut c = 0u32;
-        for _ in 0..n_arrs {
-            let mut per_slice = Vec::with_capacity(n_slices);
-            for _ in 0..n_slices {
-                let gains: Vec<f32> = (0..cfg.r_arr * n)
-                    .map(|_| {
-                        let g = 1.0 + nonideal.sigma_g * rng.normal(c);
-                        c = c.wrapping_add(1);
-                        g.max(0.0)
-                    })
-                    .collect();
-                per_slice.push(gains);
-            }
-            cell_gain.push(per_slice);
-        }
-        Ok(Self { mvm, nonideal, cell_gain })
+        let planes = mvm
+            .planes_f32_ref()
+            .expect("nonideal crossbar programs the f32 reference layout");
+
+        let gain_rng = CounterRng::new(prog_seed ^ GAIN_SALT);
+        let zero_rng = CounterRng::new(prog_seed ^ STUCK_ZERO_SALT);
+        let one_rng = CounterRng::new(prog_seed ^ STUCK_ONE_SALT);
+        // exp(−0·t) and exp(−d·0) are exactly 1.0, so the drift factor is
+        // an exact identity whenever drift is off
+        let atten = (-nonideal.drift * nonideal.drift_time).exp();
+        let max_digit = ((1u32 << cfg.w_slice_bits) - 1) as f32;
+        let eff_planes: Vec<f32> = planes
+            .iter()
+            .enumerate()
+            .map(|(idx, &digit)| {
+                let c = idx as u32;
+                let g = (1.0 + nonideal.sigma_g * gain_rng.normal(c)).max(0.0);
+                let mut v = digit * g * atten;
+                if nonideal.stuck_one > 0.0 && one_rng.uniform(c) < nonideal.stuck_one {
+                    v = max_digit; // shorted: max conductance, no drift
+                }
+                if nonideal.stuck_zero > 0.0 && zero_rng.uniform(c) < nonideal.stuck_zero {
+                    v = 0.0; // stuck-open wins when both faults hit a cell
+                }
+                v
+            })
+            .collect();
+
+        let mtj_rng = CounterRng::new(prog_seed ^ STUCK_MTJ_SALT);
+        let mtj_stuck: Vec<Option<f32>> = (0..mvm.n_arrs() * n)
+            .map(|idx| {
+                let c = idx as u32;
+                // separate membership and sign counters: the pinned value
+                // of a converter does not change as severity grows
+                if nonideal.stuck_mtj > 0.0 && mtj_rng.uniform(2 * c) < nonideal.stuck_mtj {
+                    Some(if mtj_rng.uniform(2 * c + 1) < 0.5 { -1.0 } else { 1.0 })
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        Ok(Self { mvm, nonideal, eff_planes, mtj_stuck })
     }
 
     pub fn cfg(&self) -> &StoxConfig {
@@ -94,7 +170,7 @@ impl NonidealCrossbar {
     }
 
     /// Run a batch through the non-ideal array (mirrors `StoxMvm::run`
-    /// with the three error models injected into the analog path).
+    /// with the error models injected into the analog path).
     pub fn run<C: PsConvert + ?Sized>(
         &self,
         a: &[f32],
@@ -110,16 +186,14 @@ impl NonidealCrossbar {
         let samples = conv.samples() as f32;
         let rng = CounterRng::new(seed);
         let noise_rng = CounterRng::new(seed ^ 0x0C0_FFEE);
+        let drop_rng = CounterRng::new(seed ^ DROPOUT_SALT);
         let sa = quant::digit_scales(cfg.a_bits, cfg.a_stream_bits);
         let sw = quant::digit_scales(cfg.w_bits, cfg.w_slice_bits);
         let lev = (((1u64 << cfg.a_bits) - 1) * ((1u64 << cfg.w_bits) - 1)) as f32;
         let norm = 1.0 / (lev * n_arrs as f32 * samples);
         let inv_r = 1.0 / cfg.r_arr as f32;
 
-        let all_planes: &[f32] = self
-            .mvm
-            .planes_f32_ref()
-            .expect("nonideal crossbar programs the f32 reference layout");
+        let all_planes: &[f32] = &self.eff_planes;
         let mut out = vec![0.0f32; batch * n];
         let mut digits = vec![0i32; i_n];
         let mut xd = vec![0.0f32; cfg.r_arr * i_n];
@@ -149,15 +223,13 @@ impl NonidealCrossbar {
                     let plane_sz = cfg.r_arr * n;
                     let w_sl =
                         &all_planes[(k * j_n + j) * plane_sz..(k * j_n + j + 1) * plane_sz];
-                    let gains = &self.cell_gain[k][j];
                     for rr in 0..rows {
                         let wrow = &w_sl[rr * n..(rr + 1) * n];
-                        let grow = &gains[rr * n..(rr + 1) * n];
                         let xr = &xd[rr * i_n..rr * i_n + i_n];
                         for (i, &x) in xr.iter().enumerate() {
                             let acc = &mut ps[i * n..(i + 1) * n];
                             for c in 0..n {
-                                acc[c] += x * wrow[c] * grow[c];
+                                acc[c] += x * wrow[c];
                             }
                         }
                     }
@@ -179,6 +251,23 @@ impl NonidealCrossbar {
                             .wrapping_add(j as u32);
                         let stride = (i_n * j_n) as u32;
                         conv.convert_slice_at(i, j, &psn, &mut cv, base0, stride, &rng);
+                        for (c, v) in cv.iter_mut().enumerate() {
+                            // dropout is keyed to the same per-conversion
+                            // counter the converter used, under its own
+                            // seed stream — deterministic, converter-blind
+                            if self.nonideal.sample_dropout > 0.0 {
+                                let cc = base0
+                                    .wrapping_add((c as u32).wrapping_mul(stride));
+                                if drop_rng.uniform(cc) < self.nonideal.sample_dropout {
+                                    *v = 0.0;
+                                }
+                            }
+                            // a pinned converter reads its stuck value no
+                            // matter what the column current was
+                            if let Some(s) = self.mtj_stuck[k * n + c] {
+                                *v = s;
+                            }
+                        }
                         for (c, &v) in cv.iter().enumerate() {
                             out[b * n + c] += v * scale;
                         }
@@ -207,6 +296,11 @@ mod tests {
         let cfg = StoxConfig { r_arr: 96, w_slice_bits: 1, ..Default::default() };
         let xb = NonidealCrossbar::program(&w, m, n, cfg, nonideal, 7).unwrap();
         (a, xb)
+    }
+
+    fn rms(a: &[f32], b: &[f32]) -> f32 {
+        (a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32)
+            .sqrt()
     }
 
     #[test]
@@ -286,5 +380,106 @@ mod tests {
         let (_, xb2) = setup(Nonideality { sigma_g: 0.2, ..Default::default() });
         let conv = PsConverter::SenseAmp;
         assert_eq!(xb1.run(&a, 2, &conv, 3), xb2.run(&a, 2, &conv, 3));
+    }
+
+    /// Stuck-cell severity ladders degrade monotonically: membership is
+    /// the event `uniform(cell) < severity` on one RNG stream per fault
+    /// type, so each rung's faulty set contains the previous rung's.
+    #[test]
+    fn stuck_cell_ladders_degrade_monotonically() {
+        let conv = PsConverter::ExpectedMtj { alpha: 4.0 };
+        let (a, ideal) = setup(Nonideality::default());
+        let base = ideal.run(&a, 2, &conv, 0);
+        for mk in [
+            (|s: f32| Nonideality { stuck_zero: s, ..Default::default() })
+                as fn(f32) -> Nonideality,
+            (|s: f32| Nonideality { stuck_one: s, ..Default::default() }),
+        ] {
+            let mut last = 0.0f32;
+            for sev in [0.0f32, 0.1, 0.3, 0.6] {
+                let (_, xb) = setup(mk(sev));
+                let err = rms(&xb.run(&a, 2, &conv, 0), &base);
+                assert!(
+                    err >= last,
+                    "ladder must be monotone: sev {sev} rms {err} < {last}"
+                );
+                last = err;
+            }
+            assert!(last > 1e-3, "60 % dead cells must visibly perturb");
+        }
+    }
+
+    /// Conductance drift is a uniform retention loss: with a linear
+    /// converter every output scales by exactly `exp(−drift·t)`, and more
+    /// elapsed time means more decay.
+    #[test]
+    fn drift_attenuates_with_elapsed_time() {
+        let (m, n) = (64usize, 4usize);
+        let a = vec![0.8f32; m];
+        let w = vec![0.5f32; m * n];
+        let cfg = StoxConfig { r_arr: 64, w_slice_bits: 1, ..Default::default() };
+        let conv = PsConverter::IdealAdc;
+        let run_at = |t: f32| -> Vec<f32> {
+            NonidealCrossbar::program(
+                &w, m, n, cfg,
+                Nonideality { drift: 0.5, drift_time: t, ..Default::default() },
+                1,
+            )
+            .unwrap()
+            .run(&a, 1, &conv, 0)
+        };
+        let fresh = run_at(0.0);
+        let aged = run_at(1.0);
+        let older = run_at(3.0);
+        let atten = (-0.5f32).exp();
+        for ((f, g), h) in fresh.iter().zip(&aged).zip(&older) {
+            assert!(*f > 0.0);
+            assert!(
+                (g / f - atten).abs() < 1e-3,
+                "uniform decay by exp(−0.5): {g}/{f}"
+            );
+            assert!(h < g, "more elapsed time, more decay");
+        }
+    }
+
+    /// A fully stuck converter plane reads the same pinned values no
+    /// matter what activations are applied — the column outputs become
+    /// input-independent constants.
+    #[test]
+    fn stuck_mtj_pins_converter_outputs() {
+        let nonideal = Nonideality { stuck_mtj: 1.0, ..Default::default() };
+        let (a, xb) = setup(nonideal);
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        let o1 = xb.run(&a, 2, &conv, 9);
+        let other = rand_vec(a.len(), 77);
+        let o2 = xb.run(&other, 2, &conv, 9);
+        assert_eq!(o1, o2, "pinned converters ignore the input");
+        let (_, ideal) = setup(Nonideality::default());
+        assert_ne!(o1, ideal.run(&a, 2, &conv, 9), "and are visibly wrong");
+        // partial severity: deterministic per seed, and not all pinned
+        let (_, half) = setup(Nonideality { stuck_mtj: 0.5, ..Default::default() });
+        let h1 = half.run(&a, 2, &conv, 9);
+        let h2 = half.run(&other, 2, &conv, 9);
+        assert_ne!(h1, h2, "surviving converters still see the input");
+    }
+
+    /// Sample dropout is deterministic per seed and total at severity 1
+    /// (every conversion dropped ⇒ the output is exactly zero).
+    #[test]
+    fn sample_dropout_is_deterministic_and_total_at_one() {
+        let (a, xb) = setup(Nonideality { sample_dropout: 0.3, ..Default::default() });
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        assert_eq!(xb.run(&a, 2, &conv, 9), xb.run(&a, 2, &conv, 9));
+        let (_, ideal) = setup(Nonideality::default());
+        assert_ne!(
+            xb.run(&a, 2, &conv, 9),
+            ideal.run(&a, 2, &conv, 9),
+            "30 % dropout must perturb"
+        );
+        let (_, dead) = setup(Nonideality { sample_dropout: 1.0, ..Default::default() });
+        assert!(
+            dead.run(&a, 2, &conv, 9).iter().all(|&v| v == 0.0),
+            "all conversions dropped ⇒ all-zero output"
+        );
     }
 }

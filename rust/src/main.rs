@@ -106,7 +106,15 @@ commands:
                 exits non-zero if any scenario fails)
   converters   (list the registered PS-converter modes)
   tables       [--results DIR]
-  nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise)";
+  nonideal     (crossbar non-ideality ablation: variation/IR-drop/noise
+                plus hard faults — stuck cells, stuck MTJs, drift, dropout)
+  chaos        [--severities LIST] [--loads LIST] [--replicas N]
+               [--target-batch B] [--seed S] [--max-requeues N]
+               [--brownout] [--brownout-spec SPEC] [--converter SPEC]
+               (fault-injection sweep against the self-healing replica
+                tier: transient-error severity x offered load; prints the
+                reply ledger per leg and writes BENCH_chaos.json to
+                STOX_BENCH_DIR — byte-identical across same-seed runs)";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
@@ -153,6 +161,7 @@ fn main() -> anyhow::Result<()> {
             args.string("results", "python/results"),
         )),
         Some("nonideal") => nonideal_ablation(),
+        Some("chaos") => chaos_cmd(&artifacts, &args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -233,7 +242,11 @@ fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
                 .get("deadline-ms")
                 .map(|_| std::time::Duration::from_millis(args.u64("deadline-ms", 0))),
             slo: std::time::Duration::from_millis(args.u64("slo-ms", 50)),
+            steal: true,
+            resilience: stox_net::serve::ResilienceConfig::default(),
         };
+        // fail loudly on degenerate flag combinations before spawning
+        cfg.validate()?;
         let rserver = ReplicaServer::from_native(&model, cfg);
         let n = requests.min(test.n);
         let images: Vec<Vec<f32>> = (0..n).map(|i| test.image(i).to_vec()).collect();
@@ -287,19 +300,17 @@ fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
         })
     };
 
-    let server = Server::new(
-        executor,
-        ServeConfig {
-            batcher: BatcherConfig {
-                target_batch: batch,
-                max_wait: std::time::Duration::from_millis(max_wait_ms),
-            },
-            seed: 0,
-            // absorb transient executor hiccups before failing a batch
-            max_retries: 2,
+    let serve_cfg = ServeConfig {
+        batcher: BatcherConfig {
+            target_batch: batch,
+            max_wait: std::time::Duration::from_millis(max_wait_ms),
         },
-    )
-    .with_scheduler(sched);
+        seed: 0,
+        // absorb transient executor hiccups before failing a batch
+        max_retries: 2,
+    };
+    serve_cfg.validate()?;
+    let server = Server::new(executor, serve_cfg).with_scheduler(sched);
 
     let n = requests.min(test.n);
     let (tx, rx) = std::sync::mpsc::channel();
@@ -361,7 +372,10 @@ fn loadgen_cmd(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
             .get("deadline-ms")
             .map(|_| std::time::Duration::from_millis(args.u64("deadline-ms", 0))),
         slo: std::time::Duration::from_millis(args.u64("slo-ms", 50)),
+        steal: true,
+        resilience: stox_net::serve::ResilienceConfig::default(),
     };
+    cfg.validate()?;
     let lg = LoadGenConfig {
         start_rps: args.f64("start-rps", 64.0),
         growth: args.f64("growth", 2.0),
@@ -943,7 +957,25 @@ fn nonideal_ablation() -> anyhow::Result<()> {
         ("read noise 0.05", Nonideality { sigma_read: 0.05, ..Default::default() }),
         (
             "all combined",
-            Nonideality { sigma_g: 0.10, ir_drop: 0.05, sigma_read: 0.03 },
+            Nonideality {
+                sigma_g: 0.10,
+                ir_drop: 0.05,
+                sigma_read: 0.03,
+                ..Default::default()
+            },
+        ),
+        // hard faults: dead devices, not parameter spread
+        ("stuck-at-0 cells 5%", Nonideality { stuck_zero: 0.05, ..Default::default() }),
+        ("stuck-at-0 cells 20%", Nonideality { stuck_zero: 0.20, ..Default::default() }),
+        ("stuck-at-1 cells 5%", Nonideality { stuck_one: 0.05, ..Default::default() }),
+        ("stuck MTJ converters 10%", Nonideality { stuck_mtj: 0.10, ..Default::default() }),
+        (
+            "drift 0.2 @ t=1",
+            Nonideality { drift: 0.2, drift_time: 1.0, ..Default::default() },
+        ),
+        (
+            "sample dropout 10%",
+            Nonideality { sample_dropout: 0.10, ..Default::default() },
         ),
     ];
     let conv_sa = build("sa")?;
@@ -958,5 +990,110 @@ fn nonideal_ablation() -> anyhow::Result<()> {
     }
     println!("\n(multi-sampling averages analog read noise as well as MTJ");
     println!(" stochasticity — the robustness argument of §3.2.3 extended)");
+    Ok(())
+}
+
+/// Chaos sweep: injected fault severity × offered load against the
+/// self-healing replica tier.  Every leg runs a fresh tier with health
+/// tracking, eviction + lossless requeue, and (optionally) brown-out
+/// enabled, under a uniform transient-error [`stox_net::serve::FaultPlan`].
+/// The reply ledger per leg (ok / degraded / errors / rejected /
+/// requeued + an output checksum) is printed and written as
+/// `BENCH_chaos.json` — deterministic per `--seed`, so two same-seed runs
+/// produce byte-identical artifacts (the CI `chaos-smoke` contract).
+fn chaos_cmd(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    use stox_net::serve::{run_chaos, ChaosConfig};
+
+    let manifest = Manifest::load(artifacts)?;
+    let store = WeightStore::load(&manifest)?;
+    let mut model = NativeModel::load(&manifest, &store)?;
+    if let Some(c) = args.get("converter") {
+        let spec = PsConverterSpec::from_mode(
+            c,
+            manifest.spec.stox.alpha,
+            manifest.spec.stox.n_samples,
+        )?;
+        println!("converter override: {spec}");
+        model = model.with_converter_spec(&spec)?;
+    }
+
+    let parse_f64s = |key: &str, dflt: &str| -> anyhow::Result<Vec<f64>> {
+        args.string(key, dflt)
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("bad --{key} entry '{t}': {e}"))
+            })
+            .collect()
+    };
+    let parse_usizes = |key: &str, dflt: &str| -> anyhow::Result<Vec<usize>> {
+        args.string(key, dflt)
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("bad --{key} entry '{t}': {e}"))
+            })
+            .collect()
+    };
+    let cfg = ChaosConfig {
+        severities: parse_f64s("severities", "0.0,0.1,0.3")?,
+        loads: parse_usizes("loads", "32")?,
+        replicas: args.usize("replicas", 2),
+        target_batch: args.usize("target-batch", 4),
+        seed: args.u32("seed", 7),
+        max_requeues: args.u32("max-requeues", 3),
+        brownout: args.flag("brownout"),
+        brownout_spec: args.string("brownout-spec", "stox:samples=1"),
+    };
+    anyhow::ensure!(!cfg.severities.is_empty(), "--severities must be non-empty");
+    anyhow::ensure!(!cfg.loads.is_empty(), "--loads must be non-empty");
+    println!(
+        "chaos sweep: {} severities x {} loads, {} replicas, target batch {}, \
+         seed {}{}",
+        cfg.severities.len(),
+        cfg.loads.len(),
+        cfg.replicas,
+        cfg.target_batch,
+        cfg.seed,
+        if cfg.brownout {
+            format!(", brown-out via '{}'", cfg.brownout_spec)
+        } else {
+            String::new()
+        },
+    );
+
+    let (points, suite) = run_chaos(&model, &cfg)?;
+    println!(
+        "\n{:>9} {:>6} {:>6} {:>9} {:>7} {:>9} {:>9} {:>8} {:>6} {:>14}",
+        "severity", "load", "ok", "degraded", "errors", "rejected", "requeued",
+        "evicted", "reint", "checksum"
+    );
+    for p in &points {
+        println!(
+            "{:>9.3} {:>6} {:>6} {:>9} {:>7} {:>9} {:>9} {:>8} {:>6} {:>14.4}",
+            p.severity,
+            p.load,
+            p.ok,
+            p.degraded,
+            p.errors,
+            p.rejected,
+            p.requeued,
+            p.evicted,
+            p.reintegrated,
+            p.checksum,
+        );
+    }
+    // the fault-free leg must account for every request with zero errors
+    for p in points.iter().filter(|p| p.severity == 0.0) {
+        anyhow::ensure!(
+            p.ok + p.rejected + p.deadline_exceeded == p.load as u64 && p.errors == 0,
+            "fault-free leg must serve cleanly: {p:?}"
+        );
+    }
+    suite.write_json()?;
     Ok(())
 }

@@ -1,0 +1,501 @@
+//! Deterministic fault injection for the serving tier, and the `chaos`
+//! sweep driver built on it.
+//!
+//! A [`FaultPlan`] describes per-shard infrastructure faults — crash
+//! windows, transient per-batch error probability, latency spikes, and a
+//! corrupted-logits mode — and a [`FaultInjector`] evaluates the plan at
+//! batch-execution time.  Every stochastic decision is drawn from the
+//! counter-keyed [`CounterRng`], keyed by the *batch seed and attempt
+//! number* rather than by wall clock or shard assignment, so a fault
+//! schedule replays bit-identically run after run: the same batches fail,
+//! the same requeues happen, the same requests succeed.
+//!
+//! Two fault classes, two determinism strengths:
+//!
+//! * **transient errors** are keyed by `(job seed, attempt)` only — which
+//!   shard a batch happened to land on never enters the draw, so counts
+//!   of ok/error/requeued replies are reproducible even though shard
+//!   assignment is racy.  [`run_chaos`] sweeps this severity axis and its
+//!   `BENCH_chaos.json` is byte-identical across runs of the same seed.
+//! * **crash windows / latency spikes / corruption** are per-shard state
+//!   (the crash counter counts batches *executed on that shard*), so
+//!   which batches they hit depends on scheduling.  The per-request
+//!   invariants (exactly one reply; bit-identical logits after
+//!   self-healing) still hold and are pinned by the `chaos` harness
+//!   scenarios — but aggregate counts under these faults are not
+//!   byte-stable, so the chaos sweep artifact does not include them.
+//!
+//! With the plan disabled ([`FaultPlan::disabled`], the default) the
+//! injector is completely inert and the serving path is bit-identical to
+//! the fault-free tier.
+
+use super::health::ResilienceConfig;
+use super::replica::{ReplicaConfig, ReplicaServer};
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::server::submit_all;
+use crate::imc::PsConverterSpec;
+use crate::model::NativeModel;
+use crate::stats::rng::CounterRng;
+use crate::util::bench::{BenchResult, BenchSuite};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Faults configured for one shard; the default is benign (no faults).
+#[derive(Debug, Clone, Default)]
+pub struct ShardFaults {
+    /// Shard errors every batch from its `crash_at_batch`-th executed
+    /// batch (0-based) onward …
+    pub crash_at_batch: Option<u64>,
+    /// … until (exclusive) its `recover_at_batch`-th executed batch;
+    /// `None` = the shard never comes back.
+    pub recover_at_batch: Option<u64>,
+    /// Per-(batch, attempt) probability of an injected transient error,
+    /// drawn shard-independently from the plan RNG.
+    pub transient_error_prob: f32,
+    /// Added execution latency when a spike fires.
+    pub latency_spike: Option<Duration>,
+    /// Per-batch probability that [`ShardFaults::latency_spike`] fires.
+    pub latency_spike_prob: f32,
+    /// Deterministically corrupt this shard's logits (a silently-wrong
+    /// replica, as opposed to a loudly-failing one).
+    pub corrupt_logits: bool,
+}
+
+impl ShardFaults {
+    pub fn is_benign(&self) -> bool {
+        self.crash_at_batch.is_none()
+            && self.transient_error_prob == 0.0
+            && (self.latency_spike.is_none() || self.latency_spike_prob == 0.0)
+            && !self.corrupt_logits
+    }
+}
+
+/// A full fault schedule: one [`ShardFaults`] per shard plus the RNG seed
+/// every probabilistic draw is keyed under.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u32,
+    pub shards: Vec<ShardFaults>,
+}
+
+impl FaultPlan {
+    /// The inert plan (no shards, no faults) — the default for every
+    /// server; guarantees bit-identity with the fault-free path.
+    pub fn disabled() -> Self {
+        Self { seed: 0, shards: Vec::new() }
+    }
+
+    /// The same transient-error probability on every shard — the
+    /// severity axis of the chaos sweep.  Because the draw is keyed by
+    /// `(job seed, attempt)` and not by shard, uniform plans produce
+    /// reproducible reply counts regardless of scheduling.
+    pub fn uniform_transient(seed: u32, replicas: usize, prob: f32) -> Self {
+        Self {
+            seed,
+            shards: (0..replicas)
+                .map(|_| ShardFaults { transient_error_prob: prob, ..Default::default() })
+                .collect(),
+        }
+    }
+
+    pub fn is_disabled(&self) -> bool {
+        self.shards.iter().all(|s| s.is_benign())
+    }
+
+    fn for_shard(&self, si: usize) -> ShardFaults {
+        self.shards.get(si).cloned().unwrap_or_default()
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// What the injector decided for one batch execution.
+#[derive(Debug, Default)]
+pub struct FaultDecision {
+    /// Sleep this long before executing (a straggler shard).
+    pub spike: Option<Duration>,
+    /// Fail the batch with this message instead of executing.
+    pub error: Option<String>,
+    /// Execute, then corrupt the logits.
+    pub corrupt: bool,
+}
+
+/// Evaluates a [`FaultPlan`] at execution time; holds the per-shard
+/// executed-batch counters that drive crash windows.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    executed: Vec<AtomicU64>,
+}
+
+const TRANSIENT_SALT: u32 = 0x00FA_0017;
+const SPIKE_SALT: u32 = 0x00FA_5B1E;
+const CORRUPT_SALT: u32 = 0x0BAD_F00D;
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, replicas: usize) -> Self {
+        Self { plan, executed: (0..replicas).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.plan.is_disabled()
+    }
+
+    /// Counter key for a `(job seed, attempt)` pair: requeued attempts of
+    /// the same batch get independent draws, but the key never involves
+    /// the executing shard.
+    fn attempt_counter(job_seed: u32, attempt: u32) -> u32 {
+        job_seed.wrapping_add(attempt.wrapping_mul(0x9E37_79B9))
+    }
+
+    /// Decide the fate of one batch execution on `si`.  Also advances the
+    /// shard's executed-batch counter (crash windows count every batch
+    /// the shard was asked to run, probes included).
+    pub fn decide(&self, si: usize, job_seed: u32, attempt: u32) -> FaultDecision {
+        if !self.enabled() {
+            return FaultDecision::default();
+        }
+        let f = self.plan.for_shard(si);
+        let k = self.executed[si].fetch_add(1, Ordering::SeqCst);
+        let mut d = FaultDecision::default();
+        if let Some(at) = f.crash_at_batch {
+            let recovered = f.recover_at_batch.map(|r| k >= r).unwrap_or(false);
+            if k >= at && !recovered {
+                d.error = Some(format!("injected fault: shard {si} crashed (batch {k})"));
+                return d;
+            }
+        }
+        let c = Self::attempt_counter(job_seed, attempt);
+        if f.transient_error_prob > 0.0 {
+            let rng = CounterRng::new(self.plan.seed ^ TRANSIENT_SALT);
+            if rng.uniform(c) < f.transient_error_prob {
+                d.error = Some("injected fault: transient batch error".to_string());
+                return d;
+            }
+        }
+        if let (Some(spike), p) = (f.latency_spike, f.latency_spike_prob) {
+            if p > 0.0 {
+                let rng = CounterRng::new(self.plan.seed ^ SPIKE_SALT);
+                if rng.uniform(c) < p {
+                    d.spike = Some(spike);
+                }
+            }
+        }
+        d.corrupt = f.corrupt_logits;
+        d
+    }
+
+    /// Deterministically corrupt a batch's logits (keyed by the plan seed
+    /// and the job seed — reproducible garbage, not random garbage).
+    pub fn corrupt(&self, logits: &mut [f32], job_seed: u32) {
+        let rng = CounterRng::new(self.plan.seed ^ CORRUPT_SALT);
+        for (i, v) in logits.iter_mut().enumerate() {
+            *v = -*v + rng.uniform_in(job_seed.wrapping_add(i as u32), -1.0, 1.0);
+        }
+    }
+}
+
+/// Configuration of the `stox-cli chaos` sweep: fault severity (uniform
+/// transient-error probability) × offered load (pre-queued burst size).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Transient-error probabilities to sweep (0.0 = the fault-free leg).
+    pub severities: Vec<f64>,
+    /// Pre-queued request-burst sizes to sweep.
+    pub loads: Vec<usize>,
+    pub replicas: usize,
+    pub target_batch: usize,
+    pub seed: u32,
+    /// Requeue budget per batch under injected faults.
+    pub max_requeues: u32,
+    /// Run every leg in brown-out: execute on short-sampling degraded
+    /// converters (`DEGRADED`-flagged replies).
+    pub brownout: bool,
+    /// Converter spec of the degraded executors (brown-out legs).
+    pub brownout_spec: String,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            severities: vec![0.0, 0.1, 0.3],
+            loads: vec![32],
+            replicas: 2,
+            target_batch: 4,
+            seed: 7,
+            max_requeues: 3,
+            brownout: false,
+            brownout_spec: "stox:samples=1".to_string(),
+        }
+    }
+}
+
+/// One (severity, load) leg of the chaos sweep.  The first nine fields
+/// are deterministic per seed; `evicted`/`reintegrated` depend on which
+/// shard absorbed the injected errors and are reported for inspection
+/// but excluded from the byte-stable bench artifact.
+#[derive(Debug, Clone)]
+pub struct ChaosPoint {
+    pub severity: f64,
+    pub load: usize,
+    pub ok: u64,
+    pub degraded: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub deadline_exceeded: u64,
+    pub requeued: u64,
+    pub checksum: f64,
+    pub evicted: u64,
+    pub reintegrated: u64,
+}
+
+/// Sweep fault severity × offered load over a fresh self-healing replica
+/// tier per leg; returns the points and the `BENCH_chaos.json` suite.
+///
+/// Determinism contract: every recorded extra (and the checksum over all
+/// `Ok` logits) is a pure function of `(model, cfg)` — timings are
+/// zeroed, loads are pre-queued (no pacing), fault draws are keyed
+/// shard-independently — so two runs of the same seed emit byte-identical
+/// artifacts (CI `chaos-smoke` byte-compares them).
+pub fn run_chaos(
+    model: &NativeModel,
+    cfg: &ChaosConfig,
+) -> crate::Result<(Vec<ChaosPoint>, BenchSuite)> {
+    let degraded = if cfg.brownout {
+        let spec = PsConverterSpec::from_mode(&cfg.brownout_spec, 4.0, 1)?;
+        Some(model.share_with_converter_spec(&spec)?)
+    } else {
+        None
+    };
+    let mut points = Vec::new();
+    let mut suite = BenchSuite::new("chaos");
+    for &severity in &cfg.severities {
+        for &load in &cfg.loads {
+            let p = run_chaos_leg(model, degraded.as_ref(), cfg, severity, load)?;
+            let extras = vec![
+                ("severity".to_string(), Json::Num(p.severity)),
+                ("load".to_string(), Json::Num(p.load as f64)),
+                ("replicas".to_string(), Json::Num(cfg.replicas as f64)),
+                ("ok".to_string(), Json::Num(p.ok as f64)),
+                ("degraded".to_string(), Json::Num(p.degraded as f64)),
+                ("errors".to_string(), Json::Num(p.errors as f64)),
+                ("rejected".to_string(), Json::Num(p.rejected as f64)),
+                (
+                    "deadline_exceeded".to_string(),
+                    Json::Num(p.deadline_exceeded as f64),
+                ),
+                ("requeued".to_string(), Json::Num(p.requeued as f64)),
+                ("checksum".to_string(), Json::Num(p.checksum)),
+            ];
+            // timings are deliberately zeroed: the artifact pins *what
+            // happened*, not how fast, so same-seed runs byte-compare
+            let r = BenchResult {
+                name: format!("sev{severity}_load{load}"),
+                iters: 1,
+                mean: Duration::ZERO,
+                p50: Duration::ZERO,
+                p95: Duration::ZERO,
+                min: Duration::ZERO,
+            };
+            suite.record_with(r, extras);
+            points.push(p);
+        }
+    }
+    Ok((points, suite))
+}
+
+fn run_chaos_leg(
+    model: &NativeModel,
+    degraded: Option<&NativeModel>,
+    cfg: &ChaosConfig,
+    severity: f64,
+    load: usize,
+) -> crate::Result<ChaosPoint> {
+    let rcfg = ReplicaConfig {
+        replicas: cfg.replicas,
+        batcher: BatcherConfig {
+            target_batch: cfg.target_batch,
+            // pre-queued burst: batches are cut by size (and the final
+            // drain), never by a wall-clock deadline
+            max_wait: Duration::from_secs(3600),
+        },
+        seed: cfg.seed,
+        queue_depth: load.max(1),
+        deadline: None,
+        slo: Duration::from_secs(5),
+        steal: true,
+        resilience: ResilienceConfig {
+            enabled: true,
+            evict_consecutive: 2,
+            probe_interval: 4,
+            max_requeues: cfg.max_requeues,
+            // brown-out threshold 0: with a pre-queued burst, outstanding
+            // is always > 0 at execution time, so *every* batch of a
+            // brown-out leg degrades — deterministically
+            brownout_queue: if cfg.brownout { Some(0) } else { None },
+            ..Default::default()
+        },
+    };
+    rcfg.validate()?;
+    let mut server = ReplicaServer::from_native(model, rcfg)
+        .with_fault_plan(FaultPlan::uniform_transient(cfg.seed, cfg.replicas, severity as f32));
+    if let Some(dm) = degraded {
+        server = server.with_degraded_native(dm);
+    }
+
+    let elems = model.image_size * model.image_size * model.in_channels;
+    let data_rng = CounterRng::new(cfg.seed ^ 0x0C4A_0500);
+    let (tx, rx) = mpsc::channel();
+    let replies = submit_all(
+        &tx,
+        (0..load).map(|r| {
+            (0..elems)
+                .map(|e| data_rng.uniform_in((r * elems + e) as u32, -1.0, 1.0))
+                .collect()
+        }),
+    );
+    drop(tx);
+    server.run(rx);
+
+    let mut p = ChaosPoint {
+        severity,
+        load,
+        ok: 0,
+        degraded: 0,
+        errors: 0,
+        rejected: 0,
+        deadline_exceeded: 0,
+        requeued: server.metrics.requeued(),
+        checksum: 0.0,
+        evicted: server.metrics.evicted(),
+        reintegrated: server.metrics.reintegrated(),
+    };
+    for r in replies {
+        let rep = r.recv().map_err(|_| anyhow::anyhow!("dropped reply channel"))?;
+        match rep.result {
+            Ok(logits) => {
+                p.ok += 1;
+                if rep.degraded {
+                    p.degraded += 1;
+                }
+                p.checksum += logits.iter().map(|&v| v as f64).sum::<f64>();
+            }
+            Err(e) if e == super::replica::REJECTED => p.rejected += 1,
+            Err(e) if e == super::replica::DEADLINE_EXCEEDED => p.deadline_exceeded += 1,
+            Err(_) => p.errors += 1,
+        }
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_is_inert() {
+        let inj = FaultInjector::new(FaultPlan::disabled(), 2);
+        assert!(!inj.enabled());
+        for s in 0..2 {
+            for b in 0..10u32 {
+                let d = inj.decide(s, b, 0);
+                assert!(d.error.is_none() && d.spike.is_none() && !d.corrupt);
+            }
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_shard_independent() {
+        let plan = FaultPlan::uniform_transient(9, 3, 0.5);
+        let a = FaultInjector::new(plan.clone(), 3);
+        let b = FaultInjector::new(plan, 3);
+        for seed in 0..64u32 {
+            for attempt in 0..3u32 {
+                let da = a.decide(seed as usize % 3, seed, attempt);
+                // a *different* shard must reach the identical verdict —
+                // transient draws are keyed (seed, attempt) only
+                let db = b.decide((seed as usize + 1) % 3, seed, attempt);
+                assert_eq!(da.error, db.error, "seed {seed} attempt {attempt}");
+            }
+        }
+    }
+
+    #[test]
+    fn transient_severity_scales_error_rate() {
+        let count = |prob: f32| -> usize {
+            let inj = FaultInjector::new(FaultPlan::uniform_transient(3, 1, prob), 1);
+            (0..1000u32).filter(|&s| inj.decide(0, s, 0).error.is_some()).count()
+        };
+        assert_eq!(count(0.0), 0);
+        let lo = count(0.1);
+        let hi = count(0.6);
+        assert!(lo > 30 && lo < 250, "≈10% of draws fail: {lo}");
+        assert!(hi > 2 * lo, "higher severity fails more: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn requeued_attempts_get_independent_draws() {
+        let inj = FaultInjector::new(FaultPlan::uniform_transient(3, 1, 0.5), 1);
+        let outcomes: Vec<bool> =
+            (0..16u32).map(|a| inj.decide(0, 42, a).error.is_some()).collect();
+        assert!(outcomes.iter().any(|&e| e) && outcomes.iter().any(|&e| !e),
+            "attempts must not all share one fate: {outcomes:?}");
+    }
+
+    #[test]
+    fn crash_window_opens_and_closes_on_the_shard_batch_counter() {
+        let plan = FaultPlan {
+            seed: 0,
+            shards: vec![ShardFaults {
+                crash_at_batch: Some(1),
+                recover_at_batch: Some(3),
+                ..Default::default()
+            }],
+        };
+        let inj = FaultInjector::new(plan, 1);
+        let crashed: Vec<bool> =
+            (0..5u32).map(|b| inj.decide(0, b, 0).error.is_some()).collect();
+        assert_eq!(crashed, vec![false, true, true, false, false]);
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_visible() {
+        let plan = FaultPlan {
+            seed: 5,
+            shards: vec![ShardFaults { corrupt_logits: true, ..Default::default() }],
+        };
+        let inj = FaultInjector::new(plan, 1);
+        assert!(inj.decide(0, 1, 0).corrupt);
+        let clean = vec![1.0f32, -2.0, 3.0];
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        inj.corrupt(&mut a, 11);
+        inj.corrupt(&mut b, 11);
+        assert_eq!(a, b, "same key ⇒ same garbage");
+        assert_ne!(a, clean, "corruption must actually perturb");
+        let mut c = clean.clone();
+        inj.corrupt(&mut c, 12);
+        assert_ne!(a, c, "different job seed ⇒ different garbage");
+    }
+
+    #[test]
+    fn latency_spike_probability_gates_the_spike() {
+        let mk = |p: f32| FaultPlan {
+            seed: 1,
+            shards: vec![ShardFaults {
+                latency_spike: Some(Duration::from_millis(5)),
+                latency_spike_prob: p,
+                ..Default::default()
+            }],
+        };
+        let always = FaultInjector::new(mk(1.0), 1);
+        assert!((0..16u32).all(|s| always.decide(0, s, 0).spike.is_some()));
+        let never = FaultInjector::new(mk(0.0), 1);
+        assert!((0..16u32).all(|s| never.decide(0, s, 0).spike.is_none()));
+    }
+}

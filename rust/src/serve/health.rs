@@ -1,0 +1,232 @@
+//! Per-shard health tracking and the self-healing policy knobs.
+//!
+//! The replica tier watches each shard's error behaviour (consecutive
+//! failed batches plus the error-rate EWMA maintained by
+//! [`super::metrics::ServeMetrics`]) and **evicts** shards that look
+//! unhealthy: the dispatcher stops routing new batches to them, their
+//! queued work is redistributed losslessly to healthy siblings, and every
+//! [`super::ResilienceConfig::probe_interval`]-th dispatched batch is sent
+//! to an evicted shard as a *probe* — a success reintegrates the shard
+//! into the rotation.  The tracker never evicts the last healthy shard: a
+//! degenerate cluster keeps limping on its only replica rather than
+//! stalling with no executor at all.
+//!
+//! Everything here is policy state only — it never touches seeds or batch
+//! formation, so enabling resilience cannot change *what* a request's
+//! logits are, only *where* (and how often) they get computed.  With
+//! [`ResilienceConfig::enabled`] false (the default) the tracker is inert
+//! and the tier behaves exactly like the PR-6 serving path.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Self-healing policy for the replica tier; all response machinery
+/// defaults to **off** so a default-configured [`super::ReplicaServer`]
+/// is bit-identical to the pre-resilience serving path.
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Master switch: health tracking, eviction, requeue, probes.
+    pub enabled: bool,
+    /// Evict a shard after this many *consecutive* failed batches.
+    pub evict_consecutive: u32,
+    /// Evict when the shard's error-rate EWMA exceeds this threshold
+    /// (per-batch error indicator smoothed by
+    /// [`super::metrics::EWMA_ALPHA`]).
+    pub error_ewma_evict: f64,
+    /// Route every Nth dispatched batch to an evicted shard as a
+    /// reintegration probe (0 disables probing).
+    pub probe_interval: u32,
+    /// Budget of requeues per batch after a shard failure before the
+    /// batch fails loudly to every member.
+    pub max_requeues: u32,
+    /// Hedged dispatch: an idle healthy shard re-executes a straggling
+    /// in-flight batch; first response wins (dedup by request id).
+    pub hedge: bool,
+    /// Minimum in-flight age before a batch is hedge-eligible.
+    pub hedge_after: Duration,
+    /// A batch is also a straggler once it is in flight longer than
+    /// `hedge_factor ×` its shard's batch-latency EWMA.
+    pub hedge_factor: f64,
+    /// Brown-out threshold: when more than this many requests are
+    /// outstanding, batches execute on the degraded (short-sampling)
+    /// executors and replies carry `degraded: true`.  `None` disables.
+    pub brownout_queue: Option<usize>,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            evict_consecutive: 3,
+            error_ewma_evict: 0.5,
+            probe_interval: 8,
+            max_requeues: 2,
+            hedge: false,
+            hedge_after: Duration::from_millis(50),
+            hedge_factor: 4.0,
+            brownout_queue: None,
+        }
+    }
+}
+
+struct ShardHealth {
+    up: bool,
+    consecutive_errors: u32,
+}
+
+/// Shared health state: one slot per shard, updated by whichever worker
+/// executed a batch on that shard.
+pub struct HealthTracker {
+    cfg: ResilienceConfig,
+    shards: Vec<Mutex<ShardHealth>>,
+}
+
+impl HealthTracker {
+    pub fn new(replicas: usize, cfg: ResilienceConfig) -> Self {
+        Self {
+            cfg,
+            shards: (0..replicas)
+                .map(|_| Mutex::new(ShardHealth { up: true, consecutive_errors: 0 }))
+                .collect(),
+        }
+    }
+
+    /// Whether the self-healing machinery is active at all.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Is `si` currently in the dispatch rotation?  Always true when the
+    /// tracker is disabled.
+    pub fn is_up(&self, si: usize) -> bool {
+        !self.cfg.enabled || self.shards[si].lock().unwrap().up
+    }
+
+    /// A batch succeeded on `si`; returns true when this *reintegrated*
+    /// an evicted shard (a probe, or stale work, came back healthy).
+    pub fn record_success(&self, si: usize) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let mut s = self.shards[si].lock().unwrap();
+        s.consecutive_errors = 0;
+        let reintegrated = !s.up;
+        s.up = true;
+        reintegrated
+    }
+
+    /// A batch failed on `si`; `error_ewma` is the shard's current
+    /// error-rate EWMA (already including this failure).  Returns true
+    /// when this call *evicted* the shard (up → down transition).  The
+    /// last healthy shard is never evicted.
+    pub fn record_failure(&self, si: usize, error_ewma: f64) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        // count healthy shards without holding si's lock (lock ordering:
+        // only ever one shard lock at a time)
+        let healthy = self.healthy_count();
+        let mut s = self.shards[si].lock().unwrap();
+        s.consecutive_errors += 1;
+        if !s.up {
+            return false; // already evicted (a failed probe)
+        }
+        let trip = s.consecutive_errors >= self.cfg.evict_consecutive
+            || error_ewma > self.cfg.error_ewma_evict;
+        if trip && healthy > 1 {
+            s.up = false;
+            return true;
+        }
+        false
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        if !self.cfg.enabled {
+            return self.shards.len();
+        }
+        self.shards.iter().filter(|s| s.lock().unwrap().up).count()
+    }
+
+    /// Currently evicted shard indices (empty when disabled).
+    pub fn evicted_list(&self) -> Vec<usize> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.lock().unwrap().up)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// First healthy shard scanning cyclically from `start`; `None` only
+    /// in the (unreachable by policy) all-evicted state.
+    pub fn next_healthy(&self, start: usize) -> Option<usize> {
+        let n = self.shards.len();
+        (0..n).map(|d| (start + d) % n).find(|&si| self.is_up(si))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled(evict_consecutive: u32) -> ResilienceConfig {
+        ResilienceConfig { enabled: true, evict_consecutive, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_tracker_is_inert() {
+        let t = HealthTracker::new(2, ResilienceConfig::default());
+        assert!(!t.enabled());
+        assert!(!t.record_failure(0, 1.0), "disabled: never evicts");
+        assert!(t.is_up(0));
+        assert_eq!(t.healthy_count(), 2);
+        assert!(t.evicted_list().is_empty());
+    }
+
+    #[test]
+    fn consecutive_errors_evict_then_success_reintegrates() {
+        let t = HealthTracker::new(3, enabled(2));
+        assert!(!t.record_failure(1, 0.0), "first failure: below threshold");
+        assert!(t.is_up(1));
+        assert!(t.record_failure(1, 0.0), "second consecutive failure evicts");
+        assert!(!t.is_up(1));
+        assert_eq!(t.evicted_list(), vec![1]);
+        assert_eq!(t.healthy_count(), 2);
+        // a failed probe on an already-evicted shard is not a new eviction
+        assert!(!t.record_failure(1, 0.0));
+        // a successful probe reintegrates
+        assert!(t.record_success(1));
+        assert!(t.is_up(1));
+        // and a success on an already-healthy shard is not a reintegration
+        assert!(!t.record_success(1));
+    }
+
+    #[test]
+    fn error_ewma_above_threshold_evicts_immediately() {
+        let t = HealthTracker::new(2, enabled(100));
+        assert!(t.record_failure(0, 0.9), "EWMA over 0.5 trips eviction");
+    }
+
+    #[test]
+    fn interleaved_success_resets_the_consecutive_counter() {
+        let t = HealthTracker::new(2, enabled(2));
+        assert!(!t.record_failure(0, 0.0));
+        t.record_success(0);
+        assert!(!t.record_failure(0, 0.0), "counter was reset by success");
+        assert!(t.is_up(0));
+    }
+
+    #[test]
+    fn last_healthy_shard_is_never_evicted() {
+        let t = HealthTracker::new(2, enabled(1));
+        assert!(t.record_failure(0, 1.0));
+        // shard 1 is now the last healthy shard: it keeps limping
+        assert!(!t.record_failure(1, 1.0));
+        assert!(t.is_up(1));
+        assert_eq!(t.next_healthy(0), Some(1));
+        assert_eq!(t.next_healthy(1), Some(1));
+    }
+}

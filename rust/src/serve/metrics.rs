@@ -16,6 +16,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Smoothing factor of the per-shard health EWMAs (error rate and batch
+/// latency): `ewma ← (1−α)·ewma + α·sample`.  The eviction policy in
+/// [`super::health`] compares the error-rate EWMA against
+/// [`super::health::ResilienceConfig::error_ewma_evict`].
+pub const EWMA_ALPHA: f64 = 0.2;
+
 /// Counters and latency distribution of one replica shard.
 #[derive(Debug)]
 pub struct ShardStats {
@@ -30,6 +36,12 @@ pub struct ShardStats {
     /// reply; see the [`crate::coordinator::server::Reply`] contract)
     pub error_batches: u64,
     min_us: f64,
+    /// EWMA of the per-batch error indicator (1 = failed, 0 = ok) — the
+    /// health signal eviction reads
+    pub error_ewma: f64,
+    /// EWMA of per-batch mean request latency (µs) — the straggler
+    /// signal hedged dispatch reads
+    pub latency_ewma_us: f64,
 }
 
 impl ShardStats {
@@ -48,6 +60,8 @@ impl ShardStats {
             stolen_batches: 0,
             error_batches: 0,
             min_us: f64::INFINITY,
+            error_ewma: 0.0,
+            latency_ewma_us: 0.0,
         }
     }
 
@@ -58,13 +72,25 @@ impl ShardStats {
             self.stolen_batches += 1;
         }
         self.batch_occupancy.add(batch as f32);
+        let mut sum_us = 0.0f64;
         for l in latencies {
             // accumulate in f64 end-to-end: at µs scale an f32 cast
             // quantizes to ~0.06 µs steps by 1 s and misreports min/p999
             let us = l.as_secs_f64() * 1e6;
             self.latency_us.add_f64(us);
             self.min_us = self.min_us.min(us);
+            sum_us += us;
         }
+        self.error_ewma *= 1.0 - EWMA_ALPHA; // sample 0: the batch succeeded
+        if !latencies.is_empty() {
+            let mean = sum_us / latencies.len() as f64;
+            self.latency_ewma_us = (1.0 - EWMA_ALPHA) * self.latency_ewma_us + EWMA_ALPHA * mean;
+        }
+    }
+
+    fn note_error(&mut self) {
+        self.error_batches += 1;
+        self.error_ewma = (1.0 - EWMA_ALPHA) * self.error_ewma + EWMA_ALPHA; // sample 1
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -103,6 +129,14 @@ pub struct ServeMetrics {
     deadline_exceeded: AtomicU64,
     slo_ok: AtomicU64,
     slo_miss: AtomicU64,
+    // self-healing counters (the resilience block of the JSON report)
+    evicted: AtomicU64,
+    reintegrated: AtomicU64,
+    requeued: AtomicU64,
+    probes: AtomicU64,
+    hedged: AtomicU64,
+    hedge_wins: AtomicU64,
+    degraded: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -116,6 +150,13 @@ impl ServeMetrics {
             deadline_exceeded: AtomicU64::new(0),
             slo_ok: AtomicU64::new(0),
             slo_miss: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            reintegrated: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            hedged: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
         }
     }
 
@@ -134,10 +175,12 @@ impl ServeMetrics {
         }
     }
 
-    /// Record a batch whose executor failed (error replies were sent).
+    /// Record a batch whose executor failed (it will be requeued or its
+    /// members get error replies); feeds the error-rate EWMA eviction
+    /// reads.
     pub fn record_error_batch(&self, shard: usize) {
-        self.shards[shard].lock().unwrap().error_batches += 1;
-        self.total.lock().unwrap().error_batches += 1;
+        self.shards[shard].lock().unwrap().note_error();
+        self.total.lock().unwrap().note_error();
     }
 
     /// Admission control turned a request away at the queue head.
@@ -148,6 +191,41 @@ impl ServeMetrics {
     /// A queued request aged past its deadline before execution.
     pub fn record_deadline_exceeded(&self) {
         self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard was evicted from the dispatch rotation.
+    pub fn record_evicted(&self) {
+        self.evicted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An evicted shard passed a probe and rejoined the rotation.
+    pub fn record_reintegrated(&self) {
+        self.reintegrated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A failed batch was requeued onto a healthy shard (lossless).
+    pub fn record_requeued(&self) {
+        self.requeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch was routed to an evicted shard as a reintegration probe.
+    pub fn record_probe(&self) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An in-flight straggler batch was hedged to a sibling shard.
+    pub fn record_hedged(&self) {
+        self.hedged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hedged execution answered at least one request first.
+    pub fn record_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests were served in brown-out (degraded) mode.
+    pub fn record_degraded(&self, n: u64) {
+        self.degraded.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn replicas(&self) -> usize {
@@ -173,6 +251,44 @@ impl ServeMetrics {
 
     pub fn deadline_exceeded(&self) -> u64 {
         self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    pub fn reintegrated(&self) -> u64 {
+        self.reintegrated.load(Ordering::Relaxed)
+    }
+
+    pub fn requeued(&self) -> u64 {
+        self.requeued.load(Ordering::Relaxed)
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    pub fn hedged(&self) -> u64 {
+        self.hedged.load(Ordering::Relaxed)
+    }
+
+    pub fn hedge_wins(&self) -> u64 {
+        self.hedge_wins.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Shard `si`'s error-rate EWMA (the eviction signal).
+    pub fn error_ewma(&self, si: usize) -> f64 {
+        self.shards[si].lock().unwrap().error_ewma
+    }
+
+    /// Shard `si`'s batch-latency EWMA in µs (the straggler signal).
+    pub fn latency_ewma_us(&self, si: usize) -> f64 {
+        self.shards[si].lock().unwrap().latency_ewma_us
     }
 
     pub fn slo_ok(&self) -> u64 {
@@ -246,6 +362,8 @@ impl ServeMetrics {
                     ("batches", Json::Num(s.batches as f64)),
                     ("stolen_batches", Json::Num(s.stolen_batches as f64)),
                     ("error_batches", Json::Num(s.error_batches as f64)),
+                    ("error_ewma", Json::Num(s.error_ewma)),
+                    ("latency_ewma_us", Json::Num(s.latency_ewma_us)),
                     ("mean_batch", Json::Num(s.mean_batch())),
                     (
                         "p99_us",
@@ -283,6 +401,18 @@ impl ServeMetrics {
                     ("ok", Json::Num(self.slo_ok() as f64)),
                     ("miss", Json::Num(self.slo_miss() as f64)),
                     ("attainment", Json::Num(self.slo_attainment())),
+                ]),
+            ),
+            (
+                "resilience",
+                Json::obj(vec![
+                    ("evicted", Json::Num(self.evicted() as f64)),
+                    ("reintegrated", Json::Num(self.reintegrated() as f64)),
+                    ("requeued", Json::Num(self.requeued() as f64)),
+                    ("probes", Json::Num(self.probes() as f64)),
+                    ("hedged", Json::Num(self.hedged() as f64)),
+                    ("hedge_wins", Json::Num(self.hedge_wins() as f64)),
+                    ("degraded", Json::Num(self.degraded() as f64)),
                 ]),
             ),
             ("shards", Json::Arr(shards)),
@@ -357,6 +487,64 @@ mod tests {
         let min = m.min_latency_us();
         assert!((min - 1_234_567.891).abs() < 1e-3, "min={min}");
         assert_ne!(min, min as f32 as f64, "f32 would have rounded this");
+    }
+
+    #[test]
+    fn error_ewma_rises_on_errors_and_decays_on_successes() {
+        let m = ServeMetrics::new(1, Duration::from_millis(10));
+        assert_eq!(m.error_ewma(0), 0.0);
+        m.record_error_batch(0);
+        let one = m.error_ewma(0);
+        assert!((one - EWMA_ALPHA).abs() < 1e-12, "{one}");
+        m.record_error_batch(0);
+        let two = m.error_ewma(0);
+        assert!(two > one, "consecutive errors push the EWMA up");
+        m.record_batch(0, 1, &[Duration::from_millis(1)], false);
+        assert!(m.error_ewma(0) < two, "a success decays it");
+        // many successes drive it toward zero, never below
+        for _ in 0..200 {
+            m.record_batch(0, 1, &[Duration::from_millis(1)], false);
+        }
+        assert!(m.error_ewma(0) >= 0.0 && m.error_ewma(0) < 1e-6);
+    }
+
+    #[test]
+    fn latency_ewma_tracks_batch_latency() {
+        let m = ServeMetrics::new(1, Duration::from_millis(10));
+        assert_eq!(m.latency_ewma_us(0), 0.0);
+        for _ in 0..60 {
+            m.record_batch(0, 1, &[Duration::from_millis(2)], false);
+        }
+        let ewma = m.latency_ewma_us(0);
+        assert!((ewma - 2000.0).abs() < 10.0, "converges to ~2 ms: {ewma}");
+    }
+
+    #[test]
+    fn resilience_counters_round_trip_through_json() {
+        let m = ServeMetrics::new(2, Duration::from_millis(10));
+        m.record_evicted();
+        m.record_reintegrated();
+        m.record_requeued();
+        m.record_requeued();
+        m.record_probe();
+        m.record_hedged();
+        m.record_hedge_win();
+        m.record_degraded(3);
+        assert_eq!(m.evicted(), 1);
+        assert_eq!(m.reintegrated(), 1);
+        assert_eq!(m.requeued(), 2);
+        assert_eq!(m.probes(), 1);
+        assert_eq!(m.hedged(), 1);
+        assert_eq!(m.hedge_wins(), 1);
+        assert_eq!(m.degraded(), 3);
+        let j = m.to_json();
+        let r = j.get("resilience").expect("resilience block in the report");
+        assert_eq!(r.get("evicted").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(r.get("requeued").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(r.get("degraded").and_then(|v| v.as_usize()), Some(3));
+        let shards = j.get("shards").and_then(|s| s.as_arr()).unwrap();
+        assert!(shards[0].get("error_ewma").and_then(|v| v.as_f64()).is_some());
+        assert!(shards[0].get("latency_ewma_us").and_then(|v| v.as_f64()).is_some());
     }
 
     #[test]

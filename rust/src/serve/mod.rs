@@ -22,11 +22,29 @@
 //!   p50/p99/p999 latency, SLO attainment, JSON export.
 //! - [`loadgen`] — Poisson-arrival closed-loop harness sweeping offered
 //!   rates to saturation; emits `BENCH_serving.json`.
+//! - [`health`] — [`ResilienceConfig`] + [`HealthTracker`]: the
+//!   self-healing policy (eviction on consecutive errors or error-EWMA,
+//!   probe-based reintegration, hedging and brown-out knobs).
+//! - [`fault`] — [`FaultPlan`]/[`FaultInjector`]: deterministic fault
+//!   injection (crash windows, transient errors, latency spikes,
+//!   corrupted logits), and [`run_chaos`] — the severity × load sweep
+//!   behind `stox-cli chaos` (`BENCH_chaos.json`).
+//!
+//! Self-healing extends the determinism contract rather than weakening
+//! it: requeued and hedged batches carry their original seed, so a batch
+//! re-executed on *any* shard reproduces the exact logits the failed
+//! execution would have produced.  Under a crash fault the surviving
+//! replies are bit-identical to the fault-free run, and every admitted
+//! request receives exactly one reply under any fault schedule.
 
+pub mod fault;
+pub mod health;
 pub mod loadgen;
 pub mod metrics;
 pub mod replica;
 
+pub use fault::{run_chaos, ChaosConfig, ChaosPoint, FaultInjector, FaultPlan, ShardFaults};
+pub use health::{HealthTracker, ResilienceConfig};
 pub use loadgen::{run_rate, run_sweep, LoadGenConfig, RatePoint};
-pub use metrics::ServeMetrics;
+pub use metrics::{ServeMetrics, EWMA_ALPHA};
 pub use replica::{ReplicaConfig, ReplicaServer, DEADLINE_EXCEEDED, REJECTED};

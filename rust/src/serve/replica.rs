@@ -1,5 +1,9 @@
 //! The sharded replica server: N executors over one programming pass,
-//! continuous batching, admission control, and work stealing.
+//! continuous batching, admission control, work stealing — and, when
+//! [`ResilienceConfig::enabled`] is set, the self-healing plane: health
+//! tracking, shard eviction with lossless requeue, probe-based
+//! reintegration, hedged dispatch of stragglers, and brown-out
+//! degradation.
 //!
 //! Supersedes the single-[`crate::coordinator::Server`] run loop for
 //! native-executor serving.  One dispatcher thread (the caller of
@@ -22,14 +26,12 @@
 //! seed (pinned by `rust/tests/serve.rs`), while execution parallelizes
 //! across shards.
 //!
-//! Batch *execution* additionally runs layer-pipelined on each shard:
-//! `NativeModel::forward` fans the batch's images out to workers that
-//! each carry one image through every layer (layer k of image i overlaps
-//! layer k−1 of image i+1).  The pipelined forward is bit-identical to
-//! the sequential one — the RNG counter contract keys every draw by
-//! absolute patch index — so it changes shard throughput, never replies
-//! (`replica_view` carries the pipeline switch, so a model with
-//! `set_pipeline(false)` serves sequentially on every shard).
+//! The same property is what makes self-healing *lossless*: a requeued or
+//! hedged batch carries its original seed, so re-executing it on any
+//! shard reproduces the exact logits the failed execution would have
+//! produced.  Under a crash fault, surviving requests receive replies
+//! bit-identical to the fault-free run (pinned by
+//! `crashing_shard_heals_and_stays_bit_identical`).
 //!
 //! # Admission control and deadlines
 //!
@@ -41,12 +43,28 @@
 //! `Err(`[`DEADLINE_EXCEEDED`]`)` reply.  Either way the reply channel is
 //! never dropped — the fail-loud contract of
 //! [`crate::coordinator::server::Reply`] extends to the replica tier.
+//!
+//! # Self-healing (the robustness plane)
+//!
+//! With resilience enabled, a failed batch is requeued to a healthy
+//! sibling (budget [`ResilienceConfig::max_requeues`]); a shard whose
+//! consecutive-error count or error-rate EWMA trips the policy is
+//! *evicted* — its queue is drained and redistributed — and periodically
+//! *probed* for reintegration.  An idle healthy shard *hedges* a
+//! straggler batch (same seed — first response wins, deduplicated by
+//! request id, so a request still gets exactly one reply).  Under
+//! brown-out, batches execute on the degraded short-sampling executors
+//! and replies carry `degraded: true`.  Every reply path decrements the
+//! outstanding count exactly once per request, so the exactly-one-reply
+//! contract survives any fault schedule.
 
+use super::fault::{FaultInjector, FaultPlan};
+use super::health::{HealthTracker, ResilienceConfig};
 use super::metrics::ServeMetrics;
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, Pending};
-use crate::coordinator::server::{Executor, NativeExecutor, Reply, Request};
+use crate::coordinator::server::{ConfigError, Executor, NativeExecutor, Reply, Request};
 use crate::model::NativeModel;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -71,6 +89,13 @@ pub struct ReplicaConfig {
     pub deadline: Option<Duration>,
     /// SLO latency target for the attainment counters.
     pub slo: Duration,
+    /// Work stealing (idle shard drains the longest sibling backlog);
+    /// on by default, switched off by the chaos tests that need strict
+    /// queue-to-shard affinity.
+    pub steal: bool,
+    /// The self-healing policy; disabled by default (bit-identical to
+    /// the pre-resilience tier).
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for ReplicaConfig {
@@ -82,7 +107,31 @@ impl Default for ReplicaConfig {
             queue_depth: 1024,
             deadline: None,
             slo: Duration::from_millis(50),
+            steal: true,
+            resilience: ResilienceConfig::default(),
         }
+    }
+}
+
+impl ReplicaConfig {
+    /// Fail-loud validation, called by the CLI/harness right after
+    /// parsing: a zero queue depth would reject every request, zero
+    /// replicas cannot serve, a zero deadline expires everything, and a
+    /// zero target batch never forms one.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.replicas == 0 {
+            return Err(ConfigError::ZeroReplicas);
+        }
+        if self.queue_depth == 0 {
+            return Err(ConfigError::ZeroQueueDepth);
+        }
+        if self.batcher.target_batch == 0 {
+            return Err(ConfigError::ZeroTargetBatch);
+        }
+        if self.deadline == Some(Duration::ZERO) {
+            return Err(ConfigError::ZeroDeadline);
+        }
+        Ok(())
     }
 }
 
@@ -92,6 +141,11 @@ struct Job {
     items: Vec<Pending<Request>>,
     /// shard the dispatcher assigned it to (executed elsewhere ⇒ stolen)
     home: usize,
+    /// requeue generation: 0 on first dispatch, +1 per post-failure
+    /// requeue (independent fault draws, bounded by `max_requeues`)
+    attempt: u32,
+    /// reintegration probe — routed to an evicted shard on purpose
+    probe: bool,
 }
 
 /// One shard's work queue (Mutex + Condvar; std-only, no tokio).
@@ -111,12 +165,87 @@ impl ShardQueue {
     }
 }
 
+/// Copy of one in-flight request a hedge can answer (the original
+/// [`Pending`] stays with the executing worker; senders and images are
+/// cheaply cloneable).
+struct HedgeItem {
+    id: u64,
+    image: Vec<f32>,
+    reply: mpsc::Sender<Reply>,
+    enqueued: Instant,
+}
+
+/// An in-flight batch advertised for hedging: seed + item copies, plus a
+/// claim flag so at most one sibling re-executes it.
+struct InFlight {
+    seed: u32,
+    started: Instant,
+    items: Vec<HedgeItem>,
+    taken: AtomicBool,
+}
+
+/// Per-shard registry of the batch each worker is currently executing.
+struct HedgeBoard {
+    slots: Vec<Mutex<Option<Arc<InFlight>>>>,
+}
+
+impl HedgeBoard {
+    fn new(replicas: usize) -> Self {
+        Self { slots: (0..replicas).map(|_| Mutex::new(None)).collect() }
+    }
+
+    fn register(&self, si: usize, job: &Job) {
+        let inflight = Arc::new(InFlight {
+            seed: job.seed,
+            started: Instant::now(),
+            items: job
+                .items
+                .iter()
+                .map(|p| HedgeItem {
+                    id: p.id,
+                    image: p.payload.image.clone(),
+                    reply: p.payload.reply.clone(),
+                    enqueued: p.enqueued,
+                })
+                .collect(),
+            taken: AtomicBool::new(false),
+        });
+        *self.slots[si].lock().unwrap() = Some(inflight);
+    }
+
+    fn clear(&self, si: usize) {
+        *self.slots[si].lock().unwrap() = None;
+    }
+}
+
+/// Everything a worker or the dispatcher needs, bundled so the execution
+/// paths stay readable (one context reference instead of ten arguments).
+struct RunCtx<'a, E: Executor + Sync> {
+    cfg: &'a ReplicaConfig,
+    shards: &'a [E],
+    /// degraded (short-sampling) executors, one per shard — brown-out
+    degraded: Option<&'a [E]>,
+    queues: &'a [ShardQueue],
+    done: &'a AtomicBool,
+    outstanding: &'a AtomicUsize,
+    metrics: &'a ServeMetrics,
+    health: &'a HealthTracker,
+    injector: &'a FaultInjector,
+    hedge: &'a HedgeBoard,
+    /// request ids already answered — consulted only when hedging is on
+    /// (the one path where two executions race for the same reply)
+    replied: &'a Mutex<HashSet<u64>>,
+}
+
 /// N-replica serving tier over any `Executor + Sync` (one executor per
 /// shard; use [`ReplicaServer::from_native`] to shard a [`NativeModel`]
 /// through its `Arc`-shared programming pass).
 pub struct ReplicaServer<E: Executor + Sync> {
     shards: Vec<E>,
+    /// brown-out executors (same shard count); `None` disables brown-out
+    degraded: Option<Vec<E>>,
     cfg: ReplicaConfig,
+    plan: FaultPlan,
     pub metrics: Arc<ServeMetrics>,
 }
 
@@ -129,6 +258,16 @@ impl ReplicaServer<NativeExecutor> {
             .collect();
         Self::new(shards, cfg)
     }
+
+    /// Attach brown-out executors sharing `model`'s programming pass
+    /// (typically a [`crate::model::NativeModel::share_with_converter_spec`]
+    /// view with a shorter sampling length).
+    pub fn with_degraded_native(self, model: &NativeModel) -> Self {
+        let shards: Vec<NativeExecutor> = (0..self.cfg.replicas)
+            .map(|_| NativeExecutor { model: model.replica_view() })
+            .collect();
+        self.with_degraded_shards(shards)
+    }
 }
 
 impl<E: Executor + Sync> ReplicaServer<E> {
@@ -138,7 +277,27 @@ impl<E: Executor + Sync> ReplicaServer<E> {
         assert!(!shards.is_empty(), "at least one replica shard");
         cfg.replicas = shards.len();
         let metrics = Arc::new(ServeMetrics::new(shards.len(), cfg.slo));
-        Self { shards, cfg, metrics }
+        Self { shards, degraded: None, cfg, plan: FaultPlan::disabled(), metrics }
+    }
+
+    /// Inject a fault plan (testing / chaos engineering).  The disabled
+    /// plan — the default — is completely inert.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Attach brown-out executors, one per shard.  Batches execute on
+    /// them (with `degraded: true` replies) whenever more than
+    /// [`ResilienceConfig::brownout_queue`] requests are outstanding.
+    pub fn with_degraded_shards(mut self, degraded: Vec<E>) -> Self {
+        assert_eq!(
+            degraded.len(),
+            self.shards.len(),
+            "one degraded executor per shard"
+        );
+        self.degraded = Some(degraded);
+        self
     }
 
     pub fn config(&self) -> &ReplicaConfig {
@@ -146,26 +305,40 @@ impl<E: Executor + Sync> ReplicaServer<E> {
     }
 
     /// Run loop: consume requests until the channel closes, then drain
-    /// the batcher and wait for every shard to finish its backlog.
+    /// the batcher and wait until every admitted request has its reply.
     ///
     /// The dispatcher runs on the calling thread; shard workers run on
     /// scoped threads, so `run` returns only after every admitted request
-    /// has received its reply.
+    /// has received its reply — under any fault schedule (workers exit on
+    /// `done && outstanding == 0`, so requeued or hedged work can never
+    /// be orphaned by an early queue-empty exit).
     pub fn run(&self, rx: mpsc::Receiver<Request>) {
         let queues: Vec<ShardQueue> = (0..self.shards.len()).map(|_| ShardQueue::new()).collect();
         let done = AtomicBool::new(false);
         let outstanding = AtomicUsize::new(0);
+        let health = HealthTracker::new(self.shards.len(), self.cfg.resilience.clone());
+        let injector = FaultInjector::new(self.plan.clone(), self.shards.len());
+        let hedge = HedgeBoard::new(self.shards.len());
+        let replied = Mutex::new(HashSet::new());
+        let ctx = RunCtx {
+            cfg: &self.cfg,
+            shards: &self.shards,
+            degraded: self.degraded.as_deref(),
+            queues: &queues,
+            done: &done,
+            outstanding: &outstanding,
+            metrics: self.metrics.as_ref(),
+            health: &health,
+            injector: &injector,
+            hedge: &hedge,
+            replied: &replied,
+        };
         std::thread::scope(|scope| {
-            for (si, exec) in self.shards.iter().enumerate() {
-                let queues = &queues;
-                let done = &done;
-                let outstanding = &outstanding;
-                let metrics = &self.metrics;
-                scope.spawn(move || {
-                    shard_worker(si, exec, queues, done, outstanding, metrics)
-                });
+            for si in 0..self.shards.len() {
+                let ctx = &ctx;
+                scope.spawn(move || shard_worker(ctx, si));
             }
-            self.dispatch_loop(rx, &queues, &outstanding);
+            self.dispatch_loop(rx, &ctx);
             done.store(true, Ordering::SeqCst);
             for q in &queues {
                 q.cv.notify_all();
@@ -176,30 +349,26 @@ impl<E: Executor + Sync> ReplicaServer<E> {
     /// Central batch formation — the single-server run loop, minus
     /// execution: admitted requests accumulate in the batcher; formed
     /// batches get the next sequence seed and go to a shard queue.
-    fn dispatch_loop(
-        &self,
-        rx: mpsc::Receiver<Request>,
-        queues: &[ShardQueue],
-        outstanding: &AtomicUsize,
-    ) {
+    fn dispatch_loop(&self, rx: mpsc::Receiver<Request>, ctx: &RunCtx<'_, E>) {
         let mut batcher = DynamicBatcher::new(BatcherConfig {
             target_batch: self.cfg.batcher.target_batch.min(self.shards[0].max_batch()),
             ..self.cfg.batcher
         });
         let mut seq: u32 = 0;
         let mut rr = 0usize;
+        let mut dseq = 0u64;
         let mut closed = false;
         while !closed {
             let now = Instant::now();
             if let Some(batch) = batcher.try_flush(now) {
                 seq = seq.wrapping_add(1);
-                self.dispatch(batch, self.cfg.seed.wrapping_add(seq), queues, &mut rr, outstanding);
+                self.dispatch(batch, self.cfg.seed.wrapping_add(seq), ctx, &mut rr, &mut dseq);
                 continue;
             }
             let wait = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
             match rx.recv_timeout(wait) {
                 Ok(req) => {
-                    if outstanding.load(Ordering::SeqCst) >= self.cfg.queue_depth {
+                    if ctx.outstanding.load(Ordering::SeqCst) >= self.cfg.queue_depth {
                         // bounded queue: explicit rejection, never an
                         // unbounded backlog or a dropped reply channel
                         self.metrics.record_rejected();
@@ -207,9 +376,10 @@ impl<E: Executor + Sync> ReplicaServer<E> {
                             result: Err(REJECTED.to_string()),
                             latency: Duration::ZERO,
                             batch: 0,
+                            degraded: false,
                         });
                     } else {
-                        outstanding.fetch_add(1, Ordering::SeqCst);
+                        ctx.outstanding.fetch_add(1, Ordering::SeqCst);
                         batcher.push(req, Instant::now());
                     }
                 }
@@ -219,18 +389,20 @@ impl<E: Executor + Sync> ReplicaServer<E> {
         }
         while let Some(batch) = batcher.drain_all() {
             seq = seq.wrapping_add(1);
-            self.dispatch(batch, self.cfg.seed.wrapping_add(seq), queues, &mut rr, outstanding);
+            self.dispatch(batch, self.cfg.seed.wrapping_add(seq), ctx, &mut rr, &mut dseq);
         }
     }
 
-    /// Expire overdue requests, then queue the remainder round-robin.
+    /// Expire overdue requests, then queue the remainder: round-robin
+    /// over healthy shards, with every `probe_interval`-th dispatch
+    /// routed to an evicted shard as a reintegration probe.
     fn dispatch(
         &self,
         batch: Batch<Request>,
         seed: u32,
-        queues: &[ShardQueue],
+        ctx: &RunCtx<'_, E>,
         rr: &mut usize,
-        outstanding: &AtomicUsize,
+        dseq: &mut u64,
     ) {
         let mut items = batch.items;
         if let Some(dl) = self.cfg.deadline {
@@ -244,56 +416,94 @@ impl<E: Executor + Sync> ReplicaServer<E> {
                     result: Err(DEADLINE_EXCEEDED.to_string()),
                     latency: now.duration_since(p.enqueued),
                     batch: 0,
+                    degraded: false,
                 });
-                outstanding.fetch_sub(1, Ordering::SeqCst);
+                ctx.outstanding.fetch_sub(1, Ordering::SeqCst);
             }
             items = live;
         }
         if items.is_empty() {
             return;
         }
-        let shard = *rr % queues.len();
+        let res = &self.cfg.resilience;
+        let mut shard = *rr % ctx.queues.len();
         *rr += 1;
-        queues[shard].push(Job { seed, items, home: shard });
+        let mut probe = false;
+        if res.enabled {
+            let evicted = ctx.health.evicted_list();
+            let interval = res.probe_interval as u64;
+            if !evicted.is_empty() && interval > 0 && *dseq % interval == 0 {
+                shard = evicted[((*dseq / interval) as usize) % evicted.len()];
+                probe = true;
+                self.metrics.record_probe();
+            } else if !ctx.health.is_up(shard) {
+                shard = ctx.health.next_healthy(shard).unwrap_or(shard);
+            }
+        }
+        *dseq += 1;
+        ctx.queues[shard].push(Job { seed, items, home: shard, attempt: 0, probe });
     }
 }
 
-/// Shard worker: drain own queue, steal from the longest sibling backlog
-/// when dry, exit once the dispatcher is done and every queue is empty.
-fn shard_worker<E: Executor>(
-    si: usize,
-    exec: &E,
-    queues: &[ShardQueue],
-    done: &AtomicBool,
-    outstanding: &AtomicUsize,
-    metrics: &ServeMetrics,
-) {
+/// Send one reply and decrement the outstanding count — the single
+/// choke-point enforcing exactly-one-reply-per-request.  With hedging on,
+/// the first execution to claim the request id wins; returns whether this
+/// call actually answered.
+fn send_reply<E: Executor + Sync>(
+    ctx: &RunCtx<'_, E>,
+    id: u64,
+    tx: &mpsc::Sender<Reply>,
+    reply: Reply,
+) -> bool {
+    if ctx.cfg.resilience.hedge && !ctx.replied.lock().unwrap().insert(id) {
+        return false; // a hedge (or the original) already answered
+    }
+    let _ = tx.send(reply);
+    ctx.outstanding.fetch_sub(1, Ordering::SeqCst);
+    true
+}
+
+/// Shard worker: drain own queue, steal from the longest healthy sibling
+/// backlog when dry, hedge a straggler when still idle, and exit once the
+/// dispatcher is done and no request is left outstanding.
+fn shard_worker<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) {
     loop {
-        let job = queues[si].q.lock().unwrap().pop_front();
+        let job = ctx.queues[si].q.lock().unwrap().pop_front();
         let job = match job {
             Some(j) => Some(j),
-            None => steal(si, queues),
+            None if ctx.cfg.steal && ctx.health.is_up(si) => steal(ctx, si),
+            None => None,
         };
         match job {
-            Some(job) => execute_job(si, exec, job, outstanding, metrics),
+            Some(job) => execute_job(ctx, si, job),
             None => {
-                if done.load(Ordering::SeqCst)
-                    && queues.iter().all(|q| q.q.lock().unwrap().is_empty())
+                if ctx.cfg.resilience.hedge && ctx.health.is_up(si) {
+                    if let Some(f) = claim_straggler(ctx, si) {
+                        execute_hedge(ctx, si, f);
+                        continue;
+                    }
+                }
+                // exit on outstanding == 0 (not queue-empty): requeued or
+                // hedged work must never be orphaned by a worker exodus
+                if ctx.done.load(Ordering::SeqCst)
+                    && ctx.outstanding.load(Ordering::SeqCst) == 0
                 {
                     return;
                 }
-                let guard = queues[si].q.lock().unwrap();
-                let _unused = queues[si].cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+                let guard = ctx.queues[si].q.lock().unwrap();
+                let _unused =
+                    ctx.queues[si].cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
             }
         }
     }
 }
 
-/// Steal the newest job from the sibling with the longest backlog.
-fn steal(si: usize, queues: &[ShardQueue]) -> Option<Job> {
+/// Steal the newest job from the healthy sibling with the longest
+/// backlog (evicted shards' queues hold only probes — leave them be).
+fn steal<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) -> Option<Job> {
     let mut best: Option<(usize, usize)> = None;
-    for (qi, q) in queues.iter().enumerate() {
-        if qi == si {
+    for (qi, q) in ctx.queues.iter().enumerate() {
+        if qi == si || !ctx.health.is_up(qi) {
             continue;
         }
         let len = q.q.lock().unwrap().len();
@@ -302,61 +512,188 @@ fn steal(si: usize, queues: &[ShardQueue]) -> Option<Job> {
         }
     }
     let (qi, _) = best?;
-    queues[qi].q.lock().unwrap().pop_back()
+    ctx.queues[qi].q.lock().unwrap().pop_back()
+}
+
+/// Find the oldest hedge-eligible in-flight batch on another shard: in
+/// flight longer than `hedge_after` and `hedge_factor ×` its shard's
+/// batch-latency EWMA, and not yet claimed by another hedge.
+fn claim_straggler<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) -> Option<Arc<InFlight>> {
+    let res = &ctx.cfg.resilience;
+    for (qi, slot) in ctx.hedge.slots.iter().enumerate() {
+        if qi == si {
+            continue;
+        }
+        let guard = slot.lock().unwrap();
+        if let Some(f) = guard.as_ref() {
+            let ewma_us = ctx.metrics.latency_ewma_us(qi);
+            let adaptive = Duration::from_micros((res.hedge_factor * ewma_us).max(0.0) as u64);
+            let threshold = res.hedge_after.max(adaptive);
+            if f.started.elapsed() >= threshold && !f.taken.swap(true, Ordering::SeqCst) {
+                return Some(Arc::clone(f));
+            }
+        }
+    }
+    None
+}
+
+/// Re-execute a claimed straggler batch with its original seed; only a
+/// *successful* hedge answers (through the dedup gate) — errors are left
+/// to the original execution's loud-failure path.
+fn execute_hedge<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, f: Arc<InFlight>) {
+    ctx.metrics.record_hedged();
+    let exec = &ctx.shards[si];
+    let n = f.items.len();
+    let classes = exec.classes();
+    let mut images = Vec::with_capacity(n * exec.image_elems());
+    for it in &f.items {
+        images.extend_from_slice(&it.image);
+    }
+    let t0 = Instant::now();
+    if let Ok(logits) = exec.execute(&images, n, f.seed) {
+        let now = Instant::now();
+        let mut latencies = Vec::new();
+        for (i, it) in f.items.iter().enumerate() {
+            let reply = Reply {
+                result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
+                latency: now.duration_since(t0),
+                batch: n,
+                degraded: false,
+            };
+            if send_reply(ctx, it.id, &it.reply, reply) {
+                latencies.push(now.duration_since(it.enqueued));
+            }
+        }
+        if !latencies.is_empty() {
+            ctx.metrics.record_hedge_win();
+            ctx.metrics.record_batch(si, latencies.len(), &latencies, true);
+        }
+    }
+}
+
+/// Redistribute an evicted shard's queued work to healthy siblings —
+/// lossless: jobs keep their seed and attempt count (queued work did not
+/// fail; it just can't stay where it was).
+fn drain_evicted_queue<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) {
+    let drained: Vec<Job> = ctx.queues[si].q.lock().unwrap().drain(..).collect();
+    for (i, mut job) in drained.into_iter().enumerate() {
+        let target = ctx.health.next_healthy(si + 1 + i).unwrap_or(si);
+        job.home = target;
+        ctx.queues[target].push(job);
+    }
 }
 
 /// Execute one batch and reply to every member (the fail-loud contract:
-/// `Ok` logits or the executor's error, never a dropped channel).
-fn execute_job<E: Executor>(
-    si: usize,
-    exec: &E,
-    job: Job,
-    outstanding: &AtomicUsize,
-    metrics: &ServeMetrics,
-) {
+/// `Ok` logits or a loud error, never a dropped channel) — threading the
+/// fault injector, health tracking, brown-out, and requeue machinery.
+fn execute_job<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, job: Job) {
     let n = job.items.len();
-    let classes = exec.classes();
     let stolen = job.home != si;
+    let res = &ctx.cfg.resilience;
+    // brown-out: under overload, execute on the degraded (short-sampling)
+    // executors and flag the replies
+    let brownout = match (ctx.degraded, res.brownout_queue) {
+        (Some(_), Some(th)) => ctx.outstanding.load(Ordering::SeqCst) > th,
+        _ => false,
+    };
+    let exec: &E = if brownout {
+        &ctx.degraded.expect("brownout implies degraded shards")[si]
+    } else {
+        &ctx.shards[si]
+    };
+    let classes = exec.classes();
     let mut images = Vec::with_capacity(n * exec.image_elems());
     for p in &job.items {
         images.extend_from_slice(&p.payload.image);
     }
+
+    // advertise for hedging before any (possibly slow) execution
+    let hedgeable = res.hedge && !job.probe;
+    if hedgeable {
+        ctx.hedge.register(si, &job);
+    }
+    let decision = ctx.injector.decide(si, job.seed, job.attempt);
+    if let Some(spike) = decision.spike {
+        std::thread::sleep(spike);
+    }
     let t0 = Instant::now();
-    match exec.execute(&images, n, job.seed) {
+    let result = match decision.error {
+        Some(msg) => Err(anyhow::anyhow!(msg)),
+        None => exec.execute(&images, n, job.seed).map(|mut logits| {
+            if decision.corrupt {
+                ctx.injector.corrupt(&mut logits, job.seed);
+            }
+            logits
+        }),
+    };
+    if hedgeable {
+        ctx.hedge.clear(si);
+    }
+
+    match result {
         Ok(logits) => {
+            if ctx.health.record_success(si) {
+                ctx.metrics.record_reintegrated();
+            }
             let now = Instant::now();
             let mut latencies = Vec::with_capacity(n);
             for (i, p) in job.items.into_iter().enumerate() {
-                let lat = now.duration_since(p.enqueued);
-                latencies.push(lat);
-                let _ = p.payload.reply.send(Reply {
+                let reply = Reply {
                     result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
                     latency: now.duration_since(t0),
                     batch: n,
-                });
-                outstanding.fetch_sub(1, Ordering::SeqCst);
+                    degraded: brownout,
+                };
+                if send_reply(ctx, p.id, &p.payload.reply, reply) {
+                    latencies.push(now.duration_since(p.enqueued));
+                }
             }
-            metrics.record_batch(si, n, &latencies, stolen);
+            if !latencies.is_empty() {
+                ctx.metrics.record_batch(si, latencies.len(), &latencies, stolen);
+                if brownout {
+                    ctx.metrics.record_degraded(latencies.len() as u64);
+                }
+            }
         }
         Err(e) => {
             let msg = e.to_string();
             eprintln!("shard {si} executor error: {msg}");
-            let now = Instant::now();
-            for p in job.items {
-                let _ = p.payload.reply.send(Reply {
-                    result: Err(msg.clone()),
-                    latency: now.duration_since(t0),
-                    batch: n,
-                });
-                outstanding.fetch_sub(1, Ordering::SeqCst);
+            ctx.metrics.record_error_batch(si);
+            if ctx.health.record_failure(si, ctx.metrics.error_ewma(si)) {
+                ctx.metrics.record_evicted();
+                drain_evicted_queue(ctx, si);
             }
-            metrics.record_error_batch(si);
+            if ctx.health.enabled() && job.attempt < res.max_requeues {
+                // lossless requeue: same seed (bit-identical re-execution
+                // on any shard), next attempt, first healthy sibling
+                ctx.metrics.record_requeued();
+                let target = ctx.health.next_healthy(si + 1).unwrap_or(si);
+                ctx.queues[target].push(Job {
+                    seed: job.seed,
+                    items: job.items,
+                    home: target,
+                    attempt: job.attempt + 1,
+                    probe: false,
+                });
+            } else {
+                let now = Instant::now();
+                for p in job.items {
+                    let reply = Reply {
+                        result: Err(msg.clone()),
+                        latency: now.duration_since(t0),
+                        batch: n,
+                        degraded: false,
+                    };
+                    send_reply(ctx, p.id, &p.payload.reply, reply);
+                }
+            }
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::fault::ShardFaults;
     use super::*;
     use crate::coordinator::server::{submit_all, ServeConfig, Server};
 
@@ -413,7 +750,29 @@ mod tests {
             queue_depth: depth,
             deadline: None,
             slo: Duration::from_secs(1),
+            steal: true,
+            resilience: ResilienceConfig::default(),
         }
+    }
+
+    #[test]
+    fn replica_config_validation_rejects_degenerate_configs() {
+        assert!(ReplicaConfig::default().validate().is_ok());
+        let mut c = cfg(4, 16);
+        c.replicas = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroReplicas));
+        let mut c = cfg(4, 16);
+        c.queue_depth = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroQueueDepth));
+        let mut c = cfg(4, 16);
+        c.batcher.target_batch = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroTargetBatch));
+        let mut c = cfg(4, 16);
+        c.deadline = Some(Duration::ZERO);
+        assert_eq!(c.validate(), Err(ConfigError::ZeroDeadline));
+        // a positive deadline is fine
+        c.deadline = Some(Duration::from_millis(1));
+        assert!(c.validate().is_ok());
     }
 
     /// Pre-queued requests produce identical replies from the single
@@ -488,6 +847,7 @@ mod tests {
             match rep.result {
                 Ok(logits) => {
                     assert_eq!(logits.len(), 10);
+                    assert!(!rep.degraded, "no brown-out configured");
                     ok += 1;
                 }
                 Err(e) => {
@@ -593,5 +953,242 @@ mod tests {
         }
         assert!(server.metrics.requests() == 0);
         assert!(server.metrics.to_json().get("shards").is_some());
+    }
+
+    /// Expected reply of request `r` under the deterministic `target=1`
+    /// schedule: request r rides batch r+1 (seed 5 + r + 1) alone.
+    fn seeded_want(r: usize) -> Vec<f32> {
+        let seed = 5 + 1 + r as f32;
+        (0..10).map(|i| seed * 1000.0 + 100.0 + i as f32).collect()
+    }
+
+    /// The headline self-healing invariant: with shard 0 configured to
+    /// crash on every batch, eviction + lossless requeue deliver **every**
+    /// request `Ok` — with logits bit-identical to the fault-free run
+    /// (requeued batches keep their seed, and the executor is
+    /// deterministic per (batch, seed)).
+    #[test]
+    fn crashing_shard_heals_and_stays_bit_identical() {
+        let plan = FaultPlan {
+            seed: 0,
+            shards: vec![
+                ShardFaults { crash_at_batch: Some(0), ..Default::default() },
+                ShardFaults::default(),
+            ],
+        };
+        let mut c = cfg(1, 1024);
+        c.steal = false;
+        c.resilience = ResilienceConfig {
+            enabled: true,
+            evict_consecutive: 1,
+            probe_interval: 0, // no probes: the shard never recovers
+            max_requeues: 2,
+            ..Default::default()
+        };
+        let server =
+            ReplicaServer::new(vec![SeededExec, SeededExec], c).with_fault_plan(plan);
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..10).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for (r, rx) in replies.into_iter().enumerate() {
+            let rep = rx.recv().expect("exactly one reply per request");
+            assert_eq!(
+                rep.result.expect("healed to Ok"),
+                seeded_want(r),
+                "request {r}: bit-identical to the fault-free run"
+            );
+            assert!(rx.try_recv().is_err(), "no second reply for request {r}");
+        }
+        assert_eq!(server.metrics.evicted(), 1, "the crashing shard was evicted");
+        assert!(server.metrics.requeued() >= 1, "failed work was requeued");
+        assert_eq!(server.metrics.requests(), 10);
+        let j = server.metrics.to_json();
+        let res = j.get("resilience").expect("resilience counters in the JSON");
+        assert_eq!(res.get("evicted").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    /// Eviction + probe-based reintegration converges: a shard that
+    /// crashes for its first two batches and then recovers is evicted,
+    /// probed, and reintegrated — while every request still gets its
+    /// bit-exact `Ok` reply.
+    #[test]
+    fn evicted_shard_is_probed_and_reintegrated_after_recovery() {
+        let plan = FaultPlan {
+            seed: 0,
+            shards: vec![
+                ShardFaults {
+                    crash_at_batch: Some(0),
+                    recover_at_batch: Some(2),
+                    ..Default::default()
+                },
+                ShardFaults::default(),
+            ],
+        };
+        let mut c = cfg(1, 1024);
+        c.steal = false;
+        c.resilience = ResilienceConfig {
+            enabled: true,
+            evict_consecutive: 1,
+            probe_interval: 2,
+            max_requeues: 3,
+            ..Default::default()
+        };
+        let server =
+            ReplicaServer::new(vec![SeededExec, SeededExec], c).with_fault_plan(plan);
+        let (tx, rx) = mpsc::channel();
+        // two waves: the first gets shard 0 evicted; the pause gives the
+        // workers time to do it; the second wave carries the probes that
+        // reintegrate the recovered shard
+        let client = std::thread::spawn(move || {
+            let mut replies = submit_all(&tx, (0..4).map(|_| vec![0.0f32; 4]));
+            std::thread::sleep(Duration::from_millis(60));
+            replies.extend(submit_all(&tx, (0..8).map(|_| vec![0.0f32; 4])));
+            drop(tx);
+            replies
+        });
+        server.run(rx);
+        let replies = client.join().unwrap();
+        for (r, rx) in replies.into_iter().enumerate() {
+            let rep = rx.recv().expect("exactly one reply per request");
+            assert_eq!(
+                rep.result.expect("self-healing keeps every request Ok"),
+                seeded_want(r),
+                "request {r}"
+            );
+            assert!(rx.try_recv().is_err(), "no second reply for request {r}");
+        }
+        assert_eq!(server.metrics.evicted(), 1);
+        assert_eq!(
+            server.metrics.reintegrated(),
+            1,
+            "the recovered shard must rejoin the rotation"
+        );
+        assert!(server.metrics.probes() >= 1, "reintegration came from a probe");
+        assert_eq!(server.metrics.requests(), 12);
+    }
+
+    /// Hedged dispatch: a latency-spiked shard's in-flight batch is
+    /// re-executed by its idle sibling with the same seed; the hedge
+    /// answers first, the late original is deduplicated — each request
+    /// gets exactly one (bit-correct) reply.
+    #[test]
+    fn straggler_batch_is_hedged_first_response_wins() {
+        let plan = FaultPlan {
+            seed: 0,
+            shards: vec![
+                ShardFaults {
+                    latency_spike: Some(Duration::from_millis(150)),
+                    latency_spike_prob: 1.0,
+                    ..Default::default()
+                },
+                ShardFaults::default(),
+            ],
+        };
+        let mut c = cfg(2, 1024);
+        c.steal = false;
+        c.resilience = ResilienceConfig {
+            enabled: true,
+            hedge: true,
+            hedge_after: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let server =
+            ReplicaServer::new(vec![SeededExec, SeededExec], c).with_fault_plan(plan);
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..2).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        let t0 = Instant::now();
+        server.run(rx);
+        let elapsed = t0.elapsed();
+        // batch 1 (seed 6, size 2): both members answered by the hedge,
+        // with the exact logits the original would have produced
+        for (i, rx) in replies.into_iter().enumerate() {
+            let rep = rx.recv().expect("exactly one reply");
+            let logits = rep.result.expect("hedge answered Ok");
+            assert_eq!(logits.len(), 10);
+            assert_eq!(logits[0], 6200.0 + 10.0 * i as f32, "seed 6, batch 2, member {i}");
+            assert!(rx.try_recv().is_err(), "dedup: no second reply");
+        }
+        assert_eq!(server.metrics.hedged(), 1, "the straggler was hedged");
+        assert_eq!(server.metrics.hedge_wins(), 1, "and the hedge answered first");
+        assert_eq!(server.metrics.requests(), 2);
+        // the run still waits for the spiked original to finish (scoped
+        // threads join), but replies went out at hedge speed
+        assert!(elapsed >= Duration::from_millis(10));
+    }
+
+    /// Degraded executor standing in for the short-sampling brown-out
+    /// view: recognizably different output.
+    struct DegradedExec;
+
+    impl Executor for DegradedExec {
+        fn execute(&self, _i: &[f32], batch: usize, _s: u32) -> crate::Result<Vec<f32>> {
+            Ok(vec![-1.0; batch * 10])
+        }
+        fn classes(&self) -> usize {
+            10
+        }
+        fn image_elems(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+    }
+
+    /// Brown-out: over the outstanding threshold, batches run on the
+    /// degraded executors and every reply is flagged `degraded` — load is
+    /// shed by cheaper sampling, not by dropping requests.
+    #[test]
+    fn brownout_serves_degraded_flagged_replies() {
+        let mut c = cfg(2, 1024);
+        c.resilience = ResilienceConfig {
+            enabled: true,
+            // threshold 0: any pre-queued burst puts the tier in brown-out
+            brownout_queue: Some(0),
+            ..Default::default()
+        };
+        let server = ReplicaServer::new(vec![SeededExec, SeededExec], c)
+            .with_degraded_shards(vec![DegradedExec, DegradedExec]);
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..4).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for rx in replies {
+            let rep = rx.recv().expect("reply delivered");
+            assert!(rep.degraded, "brown-out replies carry the DEGRADED flag");
+            assert_eq!(rep.result.unwrap(), vec![-1.0; 10], "degraded executor ran");
+        }
+        assert_eq!(server.metrics.degraded(), 4);
+        let j = server.metrics.to_json();
+        let res = j.get("resilience").unwrap();
+        assert_eq!(res.get("degraded").and_then(|v| v.as_usize()), Some(4));
+    }
+
+    /// A fault plan on a server with resilience *disabled* still fails
+    /// loudly (error replies, no requeue) — fault injection does not
+    /// depend on the healing machinery.
+    #[test]
+    fn fault_plan_without_resilience_fails_loudly() {
+        let plan = FaultPlan {
+            seed: 0,
+            shards: vec![
+                ShardFaults { crash_at_batch: Some(0), ..Default::default() },
+                ShardFaults { crash_at_batch: Some(0), ..Default::default() },
+            ],
+        };
+        let server =
+            ReplicaServer::new(vec![SeededExec, SeededExec], cfg(4, 1024)).with_fault_plan(plan);
+        let (tx, rx) = mpsc::channel();
+        let replies = submit_all(&tx, (0..8).map(|_| vec![0.0f32; 4]));
+        drop(tx);
+        server.run(rx);
+        for r in replies {
+            let rep = r.recv().expect("reply delivered");
+            assert!(rep.result.unwrap_err().contains("injected fault"));
+        }
+        assert_eq!(server.metrics.requeued(), 0, "no healing without resilience");
+        assert_eq!(server.metrics.evicted(), 0);
     }
 }

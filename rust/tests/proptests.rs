@@ -773,3 +773,108 @@ fn prop_pipeline_beat_max_of_stages() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Serving-tier reply conservation
+// ---------------------------------------------------------------------
+
+/// A trivially deterministic executor for serving-schedule properties:
+/// logits are a pure function of (first input element, seed, index).
+struct EchoExec {
+    classes: usize,
+    elems: usize,
+}
+
+impl stox_net::coordinator::server::Executor for EchoExec {
+    fn execute(&self, images: &[f32], batch: usize, seed: u32) -> stox_net::Result<Vec<f32>> {
+        Ok((0..batch * self.classes)
+            .map(|i| seed as f32 + images[(i / self.classes) * self.elems] + i as f32)
+            .collect())
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+#[test]
+fn prop_replica_tier_replies_exactly_once_fault_free() {
+    use std::sync::mpsc;
+    use stox_net::coordinator::server::submit_all;
+    use stox_net::serve::{ReplicaConfig, ReplicaServer, ResilienceConfig};
+
+    // Random fault-free schedules: replica count, batch size, request
+    // count, admission depth, stealing, and the self-healing switches all
+    // vary — yet every request must get exactly one reply, the
+    // ok/rejected partition must be total, and (when admission cannot
+    // shed) two runs of the same schedule must be bit-identical.
+    check("exactly one reply per request", 20, |g| {
+        let replicas = g.usize_in(1, 4);
+        let requests = g.usize_in(1, 32);
+        // a tight queue exercises rejection (timing-dependent, so the
+        // bit-identity comparison is only made with an open queue)
+        let tight = g.bool();
+        let queue_depth = if tight { g.usize_in(1, requests) } else { requests };
+        let cfg = ReplicaConfig {
+            replicas,
+            batcher: BatcherConfig {
+                target_batch: g.usize_in(1, 5),
+                max_wait: Duration::from_millis(50),
+            },
+            seed: g.usize_in(0, 10_000) as u32,
+            queue_depth,
+            deadline: None,
+            slo: Duration::from_secs(1),
+            steal: g.bool(),
+            resilience: ResilienceConfig {
+                enabled: g.bool(),
+                hedge: g.bool(),
+                ..Default::default()
+            },
+        };
+        let elems = 4usize;
+        let run = || -> Result<Vec<Result<Vec<f32>, String>>, String> {
+            let shards = (0..replicas).map(|_| EchoExec { classes: 3, elems }).collect();
+            let server = ReplicaServer::new(shards, cfg.clone());
+            let (tx, rx) = mpsc::channel();
+            let rxs = submit_all(&tx, (0..requests).map(|r| vec![r as f32 * 0.01; elems]));
+            drop(tx);
+            server.run(rx);
+            let mut out = Vec::new();
+            for rxr in rxs {
+                let rep = rxr.recv().map_err(|_| "reply channel dropped".to_string())?;
+                if rxr.try_recv().is_ok() {
+                    return Err("duplicate reply on one request channel".to_string());
+                }
+                out.push(rep.result);
+            }
+            Ok(out)
+        };
+        let a = run()?;
+        let ok = a.iter().filter(|r| r.is_ok()).count();
+        let rejected = a
+            .iter()
+            .filter(|r| r.as_ref().err().map(String::as_str) == Some(stox_net::serve::REJECTED))
+            .count();
+        if ok + rejected != requests {
+            return Err(format!(
+                "accounting hole: {ok} ok + {rejected} rejected != {requests} submitted"
+            ));
+        }
+        if !tight {
+            if rejected != 0 {
+                return Err(format!("open queue rejected {rejected} requests"));
+            }
+            let b = run()?;
+            if a != b {
+                return Err("same schedule, different replies".to_string());
+            }
+        }
+        Ok(())
+    });
+}

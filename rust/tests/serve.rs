@@ -88,6 +88,7 @@ fn replica_tier_bit_identical_to_single_server() {
             queue_depth: 1024,
             deadline: None,
             slo: Duration::from_secs(1),
+            ..Default::default()
         };
         let (logits, server) = run_replica_tier(&model, cfg, images.clone());
         assert_eq!(
@@ -137,6 +138,7 @@ fn loadgen_sweep_curve_and_artifact() {
         deadline: None,
         // generous SLO: the pin is that counters populate, not the value
         slo: Duration::from_secs(5),
+        ..Default::default()
     };
     let lg = LoadGenConfig {
         start_rps: 40.0,
