@@ -18,6 +18,7 @@ use stox_net::imc::{
     decompose_activations, im2col, ConvArena, MacBackend, PsConvert, PsConverter,
     PsConverterSpec, PsIntCache, StoxConfig, StoxMvm,
 };
+use stox_net::obs;
 use stox_net::stats::rng::CounterRng;
 use stox_net::util::bench::{self, BenchSuite};
 
@@ -328,6 +329,41 @@ fn main() {
     suite.quick("collect_ps/4w4a4bs", || {
         bench::black_box(mvm.collect_ps(&a, b));
     });
+
+    println!("\n== observability overhead (digit-plane hot path, B={b}, M={m}, N={n}) ==");
+    // the <2% hot-path bound EXPERIMENTS.md §Observability commits to:
+    // attaching hardware counters (a dozen relaxed atomic adds per
+    // stripe) and raising the span level must not move the kernel median
+    let plain = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    let obs_off = suite.quick("obs/4w4a4bs MTJ x1 [counters off, tracing off]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(plain.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    let reg = obs::CounterRegistry::new();
+    let mut counted = StoxMvm::program(&w, m, n, StoxConfig::default()).unwrap();
+    counted.attach_counters(&reg, "imc.bench.");
+    let obs_counters = suite.quick("obs/4w4a4bs MTJ x1 [counters on, tracing off]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(counted.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    obs::span::install(obs::TraceLevel::Request);
+    let obs_trace = suite.quick("obs/4w4a4bs MTJ x1 [counters on, tracing request]", || {
+        seed = seed.wrapping_add(1);
+        bench::black_box(counted.run_sequential(&a, b, mtj1.as_ref(), seed));
+    });
+    obs::span::set_level(obs::TraceLevel::Off);
+    let off_ns = suite.median_ns(obs_off);
+    let on_ns = suite.median_ns(obs_counters).max(suite.median_ns(obs_trace));
+    println!(
+        "-> observability overhead: {:+.2}% (bound +2%)",
+        100.0 * (on_ns / off_ns - 1.0)
+    );
+    assert!(
+        on_ns <= off_ns * 1.02,
+        "observability overhead {:.2}% exceeds the 2% hot-path bound \
+         (off {off_ns:.0} ns/op, on {on_ns:.0} ns/op)",
+        100.0 * (on_ns / off_ns - 1.0)
+    );
 
     suite.write_json().expect("bench artifact written");
 }

@@ -273,6 +273,101 @@ pub fn evaluate_network(
         .collect()
 }
 
+/// Hardware-counter action totals read back from the telemetry plane:
+/// the `imc.l*.<tag>.*` kernel counters of a
+/// [`crate::obs::CounterRegistry`] snapshot, summed across layer scopes.
+/// These are *measured* counts — what the functional kernel actually
+/// did — as opposed to the [`map_layer`] analytic predictions; the two
+/// agree exactly whenever the kernel performs the actions the mapper
+/// charges (the `sweep --measured` cross-check).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterTotals {
+    /// PS conversion events (`conversions`)
+    pub conversions: u64,
+    /// DAC row-drive actions (`dac_actions`)
+    pub dac_actions: u64,
+    /// crossbar cell read actions (`cell_actions`)
+    pub cell_actions: u64,
+    /// converted output elements written off-tile (`out_io`)
+    pub out_io: u64,
+    /// individual MTJ reads (`mtj_draws`; 0 for ADC-class converters)
+    pub mtj_draws: u64,
+}
+
+impl CounterTotals {
+    /// Sum the kernel counters of every `imc.` layer scope in a
+    /// name-sorted snapshot ([`crate::obs::CounterRegistry::snapshot`]).
+    /// Non-`imc.` counters (e.g. the host-dependent `simd.select.*`) are
+    /// ignored.
+    pub fn from_snapshot(snap: &[(String, u64)]) -> Self {
+        let mut t = Self::default();
+        for (name, v) in snap {
+            if !name.starts_with("imc.") {
+                continue;
+            }
+            match name.rsplit('.').next() {
+                Some("conversions") => t.conversions += v,
+                Some("dac_actions") => t.dac_actions += v,
+                Some("cell_actions") => t.cell_actions += v,
+                Some("out_io") => t.out_io += v,
+                Some("mtj_draws") => t.mtj_draws += v,
+                _ => {}
+            }
+        }
+        t
+    }
+}
+
+/// Energy priced from *measured* hardware counters through the same
+/// Table 2 cost rows as [`evaluate_design`] — the measured half of the
+/// EDP cross-check behind `stox-cli sweep --measured`.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredEnergy {
+    /// total per-inference energy (pJ) — the sum of the components below
+    pub energy_pj: f64,
+    pub e_dac_pj: f64,
+    pub e_cell_pj: f64,
+    pub e_ps_pj: f64,
+    pub e_sna_pj: f64,
+    pub e_io_pj: f64,
+}
+
+impl MeasuredEnergy {
+    /// Price counter totals per inference under `design`'s component
+    /// choices.  MTJ-class converters are charged per *measured read*
+    /// (`mtj_draws × E_MTJ`); ADC-class converters (which draw nothing)
+    /// per conversion event through [`ComponentCosts::ps_energy_pj`].
+    /// Assumes the sweep's uniform design point — one converter on every
+    /// layer — since the totals are summed across layer scopes.
+    pub fn from_counters(
+        costs: &ComponentCosts,
+        design: &DesignConfig,
+        totals: &CounterTotals,
+        inferences: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(inferences > 0, "measured energy needs >= 1 inference");
+        let per = 1.0 / inferences as f64;
+        let e_dac = totals.dac_actions as f64 * costs.dac_energy_pj * per;
+        let e_cell =
+            totals.cell_actions as f64 * costs.cell_energy_pj(design.bits_per_cell) * per;
+        let e_ps = if totals.mtj_draws > 0 {
+            totals.mtj_draws as f64 * costs.mtj_energy_pj * per
+        } else {
+            totals.conversions as f64 * costs.ps_energy_pj(design.ps) * per
+        };
+        let e_sna = totals.conversions as f64 * costs.sna_energy_pj * per;
+        let e_io = (totals.dac_actions + totals.out_io) as f64 * costs.io_energy_pj * per;
+        Ok(Self {
+            energy_pj: e_dac + e_cell + e_ps + e_sna + e_io,
+            e_dac_pj: e_dac,
+            e_cell_pj: e_cell,
+            e_ps_pj: e_ps,
+            e_sna_pj: e_sna,
+            e_io_pj: e_io,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -499,6 +594,78 @@ mod tests {
         let mix = mk("inhomo:base=1,extra=3");
         assert!(mix.energy_pj > lo.energy_pj, "inhomo above 1-sample");
         assert!(mix.energy_pj < hi.energy_pj, "inhomo below max-sample");
+    }
+
+    /// Feeding the mapper's own analytic action counts back through
+    /// [`MeasuredEnergy::from_counters`] must reproduce
+    /// [`evaluate_design`]'s energy bit-for-bit — the identity behind the
+    /// `sweep --measured` cross-check (any kernel/mapper divergence shows
+    /// up as a nonzero relative error there).
+    #[test]
+    fn counter_priced_energy_matches_analytic_on_mapper_counts() {
+        let layers = vec![LayerShape::conv("l0", 3, 16, 32, 8, true)];
+        for (body, first) in [
+            ("stox:alpha=4,samples=2", "stox:alpha=4,samples=2"),
+            ("quant:bits=8", "quant:bits=8"),
+            ("sa", "sa"),
+        ] {
+            let design = DesignConfig::from_specs(
+                StoxConfig::default(),
+                &body.parse().unwrap(),
+                &first.parse().unwrap(),
+            )
+            .unwrap();
+            let predicted = evaluate_design(&costs(), &design, &layers).energy_pj;
+            let mapped = map_layer(&layers[0], &design.stox, design.c_arr);
+            let draws = match design.ps {
+                PsProcessing::StochasticMtj { samples } => {
+                    mapped.conversions * samples as u64
+                }
+                _ => 0,
+            };
+            let totals = CounterTotals {
+                conversions: mapped.conversions,
+                dac_actions: mapped.dac_actions,
+                cell_actions: mapped.cell_actions,
+                out_io: mapped.io_actions - mapped.dac_actions,
+                mtj_draws: draws,
+            };
+            let measured =
+                MeasuredEnergy::from_counters(&costs(), &design, &totals, 1).unwrap();
+            assert!(
+                (measured.energy_pj - predicted).abs() <= 1e-9 * predicted,
+                "{body}: measured {} vs predicted {predicted}",
+                measured.energy_pj
+            );
+        }
+        assert!(
+            MeasuredEnergy::from_counters(
+                &costs(),
+                &DesignConfig::hpfa(),
+                &CounterTotals::default(),
+                0
+            )
+            .is_err(),
+            "zero inferences must fail loudly"
+        );
+    }
+
+    #[test]
+    fn counter_totals_sum_layer_scopes_and_skip_foreign_keys() {
+        let snap = vec![
+            ("imc.l00.4w4a4bs.conversions".to_string(), 10u64),
+            ("imc.l01.4w4a4bs.conversions".to_string(), 5),
+            ("imc.l00.4w4a4bs.dac_actions".to_string(), 7),
+            ("imc.l00.4w4a4bs.mtj_draws".to_string(), 20),
+            ("imc.l00.4w4a4bs.macs".to_string(), 999), // not an energy row
+            ("simd.select.scalar".to_string(), 1),     // host counter: ignored
+        ];
+        let t = CounterTotals::from_snapshot(&snap);
+        assert_eq!(t.conversions, 15);
+        assert_eq!(t.dac_actions, 7);
+        assert_eq!(t.mtj_draws, 20);
+        assert_eq!(t.cell_actions, 0);
+        assert_eq!(t.out_io, 0);
     }
 
     #[test]

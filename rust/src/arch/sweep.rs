@@ -27,9 +27,10 @@
 //! `stox-cli sweep`; `examples/efficiency_sweep.rs` and
 //! `rust/benches/sweep.rs` drive the same path.
 
-use super::components::ComponentCosts;
-use super::energy::{evaluate_design, DesignConfig};
+use super::components::{ComponentCosts, PsProcessing};
+use super::energy::{evaluate_design, CounterTotals, DesignConfig, MeasuredEnergy};
 use super::mapper::LayerShape;
+use crate::obs::CounterRegistry;
 use crate::imc::{
     default_registry, IdealAdcConv, PsConvert, PsConverterSpec, StoxConfig, StoxMvm,
 };
@@ -67,6 +68,86 @@ pub struct SweepPoint {
     pub xbars: usize,
     /// Whether the point sits on the non-dominated (accuracy, EDP) front.
     pub on_front: bool,
+}
+
+/// One cell of the measured-vs-analytical energy cross-check: the
+/// analytic [`evaluate_design`] prediction on the golden-workload layers
+/// next to the counter-priced energy of actually running them
+/// ([`GoldenWorkload::measure_energy`]).
+#[derive(Debug, Clone)]
+pub struct MeasuredCell {
+    pub tag: String,
+    pub spec: String,
+    /// analytic energy per inference on the golden-workload layers (pJ)
+    pub predicted_pj: f64,
+    /// counter-priced energy per inference from running them (pJ)
+    pub measured_pj: f64,
+    /// `|measured − predicted| / predicted`
+    pub rel_err: f64,
+    /// multi-/fractional-sample MTJ cost key — reported, but exempt from
+    /// the exact-converter cross-check bound
+    pub stochastic_cost: bool,
+}
+
+impl MeasuredCell {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tag", Json::Str(self.tag.clone())),
+            ("spec", Json::Str(self.spec.clone())),
+            ("predicted_pj", Json::Num(self.predicted_pj)),
+            ("measured_pj", Json::Num(self.measured_pj)),
+            ("rel_err", Json::Num(self.rel_err)),
+            ("stochastic_cost", Json::Bool(self.stochastic_cost)),
+        ])
+    }
+}
+
+/// Render the measured-vs-analytical cells as a markdown-style table
+/// (the `sweep --measured` CLI output).
+pub fn render_measured_table(cells: &[MeasuredCell]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "| {:<8} | {:<28} | {:>14} | {:>14} | {:>9} |\n",
+        "tag", "spec", "predicted pJ", "measured pJ", "rel err"
+    ));
+    s.push_str(&format!(
+        "|{:-<10}|{:-<30}|{:->16}|{:->16}|{:->11}|\n",
+        "", "", "", "", ""
+    ));
+    for c in cells {
+        s.push_str(&format!(
+            "| {:<8} | {:<28} | {:>14.3} | {:>14.3} | {:>8.4}% |\n",
+            c.tag,
+            c.spec,
+            c.predicted_pj,
+            c.measured_pj,
+            100.0 * c.rel_err,
+        ));
+    }
+    s
+}
+
+/// Run the measured-vs-analytical cross-check over a whole sweep grid:
+/// one [`GoldenWorkload`] per precision tag, one measured forward per
+/// `(tag, spec)` cell, sequentially (each cell re-attaches counters to
+/// the workload's crossbars).  Cells whose config falls outside the
+/// integer-kernel bound are skipped — they have no counters to measure.
+pub fn measure_grid(
+    grid: &[(StoxConfig, Vec<PsConverterSpec>)],
+    n_inputs: usize,
+    seed: u32,
+) -> crate::Result<Vec<MeasuredCell>> {
+    let costs = ComponentCosts::default();
+    let mut cells = Vec::new();
+    for (cfg, specs) in grid {
+        let mut gw = GoldenWorkload::new(*cfg, n_inputs, seed)?;
+        for spec in specs {
+            if let Some(cell) = gw.measure_energy(spec, &costs)? {
+                cells.push(cell);
+            }
+        }
+    }
+    Ok(cells)
 }
 
 /// A completed sweep: points sorted by ascending EDP (ties: accuracy
@@ -307,6 +388,68 @@ impl GoldenWorkload {
     /// Number of golden inputs.
     pub fn n_inputs(&self) -> usize {
         self.n_inputs
+    }
+
+    /// The synthetic classifier's two layers as the
+    /// [`mapper`](super::mapper) sees them: 1×1 "convolutions" with one
+    /// output position, so one golden input is exactly one inference.
+    pub fn layer_shapes() -> Vec<LayerShape> {
+        vec![
+            LayerShape::conv("golden_l0", 1, Self::FEATURES, Self::HIDDEN, 1, true),
+            LayerShape::conv("golden_l1", 1, Self::HIDDEN, Self::CLASSES, 1, true),
+        ]
+    }
+
+    /// Run the workload's forward under `spec` with hardware counters
+    /// attached, and price the measured action counts against the
+    /// analytic rollup on the same layer shapes — one cell of the
+    /// measured-vs-analytical EDP cross-check (`stox-cli sweep
+    /// --measured`).  Returns `None` when the crossbars hold the f32
+    /// reference layout (no integer kernel → no counters to measure).
+    pub fn measure_energy(
+        &mut self,
+        spec: &PsConverterSpec,
+        costs: &ComponentCosts,
+    ) -> crate::Result<Option<MeasuredCell>> {
+        let conv = spec.build(&self.cfg)?;
+        let reg = CounterRegistry::new();
+        let tag = self.cfg.tag();
+        self.mvm1.attach_counters(&reg, &format!("imc.l00.{tag}."));
+        self.mvm2.attach_counters(&reg, &format!("imc.l01.{tag}."));
+        let o1 = self.mvm1.run_sequential(&self.inputs, self.n_inputs, conv.as_ref(), self.seed);
+        let h1 = scale_clamp(&o1, self.gain);
+        let _ = self
+            .mvm2
+            .run_sequential(&h1, self.n_inputs, conv.as_ref(), self.seed ^ 0x9E37_79B9);
+        self.mvm1.detach_counters();
+        self.mvm2.detach_counters();
+        let totals = CounterTotals::from_snapshot(&reg.snapshot());
+        if totals.conversions == 0 {
+            return Ok(None);
+        }
+        let design = DesignConfig::from_specs(self.cfg, spec, spec)?;
+        let predicted =
+            evaluate_design(costs, &design, &Self::layer_shapes()).energy_pj;
+        let measured =
+            MeasuredEnergy::from_counters(costs, &design, &totals, self.n_inputs as u64)?
+                .energy_pj;
+        let rel_err = if predicted > 0.0 {
+            (measured - predicted).abs() / predicted
+        } else {
+            f64::INFINITY
+        };
+        let stochastic_cost = matches!(
+            design.ps,
+            PsProcessing::StochasticMtj { .. } | PsProcessing::StochasticMtjFrac { .. }
+        );
+        Ok(Some(MeasuredCell {
+            tag,
+            spec: spec.to_string(),
+            predicted_pj: predicted,
+            measured_pj: measured,
+            rel_err,
+            stochastic_cost,
+        }))
     }
 
     /// Task accuracy of `conv` against the golden labels.
@@ -728,6 +871,53 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r2.points.len(), r.points.len());
+    }
+
+    /// The EDP cross-check acceptance bound: on the golden workload the
+    /// counter-priced measured energy of every exact (non-stochastic-
+    /// cost) converter must sit within 1% of the analytic prediction —
+    /// in fact the action counts agree exactly, so the error is ~0.
+    #[test]
+    fn measured_energy_cross_checks_analytic_model() {
+        let cfg = StoxConfig::default();
+        let mut gw = GoldenWorkload::new(cfg, 8, 7).unwrap();
+        let costs = ComponentCosts::default();
+        for s in ["ideal", "quant:bits=8", "sparse:bits=4", "sa"] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let cell = gw
+                .measure_energy(&spec, &costs)
+                .unwrap()
+                .expect("default config runs the integer kernel");
+            assert!(!cell.stochastic_cost, "{s} is an exact-cost converter");
+            assert!(
+                cell.rel_err <= 0.01,
+                "{s}: rel err {} (predicted {} pJ, measured {} pJ)",
+                cell.rel_err,
+                cell.predicted_pj,
+                cell.measured_pj
+            );
+        }
+        // MTJ cells are flagged stochastic-cost (exempt from the strict
+        // bound) — but logical draw counting makes them land exactly too
+        for s in ["stox:alpha=4,samples=2", "inhomo:alpha=4,base=1,extra=3"] {
+            let spec: PsConverterSpec = s.parse().unwrap();
+            let cell = gw.measure_energy(&spec, &costs).unwrap().unwrap();
+            assert!(cell.stochastic_cost, "{s} carries an MTJ cost key");
+            assert!(
+                cell.rel_err <= 0.05,
+                "{s}: rel err {} (predicted {} pJ, measured {} pJ)",
+                cell.rel_err,
+                cell.predicted_pj,
+                cell.measured_pj
+            );
+        }
+        // the grid driver covers the same cells and renders
+        let grid = [(cfg, vec!["ideal".parse().unwrap(), "sa".parse().unwrap()])];
+        let cells = measure_grid(&grid, 4, 7).unwrap();
+        assert_eq!(cells.len(), 2);
+        let table = render_measured_table(&cells);
+        assert!(table.contains("rel err") && table.contains("ideal"));
+        assert!(cells[0].to_json().to_string().contains("predicted_pj"));
     }
 
     #[test]

@@ -2,14 +2,17 @@
 //! occupancy, plus the *simulated hardware* counters charged by the tile
 //! scheduler (energy pJ / latency ns per inference on the modeled IMC).
 
-use crate::stats::Histogram;
+use crate::stats::{Histogram, LatencyHistogram};
 use std::time::{Duration, Instant};
 
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    /// wall-clock end-to-end request latency (µs)
-    latency_us: Histogram,
+    /// wall-clock end-to-end request latency (µs) — shares the
+    /// [`LatencyHistogram`] implementation with the replica tier's
+    /// `ShardStats`, on the legacy f32 recording path so the report is
+    /// byte-identical with the pre-dedupe hand-rolled histogram
+    latency_us: LatencyHistogram,
     /// batch sizes at execution
     batch_occupancy: Histogram,
     pub requests: u64,
@@ -33,7 +36,7 @@ impl Metrics {
             started: Instant::now(),
             // up to 60 s at 5 ms resolution: interpret-mode pallas backends
             // run hundreds of ms per batch, and queue waits accumulate
-            latency_us: Histogram::new(0.0, 60_000_000.0, 12_000),
+            latency_us: LatencyHistogram::new(60_000_000.0, 12_000),
             batch_occupancy: Histogram::new(0.0, 64.0, 64),
             requests: 0,
             batches: 0,
@@ -48,7 +51,7 @@ impl Metrics {
         self.requests += latencies.len() as u64;
         self.batch_occupancy.add(batch as f32);
         for l in latencies {
-            self.latency_us.add(l.as_secs_f32() * 1e6);
+            self.latency_us.record_us_f32(l.as_secs_f32() * 1e6);
         }
     }
 
@@ -67,7 +70,7 @@ impl Metrics {
     }
 
     pub fn latency_percentile_us(&self, p: f64) -> f32 {
-        self.latency_us.percentile(p)
+        self.latency_us.percentile_us(p)
     }
 
     pub fn mean_batch(&self) -> f64 {

@@ -25,6 +25,7 @@ use crate::coordinator::BatcherConfig;
 use crate::imc::{Nonideality, NonidealCrossbar, PsConvert, PsConverterSpec, StoxConfig, StoxMvm};
 use crate::model::weights::TestSet;
 use crate::model::{zoo, Manifest, NativeModel, WeightStore};
+use crate::obs::CounterRegistry;
 use crate::serve::{FaultPlan, ReplicaConfig, ReplicaServer, ResilienceConfig, ShardFaults};
 use crate::stats::rng::CounterRng;
 use crate::train::{export_checkpoint, TrainConfig, Trainer};
@@ -126,6 +127,19 @@ fn stage_infer(cfg: &Json) -> crate::Result<Json> {
         converter = Json::Str(spec.to_string());
         model = model.with_converter_spec(&spec)?;
     }
+    // `counters: true` attaches a fresh hardware-counter registry while
+    // the crossbars are still exclusively owned; the snapshot emitted at
+    // the end covers every run this stage performs and is exactly
+    // reproducible on these paths, so scenarios pin it with `exact`
+    // goldens (the memo hit/miss determinism contract of
+    // `PsIntCache::take_stats`)
+    let registry = if flag(cfg, "counters", false) {
+        let reg = CounterRegistry::new();
+        model.attach_counters(&reg)?;
+        Some(reg)
+    } else {
+        None
+    };
     // `pipeline: false` forces the sequential whole-batch forward; the
     // default exercises the layer-pipelined path wherever it is eligible
     model.set_pipeline(flag(cfg, "pipeline", true));
@@ -178,6 +192,9 @@ fn stage_infer(cfg: &Json) -> crate::Result<Json> {
         ("margins", f32s_to_json(&margins)),
         ("min_margin", Json::Num(f64::from(min_margin))),
     ];
+    if let Some(reg) = &registry {
+        out.push(("counters", reg.to_json()));
+    }
 
     // trained-vs-random ordering: score a reference fixture with its own
     // manifest config on the same images/seed and report the gap

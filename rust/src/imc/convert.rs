@@ -292,6 +292,15 @@ pub struct PsIntCache {
     offset: i32,
     /// scratch for the default materialize-and-delegate path
     psn: Vec<f32>,
+    /// memo lookups answered from the table since the last
+    /// [`PsIntCache::take_stats`]
+    hits: u64,
+    /// memo lookups that computed their payload (including lookups with
+    /// memoization disabled) since the last [`PsIntCache::take_stats`]
+    misses: u64,
+    /// stochastic ±1 MTJ reads drawn through this cache since the last
+    /// [`PsIntCache::take_stats`]
+    draws: u64,
 }
 
 impl PsIntCache {
@@ -317,17 +326,40 @@ impl PsIntCache {
     #[inline]
     fn memo_at(&mut self, v: i32, f: impl FnOnce() -> u32) -> u32 {
         if self.memo.is_empty() {
+            self.misses += 1;
             return f();
         }
         let idx = (v + self.offset) as usize;
         let t = self.memo[idx];
         if t != u32::MAX {
+            self.hits += 1;
             t
         } else {
+            self.misses += 1;
             let t = f();
             self.memo[idx] = t;
             t
         }
+    }
+
+    /// Drain the telemetry tallies accumulated since the last call:
+    /// `(memo hits, memo misses, MTJ draws)`.  The kernel flushes these
+    /// into its [`crate::obs`] counters once per stripe, so the cache's
+    /// hot-path cost stays three plain (non-atomic) increments.
+    ///
+    /// Determinism caveat: on the parallel kernel paths that share one
+    /// cache per *worker* (`StoxMvm::run`'s ksplit/batch splits), the
+    /// hit/miss split depends on the dynamic task→worker assignment; the
+    /// per-image pipelined and sequential paths — everything the scenario
+    /// goldens measure — build a fresh cache per call and are exactly
+    /// reproducible.  `draws` is workload-linear and deterministic on
+    /// every path.
+    pub fn take_stats(&mut self) -> (u64, u64, u64) {
+        let out = (self.hits, self.misses, self.draws);
+        self.hits = 0;
+        self.misses = 0;
+        self.draws = 0;
+        out
     }
 
     /// Materialize the normalized PS (`ps_int[c]·scale`) for the default
@@ -422,6 +454,7 @@ fn stochastic_slice_int(
     cache: &mut PsIntCache,
 ) {
     debug_assert!(counter_block >= n_samples);
+    cache.draws += ps_int.len() as u64 * n_samples as u64;
     let mut c0 = counter_base;
     for (o, &pi) in out.iter_mut().zip(ps_int) {
         let thr = cache.memo_at(pi, || {
@@ -1568,6 +1601,24 @@ mod tests {
                 assert_eq!(g.to_bits(), w.to_bits(), "{s} idx {idx}: {g} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn cache_stats_count_hits_misses_and_draws() {
+        let c = StochasticMtjConv { alpha: 4.0, n_samples: 3 };
+        let r = rng();
+        let mut cache = PsIntCache::new();
+        cache.reset(64);
+        let ps_int = [5i32, 5, -3, 5];
+        let mut out = [0.0f32; 4];
+        c.convert_slice_int_at(0, 0, &ps_int, 1.0 / 64.0, &mut out, 0, 1, &r, &mut cache);
+        // levels {5, -3}: two misses, two repeat-5 hits; 4 elements × 3 reads
+        assert_eq!(cache.take_stats(), (2, 2, 12));
+        assert_eq!(cache.take_stats(), (0, 0, 0), "take_stats drains");
+        // memo disabled: every lookup computes (a miss), draws unchanged
+        let mut nocache = PsIntCache::new();
+        c.convert_slice_int_at(0, 0, &ps_int, 1.0 / 64.0, &mut out, 0, 1, &r, &mut nocache);
+        assert_eq!(nocache.take_stats(), (0, 4, 12));
     }
 
     #[test]

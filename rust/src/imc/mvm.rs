@@ -32,6 +32,7 @@
 use super::convert::{PsConvert, PsIntCache};
 use super::quant::{self, StoxConfig};
 use super::simd::{self, MacBackend};
+use crate::obs::{span, Counter, CounterRegistry, TraceLevel};
 use crate::stats::rng::CounterRng;
 
 /// Programmed weight-slice digit planes, flattened `[k][j][r][c]`
@@ -58,6 +59,44 @@ pub struct StoxMvm {
     /// `i16` accumulation tier active ([`StoxConfig::int16_kernel_ok`] at
     /// programming time) — double lanes, bit-identical results.
     i16_tier: bool,
+    /// Deterministic hardware counters ([`StoxMvm::attach_counters`]);
+    /// `None` (the default) keeps the kernel telemetry-free.
+    counters: Option<Box<KernelCounters>>,
+}
+
+/// Deterministic hardware counters of one programmed crossbar: one
+/// [`Counter`] per architectural event class, flushed once per (batch
+/// row, subarray) stripe at the end of `run_stripe_int` so the MAC and
+/// conversion hot loops stay free of atomics.  Every tally is a linear
+/// function of the workload and the programmed digits, so two same-seed
+/// runs produce identical totals (the [`crate::obs`] determinism
+/// contract).
+struct KernelCounters {
+    /// digit-domain multiply-accumulates executed (zero-skips excluded)
+    macs: Counter,
+    /// row×slice MAC iterations skipped because the activation digit is 0
+    /// (every MAC backend shares the `x == 0 → continue` semantics)
+    zero_digit_skips: Counter,
+    /// activation DAC drives: stripe rows × streams
+    dac_actions: Counter,
+    /// bit-cell accesses: stripe rows × streams × 2 cells × slices
+    cell_actions: Counter,
+    /// PS conversions: column slices × columns per stripe
+    conversions: Counter,
+    /// output I/O transfers: streams × columns once per batch row
+    out_io: Counter,
+    /// batched converter dispatches ([`PsConvert::convert_batch`] calls)
+    convert_batch_calls: Counter,
+    /// (stream, slice) groups digitized across those dispatches
+    convert_batch_groups: Counter,
+    /// stripe rows accumulated on the `i16` tier
+    i16_rows: Counter,
+    /// stochastic MTJ ±1 reads ([`PsIntCache`] draw tally)
+    mtj_draws: Counter,
+    /// [`PsIntCache`] memo lookups answered from the table
+    memo_hits: Counter,
+    /// [`PsIntCache`] memo lookups that computed their payload
+    memo_misses: Counter,
 }
 
 /// Per-worker scratch of the integer kernel: activation digit stripe,
@@ -168,7 +207,45 @@ impl StoxMvm {
         } else {
             (MacBackend::Scalar, false)
         };
-        Ok(Self { cfg, m, n, n_arrs, planes, backend, i16_tier })
+        Ok(Self { cfg, m, n, n_arrs, planes, backend, i16_tier, counters: None })
+    }
+
+    /// Attach deterministic hardware counters under `scope` (e.g.
+    /// `"imc.l00.4w4a4bs."`) in `reg`: every subsequent integer-kernel
+    /// run tallies its architectural events — MACs, zero-digit row skips,
+    /// DAC/cell actions, PS conversions, output I/O, converter dispatch
+    /// and memo statistics — into `{scope}{event}` counters.  The f32
+    /// reference kernel is not instrumented (it models no architectural
+    /// events the integer kernel doesn't), and a crossbar without an
+    /// attachment pays one untaken branch per stripe.
+    ///
+    /// Determinism: every tally except the memo hit/miss split is a
+    /// linear per-stripe sum and byte-reproducible on every execution
+    /// path; the hit/miss split is additionally reproducible on the
+    /// sequential and per-image pipelined paths (see
+    /// [`PsIntCache::take_stats`]), which is what `stox-cli infer` and
+    /// the scenario goldens measure.
+    pub fn attach_counters(&mut self, reg: &CounterRegistry, scope: &str) {
+        let c = |name: &str| reg.counter(&format!("{scope}{name}"));
+        self.counters = Some(Box::new(KernelCounters {
+            macs: c("macs"),
+            zero_digit_skips: c("zero_digit_skips"),
+            dac_actions: c("dac_actions"),
+            cell_actions: c("cell_actions"),
+            conversions: c("conversions"),
+            out_io: c("out_io"),
+            convert_batch_calls: c("convert_batch_calls"),
+            convert_batch_groups: c("convert_batch_groups"),
+            i16_rows: c("i16_rows"),
+            mtj_draws: c("mtj_draws"),
+            memo_hits: c("memo_hits"),
+            memo_misses: c("memo_misses"),
+        }));
+    }
+
+    /// Detach the counters attached by [`StoxMvm::attach_counters`].
+    pub fn detach_counters(&mut self) {
+        self.counters = None;
     }
 
     pub fn n_arrs(&self) -> usize {
@@ -481,6 +558,7 @@ impl StoxMvm {
         scratch: &mut IntScratch,
         mut ps_out: Option<&mut [f32]>,
     ) {
+        let _sp = span::span(TraceLevel::Kernel, "stripe", "kernel");
         let cfg = &self.cfg;
         let (i_n, j_n) = (cfg.n_streams(), cfg.n_slices());
         let n = self.n;
@@ -528,6 +606,36 @@ impl StoxMvm {
                     *o *= scale;
                 }
             }
+        }
+        // telemetry flush — one pass per stripe, atomics only when attached
+        if let Some(ctr) = &self.counters {
+            // zero activation digits over the stripe: each one skips a row
+            // of every slice's MAC (the shared `x == 0 → continue`)
+            let mut zero_rows = 0u64;
+            for &x in xd[..rows * i_n].iter() {
+                if x == 0 {
+                    zero_rows += 1;
+                }
+            }
+            let (rows_u, i_u, j_u, n_u) = (rows as u64, i_n as u64, j_n as u64, n as u64);
+            ctr.macs.add((rows_u * i_u - zero_rows) * j_u * n_u);
+            ctr.zero_digit_skips.add(zero_rows * j_u);
+            ctr.dac_actions.add(rows_u * i_u);
+            ctr.cell_actions.add(rows_u * i_u * 2 * j_u);
+            ctr.conversions.add(i_u * j_u * n_u);
+            if k == 0 {
+                // output transfer is per batch row, not per subarray
+                ctr.out_io.add(i_u * n_u);
+            }
+            ctr.convert_batch_calls.incr();
+            ctr.convert_batch_groups.add(coords.len() as u64);
+            if self.i16_tier {
+                ctr.i16_rows.add(rows_u);
+            }
+            let (hits, misses, draws) = cache.take_stats();
+            ctr.memo_hits.add(hits);
+            ctr.memo_misses.add(misses);
+            ctr.mtj_draws.add(draws);
         }
     }
 
@@ -1361,6 +1469,64 @@ mod tests {
         };
         let f = StoxMvm::program(&w, 96, 4, wide).unwrap();
         assert!(!f.is_integer_kernel());
+    }
+
+    /// Attached hardware counters are byte-reproducible across same-seed
+    /// runs and satisfy the analytic identities the EDP cross-check
+    /// relies on (`arch/energy.rs::EnergyModel::from_counters`).
+    #[test]
+    fn attached_counters_are_deterministic_and_analytic() {
+        let (b, m, n) = (2usize, 96usize, 5usize);
+        let a = rand_vec(b * m, 21);
+        let w = rand_vec(m * n, 22);
+        let cfg = StoxConfig::default();
+        let conv = PsConverter::StochasticMtj { alpha: 4.0, n_samples: 2 };
+        let snap = |seed: u32| {
+            let reg = CounterRegistry::new();
+            let mut mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+            mvm.attach_counters(&reg, "imc.l00.4w4a4bs.");
+            let _ = mvm.run_sequential(&a, b, &conv, seed);
+            reg.to_json().to_string()
+        };
+        assert_eq!(snap(7), snap(7), "same-seed snapshots are byte-identical");
+        // the tallies count events, not outcomes: they are invariant in
+        // the RNG seed too (only the drawn values differ across seeds)
+        assert_eq!(snap(7), snap(8), "event counts are seed-invariant");
+
+        let reg = CounterRegistry::new();
+        let mut mvm = StoxMvm::program(&w, m, n, cfg).unwrap();
+        mvm.attach_counters(&reg, "");
+        let _ = mvm.run_sequential(&a, b, &conv, 7);
+        let (bu, mu, nu) = (b as u64, m as u64, n as u64);
+        let ku = cfg.n_arrs(m) as u64;
+        let (iu, ju) = (cfg.n_streams() as u64, cfg.n_slices() as u64);
+        assert_eq!(reg.get("conversions"), bu * ku * iu * ju * nu);
+        assert_eq!(reg.get("dac_actions"), bu * iu * mu);
+        assert_eq!(reg.get("cell_actions"), bu * iu * mu * 2 * ju);
+        assert_eq!(reg.get("out_io"), bu * iu * nu);
+        assert_eq!(reg.get("convert_batch_calls"), bu * ku);
+        assert_eq!(reg.get("convert_batch_groups"), bu * ku * iu * ju);
+        assert_eq!(reg.get("mtj_draws"), reg.get("conversions") * 2);
+        assert_eq!(
+            reg.get("memo_hits") + reg.get("memo_misses"),
+            reg.get("conversions"),
+            "one memo lookup per converted element"
+        );
+        assert_eq!(
+            reg.get("macs") + reg.get("zero_digit_skips") * nu,
+            bu * iu * mu * ju * nu,
+            "executed MACs + skipped rows × columns cover the dense count"
+        );
+        if mvm.i16_tier() {
+            assert_eq!(reg.get("i16_rows"), bu * mu);
+        } else {
+            assert_eq!(reg.get("i16_rows"), 0);
+        }
+        // detaching stops the tallies
+        mvm.detach_counters();
+        let before = reg.get("macs");
+        let _ = mvm.run_sequential(&a, b, &conv, 7);
+        assert_eq!(reg.get("macs"), before);
     }
 
     /// The tentpole contract: integer digit-plane kernel == retained f32

@@ -70,7 +70,18 @@ impl MacBackend {
     /// The backend crossbar programming selects: the `STOX_SIMD` override
     /// when set (panics on unknown values or unavailable backends — see
     /// [`parse_stox_simd`]), else the widest available kernel.
+    ///
+    /// Each selection bumps the process-global `simd.select.<label>`
+    /// counter ([`crate::obs::global`]).  Backend choice is
+    /// host-dependent, so this counter lives only in the global registry
+    /// — never in the model-local registries the scenario goldens pin.
     pub fn detect() -> MacBackend {
+        let b = Self::detect_uncounted();
+        crate::obs::global().counter(&format!("simd.select.{}", b.label())).incr();
+        b
+    }
+
+    fn detect_uncounted() -> MacBackend {
         if let Ok(v) = std::env::var("STOX_SIMD") {
             if let Some(b) = parse_stox_simd(&v).unwrap() {
                 assert!(

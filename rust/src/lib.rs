@@ -27,6 +27,10 @@
 //!   programmed crossbars (`Arc` seam), admission control, continuous
 //!   batching with work stealing, SLO metrics, and the Poisson load
 //!   generator behind `BENCH_serving.json`.
+//! * [`obs`] — unified telemetry plane: deterministic hardware counters
+//!   (lock-free registries snapshotted as byte-stable JSON) and
+//!   request-path spans with Chrome-trace export, gated by the default
+//!   `obs` cargo feature and the `STOX_TRACE` level contract.
 //! * [`stats`] — RNG, histograms, percentile sketches, Monte-Carlo driver.
 //! * [`harness`] — declarative scenario harness (`stox-cli test`): YAML
 //!   scenarios drive the in-process infer/sweep/train/serve entry points
@@ -44,6 +48,7 @@ pub mod device;
 pub mod harness;
 pub mod imc;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod stats;

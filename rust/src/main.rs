@@ -22,6 +22,10 @@
 //! * `fig9a`/`fig9b` — hardware-efficiency rollups;
 //! * `accuracy`    — native crossbar-model accuracy on the test set
 //!                   (`--converter` runs any registered PS-converter spec);
+//! * `infer`       — deterministic counter-snapshot inference: native model
+//!                   over the test set with hardware counters attached;
+//!                   writes the name-sorted snapshot JSON (byte-identical
+//!                   across same-seed runs — the CI `obs-smoke` contract);
 //! * `train`       — PS-quantization-aware training (§3.3): hardware-exact
 //!                   stochastic forward, tanh-surrogate backward, SGD;
 //!                   exports a manifest-format checkpoint that reloads
@@ -52,6 +56,7 @@ use stox_net::device::MtjConverter;
 use stox_net::imc::{PsConvert, PsConverterSpec, StoxConfig};
 use stox_net::model::weights::TestSet;
 use stox_net::model::{zoo, Manifest, NativeModel, WeightStore};
+use stox_net::obs::{span, CounterRegistry, TraceLevel};
 use stox_net::runtime::Engine;
 use stox_net::serve::{run_sweep, LoadGenConfig, ReplicaConfig, ReplicaServer};
 use stox_net::stats::Histogram;
@@ -65,8 +70,12 @@ commands:
                [--converter SPEC]   (SPEC: name[:k=v,..], e.g. stox:samples=4,
                                      sparse:bits=4, inhomo:base=1,extra=3)
                [--replicas N] [--queue-depth N] [--deadline-ms MS] [--slo-ms MS]
+               [--trace PATH]
                (--replicas > 1 runs the sharded replica tier — requires
-                --native; prints the per-shard/aggregate SLO metrics JSON)
+                --native; prints the per-shard/aggregate SLO metrics JSON;
+                --trace records request-path spans and writes them to PATH
+                as Chrome trace JSON — level Request by default, STOX_TRACE
+                overrides with off|request|layer|kernel, fail-loud)
   loadgen      [--replicas N] [--start-rps R] [--growth G] [--steps N]
                [--requests-per-rate N] [--sat-frac F] [--target-batch B]
                [--max-wait-ms MS] [--queue-depth N] [--deadline-ms MS]
@@ -81,6 +90,12 @@ commands:
   fig9a
   fig9b
   accuracy     [--images N] [--batch B] [--converter SPEC]
+  infer        [--images N] [--batch B] [--seed S] [--converter SPEC]
+               [--precision TAG] [--out PATH]
+               (native model with deterministic hardware counters attached;
+                writes the name-sorted counter snapshot JSON to PATH —
+                byte-identical across same-seed runs, which the CI
+                obs-smoke job asserts with cmp)
   train        [--out DIR] [--steps N] [--batch B] [--lr L] [--momentum M]
                [--weight-decay W] [--seed S] [--const-lr] [--log-every N]
                [--precision TAG] [--converter SPEC]
@@ -92,7 +107,11 @@ commands:
   sweep        [--images N] [--seed S] [--samples GRID] [--bits GRID]
                [--precision TAGS] [--specs A;B;..]
                [--workload resnet20|resnet18|resnet50]
-               [--threads N] [--out DIR] [--model]
+               [--threads N] [--out DIR] [--model] [--measured]
+               (--measured re-runs every golden-workload cell with hardware
+                counters attached and prints predicted-vs-measured energy
+                per cell with a relative-error column; exact — non-
+                stochastic-cost — converters must agree within 1%)
                (GRID: comma/range list, e.g. 1,2,4..8; TAGS: comma list of
                 XwYa[Zbs] precision tags, e.g. 4w4a4bs,8w8a4bs — the full
                 Fig. 9a design matrix of precision x converter; --model
@@ -153,6 +172,7 @@ fn main() -> anyhow::Result<()> {
             args.usize("batch", 8),
             args.get("converter").map(|s| s.to_string()),
         ),
+        Some("infer") => infer_cmd(&artifacts, &args),
         Some("train") => train_cmd(&artifacts, &args),
         Some("sweep") => sweep(&artifacts, &args),
         Some("test") => test_cmd(&args),
@@ -176,6 +196,13 @@ fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     let native = args.flag("native");
     let converter = args.get("converter").map(|s| s.to_string());
     let replicas = args.usize("replicas", 1);
+    // --trace PATH turns the span collector on and names the export file;
+    // STOX_TRACE picks the level (fail-loud on unknown values), defaulting
+    // to Request — one event per admission/batch/execute/steal/hedge edge
+    let trace_out = args.get("trace").map(|s| s.to_string());
+    if trace_out.is_some() {
+        span::install(span::level_from_env(TraceLevel::Request)?);
+    }
     let manifest = Manifest::load(artifacts)?;
     let test = TestSet::load(&manifest)?;
     let spec = &manifest.spec;
@@ -279,6 +306,9 @@ fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
             shed
         );
         println!("{}", rserver.metrics.to_json().to_string());
+        if let Some(path) = &trace_out {
+            export_trace(path)?;
+        }
         return Ok(());
     }
 
@@ -339,6 +369,17 @@ fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
         100.0 * correct as f64 / n as f64
     );
     println!("{}", server.metrics.lock().unwrap().report());
+    if let Some(path) = &trace_out {
+        export_trace(path)?;
+    }
+    Ok(())
+}
+
+/// Drain the installed span collector and write the Chrome trace JSON.
+fn export_trace(path: &str) -> anyhow::Result<()> {
+    let events = span::drain();
+    span::write_chrome_trace(path, &events)?;
+    println!("wrote {} trace events to {path}", events.len());
     Ok(())
 }
 
@@ -654,6 +695,65 @@ fn accuracy(
     Ok(())
 }
 
+/// Deterministic counter-snapshot inference: load the native model (at
+/// the trained config or an explicit `--precision` tag), attach a fresh
+/// [`CounterRegistry`] while the crossbars are still exclusively owned,
+/// run the first `--images` test images at a fixed seed, and write the
+/// name-sorted counter snapshot JSON to `--out`.  Everything in the file
+/// is workload-determined — no timing, no host identity — so two
+/// same-seed runs produce byte-identical files; the CI `obs-smoke` job
+/// asserts exactly that with `cmp`.
+fn infer_cmd(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let images = args.usize("images", 32);
+    let batch = args.usize("batch", 8);
+    let seed = args.u32("seed", 0);
+    let out = args.string("out", "counters.json");
+    let manifest = Manifest::load(artifacts)?;
+    let store = WeightStore::load(&manifest)?;
+    let test = TestSet::load(&manifest)?;
+    let cfg = match args.get("precision") {
+        Some(tag) => manifest.spec.precision_config(tag)?,
+        None => manifest.spec.stox_config(),
+    };
+    let mut model = NativeModel::load_with_config(&manifest, &store, cfg)?;
+    if let Some(c) = args.get("converter") {
+        let spec = PsConverterSpec::from_mode(c, cfg.alpha, cfg.n_samples)?;
+        println!("converter override: {spec}");
+        model = model.with_converter_spec(&spec)?;
+    }
+    // counters attach while this model still owns its crossbars
+    // exclusively — after any converter override, before any view/share
+    // would clone the Arcs
+    let reg = CounterRegistry::new();
+    model.attach_counters(&reg)?;
+    let n = images.min(test.n);
+    let acc = model.accuracy(&test.images, &test.labels, n, batch, seed);
+    let snap = reg.snapshot();
+    println!(
+        "accuracy: {:.2}% over {n} images (seed {seed}); {} counters recorded",
+        acc * 100.0,
+        snap.len()
+    );
+    let total_macs: u64 = snap
+        .iter()
+        .filter(|(name, _)| name.ends_with(".macs"))
+        .map(|(_, v)| v)
+        .sum();
+    println!("total digit-plane MACs: {total_macs}");
+    let body = Json::obj(vec![
+        ("images", Json::Num(n as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("accuracy", Json::Num(acc)),
+        ("counters", reg.to_json()),
+    ]);
+    let mut s = body.to_string();
+    s.push('\n');
+    std::fs::write(&out, s)?;
+    println!("wrote counter snapshot to {out}");
+    Ok(())
+}
+
 /// PS-quantization-aware training (§3.3) over the artifacts' committed
 /// test-set file: hardware-exact stochastic forward with per-slice PS
 /// capture, tanh-surrogate backward, SGD with momentum under
@@ -783,7 +883,8 @@ fn test_cmd(args: &Args) -> anyhow::Result<()> {
 /// shares the programmed crossbars (`share_with_converter_spec`).
 fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     use stox_net::arch::sweep::{
-        default_grid, parse_grid, parse_precision_tags, run_matrix_sweep, GoldenWorkload,
+        default_grid, measure_grid, parse_grid, parse_precision_tags,
+        render_measured_table, run_matrix_sweep, GoldenWorkload,
     };
 
     let images = args.usize("images", 64);
@@ -869,6 +970,33 @@ fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     };
 
     println!("{}", result.render_table());
+
+    // --measured: re-run every cell on the golden workload with hardware
+    // counters attached and cross-check the counter-priced energy against
+    // the analytical model cell by cell (EXPERIMENTS.md §Observability)
+    let measured = if args.flag("measured") {
+        let cells = measure_grid(&grid, images, seed)?;
+        println!("{}", render_measured_table(&cells));
+        let worst_exact = cells
+            .iter()
+            .filter(|c| !c.stochastic_cost)
+            .map(|c| c.rel_err)
+            .fold(0.0f64, f64::max);
+        println!(
+            "worst exact-converter relative error: {:.4}% (bound 1%)",
+            100.0 * worst_exact
+        );
+        anyhow::ensure!(
+            worst_exact <= 0.01,
+            "measured energy disagrees with the analytical model by {:.3}% \
+             on an exact converter (bound 1%)",
+            100.0 * worst_exact
+        );
+        Some(cells)
+    } else {
+        None
+    };
+
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir)?;
@@ -877,6 +1005,15 @@ fn sweep(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
         let csv_path = dir.join("sweep.csv");
         std::fs::write(&csv_path, result.to_csv())?;
         println!("wrote {} and {}", json_path.display(), csv_path.display());
+        if let Some(cells) = &measured {
+            let path = dir.join("measured.json");
+            let j = Json::obj(vec![(
+                "cells",
+                Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+            )]);
+            std::fs::write(&path, j.to_string())?;
+            println!("wrote {}", path.display());
+        }
     }
     Ok(())
 }

@@ -24,6 +24,7 @@ use super::weights::{Manifest, WeightStore};
 use crate::imc::{
     decompose_activations, im2col, ConvArena, PsConvert, PsConverterSpec, StoxConfig, StoxMvm,
 };
+use crate::obs::{span, CounterRegistry, TraceLevel};
 use crate::stats::rng::mix32;
 use std::sync::Arc;
 
@@ -292,6 +293,9 @@ impl NativeModel {
         arena: &mut ConvArena,
         img_base: Option<usize>,
     ) -> (Vec<f32>, usize, usize) {
+        let _sp = span::span_with(TraceLevel::Layer, "layer", || {
+            format!("conv.l{:02}", op.layer_idx)
+        });
         // Fused digit-domain path: each input pixel is quantized and
         // decomposed exactly once *before* patch extraction, the stripe
         // gather reads the shared digit planes, and no `patches`/`xin`
@@ -595,6 +599,39 @@ impl NativeModel {
             }
         }
         clone
+    }
+
+    /// Attach deterministic hardware counters to every crossbar-mapped
+    /// conv layer: layer `idx` at precision tag `t` tallies its
+    /// architectural events into `imc.l{idx:02}.{t}.{event}` counters of
+    /// `reg` (taxonomy and determinism contract in
+    /// [`StoxMvm::attach_counters`]).  Counters must attach while this
+    /// model still owns its crossbars exclusively — call right after
+    /// loading, before any [`NativeModel::replica_view`] or
+    /// [`NativeModel::share_with_converter_spec`] clones the `Arc`s.
+    pub fn attach_counters(&mut self, reg: &CounterRegistry) -> crate::Result<()> {
+        fn attach(op: &mut ConvOp, reg: &CounterRegistry) -> crate::Result<()> {
+            if let Some(mvm) = &mut op.mvm {
+                let m = Arc::get_mut(mvm).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "attach_counters needs exclusive crossbars (layer {}): attach \
+                         before taking replica views or converter shares",
+                        op.layer_idx
+                    )
+                })?;
+                let scope = format!("imc.l{:02}.{}.", op.layer_idx, m.cfg.tag());
+                m.attach_counters(reg, &scope);
+            }
+            Ok(())
+        }
+        attach(&mut self.conv1, reg)?;
+        for stage in self.blocks.iter_mut() {
+            for blk in stage.iter_mut() {
+                attach(&mut blk.0, reg)?;
+                attach(&mut blk.2, reg)?;
+            }
+        }
+        Ok(())
     }
 
     /// Replace the PS converter of every crossbar-mapped conv layer with

@@ -1,0 +1,190 @@
+//! Lock-free monotonic counter plane.
+//!
+//! A [`CounterRegistry`] is a named set of `u64` cells.  Registration
+//! (name → cell) takes a `Mutex` once per counter at *setup* time; the
+//! counting path is a single relaxed `fetch_add` on a pre-resolved
+//! [`Counter`] handle — lock-free and wait-free.  A default-constructed
+//! [`Counter`] (never attached to a registry) is a no-op, so hot kernels
+//! carry their handles unconditionally and pay one predictable branch
+//! when telemetry is off.
+//!
+//! Determinism: totals are sums of per-task contributions and `u64`
+//! addition commutes, so totals are independent of worker scheduling
+//! wherever the per-task contributions are themselves deterministic (the
+//! counter-RNG execution contract guarantees this for the digit-plane
+//! kernel and converter layers).  [`CounterRegistry::to_json`] renders a
+//! snapshot as a sorted-key JSON object (`Json::Obj` is a `BTreeMap`), so
+//! two same-seed runs serialize byte-identically.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// A named set of monotonic counters.  Cheap to create; models attach one
+/// per inference context so concurrent runs never cross-contaminate.
+#[derive(Default)]
+pub struct CounterRegistry {
+    cells: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl CounterRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve (registering on first use) the named counter.  Call at
+    /// setup time and keep the returned handle — resolution locks, but
+    /// counting through the handle does not.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut cells = self.cells.lock().unwrap();
+        let cell = cells
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)));
+        Counter(Some(Arc::clone(cell)))
+    }
+
+    /// Current value of `name` (0 when never registered).
+    pub fn get(&self, name: &str) -> u64 {
+        self.cells
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Name-sorted `(name, value)` snapshot.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Snapshot as a JSON object.  Keys sort (`Json::Obj` is a
+    /// `BTreeMap`), so two same-seed runs serialize byte-identically —
+    /// the contract the `infer_counters_*` scenario goldens pin.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.snapshot()
+                .into_iter()
+                // counts stay far below 2^53, so f64 holds them exactly
+                // and the writer prints them as integers
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect(),
+        )
+    }
+}
+
+/// Pre-resolved handle to one registry cell.  The default handle is
+/// detached and counts nothing.
+#[derive(Clone, Default)]
+pub struct Counter(Option<Arc<AtomicU64>>);
+
+impl Counter {
+    /// A handle that counts nothing (what un-instrumented runs carry).
+    pub const fn disabled() -> Self {
+        Counter(None)
+    }
+
+    /// Whether this handle is attached to a registry cell.
+    #[inline]
+    pub fn is_attached(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Add `n` (relaxed; totals are order-independent).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(c) = &self.0 {
+            c.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Add 1.
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current value (0 when detached).
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+}
+
+/// Process-global registry for host-level counters that do not belong to
+/// any one model — e.g. `simd.select.<backend>` (which MAC backend
+/// [`crate::imc::simd::MacBackend::detect`] picked at crossbar-programming
+/// time).  Host-dependent by design, so it is reported by the CLI but
+/// never pinned by scenario goldens.
+pub fn global() -> &'static CounterRegistry {
+    static GLOBAL: OnceLock<CounterRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(CounterRegistry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detached_counter_is_a_noop() {
+        let c = Counter::disabled();
+        c.add(5);
+        c.incr();
+        assert!(!c.is_attached());
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn attached_counter_accumulates() {
+        let reg = CounterRegistry::new();
+        let c = reg.counter("a.macs");
+        assert!(c.is_attached());
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        assert_eq!(reg.get("a.macs"), 4);
+        assert_eq!(reg.get("never.registered"), 0);
+    }
+
+    #[test]
+    fn same_name_resolves_to_same_cell() {
+        let reg = CounterRegistry::new();
+        reg.counter("x").add(1);
+        reg.counter("x").add(2);
+        assert_eq!(reg.get("x"), 3);
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted_and_json_is_integer_valued() {
+        let reg = CounterRegistry::new();
+        reg.counter("b").add(2);
+        reg.counter("a").add(1);
+        reg.counter("c").add(3);
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+        assert_eq!(reg.to_json().to_string(), r#"{"a":1,"b":2,"c":3}"#);
+    }
+
+    #[test]
+    fn concurrent_adds_sum_exactly() {
+        let reg = CounterRegistry::new();
+        let c = reg.counter("hits");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.get("hits"), 4000);
+    }
+}

@@ -1,0 +1,33 @@
+//! Unified telemetry plane: deterministic hardware counters and
+//! request-path spans.
+//!
+//! Two sub-planes with different contracts:
+//!
+//! * [`counters`] — named monotonic `u64` counters grouped in
+//!   [`CounterRegistry`] sets.  The counting path is a single relaxed
+//!   `fetch_add` on a pre-resolved [`Counter`] handle (lock-free); a
+//!   handle that was never attached to a registry is a no-op, so
+//!   un-instrumented runs pay one predictable branch.  Counter totals are
+//!   sums of per-task contributions derived from the counter-RNG
+//!   execution contract, so wherever the per-task work is deterministic
+//!   the totals are too — two same-seed runs snapshot byte-identically
+//!   (see [`CounterRegistry::to_json`]).  Counters are *not* gated by the
+//!   `obs` cargo feature: they are data-plane invariants that the
+//!   scenario goldens pin across every feature combination CI builds.
+//! * [`span`] — per-thread [`SpanRecorder`] buffers of begin/end events
+//!   behind scoped [`Span`] guards, exported as Chrome `chrome://tracing`
+//!   JSON (`stox-cli serve --trace out.json`).  Recording is compiled to
+//!   a no-op unless the default `obs` cargo feature is on, and records
+//!   nothing unless a collector is installed ([`span::install`]) *and*
+//!   the requested [`TraceLevel`] is enabled — the digit-plane hot path
+//!   keeps its bench-enforced <2% overhead bound with tracing off.
+//!
+//! The `STOX_TRACE` environment variable selects the trace level
+//! (`auto|off|request|layer|kernel`) and fails loudly on anything else,
+//! mirroring the `STOX_SIMD` contract ([`span::parse_stox_trace`]).
+
+pub mod counters;
+pub mod span;
+
+pub use counters::{global, Counter, CounterRegistry};
+pub use span::{Span, SpanRecorder, TraceLevel};

@@ -1,0 +1,467 @@
+//! Request-path spans with Chrome-trace export.
+//!
+//! Span schema: every recorded event carries a `name`, a category
+//! (`cat`), a microsecond timestamp relative to collector install, and —
+//! for complete (`ph: "X"`) events — a duration; instant (`ph: "i"`)
+//! events mark edges like admission rejects, steals, hedges and
+//! requeues.  Events buffer in a per-thread [`SpanRecorder`] and flush
+//! into the global collector when the buffer fills, when the thread
+//! exits, or on [`flush_thread`] — recording never takes the collector
+//! lock on the per-span fast path until a flush.
+//!
+//! Three gates, all of which must be open for a span to record:
+//!
+//! 1. the default `obs` cargo feature (off → [`enabled`] is a constant
+//!    `false` and every guard compiles to a no-op),
+//! 2. a collector installed via [`install`] (e.g. by
+//!    `stox-cli serve --trace out.json`),
+//! 3. the event's [`TraceLevel`] at or below the installed level.
+//!
+//! Levels nest: `request` covers the serving tier (admission → queue
+//! wait → batch formation → shard dispatch → reply), `layer` adds
+//! per-layer execute spans inside the model forward, and `kernel` adds
+//! per-stripe MAC/convert phase spans inside the digit-plane kernel
+//! (high event volume — debugging runs only).  The `STOX_TRACE`
+//! environment variable selects the level and fails loudly on unknown
+//! values, mirroring the `STOX_SIMD` contract ([`parse_stox_trace`]).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// How much of the request path records, in nesting order.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum TraceLevel {
+    /// Record nothing (the installed-collector idle state).
+    Off = 0,
+    /// Serving-tier request path: admission, queue wait, batch
+    /// formation, shard dispatch, execute, reply, steal/hedge/requeue.
+    Request = 1,
+    /// [`TraceLevel::Request`] plus per-layer execute spans in the model
+    /// forward.
+    Layer = 2,
+    /// [`TraceLevel::Layer`] plus per-stripe MAC/convert phase spans in
+    /// the digit-plane kernel (high volume; debugging runs only).
+    Kernel = 3,
+}
+
+impl TraceLevel {
+    /// The `STOX_TRACE` spelling of this level.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Request => "request",
+            TraceLevel::Layer => "layer",
+            TraceLevel::Kernel => "kernel",
+        }
+    }
+
+    fn from_u8(v: u8) -> TraceLevel {
+        match v {
+            1 => TraceLevel::Request,
+            2 => TraceLevel::Layer,
+            3 => TraceLevel::Kernel,
+            _ => TraceLevel::Off,
+        }
+    }
+}
+
+/// Parse a `STOX_TRACE` override: `""`/`auto` defer to the caller's
+/// default, anything else must name a [`TraceLevel`].  Unknown values are
+/// an error carrying the offending string — tracing runs must not
+/// quietly record at the wrong level (the `STOX_SIMD` contract).
+pub fn parse_stox_trace(v: &str) -> crate::Result<Option<TraceLevel>> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "off" => Ok(Some(TraceLevel::Off)),
+        "request" => Ok(Some(TraceLevel::Request)),
+        "layer" => Ok(Some(TraceLevel::Layer)),
+        "kernel" => Ok(Some(TraceLevel::Kernel)),
+        _ => anyhow::bail!(
+            "invalid STOX_TRACE value '{v}': expected auto|off|request|layer|kernel"
+        ),
+    }
+}
+
+/// Resolve the trace level: `STOX_TRACE` when set (fail-loud on unknown
+/// values), else `default`.
+pub fn level_from_env(default: TraceLevel) -> crate::Result<TraceLevel> {
+    match std::env::var("STOX_TRACE") {
+        Ok(v) => Ok(parse_stox_trace(&v)?.unwrap_or(default)),
+        Err(_) => Ok(default),
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+static STATE: OnceLock<TraceState> = OnceLock::new();
+
+struct TraceState {
+    epoch: Instant,
+    sink: Mutex<Vec<TraceEvent>>,
+    next_tid: AtomicU64,
+}
+
+/// Install the process collector (idempotent) and set the level.  The
+/// collector epoch (trace time zero) is fixed on first install.
+pub fn install(level: TraceLevel) {
+    STATE.get_or_init(|| TraceState {
+        epoch: Instant::now(),
+        sink: Mutex::new(Vec::new()),
+        next_tid: AtomicU64::new(1),
+    });
+    set_level(level);
+}
+
+/// Change the recording level (no-op gate when no collector installed).
+pub fn set_level(level: TraceLevel) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The currently set level (regardless of collector installation).
+pub fn current_level() -> TraceLevel {
+    TraceLevel::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Whether an event at `min` would record right now.  Constant `false`
+/// without the `obs` cargo feature — guard construction and any
+/// formatting work behind this check compile away.
+#[inline]
+pub fn enabled(min: TraceLevel) -> bool {
+    #[cfg(feature = "obs")]
+    {
+        current_level() >= min && STATE.get().is_some()
+    }
+    #[cfg(not(feature = "obs"))]
+    {
+        let _ = min;
+        false
+    }
+}
+
+/// One recorded event (Chrome trace-event semantics).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event name (span or instant label).
+    pub name: String,
+    /// Category: `serve`, `model`, or `kernel`.
+    pub cat: &'static str,
+    /// `'X'` (complete) or `'i'` (instant).
+    pub ph: char,
+    /// Microseconds since collector install.
+    pub ts_us: f64,
+    /// Duration in microseconds (complete events; 0 for instants).
+    pub dur_us: f64,
+    /// Recorder thread id (assigned per thread at first record).
+    pub tid: u64,
+    /// Optional single numeric argument (e.g. batch size).
+    pub arg: Option<(&'static str, f64)>,
+}
+
+/// Per-thread event buffer: spans push here without touching the global
+/// collector lock; the buffer flushes when full, on [`flush_thread`], and
+/// when the owning thread exits (TLS destructor).
+pub struct SpanRecorder {
+    tid: u64,
+    buf: Vec<TraceEvent>,
+}
+
+const FLUSH_AT: usize = 1024;
+
+impl SpanRecorder {
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        if let Some(state) = STATE.get() {
+            state.sink.lock().unwrap().append(&mut self.buf);
+        }
+    }
+}
+
+impl Drop for SpanRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static RECORDER: RefCell<Option<SpanRecorder>> = const { RefCell::new(None) };
+}
+
+fn ts_us(state: &TraceState, t: Instant) -> f64 {
+    t.checked_duration_since(state.epoch)
+        .unwrap_or_default()
+        .as_secs_f64()
+        * 1e6
+}
+
+fn record(state: &TraceState, mut ev: TraceEvent) {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        let rec = r.get_or_insert_with(|| SpanRecorder {
+            tid: state.next_tid.fetch_add(1, Ordering::Relaxed),
+            buf: Vec::new(),
+        });
+        ev.tid = rec.tid;
+        rec.buf.push(ev);
+        if rec.buf.len() >= FLUSH_AT {
+            rec.flush();
+        }
+    });
+}
+
+/// Scoped span guard: records one complete event (begin at construction,
+/// end at drop).  Inert when its level was not [`enabled`].
+#[must_use = "a span records its duration on drop; bind it to a guard"]
+pub struct Span(Option<SpanLive>);
+
+struct SpanLive {
+    name: String,
+    cat: &'static str,
+    start: Instant,
+    arg: Option<(&'static str, f64)>,
+}
+
+impl Span {
+    /// Attach one numeric argument (shows under `args` in the trace UI).
+    pub fn arg(mut self, key: &'static str, v: f64) -> Span {
+        if let Some(l) = self.0.as_mut() {
+            l.arg = Some((key, v));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(l) = self.0.take() {
+            let Some(state) = STATE.get() else { return };
+            record(
+                state,
+                TraceEvent {
+                    ts_us: ts_us(state, l.start),
+                    dur_us: l.start.elapsed().as_secs_f64() * 1e6,
+                    name: l.name,
+                    cat: l.cat,
+                    ph: 'X',
+                    tid: 0,
+                    arg: l.arg,
+                },
+            );
+        }
+    }
+}
+
+/// Begin a span with a static name.
+pub fn span(min: TraceLevel, name: &'static str, cat: &'static str) -> Span {
+    if !enabled(min) {
+        return Span(None);
+    }
+    Span(Some(SpanLive { name: name.to_string(), cat, start: Instant::now(), arg: None }))
+}
+
+/// Begin a span with a lazily formatted name (the closure only runs when
+/// the level is enabled, so call sites pay nothing with tracing off).
+pub fn span_with<F: FnOnce() -> String>(min: TraceLevel, cat: &'static str, name: F) -> Span {
+    if !enabled(min) {
+        return Span(None);
+    }
+    Span(Some(SpanLive { name: name(), cat, start: Instant::now(), arg: None }))
+}
+
+/// Record a complete event whose start was captured earlier (e.g. queue
+/// wait measured from enqueue time), ending now.
+pub fn complete_from(min: TraceLevel, name: &'static str, cat: &'static str, start: Instant) {
+    if !enabled(min) {
+        return;
+    }
+    let Some(state) = STATE.get() else { return };
+    record(
+        state,
+        TraceEvent {
+            ts_us: ts_us(state, start),
+            dur_us: start.elapsed().as_secs_f64() * 1e6,
+            name: name.to_string(),
+            cat,
+            ph: 'X',
+            tid: 0,
+            arg: None,
+        },
+    );
+}
+
+/// Record an instant event (an edge: reject, steal, hedge, requeue).
+pub fn instant(
+    min: TraceLevel,
+    name: &'static str,
+    cat: &'static str,
+    arg: Option<(&'static str, f64)>,
+) {
+    if !enabled(min) {
+        return;
+    }
+    let Some(state) = STATE.get() else { return };
+    record(
+        state,
+        TraceEvent {
+            ts_us: ts_us(state, Instant::now()),
+            dur_us: 0.0,
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            tid: 0,
+            arg,
+        },
+    );
+}
+
+/// Flush the calling thread's recorder into the collector.  Worker
+/// threads flush automatically on exit; the main thread calls this (via
+/// [`drain`]) before export.
+pub fn flush_thread() {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.flush();
+        }
+    });
+}
+
+/// Flush the calling thread, then take every event collected so far.
+pub fn drain() -> Vec<TraceEvent> {
+    let Some(state) = STATE.get() else { return Vec::new() };
+    flush_thread();
+    std::mem::take(&mut *state.sink.lock().unwrap())
+}
+
+/// Render events as a Chrome `chrome://tracing` / Perfetto JSON object.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let evs = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::Str(e.cat.to_string())),
+                ("ph", Json::Str(e.ph.to_string())),
+                ("ts", Json::Num(e.ts_us)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(e.tid as f64)),
+            ];
+            if e.ph == 'X' {
+                fields.push(("dur", Json::Num(e.dur_us)));
+            } else if e.ph == 'i' {
+                // instant scope: thread
+                fields.push(("s", Json::Str("t".to_string())));
+            }
+            if let Some((k, v)) = e.arg {
+                fields.push(("args", Json::obj(vec![(k, Json::Num(v))])));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write events to `path` as Chrome trace JSON.
+pub fn write_chrome_trace(path: &str, events: &[TraceEvent]) -> crate::Result<()> {
+    let mut s = chrome_trace_json(events).to_string();
+    s.push('\n');
+    std::fs::write(path, s)
+        .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stox_trace_parses_all_levels_and_defers_auto() {
+        assert_eq!(parse_stox_trace("").unwrap(), None);
+        assert_eq!(parse_stox_trace("auto").unwrap(), None);
+        assert_eq!(parse_stox_trace("off").unwrap(), Some(TraceLevel::Off));
+        assert_eq!(parse_stox_trace(" Request ").unwrap(), Some(TraceLevel::Request));
+        assert_eq!(parse_stox_trace("layer").unwrap(), Some(TraceLevel::Layer));
+        assert_eq!(parse_stox_trace("kernel").unwrap(), Some(TraceLevel::Kernel));
+    }
+
+    #[test]
+    fn stox_trace_fails_loudly_with_offending_value() {
+        for bad in ["on", "1", "full", "serve"] {
+            let err = parse_stox_trace(bad).unwrap_err().to_string();
+            assert!(err.contains("STOX_TRACE"), "{err}");
+            assert!(err.contains(bad), "error must carry the value: {err}");
+        }
+    }
+
+    #[test]
+    fn levels_nest_in_order() {
+        assert!(TraceLevel::Off < TraceLevel::Request);
+        assert!(TraceLevel::Request < TraceLevel::Layer);
+        assert!(TraceLevel::Layer < TraceLevel::Kernel);
+    }
+
+    #[test]
+    fn chrome_trace_json_shape() {
+        let events = vec![
+            TraceEvent {
+                name: "execute".into(),
+                cat: "serve",
+                ph: 'X',
+                ts_us: 10.0,
+                dur_us: 5.5,
+                tid: 1,
+                arg: Some(("batch", 4.0)),
+            },
+            TraceEvent {
+                name: "steal".into(),
+                cat: "serve",
+                ph: 'i',
+                ts_us: 20.0,
+                dur_us: 0.0,
+                tid: 2,
+                arg: None,
+            },
+        ];
+        let j = chrome_trace_json(&events);
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(evs[0].get("dur").and_then(|v| v.as_f64()), Some(5.5));
+        assert_eq!(
+            evs[0].at(&["args", "batch"]).and_then(|v| v.as_f64()),
+            Some(4.0)
+        );
+        assert_eq!(evs[1].get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(evs[1].get("s").and_then(|v| v.as_str()), Some("t"));
+        assert_eq!(j.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    }
+
+    // one test owns all global-level mutation (LEVEL is process state;
+    // parallel tests toggling it would race each other)
+    #[cfg(feature = "obs")]
+    #[test]
+    fn span_gating_and_recording() {
+        // below-threshold and Off-level guards are inert
+        set_level(TraceLevel::Off);
+        drop(span(TraceLevel::Request, "obs_test_gated", "serve"));
+        install(TraceLevel::Request);
+        // a Layer-level span must not record at Request
+        drop(span(TraceLevel::Layer, "obs_test_gated", "model"));
+        {
+            let _g = span(TraceLevel::Request, "obs_test_span", "serve").arg("batch", 3.0);
+        }
+        instant(TraceLevel::Request, "obs_test_edge", "serve", None);
+        // other tests may be recording concurrently — assert containment,
+        // not exact contents
+        let evs = drain();
+        assert!(!evs.iter().any(|e| e.name == "obs_test_gated"));
+        assert!(evs.iter().any(|e| e.ph == 'X' && e.name == "obs_test_span"));
+        assert!(evs.iter().any(|e| e.ph == 'i' && e.name == "obs_test_edge"));
+        set_level(TraceLevel::Off);
+    }
+}

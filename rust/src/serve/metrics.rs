@@ -10,7 +10,7 @@
 //! backlog — so the JSON report shows both the aggregate curve and how
 //! evenly the replicas shared the load.
 
-use crate::stats::Histogram;
+use crate::stats::{Histogram, LatencyHistogram};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -26,7 +26,13 @@ pub const EWMA_ALPHA: f64 = 0.2;
 #[derive(Debug)]
 pub struct ShardStats {
     /// request latency (enqueue → reply), microseconds
-    latency_us: Histogram,
+    latency_us: LatencyHistogram,
+    /// queue-wait component of request latency (enqueue → execution
+    /// start), microseconds — the telemetry plane's decomposition
+    queue_wait_us: LatencyHistogram,
+    /// service component of request latency (execution start → reply),
+    /// microseconds
+    service_us: LatencyHistogram,
     batch_occupancy: Histogram,
     pub requests: u64,
     pub batches: u64,
@@ -35,7 +41,6 @@ pub struct ShardStats {
     /// batches whose executor returned `Err` (every member got the error
     /// reply; see the [`crate::coordinator::server::Reply`] contract)
     pub error_batches: u64,
-    min_us: f64,
     /// EWMA of the per-batch error indicator (1 = failed, 0 = ok) — the
     /// health signal eviction reads
     pub error_ewma: f64,
@@ -48,8 +53,11 @@ impl ShardStats {
     fn new() -> Self {
         Self {
             // 0..10 s at 500 µs resolution: fine enough for p999 at the
-            // latencies the native executor produces
-            latency_us: Histogram::new(0.0, 10_000_000.0, 20_000),
+            // latencies the native executor produces; the queue/service
+            // components share the shape so their percentiles compare
+            latency_us: LatencyHistogram::new(10_000_000.0, 20_000),
+            queue_wait_us: LatencyHistogram::new(10_000_000.0, 20_000),
+            service_us: LatencyHistogram::new(10_000_000.0, 20_000),
             // one bin per occupancy 0..=256: the range must extend past the
             // largest legal batch (256) because Histogram's upper edge is
             // exclusive — with `new(0, 256, 256)` a full 256-occupancy
@@ -59,7 +67,6 @@ impl ShardStats {
             batches: 0,
             stolen_batches: 0,
             error_batches: 0,
-            min_us: f64::INFINITY,
             error_ewma: 0.0,
             latency_ewma_us: 0.0,
         }
@@ -77,8 +84,7 @@ impl ShardStats {
             // accumulate in f64 end-to-end: at µs scale an f32 cast
             // quantizes to ~0.06 µs steps by 1 s and misreports min/p999
             let us = l.as_secs_f64() * 1e6;
-            self.latency_us.add_f64(us);
-            self.min_us = self.min_us.min(us);
+            self.latency_us.record_us(us);
             sum_us += us;
         }
         self.error_ewma *= 1.0 - EWMA_ALPHA; // sample 0: the batch succeeded
@@ -97,20 +103,29 @@ impl ShardStats {
         self.batch_occupancy.mean()
     }
 
+    /// Request-latency percentile (µs) under the documented
+    /// [`Histogram::percentile`] interpolation rule: `NaN` before any
+    /// request completes, `p` clamped to `[0, 100]`, `p = 0`/`p = 100`
+    /// answering at the edges of the occupied bins.
     pub fn latency_percentile_us(&self, p: f64) -> f32 {
-        self.latency_us.percentile(p)
+        self.latency_us.percentile_us(p)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        self.latency_us.mean()
+        self.latency_us.mean_us()
     }
 
     /// Smallest observed request latency (µs); 0 when nothing recorded.
     pub fn min_latency_us(&self) -> f64 {
-        if self.min_us.is_finite() {
-            self.min_us
-        } else {
-            0.0
+        self.latency_us.min_us()
+    }
+
+    fn record_split(&mut self, queue_us: &[f64], service_us: &[f64]) {
+        for &q in queue_us {
+            self.queue_wait_us.record_us(q);
+        }
+        for &s in service_us {
+            self.service_us.record_us(s);
         }
     }
 }
@@ -173,6 +188,16 @@ impl ServeMetrics {
                 self.slo_miss.fetch_add(1, Ordering::Relaxed);
             }
         }
+    }
+
+    /// Record the queue-wait vs service-time decomposition of a batch's
+    /// requests on `shard` (µs components; `queue + service` equals the
+    /// request latency fed to [`ServeMetrics::record_batch`]).  Kept as a
+    /// separate call so reply paths that cannot attribute the split (error
+    /// replies, rejected requests) simply skip it.
+    pub fn record_decomposition(&self, shard: usize, queue_us: &[f64], service_us: &[f64]) {
+        self.shards[shard].lock().unwrap().record_split(queue_us, service_us);
+        self.total.lock().unwrap().record_split(queue_us, service_us);
     }
 
     /// Record a batch whose executor failed (it will be requeued or its
@@ -334,6 +359,26 @@ impl ServeMetrics {
         self.total.lock().unwrap().min_latency_us()
     }
 
+    /// Aggregate queue-wait percentile in µs (NaN before any
+    /// decomposition was recorded).
+    pub fn queue_wait_percentile_us(&self, p: f64) -> f32 {
+        self.total.lock().unwrap().queue_wait_us.percentile_us(p)
+    }
+
+    pub fn mean_queue_wait_us(&self) -> f64 {
+        self.total.lock().unwrap().queue_wait_us.mean_us()
+    }
+
+    /// Aggregate service-time percentile in µs (NaN before any
+    /// decomposition was recorded).
+    pub fn service_percentile_us(&self, p: f64) -> f32 {
+        self.total.lock().unwrap().service_us.percentile_us(p)
+    }
+
+    pub fn mean_service_us(&self) -> f64 {
+        self.total.lock().unwrap().service_us.mean_us()
+    }
+
     pub fn mean_batch(&self) -> f64 {
         self.total.lock().unwrap().mean_batch()
     }
@@ -341,14 +386,14 @@ impl ServeMetrics {
     /// The JSON report (schema in README §Serving): aggregate counters,
     /// p50/p99/p999 latency, SLO attainment, and one object per shard.
     pub fn to_json(&self) -> Json {
-        let pct = |p: f64| -> Json {
-            let v = self.latency_percentile_us(p);
+        let num_or_null = |v: f32| -> Json {
             if v.is_finite() {
                 Json::Num(v as f64)
             } else {
                 Json::Null
             }
         };
+        let pct = |p: f64| -> Json { num_or_null(self.latency_percentile_us(p)) };
         let shards: Vec<Json> = self
             .shards
             .iter()
@@ -392,6 +437,24 @@ impl ServeMetrics {
                     ("p50", pct(50.0)),
                     ("p99", pct(99.0)),
                     ("p999", pct(99.9)),
+                ]),
+            ),
+            // queue-wait vs service decomposition (telemetry plane): the
+            // two components sum to the request latency above
+            (
+                "queue_wait_us",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.mean_queue_wait_us())),
+                    ("p50", num_or_null(self.queue_wait_percentile_us(50.0))),
+                    ("p99", num_or_null(self.queue_wait_percentile_us(99.0))),
+                ]),
+            ),
+            (
+                "service_us",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.mean_service_us())),
+                    ("p50", num_or_null(self.service_percentile_us(50.0))),
+                    ("p99", num_or_null(self.service_percentile_us(99.0))),
                 ]),
             ),
             (
@@ -553,6 +616,50 @@ mod tests {
         assert!(m.latency_percentile_us(50.0).is_nan());
         let j = m.to_json();
         assert_eq!(j.get("latency_us").unwrap().get("p50"), Some(&Json::Null));
+        assert_eq!(j.get("queue_wait_us").unwrap().get("p50"), Some(&Json::Null));
+        assert_eq!(j.get("service_us").unwrap().get("p50"), Some(&Json::Null));
         assert_eq!(m.slo_attainment(), 1.0);
+    }
+
+    // pins the ShardStats::latency_percentile_us edge-case contract (the
+    // Histogram::percentile interpolation rule at 500 µs bin width)
+    #[test]
+    fn latency_percentile_edge_cases() {
+        let m = ServeMetrics::new(1, Duration::from_millis(10));
+        // empty histogram → NaN at every p (JSON reports null)
+        assert!(m.latency_percentile_us(0.0).is_nan());
+        assert!(m.latency_percentile_us(100.0).is_nan());
+        // single sample: 1 ms lands in bin [1000, 1500) µs; p=0 answers
+        // the bin's left edge, p=50 its center, p=100 its right edge
+        m.record_batch(0, 1, &[Duration::from_millis(1)], false);
+        assert_eq!(m.latency_percentile_us(0.0), 1000.0);
+        assert_eq!(m.latency_percentile_us(50.0), 1250.0);
+        assert_eq!(m.latency_percentile_us(100.0), 1500.0);
+        // p clamps to [0, 100]: out-of-domain p answers at the data's
+        // edges, never the histogram's 10^7 µs upper bound
+        assert_eq!(m.latency_percentile_us(-5.0), 1000.0);
+        assert_eq!(m.latency_percentile_us(200.0), 1500.0);
+    }
+
+    #[test]
+    fn queue_service_decomposition_components_sum_to_latency() {
+        let m = ServeMetrics::new(2, Duration::from_millis(10));
+        // request latency 3 ms = 1 ms queued + 2 ms executing
+        m.record_batch(1, 1, &[Duration::from_millis(3)], false);
+        m.record_decomposition(1, &[1000.0], &[2000.0]);
+        assert!((m.mean_queue_wait_us() - 1000.0).abs() < 1e-9);
+        assert!((m.mean_service_us() - 2000.0).abs() < 1e-9);
+        assert!(
+            (m.mean_queue_wait_us() + m.mean_service_us() - m.mean_latency_us()).abs() < 1e-9
+        );
+        // percentiles resolve within the 500 µs bins
+        assert_eq!(m.queue_wait_percentile_us(50.0), 1250.0);
+        assert_eq!(m.service_percentile_us(50.0), 2250.0);
+        let j = m.to_json();
+        let q = j.get("queue_wait_us").unwrap();
+        assert!((q.get("mean").and_then(|v| v.as_f64()).unwrap() - 1000.0).abs() < 1e-9);
+        assert!(q.get("p99").and_then(|v| v.as_f64()).is_some());
+        let s = j.get("service_us").unwrap();
+        assert!((s.get("mean").and_then(|v| v.as_f64()).unwrap() - 2000.0).abs() < 1e-9);
     }
 }

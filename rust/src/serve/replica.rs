@@ -64,6 +64,7 @@ use super::metrics::ServeMetrics;
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, Pending};
 use crate::coordinator::server::{ConfigError, Executor, NativeExecutor, Reply, Request};
 use crate::model::NativeModel;
+use crate::obs::{span, TraceLevel};
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -372,6 +373,7 @@ impl<E: Executor + Sync> ReplicaServer<E> {
                         // bounded queue: explicit rejection, never an
                         // unbounded backlog or a dropped reply channel
                         self.metrics.record_rejected();
+                        span::instant(TraceLevel::Request, "admission.reject", "serve", None);
                         let _ = req.reply.send(Reply {
                             result: Err(REJECTED.to_string()),
                             latency: Duration::ZERO,
@@ -404,6 +406,8 @@ impl<E: Executor + Sync> ReplicaServer<E> {
         rr: &mut usize,
         dseq: &mut u64,
     ) {
+        let _sp = span::span(TraceLevel::Request, "dispatch", "serve")
+            .arg("batch", batch.items.len() as f64);
         let mut items = batch.items;
         if let Some(dl) = self.cfg.deadline {
             let now = Instant::now();
@@ -412,6 +416,7 @@ impl<E: Executor + Sync> ReplicaServer<E> {
                 .partition(|p| now.duration_since(p.enqueued) <= dl);
             for p in dead {
                 self.metrics.record_deadline_exceeded();
+                span::instant(TraceLevel::Request, "deadline.exceeded", "serve", None);
                 let _ = p.payload.reply.send(Reply {
                     result: Err(DEADLINE_EXCEEDED.to_string()),
                     latency: now.duration_since(p.enqueued),
@@ -512,7 +517,11 @@ fn steal<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) -> Option<Job> {
         }
     }
     let (qi, _) = best?;
-    ctx.queues[qi].q.lock().unwrap().pop_back()
+    let job = ctx.queues[qi].q.lock().unwrap().pop_back();
+    if job.is_some() {
+        span::instant(TraceLevel::Request, "steal", "serve", Some(("from", qi as f64)));
+    }
+    job
 }
 
 /// Find the oldest hedge-eligible in-flight batch on another shard: in
@@ -542,6 +551,7 @@ fn claim_straggler<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize) -> Option
 /// to the original execution's loud-failure path.
 fn execute_hedge<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, f: Arc<InFlight>) {
     ctx.metrics.record_hedged();
+    span::instant(TraceLevel::Request, "hedge", "serve", Some(("shard", si as f64)));
     let exec = &ctx.shards[si];
     let n = f.items.len();
     let classes = exec.classes();
@@ -550,9 +560,15 @@ fn execute_hedge<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, f: Arc<InFl
         images.extend_from_slice(&it.image);
     }
     let t0 = Instant::now();
-    if let Ok(logits) = exec.execute(&images, n, f.seed) {
+    let hedged = {
+        let _sp = span::span(TraceLevel::Request, "execute", "serve").arg("batch", n as f64);
+        exec.execute(&images, n, f.seed)
+    };
+    if let Ok(logits) = hedged {
         let now = Instant::now();
         let mut latencies = Vec::new();
+        let mut queue_us = Vec::new();
+        let mut service_us = Vec::new();
         for (i, it) in f.items.iter().enumerate() {
             let reply = Reply {
                 result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
@@ -562,11 +578,14 @@ fn execute_hedge<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, f: Arc<InFl
             };
             if send_reply(ctx, it.id, &it.reply, reply) {
                 latencies.push(now.duration_since(it.enqueued));
+                queue_us.push(t0.duration_since(it.enqueued).as_secs_f64() * 1e6);
+                service_us.push(now.duration_since(t0).as_secs_f64() * 1e6);
             }
         }
         if !latencies.is_empty() {
             ctx.metrics.record_hedge_win();
             ctx.metrics.record_batch(si, latencies.len(), &latencies, true);
+            ctx.metrics.record_decomposition(si, &queue_us, &service_us);
         }
     }
 }
@@ -616,15 +635,23 @@ fn execute_job<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, job: Job) {
     if let Some(spike) = decision.spike {
         std::thread::sleep(spike);
     }
+    // queue wait ends where execution begins: one trace event per batch,
+    // measured from its oldest member's enqueue time
+    if let Some(oldest) = job.items.iter().map(|p| p.enqueued).min() {
+        span::complete_from(TraceLevel::Request, "queue_wait", "serve", oldest);
+    }
     let t0 = Instant::now();
-    let result = match decision.error {
-        Some(msg) => Err(anyhow::anyhow!(msg)),
-        None => exec.execute(&images, n, job.seed).map(|mut logits| {
-            if decision.corrupt {
-                ctx.injector.corrupt(&mut logits, job.seed);
-            }
-            logits
-        }),
+    let result = {
+        let _sp = span::span(TraceLevel::Request, "execute", "serve").arg("batch", n as f64);
+        match decision.error {
+            Some(msg) => Err(anyhow::anyhow!(msg)),
+            None => exec.execute(&images, n, job.seed).map(|mut logits| {
+                if decision.corrupt {
+                    ctx.injector.corrupt(&mut logits, job.seed);
+                }
+                logits
+            }),
+        }
     };
     if hedgeable {
         ctx.hedge.clear(si);
@@ -637,6 +664,8 @@ fn execute_job<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, job: Job) {
             }
             let now = Instant::now();
             let mut latencies = Vec::with_capacity(n);
+            let mut queue_us = Vec::with_capacity(n);
+            let mut service_us = Vec::with_capacity(n);
             for (i, p) in job.items.into_iter().enumerate() {
                 let reply = Reply {
                     result: Ok(logits[i * classes..(i + 1) * classes].to_vec()),
@@ -646,10 +675,14 @@ fn execute_job<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, job: Job) {
                 };
                 if send_reply(ctx, p.id, &p.payload.reply, reply) {
                     latencies.push(now.duration_since(p.enqueued));
+                    // queue + service sums to the end-to-end latency above
+                    queue_us.push(t0.duration_since(p.enqueued).as_secs_f64() * 1e6);
+                    service_us.push(now.duration_since(t0).as_secs_f64() * 1e6);
                 }
             }
             if !latencies.is_empty() {
                 ctx.metrics.record_batch(si, latencies.len(), &latencies, stolen);
+                ctx.metrics.record_decomposition(si, &queue_us, &service_us);
                 if brownout {
                     ctx.metrics.record_degraded(latencies.len() as u64);
                 }
@@ -661,12 +694,14 @@ fn execute_job<E: Executor + Sync>(ctx: &RunCtx<'_, E>, si: usize, job: Job) {
             ctx.metrics.record_error_batch(si);
             if ctx.health.record_failure(si, ctx.metrics.error_ewma(si)) {
                 ctx.metrics.record_evicted();
+                span::instant(TraceLevel::Request, "evict", "serve", Some(("shard", si as f64)));
                 drain_evicted_queue(ctx, si);
             }
             if ctx.health.enabled() && job.attempt < res.max_requeues {
                 // lossless requeue: same seed (bit-identical re-execution
                 // on any shard), next attempt, first healthy sibling
                 ctx.metrics.record_requeued();
+                span::instant(TraceLevel::Request, "requeue", "serve", None);
                 let target = ctx.health.next_healthy(si + 1).unwrap_or(si);
                 ctx.queues[target].push(Job {
                     seed: job.seed,

@@ -105,7 +105,23 @@ impl Histogram {
             .collect()
     }
 
-    /// Percentile over binned data (linear within bins); p in [0, 100].
+    /// Percentile over binned data, linearly interpolated within bins.
+    ///
+    /// Interpolation rule: `p` (clamped to `[0, 100]`) selects the target
+    /// cumulative mass `p/100 · in_range` over the **in-range** samples
+    /// (`under`/`over` samples carry no position and are excluded); the
+    /// first occupied bin whose cumulative count reaches the target
+    /// answers, placing the result at the fraction of the bin's width
+    /// matching the fraction of its count needed.  Consequences, pinned
+    /// by `percentile_edge_cases`:
+    ///
+    /// * empty histogram (or only out-of-range samples) → `NaN` — the
+    ///   serving metrics map this to JSON `null`;
+    /// * `p = 0` → the *left* edge of the first occupied bin;
+    /// * `p = 100` (and anything above, after clamping) → the *right*
+    ///   edge of the last occupied bin — never the histogram's `hi`
+    ///   bound, which a pre-fix fall-through used to return for `p > 100`;
+    /// * a single sample at `p = 50` → the center of its bin.
     pub fn percentile(&self, p: f64) -> f32 {
         if self.count == 0 {
             return f32::NAN;
@@ -114,13 +130,13 @@ impl Histogram {
         if in_range == 0 {
             return f32::NAN;
         }
-        let target = (p / 100.0 * in_range as f64).max(0.0);
+        let target = p.clamp(0.0, 100.0) / 100.0 * in_range as f64;
         let mut acc = 0.0;
         let w = (self.hi - self.lo) / self.bins.len() as f32;
         for (i, &b) in self.bins.iter().enumerate() {
             let next = acc + b as f64;
             if next >= target && b > 0 {
-                let frac = if b == 0 { 0.0 } else { (target - acc) / b as f64 };
+                let frac = (target - acc) / b as f64;
                 return self.lo + w * (i as f32 + frac as f32);
             }
             acc = next;
@@ -147,6 +163,67 @@ impl Histogram {
             out.push_str(&format!("{c:+.3} | {:<width$} {b}\n", "#".repeat(bar)));
         }
         out
+    }
+}
+
+/// Latency histogram in microseconds: the single implementation behind
+/// both serving tiers' latency metrics ([`crate::coordinator::Metrics`]
+/// and `serve::ShardStats` used to hand-roll one copy each).
+///
+/// Two recording paths with deliberately different precision:
+/// [`LatencyHistogram::record_us`] compares and bins in `f64` (at µs
+/// scale an f32 cast quantizes to ~0.06 µs steps by 1 s and misreports
+/// min/p999 — the replica tier's contract), while
+/// [`LatencyHistogram::record_us_f32`] keeps the coordinator's original
+/// f32 binning so the dedupe stays byte-identical with its pre-existing
+/// reports.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    h: Histogram,
+    min_us: f64,
+}
+
+impl LatencyHistogram {
+    /// Fixed bins over `[0, hi_us)` microseconds.
+    pub fn new(hi_us: f32, n_bins: usize) -> Self {
+        Self { h: Histogram::new(0.0, hi_us, n_bins), min_us: f64::INFINITY }
+    }
+
+    /// Record one latency sample, binning in `f64` (see type docs).
+    pub fn record_us(&mut self, us: f64) {
+        self.h.add_f64(us);
+        self.min_us = self.min_us.min(us);
+    }
+
+    /// Record one latency sample, binning in `f32` (legacy coordinator
+    /// semantics; see type docs).
+    pub fn record_us_f32(&mut self, us: f32) {
+        self.h.add(us);
+        self.min_us = self.min_us.min(us as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.h.count()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.h.mean()
+    }
+
+    /// Latency percentile; `NaN` before any sample lands in range (the
+    /// [`Histogram::percentile`] interpolation rule).
+    pub fn percentile_us(&self, p: f64) -> f32 {
+        self.h.percentile(p)
+    }
+
+    /// Smallest observed latency in µs, tracked in `f64`; `0.0` when
+    /// nothing was recorded (the `ShardStats::min_latency_us` contract).
+    pub fn min_us(&self) -> f64 {
+        if self.min_us.is_finite() {
+            self.min_us
+        } else {
+            0.0
+        }
     }
 }
 
@@ -216,5 +293,53 @@ mod tests {
         assert_eq!(h.bins()[1], 1);
         h.add(0.49999);
         assert_eq!(h.bins()[0], 1);
+    }
+
+    // pins the documented interpolation rule of Histogram::percentile
+    #[test]
+    fn percentile_edge_cases() {
+        // empty histogram → NaN (mapped to JSON null by the serving tier)
+        let h = Histogram::new(0.0, 10.0, 10);
+        assert!(h.percentile(50.0).is_nan());
+        // only out-of-range samples → NaN: under/over mass carries no
+        // position, so percentiles are defined over in-range mass only
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-5.0);
+        h.add(20.0);
+        assert!(h.percentile(50.0).is_nan());
+        // single sample in bin [3, 4): p=0 → left edge, p=50 → center,
+        // p=100 → right edge of the occupied bin
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(3.2);
+        assert_eq!(h.percentile(0.0), 3.0);
+        assert_eq!(h.percentile(50.0), 3.5);
+        assert_eq!(h.percentile(100.0), 4.0);
+        // p clamps to [0, 100]: out-of-domain p answers at the data's
+        // edges, never the histogram's hi bound (the pre-fix fall-through
+        // returned hi = 10.0 for p > 100)
+        assert_eq!(h.percentile(-10.0), 3.0);
+        assert_eq!(h.percentile(150.0), 4.0);
+    }
+
+    #[test]
+    fn latency_histogram_two_recording_paths() {
+        // f64 path: keeps sub-µs precision in min and mean
+        let mut l = LatencyHistogram::new(10_000_000.0, 20_000);
+        assert_eq!(l.min_us(), 0.0, "empty → 0 by contract");
+        assert!(l.percentile_us(50.0).is_nan());
+        let x = 1_234_567.891_011_f64; // not representable in f32
+        l.record_us(x);
+        assert_eq!(l.min_us(), x);
+        assert_eq!(l.mean_us(), x);
+        assert_eq!(l.count(), 1);
+        // f32 path matches Histogram::add binning exactly
+        let mut a = LatencyHistogram::new(60_000_000.0, 12_000);
+        let mut b = Histogram::new(0.0, 60_000_000.0, 12_000);
+        for us in [100.0f32, 5_000.0, 4_999.9, 59_999_999.0] {
+            a.record_us_f32(us);
+            b.add(us);
+        }
+        assert_eq!(a.percentile_us(50.0), b.percentile(50.0));
+        assert_eq!(a.mean_us(), b.mean());
     }
 }

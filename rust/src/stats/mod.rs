@@ -4,5 +4,5 @@
 pub mod histogram;
 pub mod rng;
 
-pub use histogram::Histogram;
+pub use histogram::{Histogram, LatencyHistogram};
 pub use rng::{mix32, uniform01, CounterRng};
